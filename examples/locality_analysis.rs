@@ -1,0 +1,62 @@
+//! Locality analysis through the AOT Pallas/JAX artifact.
+//!
+//! Shows the Rust↔PJRT integration in isolation: per-core traces from the
+//! workload models flow through the aggregated-signature matmul kernel
+//! compiled from `python/compile/`, and the resulting sharing matrix /
+//! locality score / replication factor are compared against exact set
+//! arithmetic computed in Rust.
+//!
+//!     cargo run --release --example locality_analysis
+
+use ata_cache::config::{GpuConfig, L1ArchKind};
+use ata_cache::runtime::LocalityAnalyzer;
+use ata_cache::trace::signature::{exact_locality, sample_core_traces};
+use ata_cache::trace::apps;
+use ata_cache::util::table::Table;
+
+fn main() {
+    let analyzer = LocalityAnalyzer::load("artifacts").expect("run `make artifacts` first");
+    let meta = analyzer.meta();
+    println!(
+        "artifact: {} cores (padded {}), {} samples/core, {} hash buckets\n",
+        meta.num_cores, meta.padded_cores, meta.trace_len, meta.nbits
+    );
+
+    let cfg = GpuConfig::paper(L1ArchKind::Private);
+    let mut t = Table::new("PJRT artifact vs exact set arithmetic").header(&[
+        "app", "score (artifact)", "score (exact)", "err", "repl (artifact)", "repl (exact)", "class",
+    ]);
+    let mut worst_err: f64 = 0.0;
+    for app in apps::all_apps() {
+        let wl = app.workload(&cfg);
+        let traces = sample_core_traces(&wl, cfg.cores, meta.trace_len);
+        let report = analyzer.analyze(&traces).expect("artifact execution");
+        let (score, repl) = exact_locality(&traces);
+        let err = (report.locality_score as f64 - score).abs();
+        worst_err = worst_err.max(err);
+        t.row(vec![
+            app.name.to_string(),
+            format!("{:.4}", report.locality_score),
+            format!("{score:.4}"),
+            format!("{err:.4}"),
+            format!("{:.2}", report.replication_factor),
+            format!("{repl:.2}"),
+            format!("{:?}", report.class()),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("worst |artifact - exact| score error: {worst_err:.4} (hash-bucket estimate)");
+
+    // Peek at the sharing matrix for one high-locality app.
+    let app = apps::app("SN").unwrap();
+    let traces = sample_core_traces(&app.workload(&cfg), cfg.cores, meta.trace_len);
+    let report = analyzer.analyze(&traces).unwrap();
+    println!("\nSN sharing matrix (cores 0..6, bucket-intersection counts):");
+    for i in 0..6 {
+        let row: Vec<String> = (0..6)
+            .map(|j| format!("{:6.0}", report.shared_with(i, j)))
+            .collect();
+        println!("  core{i}: [{}]", row.join(" "));
+    }
+    assert!(worst_err < 0.05, "hash estimate must track exact sets");
+}

@@ -1,0 +1,59 @@
+//! Per-kernel performance study (Fig 9): kernels of SN, conv3d, HS3D and
+//! sradv1 under decoupled-sharing and ATA-Cache, normalized to private.
+//!
+//! The paper's observations this regenerates:
+//!   * SN: decoupled degrades several kernels; ATA's overall win is larger.
+//!   * conv3d, HS3D: ATA beats decoupled on every kernel.
+//!   * sradv1: kernels 4, 9, 14 crater under decoupled (reduction-style
+//!     convergence on few home slices).
+//!
+//!     cargo run --release --example per_kernel_study -- [--scale F]
+
+use ata_cache::config::{GpuConfig, L1ArchKind};
+use ata_cache::engine::Engine;
+use ata_cache::stats::SimResult;
+use ata_cache::trace::apps;
+use ata_cache::util::cli::Args;
+use ata_cache::util::table::Table;
+
+fn run(app: &str, arch: L1ArchKind, scale: f64) -> SimResult {
+    let cfg = GpuConfig::paper(arch);
+    let wl = apps::app(app).unwrap().scaled(scale).workload(&cfg);
+    Engine::new(&cfg).run(&wl)
+}
+
+fn main() {
+    let args = Args::from_env().unwrap();
+    let scale = args.get_f64("scale", 0.5).unwrap();
+
+    for app in ["SN", "conv3d", "HS3D", "sradv1"] {
+        let base = run(app, L1ArchKind::Private, scale);
+        let dec = run(app, L1ArchKind::DecoupledSharing, scale);
+        let ata = run(app, L1ArchKind::Ata, scale);
+
+        let mut t = Table::new(&format!("Fig 9 — {app}: per-kernel IPC normalized to private"))
+            .header(&["kernel", "decoupled", "ata", "ata beats dec?"]);
+        let mut dec_wins = 0;
+        for (i, k) in base.kernels.iter().enumerate() {
+            let b = k.ipc().max(1e-12);
+            let d = dec.kernels[i].ipc() / b;
+            let a = ata.kernels[i].ipc() / b;
+            if a >= d {
+                dec_wins += 1;
+            }
+            t.row(vec![
+                format!("k{i}:{}", k.name),
+                format!("{d:.3}"),
+                format!("{a:.3}"),
+                if a >= d { "yes".into() } else { "no".into() },
+            ]);
+        }
+        println!("{}", t.render());
+        println!(
+            "  ATA >= decoupled on {dec_wins}/{} kernels; whole-app: dec {:.3} ata {:.3}\n",
+            base.kernels.len(),
+            dec.ipc() / base.ipc(),
+            ata.ipc() / base.ipc()
+        );
+    }
+}

@@ -1,0 +1,55 @@
+//! Quickstart: simulate one application on the private baseline and on
+//! ATA-Cache, and print the paper's headline comparison.
+//!
+//!     cargo run --release --example quickstart
+
+use ata_cache::config::{GpuConfig, L1ArchKind};
+use ata_cache::engine::Engine;
+use ata_cache::trace::apps;
+use ata_cache::util::table::pct_delta;
+
+fn main() {
+    // 1. Pick a workload model — SqueezeNet (Tango), a high inter-core
+    //    locality app: every core streams the same filter weights.
+    let app = apps::app("SN").expect("SN is a built-in model");
+    println!("app: {} ({}, {:?} locality)", app.name, app.suite, app.class);
+    println!("     {}", app.notes);
+
+    // 2. Simulate under the conventional private L1 (Table II GPU).
+    let cfg_private = GpuConfig::paper(L1ArchKind::Private);
+    let wl = app.scaled(0.5).workload(&cfg_private);
+    let base = Engine::new(&cfg_private).run(&wl);
+
+    // 3. Same workload on ATA-Cache.
+    let cfg_ata = GpuConfig::paper(L1ArchKind::Ata);
+    let ata = Engine::new(&cfg_ata).run(&wl);
+
+    // 4. Compare.
+    println!("\n{:<26} {:>12} {:>12}", "", "private", "ata-cache");
+    println!("{:<26} {:>12.4} {:>12.4}", "IPC", base.ipc(), ata.ipc());
+    println!(
+        "{:<26} {:>11.1}% {:>11.1}%",
+        "L1 hit rate",
+        base.l1.hit_rate() * 100.0,
+        ata.l1.hit_rate() * 100.0
+    );
+    println!(
+        "{:<26} {:>12} {:>12}",
+        "remote hits", base.l1.remote_hits, ata.l1.remote_hits
+    );
+    println!(
+        "{:<26} {:>12.1} {:>12.1}",
+        "L1 access latency (cyc)", base.l1_stage_mean_latency, ata.l1_stage_mean_latency
+    );
+    println!(
+        "{:<26} {:>11.1}% {:>11.1}%",
+        "L2 hit rate",
+        base.l2_hit_rate * 100.0,
+        ata.l2_hit_rate * 100.0
+    );
+    println!(
+        "\nATA-Cache IPC vs private: {}",
+        pct_delta(ata.ipc() / base.ipc())
+    );
+    assert!(ata.ipc() >= base.ipc() * 0.99, "ATA should not lose");
+}

@@ -1,0 +1,80 @@
+"""AOT-lower the locality analytics model to HLO text for the Rust loader.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax ≥0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  python -m compile.aot --out ../artifacts/locality.hlo.txt
+Run from ``python/`` (the Makefile does).  Python runs ONCE here; the Rust
+binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_locality() -> str:
+    lowered = jax.jit(model.export_fn).lower(*model.export_example_args())
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--out",
+        default="../artifacts/locality.hlo.txt",
+        help="output path for the HLO text artifact",
+    )
+    args = ap.parse_args()
+
+    text = lower_locality()
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(text)
+
+    # Sidecar metadata the Rust runtime sanity-checks at load time.
+    meta = {
+        "artifact": "locality",
+        "num_cores": model.NUM_CORES,
+        "padded_cores": model.PADDED_CORES,
+        "trace_len": model.TRACE_LEN,
+        "nbits": model.NBITS,
+        "inputs": [
+            {"name": "lines", "dtype": "i32", "shape": [model.PADDED_CORES, model.TRACE_LEN]},
+            {"name": "valid", "dtype": "i32", "shape": [model.PADDED_CORES, model.TRACE_LEN]},
+        ],
+        "outputs": [
+            {"name": "sharing_matrix", "dtype": "f32", "shape": [model.PADDED_CORES, model.PADDED_CORES]},
+            {"name": "sizes", "dtype": "f32", "shape": [model.PADDED_CORES]},
+            {"name": "locality_score", "dtype": "f32", "shape": [1]},
+            {"name": "replication_factor", "dtype": "f32", "shape": [1]},
+        ],
+    }
+    meta_path = os.path.splitext(args.out)[0].replace(".hlo", "") + ".meta.json"
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2)
+
+    print(f"wrote {len(text)} chars to {args.out}")
+    print(f"wrote metadata to {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

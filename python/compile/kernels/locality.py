@@ -1,0 +1,120 @@
+"""L1 Pallas kernel: tiled bitmap-signature matmul for inter-core locality.
+
+The paper classifies applications by the amount of replicated data across
+GPU cores (§IV).  The analytics pipeline casts sharing-set intersection as
+a dense matmul over hashed occupancy bitmaps: each core's cache-line set
+becomes a {0,1}^NBITS signature row of ``B`` and the core×core sharing
+matrix is ``S = B @ B^T`` — ``S[i, j]`` counts hash buckets touched by both
+core ``i`` and core ``j`` (collision-corrected upstream).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): a CUDA implementation
+would do warp-per-pair set intersection in shared memory; on TPU we instead
+feed the MXU a blocked matmul.  BlockSpec keeps a (C×TILE_K) panel of ``B``
+resident in VMEM and walks the K (bit) dimension on the grid, accumulating
+into a C×C f32 tile that lives in the output block across grid steps.
+
+``interpret=True`` is mandatory on this image: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default K-tile: 512 f32 lanes × 32 cores × 4 B = 64 KiB per operand panel,
+# comfortably inside VMEM with double buffering (DESIGN.md §8).
+DEFAULT_TILE_K = 512
+
+
+def _signature_matmul_kernel(b_ref, bt_ref, out_ref):
+    """One grid step: accumulate a K-panel's contribution to S = B @ B^T.
+
+    b_ref  : (C, TILE_K) panel of the signature matrix.
+    bt_ref : (TILE_K, C) panel of its transpose (same data, pre-transposed
+             at the jnp level so the MXU sees a plain [M,K]x[K,N] contraction
+             with no in-kernel transpose).
+    out_ref: (C, C) accumulator tile, revisited by every grid step.
+    """
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jnp.dot(
+        b_ref[...], bt_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tile_k",))
+def signature_matmul(bitmaps: jax.Array, *, tile_k: int = DEFAULT_TILE_K) -> jax.Array:
+    """Compute the core×core sharing matrix ``S = B @ B^T``.
+
+    Args:
+      bitmaps: f32[C, NBITS] 0/1 occupancy signatures, one row per core.
+        ``C`` should be a multiple of 8 and ``NBITS`` a multiple of
+        ``tile_k`` (the model layer pads; see :mod:`compile.model`).
+      tile_k: K-dimension block size (static).
+
+    Returns:
+      f32[C, C] with ``S[i, j] = <B[i], B[j]>`` — exact popcounts of the
+      bucket intersections (f32 is exact for counts < 2**24).
+    """
+    c, nbits = bitmaps.shape
+    if nbits % tile_k != 0:
+        raise ValueError(f"NBITS={nbits} must be a multiple of tile_k={tile_k}")
+    grid = (nbits // tile_k,)
+    bt = bitmaps.T  # materialized once at the XLA level, outside the kernel
+
+    return pl.pallas_call(
+        _signature_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((c, tile_k), lambda k: (0, k)),
+            pl.BlockSpec((tile_k, c), lambda k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((c, c), lambda k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, c), jnp.float32),
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )(bitmaps, bt)
+
+
+def _union_popcount_kernel(b_ref, acc_ref):
+    """Grid step: accumulate per-panel column-OR popcount.
+
+    The union of all cores' signatures is the column-wise max (bitmaps are
+    0/1); its popcount is the estimated distinct-line count.  Each grid
+    step reduces its K-panel to a single partial sum held in a (1, 1)
+    accumulator block.
+    """
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    panel = b_ref[...]
+    acc_ref[...] += jnp.sum(jnp.max(panel, axis=0, keepdims=True), keepdims=True)[
+        :, :1
+    ]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_k",))
+def union_popcount(bitmaps: jax.Array, *, tile_k: int = DEFAULT_TILE_K) -> jax.Array:
+    """Popcount of the OR of all signature rows: estimated union size.
+
+    Returns f32[] — the number of hash buckets touched by *any* core.
+    """
+    c, nbits = bitmaps.shape
+    if nbits % tile_k != 0:
+        raise ValueError(f"NBITS={nbits} must be a multiple of tile_k={tile_k}")
+    grid = (nbits // tile_k,)
+    out = pl.pallas_call(
+        _union_popcount_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((c, tile_k), lambda k: (0, k))],
+        out_specs=pl.BlockSpec((1, 1), lambda k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=True,
+    )(bitmaps)
+    return out[0, 0]

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for the Pallas kernels and the locality pipeline.
+
+Everything here is the *reference semantics*; pytest asserts the Pallas
+kernels and the exported model against these with ``assert_allclose``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def signature_matmul_ref(bitmaps: jnp.ndarray) -> jnp.ndarray:
+    """S = B @ B^T in plain jnp (the contraction the MXU kernel tiles)."""
+    return jnp.dot(bitmaps, bitmaps.T, preferred_element_type=jnp.float32)
+
+
+def union_popcount_ref(bitmaps: jnp.ndarray) -> jnp.ndarray:
+    """Popcount of the column-wise OR of 0/1 signature rows."""
+    return jnp.sum(jnp.max(bitmaps, axis=0))
+
+
+def hash_lines_ref(lines: jnp.ndarray, nbits: int) -> jnp.ndarray:
+    """Reference of the multiplicative mix hash used by the model.
+
+    Must stay bit-identical to :func:`compile.model.hash_lines` — tests
+    build exact oracles on the *hashed* values, so any drift is caught.
+    """
+    h = lines.astype(jnp.uint32)
+    h = (h ^ (h >> 16)) * jnp.uint32(0x7FEB352D)
+    h = (h ^ (h >> 15)) * jnp.uint32(0x846CA68B)
+    h = h ^ (h >> 16)
+    return (h % jnp.uint32(nbits)).astype(jnp.int32)
+
+
+def build_signatures_ref(
+    lines: jnp.ndarray, valid: jnp.ndarray, nbits: int
+) -> jnp.ndarray:
+    """f32[C, NBITS] occupancy bitmaps from i32[C, T] line ids + masks."""
+    c, _ = lines.shape
+    hashed = hash_lines_ref(lines, nbits)
+    bitmaps = jnp.zeros((c, nbits), jnp.float32)
+    rows = jnp.broadcast_to(jnp.arange(c)[:, None], lines.shape)
+    return bitmaps.at[rows, hashed].max(valid.astype(jnp.float32))
+
+
+def locality_metrics_ref(lines: jnp.ndarray, valid: jnp.ndarray, nbits: int):
+    """Reference of the whole L2 pipeline (see compile.model for the spec).
+
+    Returns (S, sizes, locality_score, replication_factor):
+      S                  f32[C, C] sharing matrix over hash buckets.
+      sizes              f32[C]    per-core signature popcounts (diag of S).
+      locality_score     f32[]     off-diagonal mass / (C-1)·total — the
+                                   average fraction of a core's working set
+                                   replicated in each other core, in [0, 1].
+      replication_factor f32[]     Σ sizes / |union| — 1.0 means fully
+                                   disjoint working sets, C means all cores
+                                   touch the same lines.
+    """
+    b = build_signatures_ref(lines, valid, nbits)
+    s = signature_matmul_ref(b)
+    raw_sizes = jnp.diagonal(s)
+    union_pc = union_popcount_ref(b)
+
+    def lc(pc):
+        frac = jnp.clip(pc / nbits, 0.0, 1.0 - 1.0 / nbits)
+        return -nbits * jnp.log1p(-frac)
+
+    sizes = lc(raw_sizes)
+    union = lc(union_pc)
+    pc_i = raw_sizes[:, None]
+    pc_j = raw_sizes[None, :]
+    inter = jnp.maximum(lc(pc_i) + lc(pc_j) - lc(pc_i + pc_j - s), 0.0)
+    total = jnp.sum(sizes)
+    off_diag = jnp.sum(inter) - jnp.sum(jnp.diagonal(inter))
+    active = jnp.sum((jnp.max(valid, axis=1) > 0).astype(jnp.float32))
+    locality_score = off_diag / jnp.maximum(total * jnp.maximum(active - 1.0, 1.0), 1.0)
+    replication_factor = total / jnp.maximum(union, 1.0)
+    return s, sizes, locality_score, replication_factor

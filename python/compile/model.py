@@ -1,0 +1,142 @@
+"""L2 JAX model: the inter-core locality analytics pipeline.
+
+The paper classifies applications into high / low inter-core locality “based
+on the amount of replicated data across all cores” (§IV).  This module is
+that classifier as a compute graph:
+
+    raw per-core cache-line traces (i32[C, T] + validity mask)
+      → mix-hash into NBITS buckets
+      → per-core {0,1} occupancy signatures  (plain jnp scatter)
+      → core×core sharing matrix S = B @ Bᵀ   (Pallas MXU kernel)
+      → union popcount                        (Pallas reduce kernel)
+      → locality score + replication factor
+
+It is lowered ONCE by :mod:`compile.aot` to HLO text; the Rust coordinator
+executes the artifact through PJRT to classify workloads and to cross-check
+the simulator's replication statistics.  Python never runs at sim time.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import locality as kernels
+
+# Export-time shapes (see DESIGN.md §8): 30 SIMT cores padded to 32 rows so
+# Pallas tiles stay 8-aligned; 4096 sampled line ids per core; 8192 hash
+# buckets keep the collision rate ≈ T/NBITS ≤ 0.5 per bucket at full mask.
+NUM_CORES = 30
+PADDED_CORES = 32
+TRACE_LEN = 4096
+NBITS = 8192
+
+
+def hash_lines(lines: jnp.ndarray, nbits: int) -> jnp.ndarray:
+    """Map raw cache-line ids to hash buckets with a 32-bit mix hash.
+
+    The exact sequence (xor-shift + two odd multiplies) is the lowering of
+    ``murmur3``'s finalizer variant; it must stay bit-identical to
+    :func:`compile.kernels.ref.hash_lines_ref` and to the Rust-side
+    ``trace::signature::hash_line`` so the simulator can reproduce the
+    artifact's bucketing exactly.
+    """
+    h = lines.astype(jnp.uint32)
+    h = (h ^ (h >> 16)) * jnp.uint32(0x7FEB352D)
+    h = (h ^ (h >> 15)) * jnp.uint32(0x846CA68B)
+    h = h ^ (h >> 16)
+    return (h % jnp.uint32(nbits)).astype(jnp.int32)
+
+
+def build_signatures(
+    lines: jnp.ndarray, valid: jnp.ndarray, nbits: int
+) -> jnp.ndarray:
+    """Scatter hashed line ids into f32[C, NBITS] occupancy bitmaps.
+
+    Stays in plain jnp: one-hot scatter lowers to an XLA scatter-max which
+    fuses well, and it is O(C·T) next to the O(C²·NBITS) matmul hot-spot.
+    """
+    c, _ = lines.shape
+    hashed = hash_lines(lines, nbits)
+    bitmaps = jnp.zeros((c, nbits), jnp.float32)
+    rows = jnp.broadcast_to(jnp.arange(c)[:, None], lines.shape)
+    return bitmaps.at[rows, hashed].max(valid.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("nbits", "tile_k"))
+def locality_metrics(
+    lines: jnp.ndarray,
+    valid: jnp.ndarray,
+    *,
+    nbits: int = NBITS,
+    tile_k: int = kernels.DEFAULT_TILE_K,
+):
+    """Full pipeline: traces → (S, sizes, locality_score, replication_factor).
+
+    Args:
+      lines: i32[C, T] cache-line ids sampled per core (C may be any
+        multiple of 8; the AOT export pads 30 → 32 with masked rows).
+      valid: i32/f32/bool[C, T] — 1 where ``lines`` holds a real sample.
+
+    Returns:
+      S                  f32[C, C] bucket-sharing matrix.
+      sizes              f32[C]    per-core signature popcounts.
+      locality_score     f32[]     mean replicated fraction, in [0, 1].
+      replication_factor f32[]     Σ sizes / |∪ signatures|, in [1, C].
+    """
+    b = build_signatures(lines, valid, nbits)
+    s = kernels.signature_matmul(b, tile_k=tile_k)
+    raw_sizes = jnp.diagonal(s)
+    union_pc = kernels.union_popcount(b, tile_k=tile_k)
+
+    # Hash-bucket collision correction (linear counting, Whang et al.):
+    # a set of d distinct lines fills ~NBITS·(1 - e^(-d/NBITS)) buckets, so
+    # d ≈ -NBITS·ln(1 - popcount/NBITS).  Without this, workloads whose
+    # footprint approaches NBITS report inflated sharing.
+    lc = lambda pc: linear_count(pc, nbits)
+    sizes = lc(raw_sizes)
+    union = lc(union_pc)
+    # Pairwise intersections via inclusion–exclusion on corrected sizes:
+    # |A∩B| ≈ lc(pcA) + lc(pcB) - lc(pcA + pcB - pc(A∧B)).
+    pc_i = raw_sizes[:, None]
+    pc_j = raw_sizes[None, :]
+    pair_union_pc = pc_i + pc_j - s
+    inter = lc(pc_i) + lc(pc_j) - lc(pair_union_pc)
+    inter = jnp.maximum(inter, 0.0)
+
+    total = jnp.sum(sizes)
+    off_diag = jnp.sum(inter) - jnp.sum(jnp.diagonal(inter))
+    # Denominator uses *active* cores (rows with any valid sample), so the
+    # padding rows the AOT export carries (30 real cores in 32 rows) do not
+    # dilute the score.
+    active = jnp.sum((jnp.max(valid, axis=1) > 0).astype(jnp.float32))
+    locality_score = off_diag / jnp.maximum(total * jnp.maximum(active - 1.0, 1.0), 1.0)
+    replication_factor = total / jnp.maximum(union, 1.0)
+    return s, sizes, locality_score, replication_factor
+
+
+def linear_count(popcount, nbits: int):
+    """Distinct-count estimate from an occupancy popcount (clamped)."""
+    frac = jnp.clip(popcount / nbits, 0.0, 1.0 - 1.0 / nbits)
+    return -nbits * jnp.log1p(-frac)
+
+
+def export_fn(lines: jnp.ndarray, valid: jnp.ndarray):
+    """The exact function AOT-lowered to ``artifacts/locality.hlo.txt``.
+
+    Fixed shapes: lines i32[32, 4096], valid i32[32, 4096].  Rows 30..31
+    are padding — the Rust caller zeroes their masks.  Returned as a tuple
+    (the Rust loader unwraps with ``to_tuple``); scalars are reshaped to
+    [1] because PJRT literals round-trip rank-1 most portably.
+    """
+    s, sizes, score, repl = locality_metrics(lines, valid, nbits=NBITS)
+    return (s, sizes, score.reshape((1,)), repl.reshape((1,)))
+
+
+def export_example_args():
+    """ShapeDtypeStructs matching :func:`export_fn`'s AOT signature."""
+    spec_lines = jax.ShapeDtypeStruct((PADDED_CORES, TRACE_LEN), jnp.int32)
+    spec_valid = jax.ShapeDtypeStruct((PADDED_CORES, TRACE_LEN), jnp.int32)
+    return spec_lines, spec_valid

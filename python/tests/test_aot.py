@@ -1,0 +1,78 @@
+"""AOT path: lower → HLO text → recompile with xla_client → same numbers.
+
+This closes the loop the Rust runtime depends on: if the HLO text artifact
+executes correctly under xla_client here, `HloModuleProto::from_text_file`
+on the Rust side sees identical semantics.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile import aot, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def hlo_text():
+    return aot.lower_locality()
+
+
+def test_hlo_text_structure(hlo_text):
+    assert "ENTRY" in hlo_text
+    assert "s32[32,4096]" in hlo_text  # both inputs
+    assert "f32[32,32]" in hlo_text  # sharing matrix output
+
+
+def test_hlo_text_roundtrip_numerics(hlo_text):
+    rng = np.random.default_rng(42)
+    lines = rng.integers(0, 1 << 24, size=(32, 4096), dtype=np.int32)
+    valid = np.ones((32, 4096), np.int32)
+    valid[30:, :] = 0  # padding rows
+
+    # Reference through the live jax pipeline.
+    want = model.export_fn(jnp.asarray(lines), jnp.asarray(valid))
+
+    # Execution through the HLO text artifact, exactly as Rust will run it
+    # (parse text -> HloModule -> compile). jaxlib's Client only compiles
+    # StableHLO directly, so bridge parsed-HLO -> StableHLO for the test.
+    from jax._src import xla_bridge
+
+    backend = xla_bridge.get_backend("cpu")
+    hlo_module = xc._xla.hlo_module_from_text(hlo_text)
+    stablehlo = xc._xla.mlir.hlo_to_stablehlo(
+        hlo_module.as_serialized_hlo_module_proto()
+    )
+    exe = backend.compile_and_load(
+        stablehlo, backend.devices()[:1], xc.CompileOptions()
+    )
+    outs = exe.execute_sharded(
+        [backend.buffer_from_pyval(x) for x in (lines, valid)]
+    )
+    arrays = [np.asarray(o[0]) for o in outs.disassemble_into_single_device_arrays()]
+
+    assert len(arrays) == 4
+    for got, ref in zip(arrays, want):
+        np.testing.assert_allclose(got, np.asarray(ref), rtol=1e-6)
+
+
+def test_aot_writes_artifact(tmp_path):
+    out = tmp_path / "locality.hlo.txt"
+    import sys
+
+    argv = sys.argv
+    sys.argv = ["aot", "--out", str(out)]
+    try:
+        aot.main()
+    finally:
+        sys.argv = argv
+    assert out.exists() and out.stat().st_size > 1000
+    meta = json.loads((tmp_path / "locality.meta.json").read_text())
+    assert meta["num_cores"] == 30
+    assert meta["outputs"][0]["shape"] == [32, 32]

@@ -1,0 +1,116 @@
+"""Pallas kernels vs pure-jnp oracles — the core correctness signal.
+
+Hypothesis sweeps shapes and tile sizes; exact equality is expected because
+all counts are small integers held in f32.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import locality, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def random_bitmaps(rng, c, nbits, density=0.2):
+    return (rng.random((c, nbits)) < density).astype(np.float32)
+
+
+class TestSignatureMatmul:
+    def test_small_exact(self):
+        rng = np.random.default_rng(0)
+        b = random_bitmaps(rng, 8, 256)
+        got = locality.signature_matmul(jnp.asarray(b), tile_k=64)
+        want = ref.signature_matmul_ref(jnp.asarray(b))
+        np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+    def test_default_export_shape(self):
+        rng = np.random.default_rng(1)
+        b = random_bitmaps(rng, 32, 8192, density=0.3)
+        got = locality.signature_matmul(jnp.asarray(b))
+        want = ref.signature_matmul_ref(jnp.asarray(b))
+        np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+    def test_symmetry_and_diag(self):
+        rng = np.random.default_rng(2)
+        b = random_bitmaps(rng, 16, 512)
+        s = np.asarray(locality.signature_matmul(jnp.asarray(b), tile_k=128))
+        np.testing.assert_array_equal(s, s.T)
+        np.testing.assert_array_equal(np.diagonal(s), b.sum(axis=1))
+
+    def test_zero_bitmaps(self):
+        b = jnp.zeros((8, 256), jnp.float32)
+        s = locality.signature_matmul(b, tile_k=64)
+        np.testing.assert_array_equal(np.asarray(s), 0.0)
+
+    def test_identical_rows_saturate(self):
+        # All cores touch the same lines -> S is rank-1, every entry = popcount.
+        row = (np.arange(512) % 3 == 0).astype(np.float32)
+        b = jnp.asarray(np.tile(row, (8, 1)))
+        s = np.asarray(locality.signature_matmul(b, tile_k=128))
+        np.testing.assert_array_equal(s, row.sum())
+
+    def test_rejects_misaligned_tile(self):
+        b = jnp.zeros((8, 300), jnp.float32)
+        with pytest.raises(ValueError, match="multiple of tile_k"):
+            locality.signature_matmul(b, tile_k=128)
+
+    @settings(deadline=None, max_examples=20)
+    @given(
+        c_log=st.integers(min_value=3, max_value=5),
+        k_tiles=st.integers(min_value=1, max_value=8),
+        tile_k=st.sampled_from([64, 128, 256]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+        density=st.floats(min_value=0.0, max_value=1.0),
+    )
+    def test_matches_ref_swept(self, c_log, k_tiles, tile_k, seed, density):
+        c = 1 << c_log
+        nbits = k_tiles * tile_k
+        rng = np.random.default_rng(seed)
+        b = random_bitmaps(rng, c, nbits, density)
+        got = locality.signature_matmul(jnp.asarray(b), tile_k=tile_k)
+        want = ref.signature_matmul_ref(jnp.asarray(b))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+class TestUnionPopcount:
+    def test_small_exact(self):
+        rng = np.random.default_rng(3)
+        b = random_bitmaps(rng, 8, 256)
+        got = locality.union_popcount(jnp.asarray(b), tile_k=64)
+        want = ref.union_popcount_ref(jnp.asarray(b))
+        np.testing.assert_allclose(float(got), float(want))
+
+    def test_disjoint_rows_sum(self):
+        # Disjoint signatures: union = sum of popcounts.
+        b = np.zeros((4, 256), np.float32)
+        for i in range(4):
+            b[i, i * 64 : i * 64 + 10] = 1.0
+        got = float(locality.union_popcount(jnp.asarray(b), tile_k=64))
+        assert got == 40.0
+
+    def test_identical_rows(self):
+        row = (np.arange(512) % 5 == 0).astype(np.float32)
+        b = jnp.asarray(np.tile(row, (8, 1)))
+        got = float(locality.union_popcount(b, tile_k=128))
+        assert got == float(row.sum())
+
+    @settings(deadline=None, max_examples=20)
+    @given(
+        c=st.integers(min_value=1, max_value=32),
+        k_tiles=st.integers(min_value=1, max_value=6),
+        tile_k=st.sampled_from([64, 256]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_matches_ref_swept(self, c, k_tiles, tile_k, seed):
+        nbits = k_tiles * tile_k
+        rng = np.random.default_rng(seed)
+        b = random_bitmaps(rng, c, nbits, 0.3)
+        got = float(locality.union_popcount(jnp.asarray(b), tile_k=tile_k))
+        want = float(ref.union_popcount_ref(jnp.asarray(b)))
+        assert got == want

@@ -1,0 +1,53 @@
+//! Bench: regenerate Fig 10 — L1 access latency of the three sharing
+//! organizations normalized to the private cache (the paper's §IV-C
+//! metric: completion time of the L1 stage for all requests of one load).
+//!
+//!     cargo bench --bench fig10_l1_latency [-- --quick]
+
+use ata_cache::bench_harness::bench_prelude;
+use ata_cache::config::L1ArchKind;
+use ata_cache::coordinator::Sweep;
+use ata_cache::trace::apps;
+use ata_cache::util::table::{BarChart, Table};
+
+fn main() {
+    let quick = bench_prelude("fig10_l1_latency — L1 access latency (paper Fig 10)");
+    let scale = if quick { 0.25 } else { 0.5 };
+    let results = Sweep::paper(scale).run();
+
+    let mut t = Table::new("Fig 10 — L1 access latency normalized to private").header(&[
+        "app", "remote", "decoupled", "ata",
+    ]);
+    let mut chart = BarChart::new("decoupled vs ata latency ratio").baseline(1.0);
+    let mut dec_r = Vec::new();
+    let mut ata_r = Vec::new();
+    for app in apps::all_app_names() {
+        let r = results.norm_latency(L1ArchKind::RemoteSharing, app).unwrap();
+        let d = results.norm_latency(L1ArchKind::DecoupledSharing, app).unwrap();
+        let a = results.norm_latency(L1ArchKind::Ata, app).unwrap();
+        dec_r.push(d);
+        ata_r.push(a);
+        t.row(vec![
+            app.to_string(),
+            format!("{r:.2}x"),
+            format!("{d:.2}x"),
+            format!("{a:.2}x"),
+        ]);
+        chart.bar(&format!("{app:9} dec"), d);
+        chart.bar(&format!("{app:9} ata"), a);
+    }
+    println!("{}", t.render());
+    println!("{}", chart.render());
+
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let max = |v: &[f64]| v.iter().cloned().fold(f64::MIN, f64::max);
+    println!(
+        "decoupled: +{:.1}% avg, up to {:.2}x   (paper: +67.2% avg, up to 2.74x)",
+        (mean(&dec_r) - 1.0) * 100.0,
+        max(&dec_r)
+    );
+    println!(
+        "ata:       +{:.1}% avg                (paper: +6.0% avg)",
+        (mean(&ata_r) - 1.0) * 100.0
+    );
+}

@@ -1,0 +1,52 @@
+//! Bench: regenerate Fig 3 — the motivating observation that the
+//! decoupled-sharing cache has a *higher hit rate yet much longer L1
+//! latency* than the private cache.
+//!
+//!     cargo bench --bench fig3_l1_latency [-- --quick]
+
+use ata_cache::bench_harness::bench_prelude;
+use ata_cache::config::L1ArchKind;
+use ata_cache::coordinator::Sweep;
+use ata_cache::trace::apps;
+use ata_cache::util::table::Table;
+
+fn main() {
+    let quick = bench_prelude("fig3_l1_latency — private vs decoupled (paper Fig 3)");
+    let scale = if quick { 0.25 } else { 0.5 };
+
+    let mut sweep = Sweep::paper(scale);
+    sweep.archs = vec![L1ArchKind::Private, L1ArchKind::DecoupledSharing];
+    let results = sweep.run();
+
+    let mut t = Table::new("Fig 3 — private vs decoupled-sharing").header(&[
+        "app",
+        "priv hit%",
+        "dec hit%",
+        "priv L1 lat",
+        "dec L1 lat",
+        "lat ratio",
+    ]);
+    let mut hit_up = 0;
+    let mut lat_up = 0;
+    for app in apps::all_app_names() {
+        let p = results.get(L1ArchKind::Private, app).unwrap();
+        let d = results.get(L1ArchKind::DecoupledSharing, app).unwrap();
+        if d.l1.hit_rate() >= p.l1.hit_rate() {
+            hit_up += 1;
+        }
+        if d.l1_stage_mean_latency > p.l1_stage_mean_latency {
+            lat_up += 1;
+        }
+        t.row(vec![
+            app.to_string(),
+            format!("{:.1}", p.l1.hit_rate() * 100.0),
+            format!("{:.1}", d.l1.hit_rate() * 100.0),
+            format!("{:.1}", p.l1_stage_mean_latency),
+            format!("{:.1}", d.l1_stage_mean_latency),
+            format!("{:.2}x", d.l1_stage_mean_latency / p.l1_stage_mean_latency),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("decoupled hit rate >= private on {hit_up}/10 apps (paper: higher)");
+    println!("decoupled latency  >  private on {lat_up}/10 apps (paper: much longer)");
+}

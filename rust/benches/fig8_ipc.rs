@@ -1,0 +1,53 @@
+//! Bench: regenerate Fig 8 — overall IPC of remote-sharing,
+//! decoupled-sharing and ATA-Cache normalized to the private cache, for
+//! all ten applications, plus the paper's headline averages.
+//!
+//!     cargo bench --bench fig8_ipc [-- --quick]
+
+use ata_cache::bench_harness::{bench_prelude, sim_throughput};
+use ata_cache::config::L1ArchKind;
+use ata_cache::coordinator::Sweep;
+use ata_cache::trace::{apps, LocalityClass};
+use ata_cache::util::table::{pct_delta, Table};
+use std::time::Instant;
+
+fn main() {
+    let quick = bench_prelude("fig8_ipc — overall performance (paper Fig 8)");
+    let scale = if quick { 0.25 } else { 0.5 };
+
+    let t0 = Instant::now();
+    let sweep = Sweep::paper(scale);
+    let results = sweep.run();
+    let host = t0.elapsed().as_secs_f64();
+
+    let mut t = Table::new("Fig 8 — IPC normalized to private").header(&[
+        "app", "class", "remote", "decoupled", "ata",
+    ]);
+    for app in apps::all_apps() {
+        t.row(vec![
+            app.name.to_string(),
+            format!("{:?}", app.class),
+            format!("{:.3}", results.norm_ipc(L1ArchKind::RemoteSharing, app.name).unwrap()),
+            format!("{:.3}", results.norm_ipc(L1ArchKind::DecoupledSharing, app.name).unwrap()),
+            format!("{:.3}", results.norm_ipc(L1ArchKind::Ata, app.name).unwrap()),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let ata_high = results.class_geomean_ipc(L1ArchKind::Ata, LocalityClass::High);
+    let ata_low = results.class_geomean_ipc(L1ArchKind::Ata, LocalityClass::Low);
+    let dec_low = results.class_geomean_ipc(L1ArchKind::DecoupledSharing, LocalityClass::Low);
+    println!("ATA on high-locality apps:       {} (paper: +12.0%)", pct_delta(ata_high));
+    println!("ATA on low-locality apps:        {} (paper: no impairment)", pct_delta(ata_low));
+    println!(
+        "ATA vs decoupled on low-locality: {} (paper: +22.9%)",
+        pct_delta(ata_low / dec_low)
+    );
+
+    let cycles: u64 = results.results.iter().map(|r| r.cycles).sum();
+    println!(
+        "\nhost: {:.1}s wall, {:.2}M simulated cycles/s aggregate",
+        host,
+        sim_throughput(cycles, host) / 1e6
+    );
+}

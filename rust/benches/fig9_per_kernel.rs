@@ -1,0 +1,67 @@
+//! Bench: regenerate Fig 9 — per-kernel IPC of two high inter-kernel
+//! locality apps (SN, conv3d) and two low ones (HS3D, sradv1), decoupled
+//! vs ATA, normalized to private.
+//!
+//!     cargo bench --bench fig9_per_kernel [-- --quick]
+
+use ata_cache::bench_harness::bench_prelude;
+use ata_cache::config::{GpuConfig, L1ArchKind};
+use ata_cache::engine::Engine;
+use ata_cache::stats::SimResult;
+use ata_cache::trace::apps;
+use ata_cache::util::table::Table;
+
+fn run(app: &str, arch: L1ArchKind, scale: f64) -> SimResult {
+    let cfg = GpuConfig::paper(arch);
+    let wl = apps::app(app).unwrap().scaled(scale).workload(&cfg);
+    Engine::new(&cfg).run(&wl)
+}
+
+fn main() {
+    let quick = bench_prelude("fig9_per_kernel — per-kernel IPC (paper Fig 9)");
+    let scale = if quick { 0.25 } else { 0.5 };
+
+    // (app, the paper's observation to verify)
+    let cases = [
+        ("SN", "decoupled degrades several kernels; ATA wins overall"),
+        ("conv3d", "ATA >= decoupled on all kernels"),
+        ("HS3D", "ATA >= decoupled on all kernels"),
+        ("sradv1", "k4/k9/k14 crater under decoupled"),
+    ];
+    for (app, note) in cases {
+        let base = run(app, L1ArchKind::Private, scale);
+        let dec = run(app, L1ArchKind::DecoupledSharing, scale);
+        let ata = run(app, L1ArchKind::Ata, scale);
+
+        let mut t =
+            Table::new(&format!("Fig 9 — {app} ({note})")).header(&["kernel", "decoupled", "ata"]);
+        let mut ata_wins = 0;
+        for (i, k) in base.kernels.iter().enumerate() {
+            let b = k.ipc().max(1e-12);
+            let d = dec.kernels[i].ipc() / b;
+            let a = ata.kernels[i].ipc() / b;
+            if a >= d {
+                ata_wins += 1;
+            }
+            t.row(vec![format!("k{i}"), format!("{d:.3}"), format!("{a:.3}")]);
+        }
+        println!("{}", t.render());
+        println!(
+            "  ATA >= decoupled on {ata_wins}/{} kernels; app-level: dec {:.3} / ata {:.3}\n",
+            base.kernels.len(),
+            dec.ipc() / base.ipc(),
+            ata.ipc() / base.ipc()
+        );
+        if app == "sradv1" {
+            for k in [4usize, 9, 14] {
+                let b = base.kernels[k].ipc().max(1e-12);
+                println!(
+                    "  sradv1 k{k}: decoupled {:.3} vs ata {:.3} (paper: decoupled degrades)",
+                    dec.kernels[k].ipc() / b,
+                    ata.kernels[k].ipc() / b
+                );
+            }
+            println!();
+        }
+    }
+}

@@ -1,0 +1,60 @@
+//! Bench: regenerate §IV-D — hardware overhead of ATA-Cache's aggregated
+//! tag array (crossbar + comparator groups) at 45 nm, plus a cluster-size
+//! scaling ablation the paper leaves implicit.
+//!
+//!     cargo bench --bench hw_overhead
+
+use ata_cache::area::{estimate, Tech45};
+use ata_cache::bench_harness::bench_prelude;
+use ata_cache::config::{GpuConfig, L1ArchKind};
+use ata_cache::util::table::Table;
+
+fn main() {
+    bench_prelude("hw_overhead — §IV-D area & leakage @45nm");
+    let tech = Tech45::default();
+
+    let cfg = GpuConfig::paper(L1ArchKind::Ata);
+    let r = estimate(&cfg, &tech);
+    let mut t = Table::new("paper configuration (30 cores, 3 clusters of 10)")
+        .header(&["quantity", "measured", "paper"]);
+    t.row(vec!["crossbar area".into(), format!("{:.3} mm²", r.crossbar_mm2), "1.02 mm²".into()]);
+    t.row(vec![
+        "comparator area".into(),
+        format!("{:.3} mm²", r.comparator_mm2),
+        "0.02 mm²".into(),
+    ]);
+    t.row(vec!["leakage".into(), format!("{:.2} mW", r.leakage_mw), "5.55 mW".into()]);
+    t.row(vec!["comparators".into(), r.comparator_count.to_string(), "-".into()]);
+    t.row(vec![
+        "die fraction".into(),
+        format!("{:.3}%", r.die_fraction * 100.0),
+        "negligible".into(),
+    ]);
+    println!("{}", t.render());
+
+    // Ablation: how does the overhead scale with cluster size?
+    let mut ab = Table::new("ablation — overhead vs cluster size (30 cores total)").header(&[
+        "cores/cluster",
+        "clusters",
+        "xbar mm²",
+        "cmp mm²",
+        "leakage mW",
+    ]);
+    for (cpc, clusters) in [(5usize, 6usize), (6, 5), (10, 3), (15, 2), (30, 1)] {
+        let mut c = GpuConfig::paper(L1ArchKind::Ata);
+        c.cores = cpc * clusters;
+        c.clusters = clusters;
+        c.sharing.ata_comparator_groups = cpc;
+        let e = estimate(&c, &tech);
+        ab.row(vec![
+            cpc.to_string(),
+            clusters.to_string(),
+            format!("{:.3}", e.crossbar_mm2),
+            format!("{:.3}", e.comparator_mm2),
+            format!("{:.2}", e.leakage_mw),
+        ]);
+    }
+    println!("{}", ab.render());
+    println!("crossbar area grows ~quadratically in cluster size — the reason the");
+    println!("paper clusters 30 cores as 3x10 rather than sharing globally.");
+}

@@ -1,0 +1,145 @@
+//! Component microbenchmarks + the simulator-throughput baseline used by
+//! the performance pass (EXPERIMENTS.md §Perf).
+//!
+//! * tag array / MSHR / calendar / iSLIP op rates,
+//! * detailed iSLIP crossbar vs reservation twin (model-agreement check),
+//! * DRAM model service rate,
+//! * end-to-end engine throughput (simulated cycles per host second).
+//!
+//!     cargo bench --bench microbench [-- --quick]
+
+use ata_cache::bench_harness::{bench_prelude, measure, sim_throughput};
+use ata_cache::cache::TagArray;
+use ata_cache::config::{GpuConfig, L1ArchKind};
+use ata_cache::dram::Dram;
+use ata_cache::engine::Engine;
+use ata_cache::noc::{Crossbar, Islip, Packet, XbarReservation};
+use ata_cache::resource::Calendar;
+use ata_cache::trace::apps;
+use ata_cache::util::rng::Pcg32;
+use ata_cache::util::table::Table;
+
+fn main() {
+    let quick = bench_prelude("microbench — component rates + engine throughput");
+    let n = if quick { 100_000 } else { 1_000_000 };
+    let mut t = Table::new("component rates").header(&["component", "ops", "ns/op", "Mops/s"]);
+    let mut record = |name: &str, ops: u64, secs: f64| {
+        t.row(vec![
+            name.to_string(),
+            ops.to_string(),
+            format!("{:.1}", secs * 1e9 / ops as f64),
+            format!("{:.2}", ops as f64 / secs / 1e6),
+        ]);
+    };
+
+    // Tag array lookups (hit-heavy).
+    {
+        let mut ta = TagArray::new(8, 64);
+        for l in 0..512u64 {
+            ta.fill(l, 0b1111);
+        }
+        let mut rng = Pcg32::new(1, 1);
+        let timing = measure(1, 3, || {
+            let mut acc = 0u64;
+            for _ in 0..n {
+                let line = rng.next_below(512) as u64;
+                if matches!(ta.peek(line, 0b1111), ata_cache::cache::Probe::Hit { .. }) {
+                    acc += 1;
+                }
+            }
+            std::hint::black_box(acc);
+        });
+        record("tag_array.peek (hit)", n as u64, timing.mean_s);
+    }
+
+    // Calendar reservations with mixed past/future times.
+    {
+        let mut cal = Calendar::new();
+        let mut rng = Pcg32::new(2, 2);
+        let mut now = 0u64;
+        let timing = measure(1, 3, || {
+            for _ in 0..n {
+                now += (rng.next_below(3)) as u64;
+                let t = now + rng.next_below(200) as u64;
+                std::hint::black_box(cal.reserve(t, 2));
+            }
+        });
+        record("calendar.reserve", n as u64, timing.mean_s);
+    }
+
+    // iSLIP arbitration, 30x24 (the Table II fabric size).
+    {
+        let mut arb = Islip::new(30, 24);
+        let mut rng = Pcg32::new(3, 3);
+        let iters = (n / 100).max(1);
+        let timing = measure(1, 3, || {
+            for _ in 0..iters {
+                let wants: Vec<Vec<bool>> = (0..30)
+                    .map(|_| (0..24).map(|_| rng.chance(0.2)).collect())
+                    .collect();
+                std::hint::black_box(arb.arbitrate(&wants, 2));
+            }
+        });
+        record("islip.arbitrate 30x24", iters as u64, timing.mean_s);
+    }
+
+    // DRAM accesses.
+    {
+        let cfg = GpuConfig::paper(L1ArchKind::Private);
+        let mut dram = Dram::new(&cfg.dram, cfg.core_clock_ghz);
+        let mut rng = Pcg32::new(4, 4);
+        let mut now = 0u64;
+        let timing = measure(1, 3, || {
+            for _ in 0..n / 4 {
+                now += 2;
+                std::hint::black_box(dram.access(rng.next_u32() as u64 & 0xFFFFF, now, 4, false));
+            }
+        });
+        record("dram.access", (n / 4) as u64, timing.mean_s);
+    }
+    println!("{}", t.render());
+
+    // Detailed iSLIP crossbar vs reservation twin under hotspot traffic.
+    {
+        let pkts = if quick { 2_000 } else { 20_000 };
+        let mut det: Crossbar<u32> = Crossbar::new(8, 4, 1 << 20, 2);
+        let mut rng = Pcg32::new(5, 5);
+        let dsts: Vec<usize> = (0..pkts).map(|_| (rng.next_below(4)) as usize).collect();
+        for (k, &d) in dsts.iter().enumerate() {
+            det.offer(k % 8, Packet { dst: d, flits: 4, payload: 0 });
+        }
+        let mut det_cycles = 0u64;
+        let mut got = 0;
+        while got < pkts {
+            det.tick();
+            det_cycles += 1;
+            got += det.drain().len();
+        }
+        let mut res = XbarReservation::new(8, 4, 0, u64::MAX);
+        let mut last = 0u64;
+        for (k, &d) in dsts.iter().enumerate() {
+            last = last.max(res.transfer(k % 8, d, 0, 4));
+        }
+        println!(
+            "crossbar model agreement (hotspot, {pkts} pkts): detailed {det_cycles} cyc vs reservation {last} cyc ({:+.1}%)",
+            (last as f64 / det_cycles as f64 - 1.0) * 100.0
+        );
+    }
+
+    // Engine throughput baseline (the §Perf number).
+    {
+        let cfg = GpuConfig::paper(L1ArchKind::Ata);
+        let app = apps::app("cfd").unwrap().scaled(if quick { 0.25 } else { 0.5 });
+        let wl = app.workload(&cfg);
+        let timing = measure(1, 3, || {
+            let r = Engine::new(&cfg).run(&wl);
+            std::hint::black_box(r.cycles);
+        });
+        let r = Engine::new(&cfg).run(&wl);
+        println!(
+            "engine throughput (cfd/ata): {:.2}M simulated cycles/s, {:.2}M requests/s",
+            sim_throughput(r.cycles, timing.mean_s) / 1e6,
+            wl.total_requests() as f64 / timing.mean_s / 1e6,
+        );
+    }
+}

@@ -1,0 +1,86 @@
+//! Minimal benchmark harness (`criterion` is unavailable offline).
+//!
+//! Each `cargo bench` target is a `harness = false` binary that uses
+//! [`Bench`] for wall-clock measurement and the table/chart renderers to
+//! print the same rows/series the paper's tables and figures report.
+
+use std::time::Instant;
+
+/// Timing statistics over repeated runs.
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    pub iters: u32,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Timing {
+    pub fn per_iter_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+}
+
+/// Measure `f` after `warmup` throwaway runs.
+pub fn measure<F: FnMut()>(warmup: u32, iters: u32, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut total = 0.0;
+    let mut min_s = f64::MAX;
+    let mut max_s: f64 = 0.0;
+    for _ in 0..iters.max(1) {
+        let t = Instant::now();
+        f();
+        let dt = t.elapsed().as_secs_f64();
+        total += dt;
+        min_s = min_s.min(dt);
+        max_s = max_s.max(dt);
+    }
+    Timing {
+        iters: iters.max(1),
+        mean_s: total / iters.max(1) as f64,
+        min_s,
+        max_s,
+    }
+}
+
+/// Standard bench preamble: prints the target name and returns whether
+/// `--quick` was passed (benches downscale workloads accordingly).
+pub fn bench_prelude(name: &str) -> bool {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("ATA_BENCH_QUICK").is_ok();
+    println!("\n################################################################");
+    println!("# bench: {name}{}", if quick { "  [quick mode]" } else { "" });
+    println!("################################################################");
+    quick
+}
+
+/// Simulated-cycles-per-host-second throughput metric.
+pub fn sim_throughput(cycles: u64, host_seconds: f64) -> f64 {
+    if host_seconds <= 0.0 {
+        0.0
+    } else {
+        cycles as f64 / host_seconds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_iterations() {
+        let mut n = 0;
+        let t = measure(2, 5, || n += 1);
+        assert_eq!(n, 7, "2 warmup + 5 timed");
+        assert_eq!(t.iters, 5);
+        assert!(t.min_s <= t.mean_s && t.mean_s <= t.max_s);
+    }
+
+    #[test]
+    fn throughput_math() {
+        assert_eq!(sim_throughput(1000, 0.5), 2000.0);
+        assert_eq!(sim_throughput(1000, 0.0), 0.0);
+    }
+}

@@ -1,0 +1,113 @@
+//! Cache building blocks: sectored tag array, MSHRs, and a composed
+//! `SectoredCache` used as the storage half of every L1 organization and
+//! of the L2 slices.  Timing (bank contention, latencies) deliberately
+//! lives in the *organization* layer (`l1arch`, `l2`) — the paper's whole
+//! point is that the same SRAM arrays perform differently depending on how
+//! tag lookup and data access are organized.
+
+pub mod mshr;
+pub mod tag_array;
+
+pub use mshr::{Mshr, MshrOutcome};
+pub use tag_array::{Eviction, Probe, TagArray};
+
+use crate::config::L1Config;
+use crate::mem::{LineAddr, SectorMask};
+
+/// Storage state of one cache: tags + MSHRs (the data array carries no
+/// simulated contents — the simulator is timing-only, like GPGPU-Sim's
+/// performance model).
+#[derive(Debug, Clone)]
+pub struct SectoredCache {
+    pub tags: TagArray,
+    pub mshr: Mshr,
+}
+
+impl SectoredCache {
+    pub fn from_l1(cfg: &L1Config) -> Self {
+        SectoredCache {
+            tags: TagArray::new(cfg.sets(), cfg.assoc),
+            mshr: Mshr::new(cfg.mshr_entries, cfg.mshr_merges),
+        }
+    }
+
+    pub fn new(sets: usize, assoc: usize, mshr_entries: usize, mshr_merges: usize) -> Self {
+        SectoredCache {
+            tags: TagArray::new(sets, assoc),
+            mshr: Mshr::new(mshr_entries, mshr_merges),
+        }
+    }
+
+    /// Probe without state change (aggregated-tag-array view of this cache).
+    pub fn peek(&self, line: LineAddr, sectors: SectorMask) -> Probe {
+        self.tags.peek(line, sectors)
+    }
+
+    /// Install a fill and release waiting requests.
+    pub fn fill(
+        &mut self,
+        line: LineAddr,
+        sectors: SectorMask,
+    ) -> (Vec<crate::mem::MemRequest>, Option<Eviction>) {
+        let evicted = self.tags.fill(line, sectors);
+        let waiters = self.mshr.fill(line);
+        (waiters, evicted)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::{AccessKind, MemRequest};
+
+    fn req(id: u64, line: LineAddr) -> MemRequest {
+        MemRequest {
+            id,
+            core: 0,
+            warp: 0,
+            inst: 0,
+            line,
+            sectors: 0b1111,
+            kind: AccessKind::Load,
+            issue_cycle: 0,
+        }
+    }
+
+    #[test]
+    fn from_l1_uses_table2_geometry() {
+        let cfg = L1Config::default();
+        let c = SectoredCache::from_l1(&cfg);
+        assert_eq!(c.tags.sets(), 8);
+        assert_eq!(c.tags.assoc(), 64);
+    }
+
+    #[test]
+    fn fill_releases_mshr_waiters_and_installs_line() {
+        let mut c = SectoredCache::new(8, 2, 4, 4);
+        assert_eq!(c.peek(9, 0b1111), Probe::Miss);
+        c.mshr.allocate(req(1, 9));
+        c.mshr.allocate(req(2, 9));
+        let (waiters, ev) = c.fill(9, 0b1111);
+        assert_eq!(waiters.len(), 2);
+        assert!(ev.is_none());
+        assert!(matches!(c.peek(9, 0b1111), Probe::Hit { .. }));
+    }
+
+    #[test]
+    fn property_fill_never_leaves_stale_sector() {
+        // Property: after fill(line, s), peek(line, s) is a full Hit —
+        // across random interleavings of fills and evictions.
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::new(99, 0);
+        let mut c = SectoredCache::new(4, 2, 8, 8);
+        for _ in 0..2000 {
+            let line = rng.next_below(64) as u64;
+            let sectors = (rng.next_below(15) + 1) as u8;
+            c.fill(line, sectors);
+            match c.peek(line, sectors) {
+                Probe::Hit { .. } => {}
+                other => panic!("stale after fill: line={line} sectors={sectors:#b} {other:?}"),
+            }
+        }
+    }
+}

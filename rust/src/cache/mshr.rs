@@ -1,0 +1,172 @@
+//! Miss Status Holding Registers.
+//!
+//! One entry per outstanding missed *line*; later misses to the same line
+//! merge onto the entry (up to `max_merges`) instead of issuing duplicate
+//! memory traffic.  When the fill returns, all merged requests complete
+//! together.  A full MSHR (no entries, or a full merge list) back-pressures
+//! the cache pipeline — one of the contention sources the paper's shared
+//! caches suffer from.
+
+use crate::mem::{LineAddr, MemRequest, SectorMask};
+use crate::util::fxhash::FxHashMap;
+
+#[derive(Debug, Clone)]
+struct Entry {
+    /// Union of sectors requested by all merged requests.
+    sectors: SectorMask,
+    /// Requests waiting on this line.
+    waiters: Vec<MemRequest>,
+    /// True once the miss has been dispatched to the next level.
+    issued: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MshrOutcome {
+    /// New entry allocated; caller must dispatch the miss downstream.
+    Allocated,
+    /// Merged onto an in-flight miss; no new downstream traffic.
+    Merged,
+    /// Structural stall: no entry/merge slot available.
+    Full,
+}
+
+#[derive(Debug, Clone)]
+pub struct Mshr {
+    entries: FxHashMap<LineAddr, Entry>,
+    max_entries: usize,
+    max_merges: usize,
+}
+
+impl Mshr {
+    pub fn new(max_entries: usize, max_merges: usize) -> Self {
+        assert!(max_entries > 0 && max_merges > 0);
+        Mshr {
+            entries: FxHashMap::with_capacity_and_hasher(max_entries, Default::default()),
+            max_entries,
+            max_merges,
+        }
+    }
+
+    pub fn outstanding(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_tracking(&self, line: LineAddr) -> bool {
+        self.entries.contains_key(&line)
+    }
+
+    /// Try to record a missed request.
+    pub fn allocate(&mut self, req: MemRequest) -> MshrOutcome {
+        if let Some(e) = self.entries.get_mut(&req.line) {
+            if e.waiters.len() >= self.max_merges {
+                return MshrOutcome::Full;
+            }
+            e.sectors |= req.sectors;
+            e.waiters.push(req);
+            return MshrOutcome::Merged;
+        }
+        if self.entries.len() >= self.max_entries {
+            return MshrOutcome::Full;
+        }
+        self.entries.insert(
+            req.line,
+            Entry {
+                sectors: req.sectors,
+                waiters: vec![req],
+                issued: false,
+            },
+        );
+        MshrOutcome::Allocated
+    }
+
+    /// Sectors to fetch for a line's pending miss (union over waiters).
+    pub fn pending_sectors(&self, line: LineAddr) -> Option<SectorMask> {
+        self.entries.get(&line).map(|e| e.sectors)
+    }
+
+    /// Mark the downstream fetch as issued (idempotent).
+    pub fn mark_issued(&mut self, line: LineAddr) {
+        if let Some(e) = self.entries.get_mut(&line) {
+            e.issued = true;
+        }
+    }
+
+    pub fn is_issued(&self, line: LineAddr) -> bool {
+        self.entries.get(&line).map(|e| e.issued).unwrap_or(false)
+    }
+
+    /// Fill arrived: release and return all waiters.
+    pub fn fill(&mut self, line: LineAddr) -> Vec<MemRequest> {
+        self.entries.remove(&line).map(|e| e.waiters).unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::AccessKind;
+
+    fn req(id: u64, line: LineAddr, sectors: SectorMask) -> MemRequest {
+        MemRequest {
+            id,
+            core: 0,
+            warp: 0,
+            inst: 0,
+            line,
+            sectors,
+            kind: AccessKind::Load,
+            issue_cycle: 0,
+        }
+    }
+
+    #[test]
+    fn allocate_then_merge_then_fill() {
+        let mut m = Mshr::new(4, 4);
+        assert_eq!(m.allocate(req(1, 10, 0b0001)), MshrOutcome::Allocated);
+        assert_eq!(m.allocate(req(2, 10, 0b0010)), MshrOutcome::Merged);
+        assert_eq!(m.pending_sectors(10), Some(0b0011));
+        let done = m.fill(10);
+        assert_eq!(done.len(), 2);
+        assert_eq!(m.outstanding(), 0);
+        assert!(m.fill(10).is_empty(), "second fill is empty");
+    }
+
+    #[test]
+    fn entry_capacity_stalls() {
+        let mut m = Mshr::new(2, 4);
+        assert_eq!(m.allocate(req(1, 1, 1)), MshrOutcome::Allocated);
+        assert_eq!(m.allocate(req(2, 2, 1)), MshrOutcome::Allocated);
+        assert_eq!(m.allocate(req(3, 3, 1)), MshrOutcome::Full);
+        // Merges still allowed when entries are full.
+        assert_eq!(m.allocate(req(4, 1, 1)), MshrOutcome::Merged);
+    }
+
+    #[test]
+    fn merge_capacity_stalls() {
+        let mut m = Mshr::new(4, 2);
+        assert_eq!(m.allocate(req(1, 7, 1)), MshrOutcome::Allocated);
+        assert_eq!(m.allocate(req(2, 7, 1)), MshrOutcome::Merged);
+        assert_eq!(m.allocate(req(3, 7, 1)), MshrOutcome::Full, "merge list full");
+    }
+
+    #[test]
+    fn issued_flag_is_per_line() {
+        let mut m = Mshr::new(4, 4);
+        m.allocate(req(1, 5, 1));
+        m.allocate(req(2, 6, 1));
+        assert!(!m.is_issued(5));
+        m.mark_issued(5);
+        assert!(m.is_issued(5));
+        assert!(!m.is_issued(6));
+    }
+
+    #[test]
+    fn never_double_allocates_a_line() {
+        let mut m = Mshr::new(8, 8);
+        for i in 0..5 {
+            m.allocate(req(i, 42, 1 << (i % 4)));
+        }
+        assert_eq!(m.outstanding(), 1, "one entry regardless of merges");
+        assert_eq!(m.fill(42).len(), 5);
+    }
+}

@@ -1,0 +1,388 @@
+//! Sectored set-associative tag array with LRU replacement.
+//!
+//! Models the paper's 64 KiB / 64-way / 128 B-line / 32 B-sector L1 (and,
+//! with different geometry, the L2 slices).  A *line* owns the tag; each
+//! of its sectors has independent valid and dirty bits (Table II: sector
+//! caches).  The tag array is the structure the paper decouples and
+//! aggregates, so probing (`peek`) is separated from allocating
+//! (`fill`) and LRU-updating (`touch`) — the aggregated tag array of
+//! ATA-Cache peeks remote arrays without perturbing their state.
+
+use crate::mem::decode;
+use crate::mem::{LineAddr, SectorMask};
+
+/// Result of a lookup against one tag array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Probe {
+    /// Line present and every requested sector valid.
+    Hit { way: u32, dirty: bool },
+    /// Line present but some requested sectors invalid (sector miss —
+    /// fetch only the missing sectors).
+    SectorMiss { way: u32, missing: SectorMask },
+    /// Line absent.
+    Miss,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct TagEntry {
+    valid: bool,
+    tag: u64,
+    sector_valid: SectorMask,
+    sector_dirty: SectorMask,
+    last_use: u64,
+}
+
+/// Evicted-line information returned by `fill` when a victim was dirty.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Eviction {
+    pub line: LineAddr,
+    pub dirty_sectors: SectorMask,
+}
+
+#[derive(Debug, Clone)]
+pub struct TagArray {
+    sets: usize,
+    assoc: usize,
+    entries: Vec<TagEntry>, // sets × assoc, row-major
+    /// Per-set presence filter: bit `mix(tag) & 63` set for every valid
+    /// way.  `peek`/`lookup` reject misses in O(1) — the aggregated tag
+    /// array probes 10 caches per request and ~90% are misses, so this is
+    /// a large fraction of simulator time (EXPERIMENTS.md §Perf).
+    filters: Vec<u64>,
+    /// Monotone use-counter driving LRU (not wall-clock cycles, so two
+    /// touches in one cycle still order deterministically).
+    use_tick: u64,
+}
+
+#[inline]
+fn filter_bit(tag: u64) -> u64 {
+    // Cheap multiplicative mix; collisions only cost a wasted scan.
+    1u64 << ((tag.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 58) & 63)
+}
+
+impl TagArray {
+    pub fn new(sets: usize, assoc: usize) -> Self {
+        assert!(sets.is_power_of_two() && assoc > 0);
+        TagArray {
+            sets,
+            assoc,
+            entries: vec![TagEntry::default(); sets * assoc],
+            filters: vec![0; sets],
+            use_tick: 0,
+        }
+    }
+
+    pub fn sets(&self) -> usize {
+        self.sets
+    }
+
+    pub fn assoc(&self) -> usize {
+        self.assoc
+    }
+
+    #[inline]
+    fn row(&self, set: usize) -> &[TagEntry] {
+        &self.entries[set * self.assoc..(set + 1) * self.assoc]
+    }
+
+    #[inline]
+    fn row_mut(&mut self, set: usize) -> &mut [TagEntry] {
+        &mut self.entries[set * self.assoc..(set + 1) * self.assoc]
+    }
+
+    /// Non-destructive probe: no LRU update, no allocation.  This is the
+    /// operation the aggregated tag array performs in parallel across all
+    /// cluster caches (§III-B).
+    pub fn peek(&self, line: LineAddr, sectors: SectorMask) -> Probe {
+        let set = decode::set_index(line, self.sets);
+        let tag = decode::tag(line, self.sets);
+        if self.filters[set] & filter_bit(tag) == 0 {
+            return Probe::Miss; // fast reject: tag cannot be present
+        }
+        for (w, e) in self.row(set).iter().enumerate() {
+            if e.valid && e.tag == tag {
+                let missing = sectors & !e.sector_valid;
+                return if missing == 0 {
+                    Probe::Hit {
+                        way: w as u32,
+                        dirty: e.sector_dirty & sectors != 0,
+                    }
+                } else {
+                    Probe::SectorMiss {
+                        way: w as u32,
+                        missing,
+                    }
+                };
+            }
+        }
+        Probe::Miss
+    }
+
+    /// Probe and update LRU on line presence (hit or sector-miss).
+    pub fn lookup(&mut self, line: LineAddr, sectors: SectorMask) -> Probe {
+        let probe = self.peek(line, sectors);
+        if let Probe::Hit { way, .. } | Probe::SectorMiss { way, .. } = probe {
+            self.touch_way(decode::set_index(line, self.sets), way);
+        }
+        probe
+    }
+
+    fn touch_way(&mut self, set: usize, way: u32) {
+        self.use_tick += 1;
+        let t = self.use_tick;
+        self.row_mut(set)[way as usize].last_use = t;
+    }
+
+    /// Mark sectors dirty (write hit). Returns false if the line is absent.
+    pub fn mark_dirty(&mut self, line: LineAddr, sectors: SectorMask) -> bool {
+        let set = decode::set_index(line, self.sets);
+        let tag = decode::tag(line, self.sets);
+        self.use_tick += 1;
+        let t = self.use_tick;
+        for e in self.row_mut(set) {
+            if e.valid && e.tag == tag {
+                e.sector_dirty |= sectors & e.sector_valid;
+                e.last_use = t;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Is any requested sector of this line dirty? (remote-read dirty check,
+    /// §III-C).
+    pub fn is_dirty(&self, line: LineAddr, sectors: SectorMask) -> bool {
+        matches!(self.peek(line, sectors), Probe::Hit { dirty: true, .. })
+    }
+
+    /// Install (or extend) a line with `sectors`.  If the line is absent
+    /// the LRU way is evicted; a dirty victim is reported for write-back.
+    pub fn fill(&mut self, line: LineAddr, sectors: SectorMask) -> Option<Eviction> {
+        let set = decode::set_index(line, self.sets);
+        let tag = decode::tag(line, self.sets);
+        self.use_tick += 1;
+        let t = self.use_tick;
+        let sets = self.sets;
+
+        // Already present: just extend sector validity.
+        for e in self.row_mut(set) {
+            if e.valid && e.tag == tag {
+                e.sector_valid |= sectors;
+                e.last_use = t;
+                return None;
+            }
+        }
+        // Free way?
+        if let Some(e) = self.row_mut(set).iter_mut().find(|e| !e.valid) {
+            *e = TagEntry {
+                valid: true,
+                tag,
+                sector_valid: sectors,
+                sector_dirty: 0,
+                last_use: t,
+            };
+            self.filters[set] |= filter_bit(tag);
+            return None;
+        }
+        // Evict LRU.
+        let victim_way = self
+            .row(set)
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, e)| e.last_use)
+            .map(|(w, _)| w)
+            .unwrap();
+        let victim = self.row(set)[victim_way];
+        let evicted = (victim.sector_dirty != 0).then(|| Eviction {
+            line: decode::line_from(victim.tag, set, sets),
+            dirty_sectors: victim.sector_dirty,
+        });
+        self.row_mut(set)[victim_way] = TagEntry {
+            valid: true,
+            tag,
+            sector_valid: sectors,
+            sector_dirty: 0,
+            last_use: t,
+        };
+        self.rebuild_filter(set);
+        evicted
+    }
+
+    /// Recompute a set's presence filter (after eviction/invalidation).
+    fn rebuild_filter(&mut self, set: usize) {
+        let mut f = 0u64;
+        for e in &self.entries[set * self.assoc..(set + 1) * self.assoc] {
+            if e.valid {
+                f |= filter_bit(e.tag);
+            }
+        }
+        self.filters[set] = f;
+    }
+
+    /// Invalidate a line if present (used by tests and coherence probes).
+    pub fn invalidate(&mut self, line: LineAddr) -> bool {
+        let set = decode::set_index(line, self.sets);
+        let tag = decode::tag(line, self.sets);
+        for e in self.row_mut(set) {
+            if e.valid && e.tag == tag {
+                e.valid = false;
+                self.rebuild_filter(set);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Count of valid lines (occupancy metric).
+    pub fn occupancy(&self) -> usize {
+        self.entries.iter().filter(|e| e.valid).count()
+    }
+
+    /// Iterate all resident line addresses (used by replication audits).
+    pub fn resident_lines(&self) -> Vec<LineAddr> {
+        let mut out = Vec::with_capacity(self.occupancy());
+        for set in 0..self.sets {
+            for e in self.row(set) {
+                if e.valid {
+                    out.push(decode::line_from(e.tag, set, self.sets));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ta(sets: usize, assoc: usize) -> TagArray {
+        TagArray::new(sets, assoc)
+    }
+
+    #[test]
+    fn miss_then_fill_then_hit() {
+        let mut t = ta(8, 4);
+        assert_eq!(t.peek(42, 0b1111), Probe::Miss);
+        assert!(t.fill(42, 0b1111).is_none());
+        assert!(matches!(t.peek(42, 0b1111), Probe::Hit { .. }));
+        assert!(matches!(t.peek(42, 0b0001), Probe::Hit { .. }));
+    }
+
+    #[test]
+    fn sector_miss_reports_missing_sectors() {
+        let mut t = ta(8, 4);
+        t.fill(42, 0b0011);
+        match t.peek(42, 0b0111) {
+            Probe::SectorMiss { missing, .. } => assert_eq!(missing, 0b0100),
+            other => panic!("expected sector miss, got {other:?}"),
+        }
+        // Fill the missing sector; now full hit.
+        t.fill(42, 0b0100);
+        assert!(matches!(t.peek(42, 0b0111), Probe::Hit { .. }));
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let mut t = ta(1, 2); // one set, two ways
+        t.fill(0, 1);
+        t.fill(1, 1);
+        t.lookup(0, 1); // 0 is now MRU
+        t.fill(2, 1); // must evict 1
+        assert!(matches!(t.peek(0, 1), Probe::Hit { .. }));
+        assert_eq!(t.peek(1, 1), Probe::Miss);
+        assert!(matches!(t.peek(2, 1), Probe::Hit { .. }));
+    }
+
+    #[test]
+    fn peek_does_not_disturb_lru() {
+        let mut t = ta(1, 2);
+        t.fill(0, 1);
+        t.fill(1, 1);
+        t.peek(0, 1); // must NOT promote 0
+        t.fill(2, 1); // evicts 0 (oldest by use)
+        assert_eq!(t.peek(0, 1), Probe::Miss);
+        assert!(matches!(t.peek(1, 1), Probe::Hit { .. }));
+    }
+
+    #[test]
+    fn dirty_eviction_reports_writeback() {
+        let mut t = ta(1, 1);
+        t.fill(10, 0b0011);
+        assert!(t.mark_dirty(10, 0b0001));
+        let ev = t.fill(11, 0b1111).expect("dirty victim");
+        assert_eq!(ev.line, 10);
+        assert_eq!(ev.dirty_sectors, 0b0001);
+        // Clean victims are silent.
+        assert!(t.fill(12, 0b1111).is_none());
+    }
+
+    #[test]
+    fn dirty_flag_visible_to_remote_probe() {
+        let mut t = ta(8, 2);
+        t.fill(5, 0b1111);
+        assert!(!t.is_dirty(5, 0b1111));
+        t.mark_dirty(5, 0b0010);
+        assert!(t.is_dirty(5, 0b0010));
+        assert!(t.is_dirty(5, 0b1111));
+        assert!(!t.is_dirty(5, 0b1101));
+    }
+
+    #[test]
+    fn mark_dirty_only_on_valid_sectors() {
+        let mut t = ta(8, 2);
+        t.fill(5, 0b0001);
+        t.mark_dirty(5, 0b1111);
+        // Only the valid sector can be dirty.
+        match t.peek(5, 0b0001) {
+            Probe::Hit { dirty, .. } => assert!(dirty),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn distinct_sets_do_not_interfere() {
+        let mut t = ta(8, 1);
+        for line in 0..8u64 {
+            t.fill(line, 1);
+        }
+        for line in 0..8u64 {
+            assert!(matches!(t.peek(line, 1), Probe::Hit { .. }));
+        }
+        assert_eq!(t.occupancy(), 8);
+    }
+
+    #[test]
+    fn same_set_lines_compete() {
+        let mut t = ta(8, 2);
+        // lines 0, 8, 16 all map to set 0
+        t.fill(0, 1);
+        t.fill(8, 1);
+        t.fill(16, 1);
+        assert_eq!(t.occupancy(), 2);
+        assert_eq!(t.peek(0, 1), Probe::Miss, "LRU of set 0 evicted");
+    }
+
+    #[test]
+    fn invalidate_removes_line() {
+        let mut t = ta(8, 2);
+        t.fill(3, 1);
+        assert!(t.invalidate(3));
+        assert_eq!(t.peek(3, 1), Probe::Miss);
+        assert!(!t.invalidate(3));
+    }
+
+    #[test]
+    fn resident_lines_roundtrip() {
+        let mut t = ta(8, 4);
+        let lines = [1u64, 9, 17, 100, 1000];
+        for &l in &lines {
+            t.fill(l, 0b1111);
+        }
+        let mut got = t.resident_lines();
+        got.sort_unstable();
+        let mut want = lines.to_vec();
+        want.sort_unstable();
+        assert_eq!(got, want);
+    }
+}

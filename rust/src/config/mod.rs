@@ -1,0 +1,697 @@
+//! GPU configuration system — Table II of the paper, as data.
+//!
+//! Every experiment builds a [`GpuConfig`] (defaults = the paper's
+//! simulated GPU), optionally overrides fields, validates, and hands it to
+//! the engine.  Configs round-trip through JSON so sweeps can be driven
+//! from files, and every derived geometry quantity (sets, banks, slices)
+//! is computed here once, not scattered through the simulator.
+
+use crate::util::json::Json;
+
+/// Which L1 organization the cluster runs (§II/§III of the paper).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum L1ArchKind {
+    /// Conventional per-core private L1 (the normalization baseline).
+    Private,
+    /// Remote-sharing: private L1s + probe ring between cores
+    /// (Dublish et al. cooperative caching; optional probe predictor per
+    /// Ibrahim PACT'19).
+    RemoteSharing,
+    /// Decoupled-sharing: cluster L1s address-sliced, every access routed
+    /// to the line's home slice (Ibrahim PACT'20 / HPCA'21).
+    DecoupledSharing,
+    /// The paper's contribution: aggregated tag array + remote-shared data.
+    Ata,
+}
+
+impl L1ArchKind {
+    pub const ALL: [L1ArchKind; 4] = [
+        L1ArchKind::Private,
+        L1ArchKind::RemoteSharing,
+        L1ArchKind::DecoupledSharing,
+        L1ArchKind::Ata,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            L1ArchKind::Private => "private",
+            L1ArchKind::RemoteSharing => "remote",
+            L1ArchKind::DecoupledSharing => "decoupled",
+            L1ArchKind::Ata => "ata",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "private" => Some(L1ArchKind::Private),
+            "remote" | "remote-sharing" => Some(L1ArchKind::RemoteSharing),
+            "decoupled" | "decoupled-sharing" => Some(L1ArchKind::DecoupledSharing),
+            "ata" | "ata-cache" => Some(L1ArchKind::Ata),
+            _ => None,
+        }
+    }
+}
+
+/// L1 write handling.  The paper processes writes only in the source
+/// core's local cache with a dirty bit (§III-C); GPGPU-Sim's conventional
+/// policy is write-through.  Both are modeled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WritePolicy {
+    /// Write-through, no-allocate (conventional GPU L1).
+    WriteThrough,
+    /// Paper policy: allocate/write in local cache only, dirty bit set;
+    /// remote readers that hit a dirty line fall back to L2.
+    WriteBackLocal,
+}
+
+/// L1 cache geometry + timing (per core). Defaults = Table II row 2.
+#[derive(Debug, Clone, PartialEq)]
+pub struct L1Config {
+    pub size_bytes: usize,
+    pub assoc: usize,
+    pub banks: usize,
+    pub line_bytes: usize,
+    pub sector_bytes: usize,
+    pub latency: u32,
+    pub mshr_entries: usize,
+    pub mshr_merges: usize,
+    /// Ports a single data-array bank serves per cycle.
+    pub bank_ports: usize,
+    pub write_policy: WritePolicy,
+}
+
+impl Default for L1Config {
+    fn default() -> Self {
+        L1Config {
+            size_bytes: 64 * 1024,
+            assoc: 64,
+            banks: 4,
+            line_bytes: 128,
+            sector_bytes: 32,
+            latency: 32,
+            mshr_entries: 64,
+            mshr_merges: 8,
+            bank_ports: 1,
+            write_policy: WritePolicy::WriteBackLocal,
+        }
+    }
+}
+
+impl L1Config {
+    pub fn lines(&self) -> usize {
+        self.size_bytes / self.line_bytes
+    }
+    pub fn sets(&self) -> usize {
+        self.lines() / self.assoc
+    }
+    pub fn sectors_per_line(&self) -> usize {
+        self.line_bytes / self.sector_bytes
+    }
+}
+
+/// L2 geometry + timing. Defaults = Table II row 3 (24 sub-partitions of
+/// 128 KiB, 16-way → 3 MiB total).
+#[derive(Debug, Clone, PartialEq)]
+pub struct L2Config {
+    pub slices: usize,
+    pub slice_size_bytes: usize,
+    pub assoc: usize,
+    pub line_bytes: usize,
+    pub sector_bytes: usize,
+    pub latency: u32,
+    pub mshr_entries: usize,
+    pub mshr_merges: usize,
+}
+
+impl Default for L2Config {
+    fn default() -> Self {
+        L2Config {
+            slices: 24,
+            slice_size_bytes: 128 * 1024,
+            assoc: 16,
+            line_bytes: 128,
+            sector_bytes: 32,
+            latency: 188,
+            mshr_entries: 128,
+            mshr_merges: 16,
+        }
+    }
+}
+
+impl L2Config {
+    pub fn total_bytes(&self) -> usize {
+        self.slices * self.slice_size_bytes
+    }
+    pub fn sets_per_slice(&self) -> usize {
+        self.slice_size_bytes / (self.line_bytes * self.assoc)
+    }
+}
+
+/// DRAM timing in *memory-clock* cycles (Table II row 4).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DramConfig {
+    pub controllers: usize,
+    pub banks_per_controller: usize,
+    pub clock_ghz: f64,
+    pub t_cl: u32,
+    pub t_rp: u32,
+    pub t_rc: u32,
+    pub t_ras: u32,
+    pub t_ccd: u32,
+    pub t_rcd: u32,
+    pub t_rrd: u32,
+    pub t_cdlr: u32,
+    pub t_wr: u32,
+    /// Burst length in memory cycles for one 32B sector transfer.
+    pub burst_cycles: u32,
+    /// Per-controller request queue depth.
+    pub queue_depth: usize,
+}
+
+impl Default for DramConfig {
+    fn default() -> Self {
+        DramConfig {
+            controllers: 12,
+            banks_per_controller: 16,
+            clock_ghz: 3.5,
+            t_cl: 20,
+            t_rp: 20,
+            t_rc: 62,
+            t_ras: 50,
+            t_ccd: 4,
+            t_rcd: 20,
+            t_rrd: 10,
+            t_cdlr: 9,
+            t_wr: 20,
+            burst_cycles: 4,
+            queue_depth: 64,
+        }
+    }
+}
+
+/// Interconnect (cores ↔ L2 slices): Table II row 5.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NocConfig {
+    pub flit_bytes: usize,
+    pub in_buffer_flits: usize,
+    pub out_buffer_flits: usize,
+    /// Crossbar traversal latency in core cycles.
+    pub latency: u32,
+    /// iSLIP arbitration iterations per cycle.
+    pub islip_iters: usize,
+}
+
+impl Default for NocConfig {
+    fn default() -> Self {
+        NocConfig {
+            flit_bytes: 40,
+            in_buffer_flits: 512,
+            out_buffer_flits: 512,
+            latency: 2,
+            islip_iters: 2,
+        }
+    }
+}
+
+/// Parameters specific to the shared-L1 organizations.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SharingConfig {
+    /// Ring hop latency (cycles) for remote-sharing probes/data.
+    pub ring_hop_latency: u32,
+    /// Ring link width in bytes/cycle (data serialization).
+    pub ring_width_bytes: usize,
+    /// Remote-sharing: enable the PACT'19-style presence predictor.
+    pub probe_predictor: bool,
+    /// Predictor accuracy model (probability a miss is correctly predicted
+    /// absent and skips the probe round-trip).
+    pub predictor_accuracy: f64,
+    /// Intra-cluster crossbar latency for decoupled/ATA data access.
+    pub cluster_xbar_latency: u32,
+    /// Intra-cluster crossbar: ports per L1 data array for remote readers.
+    pub remote_ports: usize,
+    /// ATA aggregated-tag-array lookup latency (cycles) added in front of
+    /// every access (the decoupled tag pipeline of §III-B).
+    pub ata_tag_latency: u32,
+    /// ATA: comparator groups per tag array (requests compared in
+    /// parallel per cycle); the paper provisions one group per core.
+    pub ata_comparator_groups: usize,
+    /// Probability model for “remote line is dirty” fallback (§III-C says
+    /// this is very rare; it is measured, not assumed, when the write
+    /// policy is WriteBackLocal).
+    pub fill_local_on_remote_hit: bool,
+}
+
+impl Default for SharingConfig {
+    fn default() -> Self {
+        SharingConfig {
+            ring_hop_latency: 2,
+            ring_width_bytes: 32,
+            probe_predictor: false,
+            predictor_accuracy: 0.8,
+            cluster_xbar_latency: 4,
+            remote_ports: 1,
+            ata_tag_latency: 2,
+            ata_comparator_groups: 10,
+            fill_local_on_remote_hit: true,
+        }
+    }
+}
+
+/// Top-level simulated GPU (Table II defaults).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuConfig {
+    pub cores: usize,
+    pub clusters: usize,
+    pub core_clock_ghz: f64,
+    pub schedulers_per_core: usize,
+    pub max_warps_per_core: usize,
+    /// Warp instructions issued per scheduler per cycle.
+    pub issue_width: usize,
+    pub l1: L1Config,
+    pub l2: L2Config,
+    pub dram: DramConfig,
+    pub noc: NocConfig,
+    pub sharing: SharingConfig,
+    pub l1_arch: L1ArchKind,
+    pub seed: u64,
+}
+
+impl Default for GpuConfig {
+    fn default() -> Self {
+        GpuConfig {
+            cores: 30,
+            clusters: 3,
+            core_clock_ghz: 1.365,
+            schedulers_per_core: 4,
+            max_warps_per_core: 64,
+            issue_width: 1,
+            l1: L1Config::default(),
+            l2: L2Config::default(),
+            dram: DramConfig::default(),
+            noc: NocConfig::default(),
+            sharing: SharingConfig::default(),
+            l1_arch: L1ArchKind::Private,
+            seed: 0xA7A_CACE,
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("invalid config: {0}")]
+    Invalid(String),
+    #[error("json: {0}")]
+    Json(#[from] crate::util::json::JsonError),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl GpuConfig {
+    /// Paper configuration with a given L1 organization.
+    pub fn paper(arch: L1ArchKind) -> Self {
+        GpuConfig {
+            l1_arch: arch,
+            ..Default::default()
+        }
+    }
+
+    /// A scaled-down configuration for fast unit/integration tests:
+    /// 8 cores in 2 clusters, 8 KiB L1s, shallow memory system.
+    pub fn tiny(arch: L1ArchKind) -> Self {
+        GpuConfig {
+            cores: 8,
+            clusters: 2,
+            schedulers_per_core: 2,
+            max_warps_per_core: 8,
+            l1: L1Config {
+                size_bytes: 8 * 1024,
+                assoc: 16,
+                banks: 2,
+                mshr_entries: 16,
+                mshr_merges: 4,
+                ..Default::default()
+            },
+            l2: L2Config {
+                slices: 4,
+                slice_size_bytes: 32 * 1024,
+                ..Default::default()
+            },
+            dram: DramConfig {
+                controllers: 2,
+                banks_per_controller: 4,
+                ..Default::default()
+            },
+            sharing: SharingConfig {
+                ata_comparator_groups: 4,
+                ..Default::default()
+            },
+            l1_arch: arch,
+            ..Default::default()
+        }
+    }
+
+    pub fn cores_per_cluster(&self) -> usize {
+        self.cores / self.clusters
+    }
+
+    /// DRAM-to-core clock ratio (used to convert DRAM timings into core
+    /// cycles — the engine runs a single core-clock domain).
+    pub fn dram_clock_ratio(&self) -> f64 {
+        self.dram.clock_ghz / self.core_clock_ghz
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let fail = |m: String| Err(ConfigError::Invalid(m));
+        if self.cores == 0 || self.clusters == 0 {
+            return fail("cores/clusters must be > 0".into());
+        }
+        if self.cores % self.clusters != 0 {
+            return fail(format!(
+                "cores ({}) must divide evenly into clusters ({})",
+                self.cores, self.clusters
+            ));
+        }
+        if !self.l1.lines().is_power_of_two() || self.l1.sets() == 0 {
+            return fail("L1 lines must be a power of two".into());
+        }
+        if self.l1.lines() % self.l1.assoc != 0 {
+            return fail("L1 assoc must divide line count".into());
+        }
+        if self.l1.line_bytes % self.l1.sector_bytes != 0 {
+            return fail("sector size must divide line size".into());
+        }
+        if self.l1.sectors_per_line() > 8 {
+            return fail("at most 8 sectors per line (mask is u8)".into());
+        }
+        if !self.l1.sets().is_power_of_two() {
+            return fail("L1 set count must be a power of two".into());
+        }
+        if !self.l1.banks.is_power_of_two() {
+            return fail("L1 bank count must be a power of two".into());
+        }
+        if self.l2.sets_per_slice() == 0 || !self.l2.sets_per_slice().is_power_of_two() {
+            return fail("L2 sets/slice must be a power of two".into());
+        }
+        if self.sharing.ata_comparator_groups < self.cores_per_cluster() {
+            return fail(format!(
+                "ATA comparator groups ({}) must cover the cluster ({})",
+                self.sharing.ata_comparator_groups,
+                self.cores_per_cluster()
+            ));
+        }
+        if self.l1.mshr_entries == 0 || self.l2.mshr_entries == 0 {
+            return fail("MSHR entries must be > 0".into());
+        }
+        Ok(())
+    }
+
+    // -- JSON round-trip ---------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("cores", self.cores.into()),
+            ("clusters", self.clusters.into()),
+            ("core_clock_ghz", self.core_clock_ghz.into()),
+            ("schedulers_per_core", self.schedulers_per_core.into()),
+            ("max_warps_per_core", self.max_warps_per_core.into()),
+            ("issue_width", self.issue_width.into()),
+            ("l1_arch", self.l1_arch.name().into()),
+            ("seed", self.seed.into()),
+            (
+                "l1",
+                Json::obj(vec![
+                    ("size_bytes", self.l1.size_bytes.into()),
+                    ("assoc", self.l1.assoc.into()),
+                    ("banks", self.l1.banks.into()),
+                    ("line_bytes", self.l1.line_bytes.into()),
+                    ("sector_bytes", self.l1.sector_bytes.into()),
+                    ("latency", (self.l1.latency as u64).into()),
+                    ("mshr_entries", self.l1.mshr_entries.into()),
+                    ("mshr_merges", self.l1.mshr_merges.into()),
+                    ("bank_ports", self.l1.bank_ports.into()),
+                    (
+                        "write_policy",
+                        match self.l1.write_policy {
+                            WritePolicy::WriteThrough => "write-through",
+                            WritePolicy::WriteBackLocal => "write-back-local",
+                        }
+                        .into(),
+                    ),
+                ]),
+            ),
+            (
+                "l2",
+                Json::obj(vec![
+                    ("slices", self.l2.slices.into()),
+                    ("slice_size_bytes", self.l2.slice_size_bytes.into()),
+                    ("assoc", self.l2.assoc.into()),
+                    ("line_bytes", self.l2.line_bytes.into()),
+                    ("sector_bytes", self.l2.sector_bytes.into()),
+                    ("latency", (self.l2.latency as u64).into()),
+                    ("mshr_entries", self.l2.mshr_entries.into()),
+                    ("mshr_merges", self.l2.mshr_merges.into()),
+                ]),
+            ),
+            (
+                "dram",
+                Json::obj(vec![
+                    ("controllers", self.dram.controllers.into()),
+                    ("banks_per_controller", self.dram.banks_per_controller.into()),
+                    ("clock_ghz", self.dram.clock_ghz.into()),
+                    ("t_cl", (self.dram.t_cl as u64).into()),
+                    ("t_rp", (self.dram.t_rp as u64).into()),
+                    ("t_rc", (self.dram.t_rc as u64).into()),
+                    ("t_ras", (self.dram.t_ras as u64).into()),
+                    ("t_ccd", (self.dram.t_ccd as u64).into()),
+                    ("t_rcd", (self.dram.t_rcd as u64).into()),
+                    ("t_rrd", (self.dram.t_rrd as u64).into()),
+                    ("t_cdlr", (self.dram.t_cdlr as u64).into()),
+                    ("t_wr", (self.dram.t_wr as u64).into()),
+                    ("burst_cycles", (self.dram.burst_cycles as u64).into()),
+                    ("queue_depth", self.dram.queue_depth.into()),
+                ]),
+            ),
+            (
+                "noc",
+                Json::obj(vec![
+                    ("flit_bytes", self.noc.flit_bytes.into()),
+                    ("in_buffer_flits", self.noc.in_buffer_flits.into()),
+                    ("out_buffer_flits", self.noc.out_buffer_flits.into()),
+                    ("latency", (self.noc.latency as u64).into()),
+                    ("islip_iters", self.noc.islip_iters.into()),
+                ]),
+            ),
+            (
+                "sharing",
+                Json::obj(vec![
+                    ("ring_hop_latency", (self.sharing.ring_hop_latency as u64).into()),
+                    ("ring_width_bytes", self.sharing.ring_width_bytes.into()),
+                    ("probe_predictor", self.sharing.probe_predictor.into()),
+                    ("predictor_accuracy", self.sharing.predictor_accuracy.into()),
+                    (
+                        "cluster_xbar_latency",
+                        (self.sharing.cluster_xbar_latency as u64).into(),
+                    ),
+                    ("remote_ports", self.sharing.remote_ports.into()),
+                    ("ata_tag_latency", (self.sharing.ata_tag_latency as u64).into()),
+                    (
+                        "ata_comparator_groups",
+                        self.sharing.ata_comparator_groups.into(),
+                    ),
+                    (
+                        "fill_local_on_remote_hit",
+                        self.sharing.fill_local_on_remote_hit.into(),
+                    ),
+                ]),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, ConfigError> {
+        let mut cfg = GpuConfig::default();
+        let g_usize = |j: &Json, k: &str, d: usize| j.get(k).and_then(Json::as_usize).unwrap_or(d);
+        let g_u32 = |j: &Json, k: &str, d: u32| {
+            j.get(k).and_then(Json::as_u64).map(|x| x as u32).unwrap_or(d)
+        };
+        let g_f64 = |j: &Json, k: &str, d: f64| j.get(k).and_then(Json::as_f64).unwrap_or(d);
+        let g_bool = |j: &Json, k: &str, d: bool| j.get(k).and_then(Json::as_bool).unwrap_or(d);
+
+        cfg.cores = g_usize(j, "cores", cfg.cores);
+        cfg.clusters = g_usize(j, "clusters", cfg.clusters);
+        cfg.core_clock_ghz = g_f64(j, "core_clock_ghz", cfg.core_clock_ghz);
+        cfg.schedulers_per_core = g_usize(j, "schedulers_per_core", cfg.schedulers_per_core);
+        cfg.max_warps_per_core = g_usize(j, "max_warps_per_core", cfg.max_warps_per_core);
+        cfg.issue_width = g_usize(j, "issue_width", cfg.issue_width);
+        cfg.seed = j.get("seed").and_then(Json::as_u64).unwrap_or(cfg.seed);
+        if let Some(name) = j.get("l1_arch").and_then(Json::as_str) {
+            cfg.l1_arch = L1ArchKind::from_name(name)
+                .ok_or_else(|| ConfigError::Invalid(format!("unknown l1_arch '{name}'")))?;
+        }
+        if let Some(l1) = j.get("l1") {
+            cfg.l1.size_bytes = g_usize(l1, "size_bytes", cfg.l1.size_bytes);
+            cfg.l1.assoc = g_usize(l1, "assoc", cfg.l1.assoc);
+            cfg.l1.banks = g_usize(l1, "banks", cfg.l1.banks);
+            cfg.l1.line_bytes = g_usize(l1, "line_bytes", cfg.l1.line_bytes);
+            cfg.l1.sector_bytes = g_usize(l1, "sector_bytes", cfg.l1.sector_bytes);
+            cfg.l1.latency = g_u32(l1, "latency", cfg.l1.latency);
+            cfg.l1.mshr_entries = g_usize(l1, "mshr_entries", cfg.l1.mshr_entries);
+            cfg.l1.mshr_merges = g_usize(l1, "mshr_merges", cfg.l1.mshr_merges);
+            cfg.l1.bank_ports = g_usize(l1, "bank_ports", cfg.l1.bank_ports);
+            if let Some(wp) = l1.get("write_policy").and_then(Json::as_str) {
+                cfg.l1.write_policy = match wp {
+                    "write-through" => WritePolicy::WriteThrough,
+                    "write-back-local" => WritePolicy::WriteBackLocal,
+                    other => {
+                        return Err(ConfigError::Invalid(format!("unknown write_policy '{other}'")))
+                    }
+                };
+            }
+        }
+        if let Some(l2) = j.get("l2") {
+            cfg.l2.slices = g_usize(l2, "slices", cfg.l2.slices);
+            cfg.l2.slice_size_bytes = g_usize(l2, "slice_size_bytes", cfg.l2.slice_size_bytes);
+            cfg.l2.assoc = g_usize(l2, "assoc", cfg.l2.assoc);
+            cfg.l2.line_bytes = g_usize(l2, "line_bytes", cfg.l2.line_bytes);
+            cfg.l2.sector_bytes = g_usize(l2, "sector_bytes", cfg.l2.sector_bytes);
+            cfg.l2.latency = g_u32(l2, "latency", cfg.l2.latency);
+            cfg.l2.mshr_entries = g_usize(l2, "mshr_entries", cfg.l2.mshr_entries);
+            cfg.l2.mshr_merges = g_usize(l2, "mshr_merges", cfg.l2.mshr_merges);
+        }
+        if let Some(d) = j.get("dram") {
+            cfg.dram.controllers = g_usize(d, "controllers", cfg.dram.controllers);
+            cfg.dram.banks_per_controller =
+                g_usize(d, "banks_per_controller", cfg.dram.banks_per_controller);
+            cfg.dram.clock_ghz = g_f64(d, "clock_ghz", cfg.dram.clock_ghz);
+            cfg.dram.t_cl = g_u32(d, "t_cl", cfg.dram.t_cl);
+            cfg.dram.t_rp = g_u32(d, "t_rp", cfg.dram.t_rp);
+            cfg.dram.t_rc = g_u32(d, "t_rc", cfg.dram.t_rc);
+            cfg.dram.t_ras = g_u32(d, "t_ras", cfg.dram.t_ras);
+            cfg.dram.t_ccd = g_u32(d, "t_ccd", cfg.dram.t_ccd);
+            cfg.dram.t_rcd = g_u32(d, "t_rcd", cfg.dram.t_rcd);
+            cfg.dram.t_rrd = g_u32(d, "t_rrd", cfg.dram.t_rrd);
+            cfg.dram.t_cdlr = g_u32(d, "t_cdlr", cfg.dram.t_cdlr);
+            cfg.dram.t_wr = g_u32(d, "t_wr", cfg.dram.t_wr);
+            cfg.dram.burst_cycles = g_u32(d, "burst_cycles", cfg.dram.burst_cycles);
+            cfg.dram.queue_depth = g_usize(d, "queue_depth", cfg.dram.queue_depth);
+        }
+        if let Some(n) = j.get("noc") {
+            cfg.noc.flit_bytes = g_usize(n, "flit_bytes", cfg.noc.flit_bytes);
+            cfg.noc.in_buffer_flits = g_usize(n, "in_buffer_flits", cfg.noc.in_buffer_flits);
+            cfg.noc.out_buffer_flits = g_usize(n, "out_buffer_flits", cfg.noc.out_buffer_flits);
+            cfg.noc.latency = g_u32(n, "latency", cfg.noc.latency);
+            cfg.noc.islip_iters = g_usize(n, "islip_iters", cfg.noc.islip_iters);
+        }
+        if let Some(s) = j.get("sharing") {
+            cfg.sharing.ring_hop_latency = g_u32(s, "ring_hop_latency", cfg.sharing.ring_hop_latency);
+            cfg.sharing.ring_width_bytes =
+                g_usize(s, "ring_width_bytes", cfg.sharing.ring_width_bytes);
+            cfg.sharing.probe_predictor = g_bool(s, "probe_predictor", cfg.sharing.probe_predictor);
+            cfg.sharing.predictor_accuracy =
+                g_f64(s, "predictor_accuracy", cfg.sharing.predictor_accuracy);
+            cfg.sharing.cluster_xbar_latency =
+                g_u32(s, "cluster_xbar_latency", cfg.sharing.cluster_xbar_latency);
+            cfg.sharing.remote_ports = g_usize(s, "remote_ports", cfg.sharing.remote_ports);
+            cfg.sharing.ata_tag_latency = g_u32(s, "ata_tag_latency", cfg.sharing.ata_tag_latency);
+            cfg.sharing.ata_comparator_groups =
+                g_usize(s, "ata_comparator_groups", cfg.sharing.ata_comparator_groups);
+            cfg.sharing.fill_local_on_remote_hit =
+                g_bool(s, "fill_local_on_remote_hit", cfg.sharing.fill_local_on_remote_hit);
+        }
+        Ok(cfg)
+    }
+
+    pub fn save(&self, path: &str) -> Result<(), ConfigError> {
+        std::fs::write(path, self.to_json().pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &str) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path)?;
+        let cfg = Self::from_json(&Json::parse(&text)?)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_config_matches_table2() {
+        let cfg = GpuConfig::paper(L1ArchKind::Ata);
+        assert_eq!(cfg.cores, 30);
+        assert_eq!(cfg.clusters, 3);
+        assert_eq!(cfg.cores_per_cluster(), 10);
+        assert_eq!(cfg.l1.size_bytes, 64 * 1024);
+        assert_eq!(cfg.l1.assoc, 64);
+        assert_eq!(cfg.l1.sets(), 8);
+        assert_eq!(cfg.l1.sectors_per_line(), 4);
+        assert_eq!(cfg.l1.latency, 32);
+        assert_eq!(cfg.l2.total_bytes(), 3 * 1024 * 1024);
+        assert_eq!(cfg.l2.latency, 188);
+        assert_eq!(cfg.l2.slices, 24);
+        assert_eq!(cfg.dram.controllers, 12);
+        assert_eq!(cfg.schedulers_per_core, 4);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn tiny_config_validates_for_all_archs() {
+        for arch in L1ArchKind::ALL {
+            GpuConfig::tiny(arch).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn dram_clock_ratio() {
+        let cfg = GpuConfig::default();
+        assert!((cfg.dram_clock_ratio() - 3.5 / 1.365).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        let mut cfg = GpuConfig::paper(L1ArchKind::DecoupledSharing);
+        cfg.sharing.probe_predictor = true;
+        cfg.l1.write_policy = WritePolicy::WriteThrough;
+        cfg.seed = 12345;
+        let j = cfg.to_json();
+        let back = GpuConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn validation_catches_bad_geometry() {
+        let mut cfg = GpuConfig::default();
+        cfg.cores = 31; // not divisible by 3 clusters
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = GpuConfig::default();
+        cfg.l1.sector_bytes = 48; // does not divide 128
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = GpuConfig::default();
+        cfg.sharing.ata_comparator_groups = 2; // cluster needs 10
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn arch_kind_names_roundtrip() {
+        for arch in L1ArchKind::ALL {
+            assert_eq!(L1ArchKind::from_name(arch.name()), Some(arch));
+        }
+        assert_eq!(L1ArchKind::from_name("ata-cache"), Some(L1ArchKind::Ata));
+        assert!(L1ArchKind::from_name("bogus").is_none());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let cfg = GpuConfig::paper(L1ArchKind::Ata);
+        let path = std::env::temp_dir().join("ata_cfg_test.json");
+        let path = path.to_str().unwrap();
+        cfg.save(path).unwrap();
+        let back = GpuConfig::load(path).unwrap();
+        assert_eq!(cfg, back);
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,198 @@
+//! Experiment coordinator: sweeps architectures × applications across
+//! worker threads, aggregates results, and produces the paper's tables
+//! and figures.
+
+pub mod landscape;
+
+use std::sync::Mutex;
+
+use crate::config::{GpuConfig, L1ArchKind};
+use crate::engine::Engine;
+use crate::stats::SimResult;
+use crate::trace::{apps, AppModel, LocalityClass};
+use crate::util::json::Json;
+use crate::util::table::geomean;
+
+/// A sweep specification: which architectures, which apps, at what scale.
+#[derive(Debug, Clone)]
+pub struct Sweep {
+    pub cfg: GpuConfig,
+    pub archs: Vec<L1ArchKind>,
+    pub apps: Vec<AppModel>,
+    /// Workload intensity multiplier (1.0 = paper scale).
+    pub scale: f64,
+    pub threads: usize,
+}
+
+impl Sweep {
+    /// Fig-8 sweep: all four architectures × all ten applications on the
+    /// paper configuration.
+    pub fn paper(scale: f64) -> Self {
+        Sweep {
+            cfg: GpuConfig::paper(L1ArchKind::Private),
+            archs: vec![
+                L1ArchKind::Private,
+                L1ArchKind::RemoteSharing,
+                L1ArchKind::DecoupledSharing,
+                L1ArchKind::Ata,
+            ],
+            apps: apps::all_apps(),
+            scale,
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        }
+    }
+
+    /// The three-architecture comparison most figures use (the paper
+    /// normalizes to private and plots decoupled + ATA).
+    pub fn fig8(scale: f64) -> Self {
+        let mut s = Sweep::paper(scale);
+        s.archs = vec![
+            L1ArchKind::Private,
+            L1ArchKind::DecoupledSharing,
+            L1ArchKind::Ata,
+        ];
+        s
+    }
+
+    /// Run every (arch, app) pair, work-stealing across threads.
+    pub fn run(&self) -> SweepResults {
+        let mut jobs: Vec<(L1ArchKind, AppModel)> = Vec::new();
+        for &arch in &self.archs {
+            for app in &self.apps {
+                jobs.push((arch, app.scaled(self.scale)));
+            }
+        }
+        let jobs = Mutex::new(jobs);
+        let results = Mutex::new(Vec::new());
+        let n_threads = self.threads.max(1);
+        std::thread::scope(|s| {
+            for _ in 0..n_threads {
+                s.spawn(|| loop {
+                    let job = { jobs.lock().unwrap().pop() };
+                    let Some((arch, app)) = job else { break };
+                    let mut cfg = self.cfg.clone();
+                    cfg.l1_arch = arch;
+                    let wl = app.workload(&cfg);
+                    let result = Engine::new(&cfg).run(&wl);
+                    results.lock().unwrap().push(result);
+                });
+            }
+        });
+        let mut results = results.into_inner().unwrap();
+        // Deterministic ordering regardless of thread finish order.
+        results.sort_by(|a, b| (a.arch.clone(), a.app.clone()).cmp(&(b.arch.clone(), b.app.clone())));
+        SweepResults { results }
+    }
+}
+
+/// Aggregated sweep output with the lookups the figures need.
+#[derive(Debug, Clone, Default)]
+pub struct SweepResults {
+    pub results: Vec<SimResult>,
+}
+
+impl SweepResults {
+    pub fn get(&self, arch: L1ArchKind, app: &str) -> Option<&SimResult> {
+        self.results
+            .iter()
+            .find(|r| r.arch == arch.name() && r.app == app)
+    }
+
+    /// IPC normalized to the private baseline (Fig 8's y-axis).
+    pub fn norm_ipc(&self, arch: L1ArchKind, app: &str) -> Option<f64> {
+        let base = self.get(L1ArchKind::Private, app)?.ipc();
+        let x = self.get(arch, app)?.ipc();
+        (base > 0.0).then(|| x / base)
+    }
+
+    /// L1 access latency normalized to private (Fig 3 / Fig 10's y-axis).
+    /// Uses the paper's §IV-C stage metric.
+    pub fn norm_latency(&self, arch: L1ArchKind, app: &str) -> Option<f64> {
+        let base = self.get(L1ArchKind::Private, app)?.l1_stage_mean_latency;
+        let x = self.get(arch, app)?.l1_stage_mean_latency;
+        (base > 0.0).then(|| x / base)
+    }
+
+    /// Full load latency (including L2/DRAM) normalized to private.
+    pub fn norm_full_latency(&self, arch: L1ArchKind, app: &str) -> Option<f64> {
+        let base = self.get(L1ArchKind::Private, app)?.l1_mean_load_latency;
+        let x = self.get(arch, app)?.l1_mean_load_latency;
+        (base > 0.0).then(|| x / base)
+    }
+
+    /// Geomean of normalized IPC over a locality class (the paper's
+    /// "12.0% on average" style numbers).
+    pub fn class_geomean_ipc(&self, arch: L1ArchKind, class: LocalityClass) -> f64 {
+        let names: Vec<&str> = apps::all_apps()
+            .into_iter()
+            .filter(|a| a.class == class)
+            .map(|a| a.name)
+            .collect();
+        let xs: Vec<f64> = names
+            .iter()
+            .filter_map(|n| self.norm_ipc(arch, n))
+            .collect();
+        geomean(&xs)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::arr(self.results.iter().map(SimResult::to_json).collect())
+    }
+
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().pretty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::synth;
+
+    fn tiny_sweep() -> Sweep {
+        Sweep {
+            cfg: GpuConfig::tiny(L1ArchKind::Private),
+            archs: vec![L1ArchKind::Private, L1ArchKind::Ata],
+            apps: vec![synth::locality_knob(0.8, 0.25), synth::pure_streaming().scaled(0.25)],
+            scale: 1.0,
+            threads: 2,
+        }
+    }
+
+    #[test]
+    fn sweep_runs_all_pairs_and_sorts() {
+        let r = tiny_sweep().run();
+        assert_eq!(r.results.len(), 4);
+        assert!(r.get(L1ArchKind::Ata, "synth[s=0.80]").is_some());
+        assert!(r.get(L1ArchKind::Private, "synth[stream]").is_some());
+        // Sorted by (arch, app):
+        let keys: Vec<(String, String)> = r
+            .results
+            .iter()
+            .map(|x| (x.arch.clone(), x.app.clone()))
+            .collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted);
+    }
+
+    #[test]
+    fn norm_ipc_is_one_for_private() {
+        let r = tiny_sweep().run();
+        let n = r.norm_ipc(L1ArchKind::Private, "synth[stream]").unwrap();
+        assert!((n - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parallel_equals_serial() {
+        let mut s = tiny_sweep();
+        let a = s.run();
+        s.threads = 1;
+        let b = s.run();
+        assert_eq!(a.results.len(), b.results.len());
+        for (x, y) in a.results.iter().zip(&b.results) {
+            assert_eq!(x.cycles, y.cycles, "{}/{}", x.arch, x.app);
+            assert_eq!(x.insts, y.insts);
+        }
+    }
+}

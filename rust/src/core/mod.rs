@@ -1,0 +1,453 @@
+//! SIMT core model: warps, greedy-then-oldest (GTO) schedulers, and
+//! memory-request issue.
+//!
+//! The model is warp-granular and memory-focused (like the paper's
+//! evaluation): ALU work appears as issue-slot occupancy between memory
+//! instructions, loads block the warp until every coalesced request
+//! completes, stores are fire-and-forget.  Each core has
+//! `schedulers_per_core` GTO schedulers that each issue one warp
+//! instruction per cycle (Table II: 4 GTO schedulers/core).
+
+pub mod program;
+
+pub use program::{WarpInst, WarpProgram};
+
+use crate::config::GpuConfig;
+use crate::mem::{AccessKind, MemRequest, ReqId};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum WarpState {
+    /// Can issue at or after the contained cycle.
+    Ready(u64),
+    /// Blocked on outstanding load requests.
+    WaitingMem,
+    Done,
+}
+
+#[derive(Debug)]
+struct Warp {
+    program: WarpProgram,
+    pc: usize,
+    /// Remaining ALU issue slots of the current Alu block.
+    alu_left: u16,
+    state: WarpState,
+    /// Load-instruction sequence counter (latency-metric grouping key).
+    inst_seq: u64,
+}
+
+impl Warp {
+    fn done(&self) -> bool {
+        self.state == WarpState::Done
+    }
+
+    fn ready_at(&self) -> Option<u64> {
+        match self.state {
+            WarpState::Ready(c) => Some(c),
+            _ => None,
+        }
+    }
+}
+
+/// One GTO scheduler: sticks with the current warp while it can issue,
+/// otherwise switches to the *oldest* ready warp (warp id = age; kernels
+/// launch all warps at t=0).
+#[derive(Debug)]
+struct Scheduler {
+    warp_ids: Vec<usize>,
+    current: Option<usize>,
+}
+
+/// The result of one core cycle.
+#[derive(Debug, Default)]
+pub struct IssueBatch {
+    /// Coalesced memory requests issued this cycle, each tagged with the
+    /// number of requests its load instruction produced (for the latency
+    /// tracker) — stores carry 0.
+    pub requests: Vec<(MemRequest, u32)>,
+    pub insts_issued: u64,
+}
+
+#[derive(Debug)]
+pub struct SimtCore {
+    pub id: u32,
+    warps: Vec<Warp>,
+    schedulers: Vec<Scheduler>,
+    pub insts: u64,
+    pub stall_cycles: u64,
+    next_req_id: ReqId,
+    /// Earliest cycle this core could issue again (perf fast path: lets
+    /// `tick` and the engine skip blocked cores in O(1); u64::MAX = never,
+    /// 0 = unknown/now).
+    next_event_hint: u64,
+}
+
+impl SimtCore {
+    /// Create a core running `programs` (one per warp).  Programs beyond
+    /// `max_warps_per_core` are rejected by the engine's launcher.
+    pub fn new(id: u32, cfg: &GpuConfig, programs: Vec<WarpProgram>) -> Self {
+        assert!(programs.len() <= cfg.max_warps_per_core);
+        let n_sched = cfg.schedulers_per_core;
+        let mut schedulers: Vec<Scheduler> = (0..n_sched)
+            .map(|_| Scheduler {
+                warp_ids: Vec::new(),
+                current: None,
+            })
+            .collect();
+        let warps: Vec<Warp> = programs
+            .into_iter()
+            .enumerate()
+            .map(|(w, p)| {
+                schedulers[w % n_sched].warp_ids.push(w);
+                Warp {
+                    state: if p.insts().is_empty() {
+                        WarpState::Done
+                    } else {
+                        WarpState::Ready(0)
+                    },
+                    program: p,
+                    pc: 0,
+                    alu_left: 0,
+                    inst_seq: 0,
+                }
+            })
+            .collect();
+        SimtCore {
+            id,
+            warps,
+            schedulers,
+            insts: 0,
+            stall_cycles: 0,
+            next_req_id: (id as u64) << 40,
+            next_event_hint: 0,
+        }
+    }
+
+    /// Earliest cycle the core might issue (valid after a `tick`).
+    pub fn next_event_hint(&self) -> u64 {
+        self.next_event_hint
+    }
+
+    pub fn all_done(&self) -> bool {
+        self.warps.iter().all(Warp::done)
+    }
+
+    /// Earliest cycle any warp can issue (for idle fast-forward); None if
+    /// every warp is done or waiting on memory.
+    pub fn next_ready_cycle(&self) -> Option<u64> {
+        self.warps.iter().filter_map(Warp::ready_at).min()
+    }
+
+    /// Wake a warp whose last outstanding load completed at `cycle`.
+    pub fn wake_warp(&mut self, warp: u32, cycle: u64) {
+        self.next_event_hint = self.next_event_hint.min(cycle);
+        let w = &mut self.warps[warp as usize];
+        debug_assert_eq!(w.state, WarpState::WaitingMem);
+        w.state = WarpState::Ready(cycle);
+    }
+
+    /// Run one cycle: each scheduler issues at most one warp instruction,
+    /// and the core as a whole issues at most one *memory* instruction
+    /// (the shared LDST port, as in GPGPU-Sim's SM model).
+    pub fn tick(&mut self, cycle: u64, out: &mut IssueBatch) {
+        // Fast path: nothing can issue before the cached hint.
+        if self.next_event_hint > cycle {
+            self.stall_cycles += self.schedulers.len() as u64;
+            return;
+        }
+        let insts_before = out.insts_issued;
+        let mut ldst_free = true;
+        for s in 0..self.schedulers.len() {
+            // GTO pick: keep current if it can issue, else oldest ready.
+            // A warp whose next instruction needs the LDST port cannot
+            // issue once the port is taken this cycle.
+            let pick = {
+                let sched = &self.schedulers[s];
+                let can_issue = |w: usize| {
+                    let warp = &self.warps[w];
+                    let ready = matches!(warp.state, WarpState::Ready(c) if c <= cycle);
+                    if !ready {
+                        return false;
+                    }
+                    let is_mem = warp.alu_left == 0
+                        && matches!(
+                            warp.program.insts()[warp.pc],
+                            WarpInst::Load(_) | WarpInst::Store(_)
+                        );
+                    !is_mem || ldst_free
+                };
+                match sched.current {
+                    Some(w) if can_issue(w) => Some(w),
+                    _ => sched.warp_ids.iter().copied().find(|&w| can_issue(w)),
+                }
+            };
+            let Some(wid) = pick else {
+                self.stall_cycles += 1;
+                self.schedulers[s].current = None;
+                continue;
+            };
+            self.schedulers[s].current = Some(wid);
+            let used_mem = self.issue_from_warp(wid, cycle, out);
+            if used_mem {
+                ldst_free = false;
+            }
+        }
+        self.next_event_hint = if out.insts_issued > insts_before {
+            cycle + 1
+        } else {
+            self.next_ready_cycle().unwrap_or(u64::MAX)
+        };
+    }
+
+    /// Returns true if the instruction used the LDST port.
+    fn issue_from_warp(&mut self, wid: usize, cycle: u64, out: &mut IssueBatch) -> bool {
+        let core = self.id;
+        let w = &mut self.warps[wid];
+        debug_assert!(matches!(w.state, WarpState::Ready(c) if c <= cycle));
+
+        // Mid-ALU-block: burn one issue slot.
+        if w.alu_left > 0 {
+            w.alu_left -= 1;
+            self.insts += 1;
+            out.insts_issued += 1;
+            if w.alu_left == 0 {
+                w.pc += 1;
+                if w.pc >= w.program.insts().len() {
+                    w.state = WarpState::Done;
+                }
+            }
+            return false;
+        }
+
+        match &w.program.insts()[w.pc] {
+            WarpInst::Alu(n) => {
+                let n = (*n).max(1);
+                w.alu_left = n - 1;
+                self.insts += 1;
+                out.insts_issued += 1;
+                if w.alu_left == 0 {
+                    w.pc += 1;
+                    if w.pc >= w.program.insts().len() {
+                        w.state = WarpState::Done;
+                    }
+                }
+                false
+            }
+            WarpInst::Load(lines) => {
+                debug_assert!(!lines.is_empty());
+                let inst = w.inst_seq;
+                w.inst_seq += 1;
+                let n = lines.len() as u32;
+                for &(line, sectors) in lines.iter() {
+                    let id = self.next_req_id;
+                    self.next_req_id += 1;
+                    out.requests.push((
+                        MemRequest {
+                            id,
+                            core,
+                            warp: wid as u32,
+                            inst,
+                            line,
+                            sectors,
+                            kind: AccessKind::Load,
+                            issue_cycle: cycle,
+                        },
+                        n,
+                    ));
+                }
+                self.insts += 1;
+                out.insts_issued += 1;
+                w.state = WarpState::WaitingMem;
+                w.pc += 1;
+                // `Done` is deferred until the wake if this was the last
+                // instruction; a warp waiting on memory is not done.
+                true
+            }
+            WarpInst::Store(lines) => {
+                let inst = w.inst_seq;
+                w.inst_seq += 1;
+                for &(line, sectors) in lines.iter() {
+                    let id = self.next_req_id;
+                    self.next_req_id += 1;
+                    out.requests.push((
+                        MemRequest {
+                            id,
+                            core,
+                            warp: wid as u32,
+                            inst,
+                            line,
+                            sectors,
+                            kind: AccessKind::Store,
+                            issue_cycle: cycle,
+                        },
+                        0,
+                    ));
+                }
+                self.insts += 1;
+                out.insts_issued += 1;
+                w.pc += 1;
+                if w.pc >= w.program.insts().len() {
+                    w.state = WarpState::Done;
+                } else {
+                    w.state = WarpState::Ready(cycle + 1);
+                }
+                true
+            }
+        }
+    }
+
+    /// Called by the engine when the last outstanding request of a blocked
+    /// warp's load completes: wake or retire the warp.
+    pub fn load_complete(&mut self, warp: u32, cycle: u64) {
+        self.next_event_hint = self.next_event_hint.min(cycle + 1);
+        let done = {
+            let w = &self.warps[warp as usize];
+            w.pc >= w.program.insts().len()
+        };
+        let w = &mut self.warps[warp as usize];
+        if done {
+            w.state = WarpState::Done;
+        } else {
+            w.state = WarpState::Ready(cycle + 1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::L1ArchKind;
+
+    fn cfg() -> GpuConfig {
+        GpuConfig::tiny(L1ArchKind::Private)
+    }
+
+    fn run_alu_only(programs: Vec<WarpProgram>, cfg: &GpuConfig) -> (u64, u64) {
+        let mut core = SimtCore::new(0, cfg, programs);
+        let mut cycles = 0;
+        while !core.all_done() {
+            let mut out = IssueBatch::default();
+            core.tick(cycles, &mut out);
+            assert!(out.requests.is_empty());
+            cycles += 1;
+            assert!(cycles < 100_000);
+        }
+        (core.insts, cycles)
+    }
+
+    #[test]
+    fn single_warp_alu_ipc_is_one_per_scheduler_slot() {
+        let p = WarpProgram::new(vec![WarpInst::Alu(100)]);
+        let (insts, cycles) = run_alu_only(vec![p], &cfg());
+        assert_eq!(insts, 100);
+        assert_eq!(cycles, 100, "1 inst/cycle from one warp");
+    }
+
+    #[test]
+    fn two_warps_on_two_schedulers_run_in_parallel() {
+        // tiny() has 2 schedulers; warps 0,1 land on different schedulers.
+        let p = || WarpProgram::new(vec![WarpInst::Alu(50)]);
+        let (insts, cycles) = run_alu_only(vec![p(), p()], &cfg());
+        assert_eq!(insts, 100);
+        assert_eq!(cycles, 50, "two schedulers issue in parallel");
+    }
+
+    #[test]
+    fn two_warps_same_scheduler_serialize() {
+        // Warps 0 and 2 both map to scheduler 0 (w % 2).
+        let p = || WarpProgram::new(vec![WarpInst::Alu(50)]);
+        let progs = vec![p(), WarpProgram::new(vec![]), p()];
+        let (insts, cycles) = run_alu_only(progs, &cfg());
+        assert_eq!(insts, 100);
+        assert_eq!(cycles, 100, "same scheduler serializes warps");
+    }
+
+    #[test]
+    fn load_blocks_warp_until_completion() {
+        let p = WarpProgram::new(vec![
+            WarpInst::Load(vec![(10, 0b1111), (11, 0b1111)]),
+            WarpInst::Alu(1),
+        ]);
+        let mut core = SimtCore::new(0, &cfg(), vec![p]);
+        let mut out = IssueBatch::default();
+        core.tick(0, &mut out);
+        assert_eq!(out.requests.len(), 2);
+        assert_eq!(out.requests[0].1, 2, "load inst tagged with request count");
+        assert!(core.next_ready_cycle().is_none(), "warp blocked");
+        assert!(!core.all_done());
+
+        // No issue while blocked.
+        let mut out2 = IssueBatch::default();
+        core.tick(1, &mut out2);
+        assert_eq!(out2.insts_issued, 0);
+        // Cycle 0: scheduler 1 (no warps) stalled; cycle 1: both stalled.
+        assert_eq!(core.stall_cycles, 3);
+
+        // Wake at 100; warp issues the trailing ALU inst at 101.
+        core.load_complete(0, 100);
+        assert_eq!(core.next_ready_cycle(), Some(101));
+        let mut out3 = IssueBatch::default();
+        core.tick(101, &mut out3);
+        assert_eq!(out3.insts_issued, 1);
+        assert!(core.all_done());
+    }
+
+    #[test]
+    fn store_does_not_block() {
+        let p = WarpProgram::new(vec![
+            WarpInst::Store(vec![(5, 0b0001)]),
+            WarpInst::Alu(1),
+        ]);
+        let mut core = SimtCore::new(0, &cfg(), vec![p]);
+        let mut out = IssueBatch::default();
+        core.tick(0, &mut out);
+        assert_eq!(out.requests.len(), 1);
+        assert_eq!(out.requests[0].0.kind, AccessKind::Store);
+        let mut out2 = IssueBatch::default();
+        core.tick(1, &mut out2);
+        assert_eq!(out2.insts_issued, 1, "ALU issues right after the store");
+        assert!(core.all_done());
+    }
+
+    #[test]
+    fn trailing_load_retires_warp_on_wake() {
+        let p = WarpProgram::new(vec![WarpInst::Load(vec![(1, 1)])]);
+        let mut core = SimtCore::new(0, &cfg(), vec![p]);
+        let mut out = IssueBatch::default();
+        core.tick(0, &mut out);
+        assert!(!core.all_done());
+        core.load_complete(0, 50);
+        assert!(core.all_done(), "last-inst load retires on completion");
+    }
+
+    #[test]
+    fn gto_prefers_current_warp() {
+        // Warp 0: Alu(3). Warp 2 (same scheduler): Alu(3).
+        // GTO sticks with warp 0 for all 3 insts before switching.
+        let progs = vec![
+            WarpProgram::new(vec![WarpInst::Alu(3), WarpInst::Load(vec![(1, 1)])]),
+            WarpProgram::new(vec![]),
+            WarpProgram::new(vec![WarpInst::Alu(3)]),
+        ];
+        let mut core = SimtCore::new(0, &cfg(), progs);
+        // After 3 cycles, warp 0 must be at its load (pc=1), warp 2 untouched.
+        for c in 0..3 {
+            let mut out = IssueBatch::default();
+            core.tick(c, &mut out);
+        }
+        let mut out = IssueBatch::default();
+        core.tick(3, &mut out);
+        assert_eq!(out.requests.len(), 1, "warp 0's load issued before warp 2 ran");
+    }
+
+    #[test]
+    fn request_ids_are_unique_across_cores() {
+        let p = || WarpProgram::new(vec![WarpInst::Load(vec![(1, 1)])]);
+        let mut c0 = SimtCore::new(0, &cfg(), vec![p()]);
+        let mut c1 = SimtCore::new(1, &cfg(), vec![p()]);
+        let mut o0 = IssueBatch::default();
+        let mut o1 = IssueBatch::default();
+        c0.tick(0, &mut o0);
+        c1.tick(0, &mut o1);
+        assert_ne!(o0.requests[0].0.id, o1.requests[0].0.id);
+    }
+}

@@ -1,0 +1,103 @@
+//! Warp programs: the instruction streams the workload models generate.
+//!
+//! A `WarpProgram` is the coalesced, warp-level view of a GPU kernel as
+//! the memory system sees it: runs of ALU issue slots separated by loads
+//! (each already coalesced into per-cache-line requests) and stores.
+
+use crate::mem::{LineAddr, SectorMask};
+
+/// One warp-level instruction.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WarpInst {
+    /// `n` back-to-back ALU instructions (each occupies one issue slot).
+    Alu(u16),
+    /// A load, coalesced into one request per distinct cache line.
+    Load(Vec<(LineAddr, SectorMask)>),
+    /// A store (fire-and-forget).
+    Store(Vec<(LineAddr, SectorMask)>),
+}
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WarpProgram {
+    insts: Vec<WarpInst>,
+}
+
+impl WarpProgram {
+    pub fn new(insts: Vec<WarpInst>) -> Self {
+        debug_assert!(
+            insts.iter().all(|i| match i {
+                WarpInst::Load(v) => !v.is_empty(),
+                WarpInst::Alu(_) | WarpInst::Store(_) => true,
+            }),
+            "loads must carry at least one request"
+        );
+        WarpProgram { insts }
+    }
+
+    pub fn insts(&self) -> &[WarpInst] {
+        &self.insts
+    }
+
+    /// Total issue slots this program occupies (ALU blocks expand).
+    pub fn issue_slots(&self) -> u64 {
+        self.insts
+            .iter()
+            .map(|i| match i {
+                WarpInst::Alu(n) => (*n).max(1) as u64,
+                _ => 1,
+            })
+            .sum()
+    }
+
+    /// Number of memory requests the program will issue.
+    pub fn request_count(&self) -> u64 {
+        self.insts
+            .iter()
+            .map(|i| match i {
+                WarpInst::Load(v) | WarpInst::Store(v) => v.len() as u64,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Distinct lines the program touches (footprint).
+    pub fn touched_lines(&self) -> Vec<LineAddr> {
+        let mut lines: Vec<LineAddr> = self
+            .insts
+            .iter()
+            .flat_map(|i| match i {
+                WarpInst::Load(v) | WarpInst::Store(v) => v.iter().map(|&(l, _)| l).collect(),
+                _ => Vec::new(),
+            })
+            .collect();
+        lines.sort_unstable();
+        lines.dedup();
+        lines
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn issue_slots_expand_alu_blocks() {
+        let p = WarpProgram::new(vec![
+            WarpInst::Alu(5),
+            WarpInst::Load(vec![(1, 1)]),
+            WarpInst::Alu(3),
+        ]);
+        assert_eq!(p.issue_slots(), 9);
+        assert_eq!(p.request_count(), 1);
+    }
+
+    #[test]
+    fn touched_lines_dedup() {
+        let p = WarpProgram::new(vec![
+            WarpInst::Load(vec![(3, 1), (1, 1)]),
+            WarpInst::Store(vec![(3, 1)]),
+        ]);
+        assert_eq!(p.touched_lines(), vec![1, 3]);
+        assert_eq!(p.request_count(), 3);
+    }
+}

@@ -1,0 +1,368 @@
+//! The cycle engine: wires SIMT cores, an L1 organization, and the memory
+//! system together and runs multi-kernel workloads to completion.
+//!
+//! Cores are ticked cycle-by-cycle; memory timing is resolved through the
+//! reservation model, so warp wake-ups arrive through a calendar heap and
+//! idle stretches (every warp blocked on memory) are fast-forwarded —
+//! the common case for memory-bound GPU workloads.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::time::Instant;
+
+use crate::config::GpuConfig;
+use crate::core::{IssueBatch, SimtCore, WarpProgram};
+use crate::l1arch::{self, L1Arch};
+use crate::l2::MemSystem;
+use crate::stats::{KernelStats, LoadLatencyTracker, SimResult};
+
+/// One kernel launch: a set of warp programs per core.
+#[derive(Debug, Clone, Default)]
+pub struct KernelSpec {
+    pub name: String,
+    /// `programs[core]` = warp programs for that core.
+    pub programs: Vec<Vec<WarpProgram>>,
+}
+
+/// A whole application: an ordered list of kernels (Fig 9's unit
+/// structure).
+#[derive(Debug, Clone, Default)]
+pub struct Workload {
+    pub name: String,
+    pub kernels: Vec<KernelSpec>,
+}
+
+impl Workload {
+    pub fn total_requests(&self) -> u64 {
+        self.kernels
+            .iter()
+            .flat_map(|k| k.programs.iter().flatten())
+            .map(WarpProgram::request_count)
+            .sum()
+    }
+}
+
+/// Safety valve: a kernel that exceeds this many cycles aborts the run
+/// (deadlock guard for tests; real runs never get close).
+const MAX_KERNEL_CYCLES: u64 = 500_000_000;
+
+pub struct Engine {
+    cfg: GpuConfig,
+    l1: Box<dyn L1Arch>,
+    mem: MemSystem,
+    /// Full load latency (issue → data at core, including L2/DRAM).
+    tracker: LoadLatencyTracker,
+    /// The paper's §IV-C metric: issue → L1-stage completion.
+    stage_tracker: LoadLatencyTracker,
+    cycle: u64,
+    /// (wake_cycle, core, warp) calendar.
+    wakes: BinaryHeap<Reverse<(u64, u32, u32)>>,
+    total_insts: u64,
+}
+
+impl Engine {
+    pub fn new(cfg: &GpuConfig) -> Self {
+        cfg.validate().expect("invalid GPU config");
+        Engine {
+            cfg: cfg.clone(),
+            l1: l1arch::build(cfg),
+            mem: MemSystem::new(cfg),
+            tracker: LoadLatencyTracker::default(),
+            stage_tracker: LoadLatencyTracker::default(),
+            cycle: 0,
+            wakes: BinaryHeap::new(),
+            total_insts: 0,
+        }
+    }
+
+    /// Run a full workload; caches stay warm across kernels.
+    pub fn run(&mut self, workload: &Workload) -> SimResult {
+        let host_start = Instant::now();
+        let mut kernels = Vec::with_capacity(workload.kernels.len());
+        for k in &workload.kernels {
+            kernels.push(self.run_kernel(k));
+        }
+        let l1 = *self.l1.stats();
+        SimResult {
+            app: workload.name.clone(),
+            arch: self.l1.kind().name().to_string(),
+            cycles: self.cycle,
+            insts: self.total_insts,
+            l1,
+            l1_mean_load_latency: self.tracker.mean(),
+            l1_max_load_latency: self.tracker.max_latency,
+            l1_stage_mean_latency: self.stage_tracker.mean(),
+            l1_stage_max_latency: self.stage_tracker.max_latency,
+            l2_hit_rate: self.mem.l2_hit_rate(),
+            l2_mean_fetch_latency: self.mem.mean_fetch_latency(),
+            noc_flits: self.mem.noc_flits(),
+            dram_reads: self.mem.dram_stats().reads,
+            dram_writes: self.mem.dram_stats().writes,
+            kernels,
+            host_seconds: host_start.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// Replication audit: per-core resident lines (used by integration
+    /// tests and the locality cross-check example).
+    pub fn resident_lines(&self, core: usize) -> Vec<crate::mem::LineAddr> {
+        self.l1.resident_lines(core)
+    }
+
+    pub fn l1_stats(&self) -> crate::stats::L1Stats {
+        *self.l1.stats()
+    }
+
+    fn run_kernel(&mut self, spec: &KernelSpec) -> KernelStats {
+        assert_eq!(
+            spec.programs.len(),
+            self.cfg.cores,
+            "kernel '{}' must provide programs for every core",
+            spec.name
+        );
+        let start_cycle = self.cycle;
+        let start_insts = self.total_insts;
+        let start_loads = self.tracker.completed_loads;
+        let start_lat = self.tracker.total_latency;
+        let start_stage_loads = self.stage_tracker.completed_loads;
+        let start_stage_lat = self.stage_tracker.total_latency;
+        let l1_before = *self.l1.stats();
+
+        let mut cores: Vec<SimtCore> = spec
+            .programs
+            .iter()
+            .enumerate()
+            .map(|(c, progs)| SimtCore::new(c as u32, &self.cfg, progs.clone()))
+            .collect();
+        // Leftover wakes from a previous kernel cannot exist: kernels run
+        // to completion.
+        debug_assert!(self.wakes.is_empty());
+
+        let mut batch = IssueBatch::default();
+        let mut last_sweep = self.cycle;
+        loop {
+            let now = self.cycle;
+
+            // 1. Deliver due wake-ups.
+            while let Some(&Reverse((t, core, warp))) = self.wakes.peek() {
+                if t > now {
+                    break;
+                }
+                self.wakes.pop();
+                cores[core as usize].load_complete(warp, t);
+            }
+
+            // 2. Tick every core; collect issued requests.
+            batch.requests.clear();
+            batch.insts_issued = 0;
+            for core in cores.iter_mut() {
+                core.tick(now, &mut batch);
+            }
+            self.total_insts += batch.insts_issued;
+
+            // 3. Feed requests through the L1 organization.
+            let mut prev_group: Option<(u32, u32, u64)> = None;
+            for (req, group_n) in batch.requests.iter() {
+                if *group_n > 0 {
+                    // A load: register its instruction group on first sight.
+                    let key = (req.core, req.warp, req.inst);
+                    if prev_group != Some(key) {
+                        self.tracker.issue(req.core, req.warp, req.inst, *group_n, now);
+                        self.stage_tracker.issue(req.core, req.warp, req.inst, *group_n, now);
+                        prev_group = Some(key);
+                    }
+                }
+                let res = self.l1.access(req, now, &mut self.mem);
+                if *group_n > 0 {
+                    self.stage_tracker
+                        .complete_one(req.core, req.warp, req.inst, res.l1_stage_done);
+                    if let Some(load_done) =
+                        self.tracker.complete_one(req.core, req.warp, req.inst, res.done)
+                    {
+                        self.wakes.push(Reverse((load_done.max(now + 1), req.core, req.warp)));
+                    }
+                }
+            }
+
+            // 4. Termination / advance.
+            if cores.iter().all(SimtCore::all_done) {
+                break;
+            }
+            // Fast-forward across globally idle stretches (post-tick
+            // hints are O(1) per core).
+            let next_ready = cores
+                .iter()
+                .map(SimtCore::next_event_hint)
+                .min()
+                .unwrap_or(u64::MAX);
+            let next_wake = self.wakes.peek().map(|Reverse((t, _, _))| *t).unwrap_or(u64::MAX);
+            let next = next_ready.min(next_wake).max(now + 1);
+            if next == u64::MAX {
+                panic!(
+                    "kernel '{}' deadlocked at cycle {now}: no ready warps, no wakes",
+                    spec.name
+                );
+            }
+            self.cycle = next;
+
+            if self.cycle - last_sweep > 65_536 {
+                self.l1.sweep(self.cycle);
+                self.mem.sweep_in_flight(self.cycle);
+                last_sweep = self.cycle;
+            }
+            if self.cycle - start_cycle > MAX_KERNEL_CYCLES {
+                panic!("kernel '{}' exceeded {MAX_KERNEL_CYCLES} cycles", spec.name);
+            }
+        }
+
+        // Count stall statistics into the result via core drop.
+        let l1_after = *self.l1.stats();
+        let loads = self.tracker.completed_loads - start_loads;
+        let lat = self.tracker.total_latency - start_lat;
+        let stage_loads = self.stage_tracker.completed_loads - start_stage_loads;
+        let stage_lat = self.stage_tracker.total_latency - start_stage_lat;
+        let acc = l1_after.accesses - l1_before.accesses;
+        let hits = (l1_after.local_hits + l1_after.remote_hits)
+            - (l1_before.local_hits + l1_before.remote_hits);
+        KernelStats {
+            name: spec.name.clone(),
+            cycles: self.cycle - start_cycle,
+            insts: self.total_insts - start_insts,
+            l1_mean_latency: if loads == 0 { 0.0 } else { lat as f64 / loads as f64 },
+            l1_stage_latency: if stage_loads == 0 {
+                0.0
+            } else {
+                stage_lat as f64 / stage_loads as f64
+            },
+            l1_hit_rate: if acc == 0 { 0.0 } else { hits as f64 / acc as f64 },
+        }
+    }
+}
+
+/// Convenience: run `workload` under `arch` on the paper GPU config.
+pub fn run_workload(cfg: &GpuConfig, workload: &Workload) -> SimResult {
+    Engine::new(cfg).run(workload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::L1ArchKind;
+    use crate::core::WarpInst;
+
+    /// A kernel where every core's single warp loads `lines` then does ALU.
+    fn simple_kernel(cfg: &GpuConfig, lines_per_core: impl Fn(usize) -> Vec<u64>) -> KernelSpec {
+        KernelSpec {
+            name: "k".into(),
+            programs: (0..cfg.cores)
+                .map(|c| {
+                    let lines = lines_per_core(c);
+                    let insts: Vec<WarpInst> = lines
+                        .chunks(2)
+                        .map(|ch| WarpInst::Load(ch.iter().map(|&l| (l, 0b1111)).collect()))
+                        .chain(std::iter::once(WarpInst::Alu(8)))
+                        .collect();
+                    vec![WarpProgram::new(insts)]
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn runs_to_completion_and_counts() {
+        let cfg = GpuConfig::tiny(L1ArchKind::Private);
+        let wl = Workload {
+            name: "t".into(),
+            kernels: vec![simple_kernel(&cfg, |c| vec![c as u64 * 100, c as u64 * 100 + 1])],
+        };
+        let r = run_workload(&cfg, &wl);
+        assert!(r.cycles > 0);
+        // 1 load inst + 8 ALU per core.
+        assert_eq!(r.insts, cfg.cores as u64 * 9);
+        assert_eq!(r.l1.accesses, cfg.cores as u64 * 2);
+        assert!(r.ipc() > 0.0);
+        assert_eq!(r.kernels.len(), 1);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let cfg = GpuConfig::tiny(L1ArchKind::Ata);
+        let wl = Workload {
+            name: "t".into(),
+            kernels: vec![
+                simple_kernel(&cfg, |c| (0..8).map(|k| (c as u64 * 31 + k) % 64).collect()),
+                simple_kernel(&cfg, |c| (0..8).map(|k| (c as u64 * 17 + k) % 64).collect()),
+            ],
+        };
+        let a = run_workload(&cfg, &wl);
+        let b = run_workload(&cfg, &wl);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.insts, b.insts);
+        assert_eq!(a.l1.local_hits, b.l1.local_hits);
+        assert_eq!(a.l1_mean_load_latency, b.l1_mean_load_latency);
+    }
+
+    #[test]
+    fn shared_lines_become_remote_hits_on_ata() {
+        let cfg = GpuConfig::tiny(L1ArchKind::Ata);
+        // Every core loads the same two lines; cluster mates should hit
+        // remotely (or locally after fills).
+        let wl = Workload {
+            name: "t".into(),
+            kernels: vec![simple_kernel(&cfg, |_| vec![7, 8])],
+        };
+        let r = run_workload(&cfg, &wl);
+        assert!(
+            r.l1.remote_hits + r.l1.mshr_merges > 0,
+            "sharing must be exploited: {:?}",
+            r.l1
+        );
+        // Far fewer L2 trips than the private equivalent.
+        let cfg_p = GpuConfig::tiny(L1ArchKind::Private);
+        let r_p = run_workload(&cfg_p, &wl);
+        assert!(r.l1.misses <= r_p.l1.misses);
+    }
+
+    #[test]
+    fn multi_kernel_keeps_caches_warm() {
+        let cfg = GpuConfig::tiny(L1ArchKind::Private);
+        let k = simple_kernel(&cfg, |c| vec![c as u64]);
+        let wl = Workload {
+            name: "t".into(),
+            kernels: vec![k.clone(), k],
+        };
+        let r = run_workload(&cfg, &wl);
+        assert_eq!(r.kernels.len(), 2);
+        // Second kernel re-reads the same line: all hits.
+        assert!(r.kernels[1].l1_hit_rate > 0.9, "{:?}", r.kernels[1]);
+        assert!(r.kernels[1].l1_mean_latency < r.kernels[0].l1_mean_latency);
+    }
+
+    #[test]
+    fn fast_forward_skips_idle_cycles_without_breaking_ipc() {
+        // One warp, one cold load: cycles ≈ miss latency, not 1.
+        let cfg = GpuConfig::tiny(L1ArchKind::Private);
+        let wl = Workload {
+            name: "t".into(),
+            kernels: vec![simple_kernel(&cfg, |c| vec![c as u64 * 1000])],
+        };
+        let r = run_workload(&cfg, &wl);
+        assert!(r.cycles > 100, "a cold DRAM miss takes hundreds of cycles");
+        assert!(r.cycles < 100_000, "but the engine must not crawl");
+    }
+
+    #[test]
+    fn load_latency_metric_reflects_misses_vs_hits() {
+        let cfg = GpuConfig::tiny(L1ArchKind::Private);
+        let cold = Workload {
+            name: "cold".into(),
+            kernels: vec![simple_kernel(&cfg, |c| vec![c as u64 * 50])],
+        };
+        let r1 = run_workload(&cfg, &cold);
+        assert!(
+            r1.l1_mean_load_latency > cfg.l2.latency as f64,
+            "cold loads include L2+DRAM: {}",
+            r1.l1_mean_load_latency
+        );
+    }
+}

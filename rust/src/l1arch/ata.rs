@@ -1,0 +1,400 @@
+//! ATA-Cache (§III) — the paper's contribution.
+//!
+//! Tag arrays are aggregated per cluster ([`ata_tag`]), data stays
+//! remote-shared: each L1 data array maps the whole address space and sits
+//! next to its core.  The request distributor implements Fig 7's three
+//! cases on the hit vector:
+//!
+//! * **(b) local hit** — priority to the local data array; identical to a
+//!   private-cache hit plus the tag pipeline.
+//! * **(a) remote-only hit** — the data is fetched from the first clean
+//!   holder over the intra-cluster crossbar and (configurably) filled
+//!   locally.  No probe messages, no waiting: the tag compare already
+//!   localized the line.
+//! * **(c) global miss** — straight to L2 with *no* sharing detour; the
+//!   critical path matches the private cache (the key advantage over
+//!   remote-sharing).
+//!
+//! Writes are processed only in the source core's local cache with a
+//! dirty bit; a remote read that would hit a dirty copy falls back to L2
+//! (§III-C).
+
+use crate::cache::Probe;
+use crate::config::{GpuConfig, L1ArchKind};
+use crate::l2::MemSystem;
+use crate::mem::{decode, LineAddr, MemRequest};
+use crate::noc::XbarReservation;
+use crate::stats::L1Stats;
+
+use super::ata_tag::{AggregatedTagArray, AggregateProbe};
+use super::common::{handle_store, install_fill, CoreL1, L1Timing};
+use super::{AccessResult, ClusterMap, L1Arch};
+
+#[derive(Debug)]
+pub struct AtaCache {
+    cores: Vec<CoreL1>,
+    /// One aggregated tag array per cluster.
+    tag_arrays: Vec<AggregatedTagArray>,
+    /// Intra-cluster data crossbars (remote data access path).
+    xbars: Vec<XbarReservation>,
+    map: ClusterMap,
+    timing: L1Timing,
+    stats: L1Stats,
+    xbar_latency: u32,
+    fill_local: bool,
+}
+
+impl AtaCache {
+    pub fn new(cfg: &GpuConfig) -> Self {
+        let cpc = cfg.cores_per_cluster();
+        AtaCache {
+            cores: (0..cfg.cores).map(|_| CoreL1::new(cfg)).collect(),
+            tag_arrays: (0..cfg.clusters)
+                .map(|_| {
+                    AggregatedTagArray::new(
+                        cfg.sharing.ata_comparator_groups,
+                        cfg.sharing.ata_tag_latency,
+                    )
+                })
+                .collect(),
+            xbars: (0..cfg.clusters)
+                .map(|_| {
+                    XbarReservation::new(
+                        cpc,
+                        cpc,
+                        cfg.sharing.cluster_xbar_latency,
+                        cfg.noc.in_buffer_flits as u64,
+                    )
+                })
+                .collect(),
+            map: ClusterMap::new(cfg),
+            timing: L1Timing::new(cfg),
+            stats: L1Stats::default(),
+            xbar_latency: cfg.sharing.cluster_xbar_latency,
+            fill_local: cfg.sharing.fill_local_on_remote_hit,
+        }
+    }
+
+    /// Aggregated-tag-array probe for `req` (functional part).
+    fn probe(&self, req: &MemRequest) -> AggregateProbe {
+        let core = req.core as usize;
+        let cluster = self.map.cluster_of(core);
+        let base = cluster * self.map.cores_per_cluster;
+        AggregatedTagArray::probe(
+            &self.cores[base..base + self.map.cores_per_cluster],
+            self.map.index_in_cluster(core),
+            req.line,
+            req.sectors,
+        )
+    }
+
+    fn miss_to_l2(&mut self, req: &MemRequest, start: u64, mem: &mut MemSystem) -> AccessResult {
+        let l1 = &mut self.cores[req.core as usize];
+        if let Some(ready) = l1.in_flight_ready(req.line, start) {
+            self.stats.mshr_merges += 1;
+            return AccessResult::new(
+                ready.max(start) + 1,
+                start + 1 + self.timing.latency as u64,
+            );
+        }
+        let s = l1.mshr.earliest(start);
+        let fill = mem.fetch(req, s);
+        l1.mshr.occupy_until(start, fill);
+        let usable = install_fill(
+            &mut self.cores[req.core as usize],
+            req.core,
+            req.line,
+            req.sectors,
+            fill,
+            &self.timing,
+            mem,
+            &mut self.stats,
+        );
+        // Fig 7(c): the L1 stage ends at L2 dispatch (+ pipeline depth) —
+        // no probe detour, so this matches the private cache's critical
+        // path.
+        AccessResult::new(usable + 1, s + self.timing.latency as u64)
+    }
+}
+
+impl L1Arch for AtaCache {
+    fn access(&mut self, req: &MemRequest, now: u64, mem: &mut MemSystem) -> AccessResult {
+        self.stats.accesses += 1;
+        let core = req.core as usize;
+        let cluster = self.map.cluster_of(core);
+        let my_idx = self.map.index_in_cluster(core);
+
+        // Every request flows through the aggregated tag array first.
+        let t_tag = self.tag_arrays[cluster].lookup_timing(now);
+
+        if req.is_write() {
+            // §III-C: writes are local-only; the tag pipeline still ran.
+            return handle_store(
+                &mut self.cores[core],
+                req,
+                t_tag,
+                &self.timing,
+                mem,
+                &mut self.stats,
+            );
+        }
+
+        let agg = self.probe(req);
+
+        // Fig 7(b): local hit has priority.
+        if matches!(agg.local, Probe::Hit { .. }) {
+            // Tags present but fill still in flight → merge, not hit.
+            if let Some(ready) = self.cores[core].in_flight_ready(req.line, t_tag) {
+                self.stats.mshr_merges += 1;
+                return AccessResult::new(
+                    ready.max(t_tag) + 1,
+                    t_tag + 1 + self.timing.latency as u64,
+                );
+            }
+            self.stats.local_hits += 1;
+            // The lookup already identified the way; update LRU and access
+            // the local data array.
+            self.cores[core].cache.tags.lookup(req.line, req.sectors);
+            let bank = decode::l1_bank(req.line, self.timing.banks);
+            let grant = self.cores[core].banks.reserve(bank, t_tag, 1);
+            self.stats.bank_conflict_cycles += grant - t_tag;
+            return AccessResult::served(grant + self.timing.latency as u64);
+        }
+
+        // Fig 7(a): remote hit — only clean copies are usable.
+        if let Some(holder_idx) = agg.clean_remote() {
+            self.stats.remote_hits += 1;
+            let holder = self.map.global_core(cluster, holder_idx);
+            // Request header crosses to the holder...
+            let arrive = {
+                let a = self.xbars[cluster].transfer(my_idx, holder_idx, t_tag, 1);
+                let uncontended = t_tag + self.xbar_latency as u64 + 2;
+                self.stats.sharing_net_cycles += a.saturating_sub(uncontended);
+                a
+            };
+            // ...the holder's data array serves it (bank contention is the
+            // residual sharing cost the paper acknowledges)...
+            let bank = decode::l1_bank(req.line, self.timing.banks);
+            // If the holder's own fill is still in flight, data waits.
+            let avail = self.cores[holder]
+                .in_flight_ready(req.line, arrive)
+                .unwrap_or(arrive);
+            let g = self.cores[holder].banks.reserve(bank, avail, 1);
+            self.stats.bank_conflict_cycles += g - avail;
+            self.cores[holder].cache.tags.lookup(req.line, req.sectors); // LRU touch on use
+            let data_start = g + self.timing.latency as u64;
+            // ...and the data crosses back.
+            let flits = self.timing.data_flits(req.sector_count());
+            let back = {
+                let a = self.xbars[cluster].transfer(holder_idx, my_idx, data_start, flits);
+                let uncontended = data_start + self.xbar_latency as u64 + 2 * flits as u64;
+                self.stats.sharing_net_cycles += a.saturating_sub(uncontended);
+                a
+            };
+            if self.fill_local {
+                let usable = install_fill(
+                    &mut self.cores[core],
+                    req.core,
+                    req.line,
+                    req.sectors,
+                    back,
+                    &self.timing,
+                    mem,
+                    &mut self.stats,
+                );
+                return AccessResult::new(usable + 1, back);
+            }
+            return AccessResult::served(back + 1);
+        }
+
+        if agg.dirty_remote_only() {
+            // §III-C: the remote copy was modified — go to L2.
+            self.stats.dirty_remote_fallbacks += 1;
+        }
+
+        // Local sector-miss: fetch only the missing sectors.
+        if let Probe::SectorMiss { missing, .. } = agg.local {
+            self.stats.sector_misses += 1;
+            let partial = MemRequest {
+                sectors: missing,
+                ..*req
+            };
+            return self.miss_to_l2(&partial, t_tag, mem);
+        }
+
+        // Fig 7(c): global miss — straight to L2, no probe detour.
+        self.stats.misses += 1;
+        self.miss_to_l2(req, t_tag, mem)
+    }
+
+    fn stats(&self) -> &L1Stats {
+        &self.stats
+    }
+
+    fn kind(&self) -> L1ArchKind {
+        L1ArchKind::Ata
+    }
+
+    fn resident_lines(&self, core: usize) -> Vec<LineAddr> {
+        self.cores[core].cache.tags.resident_lines()
+    }
+
+    fn sweep(&mut self, now: u64) {
+        for c in &mut self.cores {
+            c.sweep(now);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::AccessKind;
+
+    fn setup() -> (AtaCache, MemSystem) {
+        let cfg = GpuConfig::tiny(L1ArchKind::Ata);
+        (AtaCache::new(&cfg), MemSystem::new(&cfg))
+    }
+
+    fn load(id: u64, core: u32, line: LineAddr) -> MemRequest {
+        MemRequest {
+            id,
+            core,
+            warp: 0,
+            inst: id,
+            line,
+            sectors: 0b1111,
+            kind: AccessKind::Load,
+            issue_cycle: 0,
+        }
+    }
+
+    #[test]
+    fn local_hit_latency_close_to_private() {
+        let (mut a, mut mem) = setup();
+        let d1 = a.access(&load(1, 0, 42), 0, &mut mem).done;
+        let t = d1 + 100;
+        let ata_hit = a.access(&load(2, 0, 42), t, &mut mem).done - t;
+
+        let cfg = GpuConfig::tiny(L1ArchKind::Private);
+        let mut p = super::super::private::PrivateL1::new(&cfg);
+        let mut mem2 = MemSystem::new(&cfg);
+        let d2 = p.access(&load(1, 0, 42), 0, &mut mem2).done;
+        let t2 = d2 + 100;
+        let priv_hit = p.access(&load(2, 0, 42), t2, &mut mem2).done - t2;
+
+        // ATA pays only the aggregated-tag pipeline (2 cycles by default).
+        assert!(
+            ata_hit <= priv_hit + 3,
+            "ATA local hit {ata_hit} vs private {priv_hit}"
+        );
+        assert_eq!(a.stats.local_hits, 1);
+    }
+
+    #[test]
+    fn remote_hit_without_probe_and_no_l2() {
+        let (mut a, mut mem) = setup();
+        let d1 = a.access(&load(1, 0, 42), 0, &mut mem).done;
+        let l2_before = mem.stats.accesses;
+        let t = d1 + 100;
+        let d2 = a.access(&load(2, 1, 42), t, &mut mem).done;
+        assert_eq!(a.stats.remote_hits, 1);
+        assert_eq!(mem.stats.accesses, l2_before, "no L2 traffic");
+        assert_eq!(a.stats.probes_sent, 0, "ATA never sends probes");
+        assert!(d2 > t);
+    }
+
+    #[test]
+    fn remote_hit_faster_than_remote_sharing() {
+        // The same cross-core read at the paper's cluster size (10 cores):
+        // ATA (tag-compare already localized the line) must beat
+        // remote-sharing (full probe broadcast before the data moves).
+        let cluster10 = |arch| {
+            let mut c = GpuConfig::tiny(arch);
+            c.cores = 10;
+            c.clusters = 1;
+            c.sharing.ata_comparator_groups = 10;
+            c
+        };
+        let cfg_a = cluster10(L1ArchKind::Ata);
+        let mut a = AtaCache::new(&cfg_a);
+        let mut mem_a = MemSystem::new(&cfg_a);
+        let d = a.access(&load(1, 0, 42), 0, &mut mem_a).done;
+        let t = d + 100;
+        let ata_remote = a.access(&load(2, 9, 42), t, &mut mem_a).done - t;
+
+        let cfg_r = cluster10(L1ArchKind::RemoteSharing);
+        let mut r = super::super::remote::RemoteSharingL1::new(&cfg_r);
+        let mut mem_r = MemSystem::new(&cfg_r);
+        let d2 = r.access(&load(1, 0, 42), 0, &mut mem_r).done;
+        let t2 = d2 + 100;
+        let rs_remote = r.access(&load(2, 9, 42), t2, &mut mem_r).done - t2;
+
+        assert!(
+            ata_remote < rs_remote,
+            "ATA remote hit {ata_remote} must beat remote-sharing {rs_remote}"
+        );
+    }
+
+    #[test]
+    fn global_miss_critical_path_matches_private() {
+        let (mut a, mut mem_a) = setup();
+        let ata_miss = a.access(&load(1, 0, 42), 0, &mut mem_a).done;
+
+        let cfg = GpuConfig::tiny(L1ArchKind::Private);
+        let mut p = super::super::private::PrivateL1::new(&cfg);
+        let mut mem_p = MemSystem::new(&cfg);
+        let priv_miss = p.access(&load(1, 0, 42), 0, &mut mem_p).done;
+
+        // Identical L2 path; ATA adds only the tag pipeline.
+        assert!(
+            ata_miss <= priv_miss + 3,
+            "ATA miss {ata_miss} vs private {priv_miss}"
+        );
+    }
+
+    #[test]
+    fn dirty_remote_copy_falls_back_to_l2() {
+        let (mut a, mut mem) = setup();
+        let mut w = load(1, 0, 42);
+        w.kind = AccessKind::Store;
+        a.access(&w, 0, &mut mem);
+        let t = 1000;
+        a.access(&load(2, 1, 42), t, &mut mem);
+        assert_eq!(a.stats.dirty_remote_fallbacks, 1);
+        assert_eq!(a.stats.remote_hits, 0);
+        assert_eq!(a.stats.misses, 1);
+    }
+
+    #[test]
+    fn remote_hit_fills_local_for_future_hits() {
+        let (mut a, mut mem) = setup();
+        let d1 = a.access(&load(1, 0, 42), 0, &mut mem).done;
+        let d2 = a.access(&load(2, 1, 42), d1 + 100, &mut mem).done;
+        let t = d2 + 100;
+        a.access(&load(3, 1, 42), t, &mut mem);
+        assert_eq!(a.stats.local_hits, 1, "second read is a local hit");
+        assert!(a.resident_lines(1).contains(&42));
+    }
+
+    #[test]
+    fn writes_stay_local() {
+        let (mut a, mut mem) = setup();
+        let mut w = load(1, 2, 42);
+        w.kind = AccessKind::Store;
+        a.access(&w, 0, &mut mem);
+        assert!(a.resident_lines(2).contains(&42));
+        assert_eq!(mem.stats.writes, 0, "write-back-local: no L2 traffic yet");
+        assert_eq!(a.stats.writes, 1);
+    }
+
+    #[test]
+    fn cross_cluster_does_not_share() {
+        let (mut a, mut mem) = setup();
+        let d = a.access(&load(1, 0, 42), 0, &mut mem).done;
+        // Core 4 is in the other cluster of the tiny config.
+        a.access(&load(2, 4, 42), d + 100, &mut mem);
+        assert_eq!(a.stats.remote_hits, 0);
+        assert_eq!(a.stats.misses, 2);
+    }
+}

@@ -1,0 +1,213 @@
+//! The aggregated tag array (§III-B) — the paper's core mechanism.
+//!
+//! The tag arrays of every L1 in a cluster are decoupled from their data
+//! arrays and placed together.  A request is compared against *all* tag
+//! arrays in parallel in one pipelined lookup:
+//!
+//! * **per-set tag banks** — each set lives on its own bank, so requests
+//!   to different sets never conflict;
+//! * **tag selectors** — route each selected set's tags to the comparator
+//!   group serving that request, so several requests can inspect the same
+//!   or different sets simultaneously;
+//! * **comparator groups** — one group per cluster core; a request holds
+//!   a group for one cycle.
+//!
+//! Functionally the lookup returns the hit vector of Fig 6 (e.g. `[1,0]`),
+//! here enriched with dirty-ness so the distributor can apply the §III-C
+//! dirty-remote fallback.  The lookup *never* perturbs remote LRU state —
+//! only an actual data access does.
+
+use crate::cache::Probe;
+use crate::mem::{LineAddr, SectorMask};
+use crate::resource::MultiPort;
+
+use super::common::CoreL1;
+
+/// Result of comparing one request against the aggregated tag array.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AggregateProbe {
+    /// The requesting core's own cache result (local column of the hit
+    /// vector).
+    pub local: Probe,
+    /// Cluster-relative indices of *other* caches with a full (all
+    /// requested sectors) hit, paired with their dirty flag.
+    pub remote_holders: Vec<(usize, bool)>,
+}
+
+impl AggregateProbe {
+    /// Fig 6's bit-vector view (index = cluster-relative cache id).
+    pub fn hit_vector(&self, cluster_size: usize, local_idx: usize) -> Vec<bool> {
+        let mut v = vec![false; cluster_size];
+        if matches!(self.local, Probe::Hit { .. }) {
+            v[local_idx] = true;
+        }
+        for &(idx, _) in &self.remote_holders {
+            v[idx] = true;
+        }
+        v
+    }
+
+    /// First clean remote holder (the distributor's pick in Fig 7a).
+    pub fn clean_remote(&self) -> Option<usize> {
+        self.remote_holders
+            .iter()
+            .find(|(_, dirty)| !dirty)
+            .map(|&(idx, _)| idx)
+    }
+
+    /// A remote copy exists but every copy is dirty (§III-C fallback).
+    pub fn dirty_remote_only(&self) -> bool {
+        !self.remote_holders.is_empty() && self.clean_remote().is_none()
+    }
+}
+
+/// Timing + lookup logic of one cluster's aggregated tag array.
+#[derive(Debug)]
+pub struct AggregatedTagArray {
+    /// Comparator groups (the paper provisions one per core, making the
+    /// lookup conflict-free; fewer groups create arbitration delay the
+    /// ablation bench can explore).
+    comparators: MultiPort,
+    /// Pipeline depth of decode + selector + compare.
+    pub tag_latency: u32,
+}
+
+impl AggregatedTagArray {
+    pub fn new(comparator_groups: usize, tag_latency: u32) -> Self {
+        AggregatedTagArray {
+            comparators: MultiPort::new(comparator_groups),
+            tag_latency,
+        }
+    }
+
+    /// Reserve a comparator group at `now`; returns the cycle the hit
+    /// vector is available.
+    pub fn lookup_timing(&mut self, now: u64) -> u64 {
+        let grant = self.comparators.reserve(now, 1);
+        grant + self.tag_latency as u64
+    }
+
+    /// Compare `line` against every cluster cache's tags in parallel.
+    /// `caches` is the cluster's contiguous CoreL1 slice; `local_idx` is
+    /// the requester's position within it.
+    pub fn probe(
+        caches: &[CoreL1],
+        local_idx: usize,
+        line: LineAddr,
+        sectors: SectorMask,
+    ) -> AggregateProbe {
+        let local = caches[local_idx].cache.peek(line, sectors);
+        let mut remote_holders = Vec::new();
+        for (idx, c) in caches.iter().enumerate() {
+            if idx == local_idx {
+                continue;
+            }
+            if let Probe::Hit { dirty, .. } = c.cache.peek(line, sectors) {
+                remote_holders.push((idx, dirty));
+            }
+        }
+        AggregateProbe {
+            local,
+            remote_holders,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuConfig, L1ArchKind};
+
+    fn cluster(n: usize) -> Vec<CoreL1> {
+        let cfg = GpuConfig::tiny(L1ArchKind::Ata);
+        (0..n).map(|_| CoreL1::new(&cfg)).collect()
+    }
+
+
+    #[test]
+    fn working_example_from_fig6() {
+        // Req-1 (from cache 0's core) present only in cache 1 -> [0, 1];
+        // Req-2 present in both -> [1, 1].
+        let mut cl = cluster(2);
+        cl[1].cache.fill(100, 0b1111); // line A in cache 1
+        cl[0].cache.fill(200, 0b1111); // line B in both
+        cl[1].cache.fill(200, 0b1111);
+
+        let p1 = AggregatedTagArray::probe(&cl, 0, 100, 0b1111);
+        assert_eq!(p1.hit_vector(2, 0), vec![false, true]);
+        assert_eq!(p1.clean_remote(), Some(1));
+
+        let p2 = AggregatedTagArray::probe(&cl, 0, 200, 0b1111);
+        assert_eq!(p2.hit_vector(2, 0), vec![true, true]);
+        assert!(matches!(p2.local, Probe::Hit { .. }), "local priority case");
+    }
+
+    #[test]
+    fn probe_equals_union_of_individual_peeks() {
+        // Property: the aggregated result must match probing each cache
+        // separately (the aggregation is purely structural).
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::new(3, 3);
+        let mut cl = cluster(4);
+        for _ in 0..200 {
+            let c = rng.next_below(4) as usize;
+            let line = rng.next_below(128) as u64;
+            cl[c].cache.fill(line, 0b1111);
+        }
+        for _ in 0..100 {
+            let line = rng.next_below(128) as u64;
+            let agg = AggregatedTagArray::probe(&cl, 0, line, 0b1111);
+            for idx in 1..4 {
+                let individual = matches!(cl[idx].cache.peek(line, 0b1111), Probe::Hit { .. });
+                let in_agg = agg.remote_holders.iter().any(|&(i, _)| i == idx);
+                assert_eq!(individual, in_agg, "cache {idx} line {line}");
+            }
+        }
+    }
+
+    #[test]
+    fn probe_does_not_perturb_remote_lru() {
+        let mut cl = cluster(2);
+        // Cache 1: 1-set-deep scenario — fill two lines in the same set,
+        // probe the LRU one from core 0, then fill; the probed line must
+        // still be the eviction victim (peek must not touch LRU).
+        let sets = cl[1].cache.tags.sets() as u64;
+        let assoc = cl[1].cache.tags.assoc() as u64;
+        for k in 0..assoc {
+            cl[1].cache.fill(k * sets, 0b1111);
+        }
+        // line 0 is LRU now. Probe it through the aggregated array.
+        let _ = AggregatedTagArray::probe(&cl, 0, 0, 0b1111);
+        cl[1].cache.fill(assoc * sets, 0b1111); // force eviction
+        assert_eq!(
+            cl[1].cache.peek(0, 0b1111),
+            Probe::Miss,
+            "probed line must still have been evicted"
+        );
+    }
+
+    #[test]
+    fn dirty_remote_only_detection() {
+        let mut cl = cluster(3);
+        cl[1].cache.fill(50, 0b1111);
+        cl[1].cache.tags.mark_dirty(50, 0b0001);
+        let p = AggregatedTagArray::probe(&cl, 0, 50, 0b1111);
+        assert!(p.dirty_remote_only());
+        // A clean copy elsewhere rescues it.
+        cl[2].cache.fill(50, 0b1111);
+        let p2 = AggregatedTagArray::probe(&cl, 0, 50, 0b1111);
+        assert!(!p2.dirty_remote_only());
+        assert_eq!(p2.clean_remote(), Some(2));
+    }
+
+    #[test]
+    fn comparator_groups_conflict_free_at_provisioned_width() {
+        // One group per core: N simultaneous lookups all start at `now`.
+        let mut ata = AggregatedTagArray::new(4, 2);
+        let t: Vec<u64> = (0..4).map(|_| ata.lookup_timing(100)).collect();
+        assert!(t.iter().all(|&x| x == 102), "{t:?}");
+        // A 5th concurrent request on an under-provisioned array queues.
+        let t5 = ata.lookup_timing(100);
+        assert_eq!(t5, 103);
+    }
+}

@@ -1,0 +1,331 @@
+//! State and helpers shared by all four L1 organizations.
+//!
+//! Each GPU core owns one [`CoreL1`]: a sectored cache plus the timing
+//! resources in front of it (tag port, data-array banks, MSHR pool).  The
+//! organizations differ in *who is allowed to reach which CoreL1 and how*
+//! — which is exactly the paper's design space.
+
+
+use crate::cache::SectoredCache;
+use crate::config::{GpuConfig, WritePolicy};
+use crate::mem::{decode, LineAddr, MemRequest, SectorMask};
+use crate::util::fxhash::FxHashMap;
+use crate::resource::{BankedCalendar, MultiPort};
+use crate::stats::L1Stats;
+
+use super::AccessResult;
+
+/// One core's L1 storage and timing resources.
+///
+/// The tag and data pipelines are banked together (GPGPU-Sim style): each
+/// bank accepts one operation per cycle, so accesses to different banks
+/// proceed in parallel and same-bank accesses serialize — the conflict
+/// mechanism the paper's decoupled baseline suffers from.
+#[derive(Debug)]
+pub struct CoreL1 {
+    pub cache: SectoredCache,
+    /// Tag+data banks (Table II: 4 banks/L1).
+    pub banks: BankedCalendar,
+    /// MSHR entries held from allocation until the fill lands.
+    pub mshr: MultiPort,
+    /// Line → fill-ready cycle for in-flight misses (merge target).
+    pub in_flight: FxHashMap<LineAddr, u64>,
+}
+
+impl CoreL1 {
+    pub fn new(cfg: &GpuConfig) -> Self {
+        CoreL1 {
+            cache: SectoredCache::from_l1(&cfg.l1),
+            banks: BankedCalendar::new(cfg.l1.banks),
+            mshr: MultiPort::new(cfg.l1.mshr_entries),
+            in_flight: FxHashMap::default(),
+        }
+    }
+
+    /// Is `line` still being fetched at `now`? Returns its ready cycle.
+    pub fn in_flight_ready(&self, line: LineAddr, now: u64) -> Option<u64> {
+        self.in_flight.get(&line).copied().filter(|&r| r > now)
+    }
+
+    /// Periodic cleanup of landed fills.
+    pub fn sweep(&mut self, now: u64) {
+        self.in_flight.retain(|_, &mut r| r > now);
+    }
+}
+
+/// Timing constants every organization needs, pre-extracted from config.
+#[derive(Debug, Clone, Copy)]
+pub struct L1Timing {
+    pub latency: u32,
+    pub line_bytes: usize,
+    pub sector_bytes: usize,
+    pub flit_bytes: usize,
+    pub banks: usize,
+    pub write_policy: WritePolicy,
+}
+
+impl L1Timing {
+    pub fn new(cfg: &GpuConfig) -> Self {
+        L1Timing {
+            latency: cfg.l1.latency,
+            line_bytes: cfg.l1.line_bytes,
+            sector_bytes: cfg.l1.sector_bytes,
+            flit_bytes: cfg.noc.flit_bytes,
+            banks: cfg.l1.banks,
+            write_policy: cfg.l1.write_policy,
+        }
+    }
+
+    /// Flits for a data payload of `sectors` sectors (+1 header flit).
+    pub fn data_flits(&self, sectors: u32) -> u32 {
+        let bytes = sectors as usize * self.sector_bytes;
+        bytes.div_ceil(self.flit_bytes) as u32 + 1
+    }
+}
+
+/// Install a fill into `l1` at `fill_cycle`: updates tags, forwards a
+/// dirty victim to L2, records the in-flight entry.  Returns the cycle the
+/// fill is usable.
+///
+/// Fills use a dedicated write port rather than the read banks: a fill's
+/// timestamp lies in the future relative to the requests currently being
+/// scheduled, and the reservation timeline of a read bank must only be fed
+/// in (near-)monotone time order (see `resource::Server`).  Read/probe
+/// contention - the conflict mechanism the paper studies - is unaffected.
+pub fn install_fill(
+    l1: &mut CoreL1,
+    core_global: u32,
+    line: LineAddr,
+    sectors: SectorMask,
+    fill_cycle: u64,
+    _timing: &L1Timing,
+    mem: &mut crate::l2::MemSystem,
+    stats: &mut L1Stats,
+) -> u64 {
+    let (_, evicted) = l1.cache.fill(line, sectors);
+    stats.fills += 1;
+    if let Some(ev) = evicted {
+        // Dirty victim: write back to L2 (fire-and-forget).
+        mem.write(
+            core_global as usize,
+            ev.line,
+            ev.dirty_sectors.count_ones(),
+            fill_cycle,
+        );
+    }
+    l1.in_flight.insert(line, fill_cycle);
+    fill_cycle
+}
+
+/// The private-cache load path: tag lookup, bank access on a hit, MSHR +
+/// L2 fetch on a miss.  This is the baseline organization's entire
+/// behaviour and the "local cache" half of remote-sharing and ATA-Cache.
+pub fn local_load(
+    l1: &mut CoreL1,
+    req: &MemRequest,
+    now: u64,
+    timing: &L1Timing,
+    mem: &mut crate::l2::MemSystem,
+    stats: &mut L1Stats,
+) -> AccessResult {
+    let bank = decode::l1_bank(req.line, timing.banks);
+    match l1.cache.tags.lookup(req.line, req.sectors) {
+        crate::cache::Probe::Hit { .. } => {
+            // The tags were installed when the miss was *scheduled*; if the
+            // fill has not landed yet this is really a merge on the
+            // in-flight fetch, not a hit.
+            if let Some(ready) = l1.in_flight_ready(req.line, now) {
+                stats.mshr_merges += 1;
+                return AccessResult::new(
+                    ready.max(now) + 1,
+                    now + 1 + timing.latency as u64,
+                );
+            }
+            stats.local_hits += 1;
+            // Tag+data bank: one (line-wide) operation per cycle; accesses
+            // to the same bank in the same cycle serialize — the paper's
+            // bank-conflict mechanism.
+            let grant = l1.banks.reserve(bank, now, 1);
+            stats.bank_conflict_cycles += grant - now;
+            AccessResult::served(grant + timing.latency as u64)
+        }
+        probe => {
+            // Merge onto an in-flight fetch of this line if possible.
+            if let Some(ready) = l1.in_flight_ready(req.line, now) {
+                stats.mshr_merges += 1;
+                return AccessResult::new(
+                    ready.max(now) + 1,
+                    now + 1 + timing.latency as u64,
+                );
+            }
+            // The tag probe costs one bank cycle even on a miss.
+            let t_tag = l1.banks.reserve(bank, now, 1) + 1;
+            let fetch_sectors = match probe {
+                crate::cache::Probe::SectorMiss { missing, .. } => {
+                    stats.sector_misses += 1;
+                    missing
+                }
+                _ => {
+                    stats.misses += 1;
+                    // Sector cache: fetch only the requested sectors
+                    // (Table II: 32 B sector fills, GPGPU-Sim behaviour).
+                    req.sectors
+                }
+            };
+            // MSHR entry held from allocation to fill (full pool stalls).
+            let start = l1.mshr.earliest(t_tag);
+            let fetch_req = MemRequest {
+                sectors: fetch_sectors,
+                ..*req
+            };
+            let fill = mem.fetch(&fetch_req, start);
+            l1.mshr.occupy_until(t_tag, fill);
+            let usable = install_fill(
+                l1,
+                req.core,
+                req.line,
+                fetch_sectors,
+                fill,
+                timing,
+                mem,
+                stats,
+            );
+            // L1 stage = miss detection + forward, charged one pipeline
+            // depth past the dispatch point so hit/miss stages compare.
+            AccessResult::new(usable + 1, start + timing.latency as u64)
+        }
+    }
+}
+
+/// Handle a store according to the configured write policy, entirely
+/// within the request's local cache (§III-C: "for write requests we only
+/// process them in the local cache of the request's source core").
+pub fn handle_store(
+    l1: &mut CoreL1,
+    req: &MemRequest,
+    now: u64,
+    timing: &L1Timing,
+    mem: &mut crate::l2::MemSystem,
+    stats: &mut L1Stats,
+) -> AccessResult {
+    stats.writes += 1;
+    let bank = decode::l1_bank(req.line, timing.banks);
+    let t_tag = now;
+    match timing.write_policy {
+        WritePolicy::WriteThrough => {
+            // Update the line if present, and always send the data to L2.
+            if l1.cache.tags.mark_dirty(req.line, 0) {
+                // Present: data-array write (dirty bits stay clear in WT —
+                // mark_dirty(.., 0) only touches LRU).
+                let g = l1.banks.reserve(bank, t_tag, 1);
+                stats.bank_conflict_cycles += g - t_tag;
+            }
+            mem.write(req.core as usize, req.line, req.sector_count(), t_tag);
+            AccessResult::served(t_tag + 1)
+        }
+        WritePolicy::WriteBackLocal => {
+            let g = l1.banks.reserve(bank, t_tag, 1);
+            stats.bank_conflict_cycles += g - t_tag;
+            // Write-allocate: written sectors become valid + dirty.
+            let (_, evicted) = l1.cache.fill(req.line, req.sectors);
+            l1.cache.tags.mark_dirty(req.line, req.sectors);
+            if let Some(ev) = evicted {
+                mem.write(
+                    req.core as usize,
+                    ev.line,
+                    ev.dirty_sectors.count_ones(),
+                    g,
+                );
+            }
+            AccessResult::served(g + 1)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::L1ArchKind;
+    use crate::l2::MemSystem;
+    use crate::mem::AccessKind;
+
+    fn setup() -> (CoreL1, L1Timing, MemSystem, L1Stats) {
+        let cfg = GpuConfig::tiny(L1ArchKind::Private);
+        (
+            CoreL1::new(&cfg),
+            L1Timing::new(&cfg),
+            MemSystem::new(&cfg),
+            L1Stats::default(),
+        )
+    }
+
+    fn store(line: LineAddr) -> MemRequest {
+        MemRequest {
+            id: 1,
+            core: 0,
+            warp: 0,
+            inst: 0,
+            line,
+            sectors: 0b0011,
+            kind: AccessKind::Store,
+            issue_cycle: 0,
+        }
+    }
+
+    #[test]
+    fn install_fill_tracks_in_flight_and_evicts() {
+        let (mut l1, t, mut mem, mut stats) = setup();
+        let g = install_fill(&mut l1, 0, 42, 0b1111, 100, &t, &mut mem, &mut stats);
+        assert!(g >= 100);
+        assert_eq!(stats.fills, 1);
+        assert_eq!(l1.in_flight_ready(42, 50), Some(g));
+        assert_eq!(l1.in_flight_ready(42, g + 1), None, "landed");
+        l1.sweep(g + 1);
+        assert!(l1.in_flight.is_empty());
+    }
+
+    #[test]
+    fn writeback_local_allocates_and_dirties() {
+        let (mut l1, t, mut mem, mut stats) = setup();
+        handle_store(&mut l1, &store(9), 0, &t, &mut mem, &mut stats);
+        assert!(l1.cache.tags.is_dirty(9, 0b0011));
+        assert_eq!(mem.stats.writes, 0, "no L2 traffic on local write");
+        assert_eq!(stats.writes, 1);
+    }
+
+    #[test]
+    fn writethrough_sends_to_l2() {
+        let cfg = {
+            let mut c = GpuConfig::tiny(L1ArchKind::Private);
+            c.l1.write_policy = WritePolicy::WriteThrough;
+            c
+        };
+        let mut l1 = CoreL1::new(&cfg);
+        let t = L1Timing::new(&cfg);
+        let mut mem = MemSystem::new(&cfg);
+        let mut stats = L1Stats::default();
+        handle_store(&mut l1, &store(9), 0, &t, &mut mem, &mut stats);
+        assert_eq!(mem.stats.writes, 1, "write-through reaches L2");
+        assert!(!l1.cache.tags.is_dirty(9, 0b0011));
+    }
+
+    #[test]
+    fn dirty_eviction_writes_back() {
+        let (mut l1, t, mut mem, mut stats) = setup();
+        // Dirty a line, then force enough fills into its set to evict it.
+        handle_store(&mut l1, &store(0), 0, &t, &mut mem, &mut stats);
+        let sets = l1.cache.tags.sets() as u64;
+        let assoc = l1.cache.tags.assoc() as u64;
+        for k in 1..=assoc {
+            install_fill(&mut l1, 0, k * sets, 0b1111, 1000, &t, &mut mem, &mut stats);
+        }
+        assert!(mem.stats.writes >= 1, "dirty victim written back to L2");
+    }
+
+    #[test]
+    fn data_flits_include_header() {
+        let (_, t, _, _) = setup();
+        assert_eq!(t.data_flits(1), 1 + 1); // 32B / 40B flit = 1 + hdr
+        assert_eq!(t.data_flits(4), 4 + 1); // 128B -> 4 flits + hdr
+    }
+}

@@ -1,0 +1,142 @@
+//! The four L1 cache organizations (§II–III of the paper).
+//!
+//! | Organization        | Tag lookup              | Data placement        | Sharing path            |
+//! |---------------------|-------------------------|-----------------------|-------------------------|
+//! | Private             | local                   | per-core, replicated  | none                    |
+//! | Remote-sharing      | local, then ring probes | per-core, replicated  | probe ring (post-miss)  |
+//! | Decoupled-sharing   | at home slice           | address-sliced        | cluster crossbar (all)  |
+//! | **ATA-Cache**       | aggregated (pre-access) | per-core, replicated  | cluster crossbar (hits) |
+//!
+//! All organizations implement [`L1Arch`]; the engine is organization-
+//! agnostic.
+
+pub mod ata;
+pub mod ata_tag;
+pub mod common;
+pub mod decoupled;
+pub mod private;
+pub mod remote;
+
+use crate::config::{GpuConfig, L1ArchKind};
+use crate::l2::MemSystem;
+use crate::mem::{LineAddr, MemRequest};
+use crate::stats::L1Stats;
+
+/// Outcome of one request through an L1 organization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AccessResult {
+    /// Cycle the data reaches the core (loads) / the write retires.
+    pub done: u64,
+    /// Cycle the *L1 stage* of the access completed: data return for any
+    /// L1 hit (local or remote), or the dispatch-to-L2 point for a miss.
+    /// This is the paper's §IV-C latency metric — it isolates the
+    /// contention added by the L1 organization from L2/DRAM service time.
+    pub l1_stage_done: u64,
+}
+
+impl AccessResult {
+    pub fn new(done: u64, l1_stage_done: u64) -> Self {
+        AccessResult { done, l1_stage_done }
+    }
+
+    /// An access fully served at `done` (hit paths).
+    pub fn served(done: u64) -> Self {
+        AccessResult { done, l1_stage_done: done }
+    }
+}
+
+/// A full-GPU L1 organization: receives every core's coalesced requests
+/// in chronological order and returns each request's completion cycle.
+pub trait L1Arch: std::fmt::Debug + Send {
+    /// Process one request issued at `now`.  For loads `done` is the cycle
+    /// the data reaches the core; for stores it is the retire cycle of the
+    /// write pipeline (cores do not block on it).
+    fn access(&mut self, req: &MemRequest, now: u64, mem: &mut MemSystem) -> AccessResult;
+
+    fn stats(&self) -> &L1Stats;
+
+    fn kind(&self) -> L1ArchKind;
+
+    /// Lines currently resident on behalf of `core` (replication audits).
+    fn resident_lines(&self, core: usize) -> Vec<LineAddr>;
+
+    /// Periodic housekeeping (drop landed in-flight entries).
+    fn sweep(&mut self, now: u64);
+}
+
+/// Build the organization selected by `cfg.l1_arch`.
+pub fn build(cfg: &GpuConfig) -> Box<dyn L1Arch> {
+    match cfg.l1_arch {
+        L1ArchKind::Private => Box::new(private::PrivateL1::new(cfg)),
+        L1ArchKind::RemoteSharing => Box::new(remote::RemoteSharingL1::new(cfg)),
+        L1ArchKind::DecoupledSharing => Box::new(decoupled::DecoupledSharingL1::new(cfg)),
+        L1ArchKind::Ata => Box::new(ata::AtaCache::new(cfg)),
+    }
+}
+
+/// Cluster geometry helper shared by the shared organizations.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterMap {
+    pub cores: usize,
+    pub cores_per_cluster: usize,
+}
+
+impl ClusterMap {
+    pub fn new(cfg: &GpuConfig) -> Self {
+        ClusterMap {
+            cores: cfg.cores,
+            cores_per_cluster: cfg.cores_per_cluster(),
+        }
+    }
+
+    #[inline]
+    pub fn cluster_of(&self, core: usize) -> usize {
+        core / self.cores_per_cluster
+    }
+
+    #[inline]
+    pub fn index_in_cluster(&self, core: usize) -> usize {
+        core % self.cores_per_cluster
+    }
+
+    #[inline]
+    pub fn global_core(&self, cluster: usize, idx: usize) -> usize {
+        cluster * self.cores_per_cluster + idx
+    }
+
+    /// Iterate the other cores in `core`'s cluster (global ids).
+    pub fn peers(&self, core: usize) -> impl Iterator<Item = usize> + '_ {
+        let cluster = self.cluster_of(core);
+        let base = cluster * self.cores_per_cluster;
+        (base..base + self.cores_per_cluster).filter(move |&c| c != core)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cluster_map_partitions_cores() {
+        let cfg = GpuConfig::paper(L1ArchKind::Ata);
+        let m = ClusterMap::new(&cfg);
+        assert_eq!(m.cluster_of(0), 0);
+        assert_eq!(m.cluster_of(9), 0);
+        assert_eq!(m.cluster_of(10), 1);
+        assert_eq!(m.cluster_of(29), 2);
+        assert_eq!(m.index_in_cluster(23), 3);
+        assert_eq!(m.global_core(2, 3), 23);
+        let peers: Vec<usize> = m.peers(12).collect();
+        assert_eq!(peers.len(), 9);
+        assert!(peers.iter().all(|&c| (10..20).contains(&c) && c != 12));
+    }
+
+    #[test]
+    fn factory_builds_every_kind() {
+        for kind in L1ArchKind::ALL {
+            let cfg = GpuConfig::tiny(kind);
+            let arch = build(&cfg);
+            assert_eq!(arch.kind(), kind);
+        }
+    }
+}

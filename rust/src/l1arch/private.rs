@@ -1,0 +1,152 @@
+//! Private per-core L1 — the conventional organization and the paper's
+//! normalization baseline.  Each core's cache maps the entire address
+//! space; misses go straight to L2; no inter-core path exists, so
+//! replicated lines burn capacity in every requesting core (the
+//! inefficiency motivating the paper).
+
+use crate::config::{GpuConfig, L1ArchKind};
+use crate::l2::MemSystem;
+use crate::mem::{LineAddr, MemRequest};
+use crate::stats::L1Stats;
+
+use super::common::{handle_store, local_load, CoreL1, L1Timing};
+use super::{AccessResult, L1Arch};
+
+#[derive(Debug)]
+pub struct PrivateL1 {
+    cores: Vec<CoreL1>,
+    timing: L1Timing,
+    stats: L1Stats,
+}
+
+impl PrivateL1 {
+    pub fn new(cfg: &GpuConfig) -> Self {
+        PrivateL1 {
+            cores: (0..cfg.cores).map(|_| CoreL1::new(cfg)).collect(),
+            timing: L1Timing::new(cfg),
+            stats: L1Stats::default(),
+        }
+    }
+}
+
+impl L1Arch for PrivateL1 {
+    fn access(&mut self, req: &MemRequest, now: u64, mem: &mut MemSystem) -> AccessResult {
+        self.stats.accesses += 1;
+        let l1 = &mut self.cores[req.core as usize];
+        if req.is_write() {
+            handle_store(l1, req, now, &self.timing, mem, &mut self.stats)
+        } else {
+            local_load(l1, req, now, &self.timing, mem, &mut self.stats)
+        }
+    }
+
+    fn stats(&self) -> &L1Stats {
+        &self.stats
+    }
+
+    fn kind(&self) -> L1ArchKind {
+        L1ArchKind::Private
+    }
+
+    fn resident_lines(&self, core: usize) -> Vec<LineAddr> {
+        self.cores[core].cache.tags.resident_lines()
+    }
+
+    fn sweep(&mut self, now: u64) {
+        for c in &mut self.cores {
+            c.sweep(now);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuConfig;
+    use crate::mem::AccessKind;
+
+    fn setup() -> (PrivateL1, MemSystem) {
+        let cfg = GpuConfig::tiny(L1ArchKind::Private);
+        (PrivateL1::new(&cfg), MemSystem::new(&cfg))
+    }
+
+    fn load(id: u64, core: u32, line: LineAddr) -> MemRequest {
+        MemRequest {
+            id,
+            core,
+            warp: 0,
+            inst: id,
+            line,
+            sectors: 0b1111,
+            kind: AccessKind::Load,
+            issue_cycle: 0,
+        }
+    }
+
+    #[test]
+    fn cold_miss_then_hit() {
+        let (mut p, mut mem) = setup();
+        let miss_done = p.access(&load(1, 0, 100), 0, &mut mem).done;
+        assert_eq!(p.stats.misses, 1);
+        assert!(miss_done > 100, "miss pays L2+DRAM");
+
+        let t = miss_done + 10;
+        let hit_done = p.access(&load(2, 0, 100), t, &mut mem).done - t;
+        assert_eq!(p.stats.local_hits, 1);
+        // Hit = tag (1) + bank + 32-cycle array latency.
+        assert!(hit_done >= 32 && hit_done < 40, "hit latency {hit_done}");
+    }
+
+    #[test]
+    fn no_sharing_between_cores() {
+        let (mut p, mut mem) = setup();
+        let d = p.access(&load(1, 0, 100), 0, &mut mem).done;
+        // Core 1 misses on the same line (private caches don't share).
+        let t = d + 10;
+        p.access(&load(2, 1, 100), t, &mut mem);
+        assert_eq!(p.stats.misses, 2);
+        assert_eq!(p.stats.remote_hits, 0);
+        // Both cores now hold a replica.
+        assert!(p.resident_lines(0).contains(&100));
+        assert!(p.resident_lines(1).contains(&100));
+    }
+
+    #[test]
+    fn inflight_merge_avoids_duplicate_fetch() {
+        let (mut p, mut mem) = setup();
+        p.access(&load(1, 0, 7), 0, &mut mem);
+        let before = mem.stats.accesses;
+        let d2 = p.access(&load(2, 0, 7), 1, &mut mem).done;
+        assert_eq!(mem.stats.accesses, before, "merged, no second L2 access");
+        assert_eq!(p.stats.mshr_merges, 1);
+        assert!(d2 > 1);
+    }
+
+    #[test]
+    fn bank_conflicts_accumulate() {
+        let (mut p, mut mem) = setup();
+        // Warm 8 lines that all live in bank 0 (line % 2 == 0 for 2 banks).
+        for (i, line) in (0..8u64).map(|k| k * 2).enumerate() {
+            p.access(&load(i as u64, 0, line), 0, &mut mem);
+        }
+        let t = 1_000_000;
+        for (i, line) in (0..8u64).map(|k| k * 2).enumerate() {
+            p.access(&load(100 + i as u64, 0, line), t, &mut mem);
+        }
+        assert!(p.stats.bank_conflict_cycles > 0, "same-bank hits must queue");
+    }
+
+    #[test]
+    fn sector_miss_fetches_missing_only() {
+        let (mut p, mut mem) = setup();
+        let mut r = load(1, 0, 50);
+        r.sectors = 0b0001;
+        let d = p.access(&r, 0, &mut mem).done;
+        assert_eq!(p.stats.misses, 1);
+        let mut r2 = load(2, 0, 50);
+        r2.sectors = 0b0010;
+        let t = d + 10;
+        p.access(&r2, t, &mut mem);
+        assert_eq!(p.stats.sector_misses, 1, "line present, sector absent");
+    }
+}

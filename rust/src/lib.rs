@@ -1,0 +1,37 @@
+//! ATA-Cache: contention mitigation for GPU shared L1 caches with an
+//! aggregated tag array — a full-system reproduction.
+//!
+//! The crate contains:
+//!
+//! * a cycle-level GPU memory-system simulator — SIMT cores with GTO
+//!   schedulers ([`core`]), sectored caches ([`cache`]), crossbar/ring
+//!   interconnects with iSLIP arbitration ([`noc`]), banked L2 +
+//!   DRAM bank timing ([`l2`], [`dram`]) — configured per the paper's
+//!   Table II ([`config`]);
+//! * the four L1 organizations of the paper's design space, including
+//!   ATA-Cache itself ([`l1arch`]);
+//! * statistical workload models of the ten benchmark applications
+//!   ([`trace`]);
+//! * the experiment coordinator regenerating every table and figure
+//!   ([`coordinator`]), with hardware-overhead modeling ([`area`]);
+//! * a PJRT runtime that executes the JAX/Pallas-authored locality
+//!   analytics artifact from Rust ([`runtime`]).
+
+pub mod area;
+pub mod bench_harness;
+pub mod cache;
+pub mod config;
+pub mod coordinator;
+pub mod core;
+pub mod dram;
+pub mod engine;
+pub mod l1arch;
+pub mod l2;
+pub mod mem;
+pub mod noc;
+pub mod resource;
+pub mod runtime;
+pub mod stats;
+pub mod testkit;
+pub mod trace;
+pub mod util;

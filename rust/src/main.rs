@@ -1,0 +1,282 @@
+//! `ata-sim` — CLI for the ATA-Cache reproduction.
+//!
+//! Subcommands:
+//!   run        — simulate one application on one L1 organization
+//!   sweep      — architectures × applications sweep (Fig 8 driver)
+//!   classify   — inter-core locality classification via the PJRT artifact
+//!   landscape  — regenerate Table I from a measured sweep
+//!   overhead   — §IV-D hardware overhead model
+//!   list       — list application models
+//!   config     — dump the Table II configuration as JSON
+
+use ata_cache::area;
+use ata_cache::config::{GpuConfig, L1ArchKind};
+use ata_cache::coordinator::{landscape, Sweep};
+use ata_cache::engine::Engine;
+use ata_cache::runtime::LocalityAnalyzer;
+use ata_cache::trace::signature::{exact_locality, sample_core_traces};
+use ata_cache::trace::{apps, LocalityClass};
+use ata_cache::util::cli::Args;
+use ata_cache::util::table::{pct_delta, BarChart, Table};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("export-trace") => cmd_export_trace(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("classify") => cmd_classify(&args),
+        Some("landscape") => cmd_landscape(&args),
+        Some("overhead") => cmd_overhead(&args),
+        Some("list") => cmd_list(),
+        Some("config") => cmd_config(&args),
+        _ => {
+            print_usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    eprintln!(
+        "usage: ata-sim <run|sweep|classify|landscape|overhead|list|config> [options]
+  run       --app <name> | --trace FILE  --arch <private|remote|decoupled|ata>
+            [--scale F] [--seed N] [--out FILE]
+  export-trace --app <name> [--scale F] --out FILE
+  sweep     [--archs a,b,..] [--apps x,y,..] [--scale F] [--threads N] [--out FILE]
+  classify  [--apps x,y,..] [--artifacts DIR]
+  landscape [--scale F]
+  overhead
+  config    [--out FILE]"
+    );
+}
+
+fn parse_cfg(args: &Args, arch: L1ArchKind) -> GpuConfig {
+    let mut cfg = if let Some(path) = args.get("config") {
+        GpuConfig::load(path).expect("loading --config file")
+    } else {
+        GpuConfig::paper(arch)
+    };
+    cfg.l1_arch = arch;
+    cfg.seed = args.get_u64("seed", cfg.seed).unwrap();
+    cfg
+}
+
+fn cmd_run(args: &Args) -> i32 {
+    let arch = L1ArchKind::from_name(args.get_or("arch", "ata")).expect("unknown --arch");
+    let scale = args.get_f64("scale", 1.0).unwrap();
+    let cfg = parse_cfg(args, arch);
+    let (app_name, wl) = if let Some(path) = args.get("trace") {
+        let wl = ata_cache::trace::io::load(path).expect("loading --trace file");
+        (wl.name.clone(), wl)
+    } else {
+        let name = args.get_or("app", "b+tree").to_string();
+        let Some(app) = apps::app(&name) else {
+            eprintln!("unknown app '{name}' (see `ata-sim list`)");
+            return 2;
+        };
+        (name, app.scaled(scale).workload(&cfg))
+    };
+    println!(
+        "running {app_name} on {} ({} kernels, {} requests)…",
+        arch.name(),
+        wl.kernels.len(),
+        wl.total_requests()
+    );
+    let r = Engine::new(&cfg).run(&wl);
+    println!("{}", r.to_json().pretty());
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, r.to_json().pretty()).expect("writing --out");
+        println!("wrote {path}");
+    }
+    0
+}
+
+fn sweep_from_args(args: &Args) -> Sweep {
+    let scale = args.get_f64("scale", 0.5).unwrap();
+    let mut sweep = Sweep::paper(scale);
+    let arch_list = args.get_list("archs");
+    if !arch_list.is_empty() {
+        sweep.archs = arch_list
+            .iter()
+            .map(|a| L1ArchKind::from_name(a).expect("unknown arch in --archs"))
+            .collect();
+        if !sweep.archs.contains(&L1ArchKind::Private) {
+            sweep.archs.insert(0, L1ArchKind::Private); // normalization baseline
+        }
+    }
+    let app_list = args.get_list("apps");
+    if !app_list.is_empty() {
+        sweep.apps = app_list
+            .iter()
+            .map(|n| apps::app(n).expect("unknown app in --apps"))
+            .collect();
+    }
+    sweep.threads = args.get_usize("threads", sweep.threads).unwrap();
+    sweep
+}
+
+fn cmd_sweep(args: &Args) -> i32 {
+    let sweep = sweep_from_args(args);
+    let results = sweep.run();
+
+    let mut t = Table::new("normalized IPC (private = 1.0)").header(&[
+        "app", "remote", "decoupled", "ata", "ata Δ",
+    ]);
+    for app in sweep.apps.iter() {
+        let g = |a| results.norm_ipc(a, app.name).unwrap_or(0.0);
+        t.row(vec![
+            app.name.to_string(),
+            format!("{:.3}", g(L1ArchKind::RemoteSharing)),
+            format!("{:.3}", g(L1ArchKind::DecoupledSharing)),
+            format!("{:.3}", g(L1ArchKind::Ata)),
+            pct_delta(g(L1ArchKind::Ata)),
+        ]);
+    }
+    println!("{}", t.render());
+    for class in [LocalityClass::High, LocalityClass::Low] {
+        println!(
+            "{class:?}-locality geomean: decoupled {} | ata {}",
+            pct_delta(results.class_geomean_ipc(L1ArchKind::DecoupledSharing, class)),
+            pct_delta(results.class_geomean_ipc(L1ArchKind::Ata, class)),
+        );
+    }
+    if let Some(path) = args.get("out") {
+        results.save(path).expect("writing --out");
+        println!("wrote {path}");
+    }
+    0
+}
+
+fn cmd_export_trace(args: &Args) -> i32 {
+    let name = args.get_or("app", "b+tree").to_string();
+    let scale = args.get_f64("scale", 1.0).unwrap();
+    let Some(app) = apps::app(&name) else {
+        eprintln!("unknown app '{name}'");
+        return 2;
+    };
+    let cfg = parse_cfg(args, L1ArchKind::Private);
+    let wl = app.scaled(scale).workload(&cfg);
+    let out = args.get_or("out", "trace.json");
+    ata_cache::trace::io::save(&wl, out).expect("writing trace");
+    println!(
+        "wrote {out}: {} kernels, {} requests",
+        wl.kernels.len(),
+        wl.total_requests()
+    );
+    0
+}
+
+fn cmd_classify(args: &Args) -> i32 {
+    let dir = args.get_or("artifacts", "artifacts");
+    let analyzer = match LocalityAnalyzer::load(dir) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("cannot load locality artifact: {e:#}");
+            return 1;
+        }
+    };
+    let cfg = GpuConfig::paper(L1ArchKind::Private);
+    let names = {
+        let l = args.get_list("apps");
+        if l.is_empty() {
+            apps::all_app_names().iter().map(|s| s.to_string()).collect()
+        } else {
+            l
+        }
+    };
+    let mut t = Table::new("inter-core locality classification (PJRT artifact)").header(&[
+        "app", "score", "replication", "class", "paper class", "exact score",
+    ]);
+    let mut agree = true;
+    for name in &names {
+        let Some(app) = apps::app(name) else {
+            eprintln!("unknown app {name}");
+            return 2;
+        };
+        let wl = app.workload(&cfg);
+        let traces = sample_core_traces(&wl, cfg.cores, analyzer.meta().trace_len);
+        let report = analyzer.analyze(&traces).expect("artifact execution");
+        let (exact, _) = exact_locality(&traces);
+        let class = report.class();
+        agree &= class == app.class;
+        t.row(vec![
+            name.clone(),
+            format!("{:.3}", report.locality_score),
+            format!("{:.2}x", report.replication_factor),
+            format!("{:?}", class),
+            format!("{:?}", app.class),
+            format!("{exact:.3}"),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("classification agrees with paper split: {agree}");
+    if agree {
+        0
+    } else {
+        1
+    }
+}
+
+fn cmd_landscape(args: &Args) -> i32 {
+    let mut sweep = sweep_from_args(args);
+    sweep.archs = L1ArchKind::ALL.to_vec();
+    let results = sweep.run();
+    let rows = landscape::build(&results, &sweep.archs);
+    println!("{}", landscape::render(&rows));
+    0
+}
+
+fn cmd_overhead(_args: &Args) -> i32 {
+    let cfg = GpuConfig::paper(L1ArchKind::Ata);
+    let r = area::estimate(&cfg, &area::Tech45::default());
+    let mut t = Table::new("ATA-Cache hardware overhead @45nm (§IV-D)").header(&["component", "value"]);
+    t.row(vec!["crossbar area".into(), format!("{:.3} mm²", r.crossbar_mm2)]);
+    t.row(vec!["comparator area".into(), format!("{:.3} mm²", r.comparator_mm2)]);
+    t.row(vec!["total area".into(), format!("{:.3} mm²", r.total_mm2)]);
+    t.row(vec!["leakage power".into(), format!("{:.2} mW", r.leakage_mw)]);
+    t.row(vec!["comparators".into(), format!("{}", r.comparator_count)]);
+    t.row(vec!["die fraction (~500mm²)".into(), format!("{:.3}%", r.die_fraction * 100.0)]);
+    println!("{}", t.render());
+    0
+}
+
+fn cmd_list() -> i32 {
+    let mut t = Table::new("application models").header(&["app", "suite", "class", "kernels", "notes"]);
+    for a in apps::all_apps() {
+        t.row(vec![
+            a.name.to_string(),
+            a.suite.to_string(),
+            format!("{:?}", a.class),
+            a.kernels.len().to_string(),
+            a.notes.chars().take(60).collect::<String>(),
+        ]);
+    }
+    println!("{}", t.render());
+    0
+}
+
+fn cmd_config(args: &Args) -> i32 {
+    let cfg = GpuConfig::paper(L1ArchKind::Ata);
+    let text = cfg.to_json().pretty();
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, &text).expect("writing --out");
+        println!("wrote {path}");
+    } else {
+        println!("{text}");
+    }
+    0
+}
+
+// Keep BarChart linked for examples that share this binary crate's dep graph.
+#[allow(dead_code)]
+fn _chart_demo() -> String {
+    BarChart::new("demo").render()
+}

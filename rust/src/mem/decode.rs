@@ -1,0 +1,140 @@
+//! Address decode: set/tag/bank/slice/home-cache mapping functions.
+//!
+//! All structures index with low-order line-address bits (like GPGPU-Sim's
+//! default linear mapping) except the L2-slice and home-cache maps, which
+//! mix the address first so that strided patterns spread across slices —
+//! the same reason real GPUs hash their partition interleave.
+
+use super::LineAddr;
+
+/// Tag/set split for a cache with `sets` (power of two) sets.
+#[inline]
+pub fn set_index(line: LineAddr, sets: usize) -> usize {
+    (line as usize) & (sets - 1)
+}
+
+#[inline]
+pub fn tag(line: LineAddr, sets: usize) -> u64 {
+    line >> sets.trailing_zeros()
+}
+
+/// Reconstruct a line address from (tag, set) — inverse of the pair above.
+#[inline]
+pub fn line_from(tag: u64, set: usize, sets: usize) -> LineAddr {
+    (tag << sets.trailing_zeros()) | set as u64
+}
+
+/// Data-array bank within an L1: consecutive lines rotate across banks.
+#[inline]
+pub fn l1_bank(line: LineAddr, banks: usize) -> usize {
+    (line as usize) & (banks - 1)
+}
+
+/// 64-bit finalizer used for slice/home hashing (splitmix64 mixer).
+#[inline]
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// L2 slice (memory sub-partition) for a line.
+#[inline]
+pub fn l2_slice(line: LineAddr, slices: usize) -> usize {
+    (mix64(line) % slices as u64) as usize
+}
+
+/// DRAM (controller, bank) for a line.  Hashed at *row* granularity so
+/// that consecutive lines in one 2 KiB row stay in one bank (row-buffer
+/// locality exists), while rows spread across controllers/banks.
+#[inline]
+pub fn dram_bank(line: LineAddr, controllers: usize, banks_per: usize) -> (usize, usize) {
+    let h = mix64(dram_row(line) ^ 0x9E37_79B9_7F4A_7C15);
+    let ctrl = (h % controllers as u64) as usize;
+    let bank = ((h >> 32) % banks_per as u64) as usize;
+    (ctrl, bank)
+}
+
+/// DRAM row for a line (for row-buffer locality): consecutive lines in the
+/// same 2 KiB region share a row.
+#[inline]
+pub fn dram_row(line: LineAddr) -> u64 {
+    line >> 4 // 16 lines × 128 B = 2 KiB rows
+}
+
+/// Decoupled-sharing home cache: which cluster L1 owns this line.
+/// Hash-interleaved so that strided footprints spread across the slices
+/// (the paper's decoupled baseline does the same; bank *conflicts* come
+/// from simultaneity, not from systematic imbalance).
+#[inline]
+pub fn home_cache(line: LineAddr, cluster_size: usize) -> usize {
+    (mix64(line ^ 0xDEC0_4B1E) % cluster_size as u64) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_tag_roundtrip() {
+        for sets in [1usize, 8, 64] {
+            for line in [0u64, 1, 7, 8, 12345, u32::MAX as u64] {
+                let s = set_index(line, sets);
+                let t = tag(line, sets);
+                assert_eq!(line_from(t, s, sets), line, "sets={sets} line={line}");
+                assert!(s < sets);
+            }
+        }
+    }
+
+    #[test]
+    fn consecutive_lines_rotate_banks() {
+        let banks = 4;
+        let seen: Vec<usize> = (0..8u64).map(|l| l1_bank(l, banks)).collect();
+        assert_eq!(seen, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn l2_slices_are_balanced() {
+        let slices = 24;
+        let mut counts = vec![0usize; slices];
+        for line in 0..24_000u64 {
+            counts[l2_slice(line, slices)] += 1;
+        }
+        let min = *counts.iter().min().unwrap();
+        let max = *counts.iter().max().unwrap();
+        assert!(min > 800 && max < 1200, "imbalanced: min={min} max={max}");
+    }
+
+    #[test]
+    fn strided_pattern_still_spreads_over_slices() {
+        // Stride of 24 lines would alias a modulo map onto one slice.
+        let slices = 24;
+        let mut counts = vec![0usize; slices];
+        for i in 0..2400u64 {
+            counts[l2_slice(i * 24, slices)] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 50), "{counts:?}");
+    }
+
+    #[test]
+    fn home_cache_covers_cluster_and_is_stable() {
+        let n = 10;
+        let mut seen = vec![false; n];
+        for line in 0..1000u64 {
+            let h = home_cache(line, n);
+            assert!(h < n);
+            assert_eq!(h, home_cache(line, n), "stable");
+            seen[h] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn dram_mapping_in_range_and_row_groups() {
+        let (c, b) = dram_bank(12345, 12, 16);
+        assert!(c < 12 && b < 16);
+        assert_eq!(dram_row(0), dram_row(15));
+        assert_ne!(dram_row(15), dram_row(16));
+    }
+}

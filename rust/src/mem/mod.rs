@@ -1,0 +1,128 @@
+//! Memory request model: addresses, sectors, and the request type that
+//! flows from SIMT cores through L1 organizations to L2 and DRAM.
+
+pub mod decode;
+
+/// A 128-byte cache-line address (byte address >> 7).  Line granularity is
+/// the unit of tag lookups and sharing; sectors (32 B) are the unit of
+/// fills and transfers, per Table II.
+pub type LineAddr = u64;
+
+/// Up to 8 sectors per line encoded as a bitmask (Table II uses 4).
+pub type SectorMask = u8;
+
+/// Unique id for in-flight requests (monotone per simulation).
+pub type ReqId = u64;
+
+/// Memory access kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessKind {
+    Load,
+    Store,
+}
+
+/// A warp-level memory request after coalescing: one cache line with the
+/// set of sectors the warp's active lanes touch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemRequest {
+    pub id: ReqId,
+    /// Issuing core (global id).
+    pub core: u32,
+    /// Warp slot within the core (for scoreboard wakeup).
+    pub warp: u32,
+    /// Load-instruction sequence number within the warp — used to group
+    /// the requests of one load for the paper's L1-latency metric (§IV-C).
+    pub inst: u64,
+    pub line: LineAddr,
+    pub sectors: SectorMask,
+    pub kind: AccessKind,
+    /// Cycle the core handed the request to the L1 organization.
+    pub issue_cycle: u64,
+}
+
+impl MemRequest {
+    pub fn is_write(&self) -> bool {
+        self.kind == AccessKind::Store
+    }
+
+    pub fn sector_count(&self) -> u32 {
+        self.sectors.count_ones()
+    }
+}
+
+/// A completed-response notification back to the issuing core.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemResponse {
+    pub id: ReqId,
+    pub core: u32,
+    pub warp: u32,
+    pub inst: u64,
+    pub line: LineAddr,
+    /// Cycle the data became available to the core.
+    pub complete_cycle: u64,
+}
+
+impl MemResponse {
+    pub fn for_request(req: &MemRequest, complete_cycle: u64) -> Self {
+        MemResponse {
+            id: req.id,
+            core: req.core,
+            warp: req.warp,
+            inst: req.inst,
+            line: req.line,
+            complete_cycle,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(line: LineAddr, sectors: SectorMask, kind: AccessKind) -> MemRequest {
+        MemRequest {
+            id: 1,
+            core: 0,
+            warp: 0,
+            inst: 0,
+            line,
+            sectors,
+            kind,
+            issue_cycle: 0,
+        }
+    }
+
+    #[test]
+    fn sector_count_counts_bits() {
+        assert_eq!(req(0, 0b1111, AccessKind::Load).sector_count(), 4);
+        assert_eq!(req(0, 0b0101, AccessKind::Load).sector_count(), 2);
+        assert_eq!(req(0, 0b0001, AccessKind::Load).sector_count(), 1);
+    }
+
+    #[test]
+    fn is_write() {
+        assert!(!req(0, 1, AccessKind::Load).is_write());
+        assert!(req(0, 1, AccessKind::Store).is_write());
+    }
+
+    #[test]
+    fn response_copies_request_identity() {
+        let r = MemRequest {
+            id: 7,
+            core: 3,
+            warp: 5,
+            inst: 11,
+            line: 0xABC,
+            sectors: 0b11,
+            kind: AccessKind::Load,
+            issue_cycle: 100,
+        };
+        let resp = MemResponse::for_request(&r, 164);
+        assert_eq!(resp.id, 7);
+        assert_eq!(resp.core, 3);
+        assert_eq!(resp.warp, 5);
+        assert_eq!(resp.inst, 11);
+        assert_eq!(resp.line, 0xABC);
+        assert_eq!(resp.complete_cycle, 164);
+    }
+}

@@ -1,0 +1,182 @@
+//! iSLIP arbitration (McKeown '99) — the crossbar allocation policy named
+//! in Table II ("iSLIP Arbiteration type").
+//!
+//! Each cycle, inputs with queued cells request their destination outputs;
+//! outputs grant round-robin from a per-output pointer; inputs accept
+//! round-robin from a per-input pointer.  Pointers advance only when a
+//! grant is accepted *in the first iteration*, which is what gives iSLIP
+//! its 100%-throughput-under-uniform-traffic property and starvation
+//! freedom.  `iterations` extra rounds match leftover ports.
+
+#[derive(Debug, Clone)]
+pub struct Islip {
+    n_in: usize,
+    n_out: usize,
+    grant_ptr: Vec<usize>,  // per output
+    accept_ptr: Vec<usize>, // per input
+}
+
+impl Islip {
+    pub fn new(n_in: usize, n_out: usize) -> Self {
+        Islip {
+            n_in,
+            n_out,
+            grant_ptr: vec![0; n_out],
+            accept_ptr: vec![0; n_in],
+        }
+    }
+
+    /// One arbitration: `wants[i][j]` = input i has a cell for output j.
+    /// Returns `matches[i] = Some(j)` for matched pairs.  Runs `iterations`
+    /// iSLIP rounds.
+    pub fn arbitrate(&mut self, wants: &[Vec<bool>], iterations: usize) -> Vec<Option<usize>> {
+        assert_eq!(wants.len(), self.n_in);
+        let mut in_matched: Vec<Option<usize>> = vec![None; self.n_in];
+        let mut out_matched: Vec<bool> = vec![false; self.n_out];
+
+        for iter in 0..iterations.max(1) {
+            // Grant phase: each unmatched output picks one requesting input.
+            let mut grants: Vec<Option<usize>> = vec![None; self.n_out]; // output -> input
+            for out in 0..self.n_out {
+                if out_matched[out] {
+                    continue;
+                }
+                let start = self.grant_ptr[out];
+                for k in 0..self.n_in {
+                    let inp = (start + k) % self.n_in;
+                    if in_matched[inp].is_none() && wants[inp].get(out).copied().unwrap_or(false) {
+                        grants[out] = Some(inp);
+                        break;
+                    }
+                }
+            }
+            // Accept phase: each input accepts at most one grant.
+            let mut accepted_any = false;
+            for inp in 0..self.n_in {
+                if in_matched[inp].is_some() {
+                    continue;
+                }
+                let start = self.accept_ptr[inp];
+                for k in 0..self.n_out {
+                    let out = (start + k) % self.n_out;
+                    if grants[out] == Some(inp) {
+                        in_matched[inp] = Some(out);
+                        out_matched[out] = true;
+                        accepted_any = true;
+                        if iter == 0 {
+                            // Pointer update rule: only on first-iteration
+                            // accepts (the iSLIP desynchronization trick).
+                            self.grant_ptr[out] = (inp + 1) % self.n_in;
+                            self.accept_ptr[inp] = (out + 1) % self.n_out;
+                        }
+                        break;
+                    }
+                }
+            }
+            if !accepted_any {
+                break;
+            }
+        }
+        in_matched
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wants(n_in: usize, n_out: usize, pairs: &[(usize, usize)]) -> Vec<Vec<bool>> {
+        let mut w = vec![vec![false; n_out]; n_in];
+        for &(i, j) in pairs {
+            w[i][j] = true;
+        }
+        w
+    }
+
+    #[test]
+    fn single_request_matches() {
+        let mut a = Islip::new(4, 4);
+        let m = a.arbitrate(&wants(4, 4, &[(2, 3)]), 1);
+        assert_eq!(m[2], Some(3));
+        assert!(m.iter().enumerate().all(|(i, x)| i == 2 || x.is_none()));
+    }
+
+    #[test]
+    fn conflicting_inputs_serialize_fairly() {
+        // Inputs 0 and 1 both want output 0: over two cycles each gets one.
+        let mut a = Islip::new(2, 2);
+        let w = wants(2, 2, &[(0, 0), (1, 0)]);
+        let m1 = a.arbitrate(&w, 1);
+        let m2 = a.arbitrate(&w, 1);
+        let winners: Vec<usize> = [m1, m2]
+            .iter()
+            .map(|m| m.iter().position(|x| x == &Some(0)).unwrap())
+            .collect();
+        assert_eq!(winners.len(), 2);
+        assert_ne!(winners[0], winners[1], "round-robin must alternate");
+    }
+
+    #[test]
+    fn never_grants_one_output_to_two_inputs() {
+        let mut a = Islip::new(8, 4);
+        let mut w = vec![vec![true; 4]; 8]; // everyone wants everything
+        for _ in 0..32 {
+            let m = a.arbitrate(&w, 2);
+            let mut used = [false; 4];
+            for out in m.iter().flatten() {
+                assert!(!used[*out], "output {out} double-granted");
+                used[*out] = true;
+            }
+            w[0][0] = !w[0][0]; // perturb
+        }
+    }
+
+    #[test]
+    fn multiple_iterations_increase_matching() {
+        // Pattern where 1 iteration can leave ports unmatched:
+        // in0 wants {0,1}, in1 wants {0}. If out0 grants in0 and in0
+        // accepts out0, in1 starves this cycle with 1 iter... construct
+        // via pointers: just assert 2-iter matching is >= 1-iter matching
+        // over random-ish patterns.
+        let mut a1 = Islip::new(4, 4);
+        let mut a2 = Islip::new(4, 4);
+        let patterns = [
+            wants(4, 4, &[(0, 0), (0, 1), (1, 0), (2, 1), (3, 2)]),
+            wants(4, 4, &[(0, 3), (1, 3), (2, 3), (3, 3), (3, 0)]),
+            wants(4, 4, &[(0, 0), (1, 1), (2, 2), (3, 3)]),
+        ];
+        for w in &patterns {
+            let m1 = a1.arbitrate(w, 1).iter().flatten().count();
+            let m2 = a2.arbitrate(w, 4).iter().flatten().count();
+            assert!(m2 >= m1, "more iterations can't match fewer");
+        }
+    }
+
+    #[test]
+    fn full_permutation_achieves_full_match() {
+        let mut a = Islip::new(4, 4);
+        let w = wants(4, 4, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+        let m = a.arbitrate(&w, 4);
+        assert_eq!(m.iter().flatten().count(), 4);
+    }
+
+    #[test]
+    fn no_starvation_under_contention() {
+        // 4 inputs all hammering output 0: every input must win within
+        // n_in consecutive arbitrations.
+        let mut a = Islip::new(4, 2);
+        let w = wants(4, 2, &[(0, 0), (1, 0), (2, 0), (3, 0)]);
+        let mut last_win = [0usize; 4];
+        for round in 1..=40 {
+            let m = a.arbitrate(&w, 1);
+            for (i, x) in m.iter().enumerate() {
+                if x.is_some() {
+                    last_win[i] = round;
+                }
+            }
+        }
+        for (i, &lw) in last_win.iter().enumerate() {
+            assert!(lw >= 36, "input {i} starved (last win round {lw})");
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Interconnect models.
+//!
+//! * [`islip`] — the iSLIP arbiter named in Table II.
+//! * [`crossbar`] — detailed input-queued crossbar (VOQs, flits,
+//!   backpressure) plus the fast reservation twin used on the hot path.
+//! * [`ring`] — the probe/data ring of the remote-sharing baseline.
+
+pub mod crossbar;
+pub mod islip;
+pub mod ring;
+
+pub use crossbar::{Crossbar, Packet, XbarReservation};
+pub use islip::Islip;
+pub use ring::Ring;

@@ -1,0 +1,428 @@
+//! Contended-resource primitives.
+//!
+//! The simulator models every shared hardware resource (cache data banks,
+//! tag banks, crossbar ports, ring links, DRAM command buses) as a server
+//! (or bank of servers) that grants access in *reservation* style: a
+//! request arriving at cycle `now` is granted at `max(now, next_free)` and
+//! occupies the server for its service time.  Because the engine feeds
+//! each resource in non-decreasing time order, this is equivalent to a
+//! FIFO queue in front of the server but costs O(1) per request — the
+//! queueing delay (`grant - now`) *is* the contention the paper measures.
+
+/// A single server with a backlog horizon.
+#[derive(Debug, Clone)]
+pub struct Server {
+    next_free: u64,
+}
+
+impl Server {
+    pub fn new() -> Self {
+        Server { next_free: 0 }
+    }
+
+    /// Reserve `occupancy` cycles starting no earlier than `now`.
+    /// Returns the grant cycle (when service *starts*).
+    #[inline]
+    pub fn reserve(&mut self, now: u64, occupancy: u32) -> u64 {
+        let grant = self.next_free.max(now);
+        self.next_free = grant + occupancy as u64;
+        grant
+    }
+
+    /// Cycles of queued work beyond `now` (0 if idle).
+    #[inline]
+    pub fn backlog(&self, now: u64) -> u64 {
+        self.next_free.saturating_sub(now)
+    }
+
+    /// Would a reservation at `now` be granted within `limit` cycles?
+    /// Used to model finite input buffers: when the backlog exceeds the
+    /// buffer horizon the upstream component must stall and retry.
+    #[inline]
+    pub fn would_accept(&self, now: u64, limit: u64) -> bool {
+        self.backlog(now) <= limit
+    }
+}
+
+impl Default for Server {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A bank of independent servers indexed by bank id (cache banks, DRAM
+/// banks, per-slice queues).
+#[derive(Debug, Clone)]
+pub struct Banked {
+    banks: Vec<Server>,
+}
+
+impl Banked {
+    pub fn new(n: usize) -> Self {
+        Banked {
+            banks: (0..n).map(|_| Server::new()).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.banks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.banks.is_empty()
+    }
+
+    #[inline]
+    pub fn reserve(&mut self, bank: usize, now: u64, occupancy: u32) -> u64 {
+        self.banks[bank].reserve(now, occupancy)
+    }
+
+    #[inline]
+    pub fn backlog(&self, bank: usize, now: u64) -> u64 {
+        self.banks[bank].backlog(now)
+    }
+
+    #[inline]
+    pub fn would_accept(&self, bank: usize, now: u64, limit: u64) -> bool {
+        self.banks[bank].would_accept(now, limit)
+    }
+
+    /// Total backlog across banks (a contention pressure metric).
+    pub fn total_backlog(&self, now: u64) -> u64 {
+        self.banks.iter().map(|b| b.backlog(now)).sum()
+    }
+}
+
+/// `k` identical interchangeable servers (e.g. a multi-ported array or a
+/// pool of comparator groups): a reservation takes the earliest-free port.
+#[derive(Debug, Clone)]
+pub struct MultiPort {
+    ports: Vec<u64>,
+}
+
+impl MultiPort {
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0);
+        MultiPort { ports: vec![0; k] }
+    }
+
+    /// Reserve the earliest-available port. Returns the grant cycle.
+    #[inline]
+    pub fn reserve(&mut self, now: u64, occupancy: u32) -> u64 {
+        // Find the port that frees first.
+        let (idx, &earliest) = self
+            .ports
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &t)| t)
+            .unwrap();
+        let grant = earliest.max(now);
+        self.ports[idx] = grant + occupancy as u64;
+        grant
+    }
+
+    #[inline]
+    pub fn backlog(&self, now: u64) -> u64 {
+        self.ports
+            .iter()
+            .map(|&t| t.saturating_sub(now))
+            .min()
+            .unwrap_or(0)
+    }
+
+    /// Earliest cycle a port is free at-or-after `now` (without reserving).
+    #[inline]
+    pub fn earliest(&self, now: u64) -> u64 {
+        self.ports.iter().copied().min().unwrap_or(0).max(now)
+    }
+
+    /// Occupy the earliest-free port until `until` (dynamic-duration
+    /// reservation — e.g. an MSHR entry held from allocate to fill).
+    /// Returns the cycle the port became available (the grant).
+    #[inline]
+    pub fn occupy_until(&mut self, now: u64, until: u64) -> u64 {
+        let idx = self
+            .ports
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &t)| t)
+            .map(|(i, _)| i)
+            .unwrap();
+        let grant = self.ports[idx].max(now);
+        self.ports[idx] = until.max(grant);
+        grant
+    }
+}
+
+/// A gap-filling reservation calendar.
+///
+/// [`Server`] assumes (near-)monotone arrival times: a reservation made at
+/// a *future* time blocks every later-made, earlier-timed request.  Data
+/// replies are naturally scheduled at future cycles (after cache/DRAM
+/// latency), so resources carrying both request and response traffic —
+/// crossbar ports, ring links, L2 slice ports, DRAM buses — must be able
+/// to fill the idle gap before a future booking.  `Calendar` keeps the
+/// set of busy intervals and grants the first gap at-or-after `now`.
+///
+/// Intervals older than `now - PRUNE_SLACK` are discarded; arrivals are
+/// allowed to be non-monotone by up to that slack (far larger than any
+/// simulated round-trip).
+#[derive(Debug, Clone, Default)]
+pub struct Calendar {
+    /// (start, end) busy intervals, disjoint, sorted by start.  A plain
+    /// vector: merging keeps the list tiny (usually 1–4 entries), so
+    /// linear/binary scans beat tree structures by a wide margin — this
+    /// is the simulator's hottest structure (see EXPERIMENTS.md §Perf).
+    busy: Vec<(u64, u64)>,
+}
+
+const PRUNE_SLACK: u64 = 1 << 14;
+
+/// Gaps shorter than this are fused into the neighbouring busy interval
+/// when inserting: sub-FUSE-cycle holes are below the model's timing
+/// granularity, and fusing keeps the interval lists short (fragmentation
+/// was the top profile entry before this).
+const FUSE_GAP: u64 = 2;
+
+impl Calendar {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reserve `occ` consecutive cycles starting no earlier than `now`;
+    /// returns the grant (start) cycle, filling the earliest gap.
+    pub fn reserve(&mut self, now: u64, occ: u32) -> u64 {
+        let occ = occ.max(1) as u64;
+        // Prune intervals that ended far before `now`: arrivals may be
+        // non-monotone by up to PRUNE_SLACK, never more.
+        if let Some(&(_, first_end)) = self.busy.first() {
+            if first_end + PRUNE_SLACK < now {
+                let cutoff = now - PRUNE_SLACK;
+                let keep_from = self.busy.partition_point(|&(_, e)| e < cutoff);
+                self.busy.drain(..keep_from);
+            }
+        }
+        // Find the first interval whose end is after `now`, then walk
+        // forward looking for a gap of `occ` cycles.
+        let mut idx = self.busy.partition_point(|&(_, e)| e <= now);
+        let mut t = now;
+        while idx < self.busy.len() {
+            let (s, e) = self.busy[idx];
+            if t + occ <= s {
+                break; // gap before interval idx
+            }
+            if e > t {
+                t = e;
+            }
+            idx += 1;
+        }
+        // Insert [t, t+occ) at position idx, merging neighbours (gaps of
+        // up to FUSE_GAP cycles are absorbed to bound fragmentation).
+        let end = t + occ;
+        let merge_prev = idx > 0 && self.busy[idx - 1].1 + FUSE_GAP >= t;
+        let merge_next = idx < self.busy.len() && end + FUSE_GAP >= self.busy[idx].0;
+        match (merge_prev, merge_next) {
+            (true, true) => {
+                self.busy[idx - 1].1 = self.busy[idx].1.max(end);
+                self.busy.remove(idx);
+            }
+            (true, false) => self.busy[idx - 1].1 = end,
+            (false, true) => self.busy[idx].0 = t,
+            (false, false) => self.busy.insert(idx, (t, end)),
+        }
+        t
+    }
+
+    /// Pending work at-or-after `now` (buffer-occupancy proxy).
+    pub fn backlog(&self, now: u64) -> u64 {
+        self.busy
+            .iter()
+            .map(|&(s, e)| e.saturating_sub(s.max(now)))
+            .sum()
+    }
+
+    pub fn would_accept(&self, now: u64, limit: u64) -> bool {
+        self.backlog(now) <= limit
+    }
+}
+
+/// A bank of independent calendars.
+#[derive(Debug, Clone)]
+pub struct BankedCalendar {
+    banks: Vec<Calendar>,
+}
+
+impl BankedCalendar {
+    pub fn new(n: usize) -> Self {
+        BankedCalendar {
+            banks: (0..n).map(|_| Calendar::new()).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.banks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.banks.is_empty()
+    }
+
+    #[inline]
+    pub fn reserve(&mut self, bank: usize, now: u64, occ: u32) -> u64 {
+        self.banks[bank].reserve(now, occ)
+    }
+
+    #[inline]
+    pub fn backlog(&self, bank: usize, now: u64) -> u64 {
+        self.banks[bank].backlog(now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_server_grants_immediately() {
+        let mut s = Server::new();
+        assert_eq!(s.reserve(100, 4), 100);
+        assert_eq!(s.backlog(100), 4);
+    }
+
+    #[test]
+    fn busy_server_serializes() {
+        let mut s = Server::new();
+        assert_eq!(s.reserve(10, 2), 10); // busy until 12
+        assert_eq!(s.reserve(10, 2), 12); // queued behind
+        assert_eq!(s.reserve(11, 2), 14);
+        assert_eq!(s.reserve(100, 2), 100); // idle again later
+    }
+
+    #[test]
+    fn would_accept_models_finite_buffer() {
+        let mut s = Server::new();
+        for _ in 0..10 {
+            s.reserve(0, 4);
+        }
+        assert_eq!(s.backlog(0), 40);
+        assert!(!s.would_accept(0, 16));
+        assert!(s.would_accept(0, 64));
+        assert!(s.would_accept(39, 4));
+    }
+
+    #[test]
+    fn banked_banks_are_independent() {
+        let mut b = Banked::new(4);
+        assert_eq!(b.reserve(0, 0, 10), 0);
+        assert_eq!(b.reserve(1, 0, 10), 0, "bank 1 idle");
+        assert_eq!(b.reserve(0, 0, 10), 10, "bank 0 queued");
+        assert_eq!(b.total_backlog(0), 30);
+    }
+
+    #[test]
+    fn multiport_spreads_across_ports() {
+        let mut m = MultiPort::new(2);
+        assert_eq!(m.reserve(0, 4), 0); // port A busy till 4
+        assert_eq!(m.reserve(0, 4), 0); // port B busy till 4
+        assert_eq!(m.reserve(0, 4), 4); // back to A
+        assert_eq!(m.reserve(0, 4), 4); // back to B
+        assert_eq!(m.reserve(0, 4), 8);
+    }
+
+    #[test]
+    fn grants_are_monotone_for_monotone_arrivals() {
+        // The engine feeds resources in time order; grants must then be
+        // non-decreasing (FIFO equivalence).
+        let mut s = Server::new();
+        let mut last = 0;
+        let mut arrivals = vec![0u64, 0, 1, 3, 3, 3, 10, 11, 50];
+        arrivals.sort_unstable();
+        for a in arrivals {
+            let g = s.reserve(a, 3);
+            assert!(g >= last);
+            last = g;
+        }
+    }
+}
+
+impl Banked {
+    /// Reserve on bank 0 — convenience for single-bank uses in tests.
+    pub fn reserve0(&mut self, now: u64, occupancy: u32) -> u64 {
+        self.reserve(0, now, occupancy)
+    }
+}
+
+#[cfg(test)]
+mod calendar_tests {
+    use super::*;
+
+    #[test]
+    fn grants_gap_before_future_booking() {
+        let mut c = Calendar::new();
+        assert_eq!(c.reserve(1000, 4), 1000, "future booking");
+        // A present-time request must NOT queue behind it.
+        assert_eq!(c.reserve(10, 4), 10);
+        // And the gap between them is usable too.
+        assert_eq!(c.reserve(10, 4), 14);
+    }
+
+    #[test]
+    fn respects_existing_intervals() {
+        let mut c = Calendar::new();
+        c.reserve(10, 10); // [10,20)
+        assert_eq!(c.reserve(5, 5), 5, "gap [5,10) exactly fits");
+        assert_eq!(c.reserve(5, 5), 20, "now everything before 20 is busy");
+        assert_eq!(c.reserve(12, 3), 25, "inside busy -> after [20,25)");
+    }
+
+    #[test]
+    fn fifo_when_fed_monotonically() {
+        // Fed like a Server, Calendar must behave like a Server.
+        let mut c = Calendar::new();
+        let mut s = Server::new();
+        let arrivals = [0u64, 0, 1, 3, 3, 7, 20, 21];
+        for &a in &arrivals {
+            assert_eq!(c.reserve(a, 3), s.reserve(a, 3), "arrival {a}");
+        }
+    }
+
+    #[test]
+    fn merging_keeps_map_small() {
+        let mut c = Calendar::new();
+        for i in 0..1000u64 {
+            c.reserve(i, 1);
+        }
+        assert!(c.busy.len() <= 2, "adjacent intervals must merge: {}", c.busy.len());
+    }
+
+    #[test]
+    fn backlog_counts_future_work() {
+        let mut c = Calendar::new();
+        c.reserve(100, 10);
+        assert_eq!(c.backlog(0), 10);
+        assert_eq!(c.backlog(105), 5);
+        assert!(c.would_accept(0, 16));
+        assert!(!c.would_accept(0, 4));
+    }
+
+    #[test]
+    fn banked_calendar_independent_banks() {
+        let mut b = BankedCalendar::new(2);
+        assert_eq!(b.reserve(0, 0, 10), 0);
+        assert_eq!(b.reserve(1, 0, 10), 0);
+        assert_eq!(b.reserve(0, 0, 10), 10);
+    }
+
+    #[test]
+    fn pruning_bounds_memory() {
+        let mut c = Calendar::new();
+        for i in 0..200_000u64 {
+            c.reserve(i * 2, 1); // never adjacent -> no merge
+        }
+        assert!(
+            c.busy.len() < 40_000,
+            "old intervals must be pruned: {}",
+            c.busy.len()
+        );
+    }
+}

@@ -1,0 +1,225 @@
+//! PJRT runtime: loads the JAX/Pallas-authored locality analytics
+//! artifact (`artifacts/locality.hlo.txt`) and executes it from Rust.
+//!
+//! Python runs only at build time (`make artifacts`); this module is the
+//! request-path consumer.  The artifact computes, from per-core sampled
+//! cache-line traces, the core×core sharing matrix, per-core working-set
+//! sizes, a locality score and a replication factor — the classification
+//! step of §IV ("classified based on the amount of replicated data across
+//! all cores") plus the cross-check signal for the simulator's own
+//! replication audit.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::mem::LineAddr;
+use crate::trace::LocalityClass;
+use crate::util::json::Json;
+
+/// Shapes baked into the artifact (validated against the metadata
+/// sidecar at load time).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArtifactMeta {
+    pub num_cores: usize,
+    pub padded_cores: usize,
+    pub trace_len: usize,
+    pub nbits: usize,
+}
+
+/// Output of one artifact execution.
+#[derive(Debug, Clone)]
+pub struct LocalityReport {
+    /// Core×core bucket-sharing matrix (padded_cores²; padding rows zero).
+    pub sharing_matrix: Vec<f32>,
+    pub padded_cores: usize,
+    /// Per-core signature popcounts.
+    pub sizes: Vec<f32>,
+    /// Mean replicated fraction, in [0, 1].
+    pub locality_score: f32,
+    /// Σ sizes / |union|, in [1, C].
+    pub replication_factor: f32,
+}
+
+impl LocalityReport {
+    /// The paper's binary classification.  Threshold chosen in the gap
+    /// between the two measured app populations — high-locality apps score
+    /// ≥ 0.27, low-locality ones ≤ 0.10 (see EXPERIMENTS.md §Classify).
+    pub fn class(&self) -> LocalityClass {
+        if self.locality_score >= 0.15 {
+            LocalityClass::High
+        } else {
+            LocalityClass::Low
+        }
+    }
+
+    pub fn shared_with(&self, a: usize, b: usize) -> f32 {
+        self.sharing_matrix[a * self.padded_cores + b]
+    }
+}
+
+/// A loaded, compiled locality-analytics executable.
+pub struct LocalityAnalyzer {
+    exe: xla::PjRtLoadedExecutable,
+    meta: ArtifactMeta,
+}
+
+impl std::fmt::Debug for LocalityAnalyzer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LocalityAnalyzer").field("meta", &self.meta).finish()
+    }
+}
+
+impl LocalityAnalyzer {
+    /// Load + compile `artifacts/locality.hlo.txt` (HLO text — the
+    /// xla_extension-0.5.1-safe interchange; see python/compile/aot.py).
+    pub fn load(artifact_dir: &str) -> Result<Self> {
+        let hlo_path = Path::new(artifact_dir).join("locality.hlo.txt");
+        let meta_path = Path::new(artifact_dir).join("locality.meta.json");
+        let meta_text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {meta_path:?} (run `make artifacts`)"))?;
+        let meta_json = Json::parse(&meta_text).context("parsing artifact metadata")?;
+        let meta = ArtifactMeta {
+            num_cores: meta_json.get("num_cores").and_then(Json::as_usize).context("num_cores")?,
+            padded_cores: meta_json
+                .get("padded_cores")
+                .and_then(Json::as_usize)
+                .context("padded_cores")?,
+            trace_len: meta_json.get("trace_len").and_then(Json::as_usize).context("trace_len")?,
+            nbits: meta_json.get("nbits").and_then(Json::as_usize).context("nbits")?,
+        };
+
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().context("artifact path not utf-8")?,
+        )
+        .context("parsing HLO text (run `make artifacts`)")?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compiling locality artifact")?;
+        Ok(LocalityAnalyzer { exe, meta })
+    }
+
+    pub fn meta(&self) -> ArtifactMeta {
+        self.meta
+    }
+
+    /// Analyze per-core traces (line addresses; truncated/padded to the
+    /// artifact's fixed shape).
+    pub fn analyze(&self, traces: &[Vec<LineAddr>]) -> Result<LocalityReport> {
+        let c = self.meta.padded_cores;
+        let t = self.meta.trace_len;
+        if traces.len() > c {
+            bail!("{} cores exceed artifact capacity {}", traces.len(), c);
+        }
+        let mut lines = vec![0i32; c * t];
+        let mut valid = vec![0i32; c * t];
+        for (i, trace) in traces.iter().enumerate() {
+            for (j, &line) in trace.iter().take(t).enumerate() {
+                // The artifact hashes 32-bit values; fold the 64-bit line.
+                lines[i * t + j] = (line ^ (line >> 32)) as u32 as i32;
+                valid[i * t + j] = 1;
+            }
+        }
+        let lines_lit = xla::Literal::vec1(&lines).reshape(&[c as i64, t as i64])?;
+        let valid_lit = xla::Literal::vec1(&valid).reshape(&[c as i64, t as i64])?;
+
+        let mut result = self.exe.execute::<xla::Literal>(&[lines_lit, valid_lit])?[0][0]
+            .to_literal_sync()?;
+        let mut outs = result.decompose_tuple()?;
+        if outs.len() != 4 {
+            bail!("artifact returned {} outputs, expected 4", outs.len());
+        }
+        let repl = outs.pop().unwrap().to_vec::<f32>()?[0];
+        let score = outs.pop().unwrap().to_vec::<f32>()?[0];
+        let sizes = outs.pop().unwrap().to_vec::<f32>()?;
+        let sharing = outs.pop().unwrap().to_vec::<f32>()?;
+        Ok(LocalityReport {
+            sharing_matrix: sharing,
+            padded_cores: c,
+            sizes,
+            locality_score: score,
+            replication_factor: repl,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact_available() -> bool {
+        Path::new("artifacts/locality.hlo.txt").exists()
+    }
+
+    #[test]
+    fn analyze_disjoint_and_shared_traces() {
+        if !artifact_available() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let an = LocalityAnalyzer::load("artifacts").unwrap();
+        assert_eq!(an.meta().num_cores, 30);
+
+        // Disjoint traces → score ~0, replication ~1.
+        let disjoint: Vec<Vec<LineAddr>> =
+            (0..8).map(|c| (0..64u64).map(|k| c * 1_000_000 + k).collect()).collect();
+        let r = an.analyze(&disjoint).unwrap();
+        assert!(r.locality_score < 0.02, "score {}", r.locality_score);
+        assert!((r.replication_factor - 1.0).abs() < 0.05);
+        assert_eq!(r.class(), LocalityClass::Low);
+
+        // Identical traces → high score, replication ≈ #cores.
+        let shared: Vec<Vec<LineAddr>> = (0..8).map(|_| (0..64u64).collect()).collect();
+        let r2 = an.analyze(&shared).unwrap();
+        assert!(r2.locality_score > 0.2, "score {}", r2.locality_score);
+        assert!(r2.replication_factor > 6.0);
+        assert_eq!(r2.class(), LocalityClass::High);
+    }
+
+    #[test]
+    fn artifact_agrees_with_exact_oracle() {
+        if !artifact_available() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        use crate::trace::signature::exact_locality;
+        use crate::util::rng::Pcg32;
+        let an = LocalityAnalyzer::load("artifacts").unwrap();
+        let mut rng = Pcg32::new(77, 0);
+        // Mixed workload: half shared pool, half private.
+        let traces: Vec<Vec<LineAddr>> = (0..10)
+            .map(|c| {
+                (0..256)
+                    .map(|_| {
+                        if rng.chance(0.5) {
+                            rng.next_below(512) as u64
+                        } else {
+                            (c + 1) as u64 * 1_000_000 + rng.next_below(512) as u64
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let report = an.analyze(&traces).unwrap();
+        // Exact metrics on deduped traces (the artifact dedups via bitmap).
+        let deduped: Vec<Vec<LineAddr>> = traces
+            .iter()
+            .map(|t| {
+                let s: std::collections::HashSet<_> = t.iter().copied().collect();
+                s.into_iter().collect()
+            })
+            .collect();
+        let (score, repl) = exact_locality(&deduped);
+        // Hash-bucket estimate vs exact sets: within a few percent.
+        assert!(
+            (report.locality_score as f64 - score).abs() < 0.05,
+            "artifact {} vs exact {score}",
+            report.locality_score
+        );
+        assert!(
+            (report.replication_factor as f64 - repl).abs() / repl < 0.1,
+            "artifact {} vs exact {repl}",
+            report.replication_factor
+        );
+    }
+}

@@ -1,0 +1,302 @@
+//! Simulation statistics: IPC, cache hit classes, contention pressure,
+//! and the paper's L1-latency metric (completion time of all requests of
+//! a single load instruction, §IV-C).
+
+use crate::util::fxhash::FxHashMap;
+use crate::util::json::Json;
+
+/// Per-L1-organization counters (aggregated over the whole GPU).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct L1Stats {
+    pub accesses: u64,
+    /// Full hits in the requesting core's local cache.
+    pub local_hits: u64,
+    /// Hits served from another cluster cache (remote/decoupled/ATA).
+    pub remote_hits: u64,
+    /// Sector misses (line present, sectors missing).
+    pub sector_misses: u64,
+    /// Full line misses that went to L2.
+    pub misses: u64,
+    pub writes: u64,
+    /// Requests rejected for structural hazards (MSHR full, queue full) —
+    /// each costs the core a retry cycle.
+    pub rejects: u64,
+    /// Cycles of queueing delay accumulated at L1 data banks (bank
+    /// conflict serialization — the decoupled-sharing pathology).
+    pub bank_conflict_cycles: u64,
+    /// Cycles of queueing at the intra-cluster crossbar / ring.
+    pub sharing_net_cycles: u64,
+    /// Probe messages sent (remote-sharing NoC pressure).
+    pub probes_sent: u64,
+    /// Remote read fell back to L2 because the remote copy was dirty
+    /// (§III-C).
+    pub dirty_remote_fallbacks: u64,
+    /// Lines filled into a cache.
+    pub fills: u64,
+    /// MSHR merges (request piggybacked on an in-flight miss).
+    pub mshr_merges: u64,
+}
+
+impl L1Stats {
+    pub fn hit_rate(&self) -> f64 {
+        if self.accesses == 0 {
+            return 0.0;
+        }
+        (self.local_hits + self.remote_hits) as f64 / self.accesses as f64
+    }
+
+    pub fn local_hit_rate(&self) -> f64 {
+        if self.accesses == 0 {
+            return 0.0;
+        }
+        self.local_hits as f64 / self.accesses as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("accesses", self.accesses.into()),
+            ("local_hits", self.local_hits.into()),
+            ("remote_hits", self.remote_hits.into()),
+            ("sector_misses", self.sector_misses.into()),
+            ("misses", self.misses.into()),
+            ("writes", self.writes.into()),
+            ("rejects", self.rejects.into()),
+            ("bank_conflict_cycles", self.bank_conflict_cycles.into()),
+            ("sharing_net_cycles", self.sharing_net_cycles.into()),
+            ("probes_sent", self.probes_sent.into()),
+            ("dirty_remote_fallbacks", self.dirty_remote_fallbacks.into()),
+            ("fills", self.fills.into()),
+            ("mshr_merges", self.mshr_merges.into()),
+            ("hit_rate", self.hit_rate().into()),
+        ])
+    }
+}
+
+/// Tracks the paper's L1 latency metric: for each *load instruction*, the
+/// time from issue until **all** of its coalesced requests complete.
+#[derive(Debug, Default)]
+pub struct LoadLatencyTracker {
+    /// (core, warp, inst) → (outstanding, issue_cycle, latest_completion)
+    open: FxHashMap<(u32, u32, u64), (u32, u64, u64)>,
+    pub completed_loads: u64,
+    pub total_latency: u64,
+    pub max_latency: u64,
+    /// Histogram in power-of-two latency buckets [1,2), [2,4), ...
+    pub histogram: [u64; 24],
+}
+
+impl LoadLatencyTracker {
+    /// Register a load instruction with `n_requests` at `issue_cycle`.
+    pub fn issue(&mut self, core: u32, warp: u32, inst: u64, n_requests: u32, issue_cycle: u64) {
+        debug_assert!(n_requests > 0);
+        self.open
+            .insert((core, warp, inst), (n_requests, issue_cycle, issue_cycle));
+    }
+
+    /// One request of the load completed at `cycle`.  When this was the
+    /// last outstanding request, returns the whole-load completion cycle
+    /// (the warp's wake time); otherwise `None`.
+    pub fn complete_one(&mut self, core: u32, warp: u32, inst: u64, cycle: u64) -> Option<u64> {
+        let key = (core, warp, inst);
+        let Some(entry) = self.open.get_mut(&key) else {
+            debug_assert!(false, "completion for unknown load {key:?}");
+            return None;
+        };
+        entry.0 -= 1;
+        entry.2 = entry.2.max(cycle);
+        if entry.0 == 0 {
+            let (_, issued, done) = self.open.remove(&key).unwrap();
+            let lat = done.saturating_sub(issued).max(1);
+            self.completed_loads += 1;
+            self.total_latency += lat;
+            self.max_latency = self.max_latency.max(lat);
+            let bucket = (64 - (lat.max(1)).leading_zeros() as usize - 1).min(23);
+            self.histogram[bucket] += 1;
+            Some(done)
+        } else {
+            None
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.completed_loads == 0 {
+            0.0
+        } else {
+            self.total_latency as f64 / self.completed_loads as f64
+        }
+    }
+
+    pub fn outstanding(&self) -> usize {
+        self.open.len()
+    }
+}
+
+/// Per-kernel performance record (Fig 9's unit of comparison).
+#[derive(Debug, Clone, Default)]
+pub struct KernelStats {
+    pub name: String,
+    pub cycles: u64,
+    pub insts: u64,
+    /// Full load latency (includes L2/DRAM service).
+    pub l1_mean_latency: f64,
+    /// The paper's §IV-C L1 access latency (stage completion).
+    pub l1_stage_latency: f64,
+    pub l1_hit_rate: f64,
+}
+
+impl KernelStats {
+    pub fn ipc(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.insts as f64 / self.cycles as f64
+        }
+    }
+}
+
+/// Whole-simulation result bundle.
+#[derive(Debug, Clone, Default)]
+pub struct SimResult {
+    pub app: String,
+    pub arch: String,
+    pub cycles: u64,
+    pub insts: u64,
+    pub l1: L1Stats,
+    pub l1_mean_load_latency: f64,
+    pub l1_max_load_latency: u64,
+    /// The paper's §IV-C metric: completion of the L1 access stage.
+    pub l1_stage_mean_latency: f64,
+    pub l1_stage_max_latency: u64,
+    pub l2_hit_rate: f64,
+    pub l2_mean_fetch_latency: f64,
+    pub noc_flits: u64,
+    pub dram_reads: u64,
+    pub dram_writes: u64,
+    pub kernels: Vec<KernelStats>,
+    /// Wall-clock seconds the simulation took (host performance metric).
+    pub host_seconds: f64,
+}
+
+impl SimResult {
+    pub fn ipc(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.insts as f64 / self.cycles as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("app", self.app.as_str().into()),
+            ("arch", self.arch.as_str().into()),
+            ("cycles", self.cycles.into()),
+            ("insts", self.insts.into()),
+            ("ipc", self.ipc().into()),
+            ("l1", self.l1.to_json()),
+            ("l1_mean_load_latency", self.l1_mean_load_latency.into()),
+            ("l1_max_load_latency", self.l1_max_load_latency.into()),
+            ("l1_stage_mean_latency", self.l1_stage_mean_latency.into()),
+            ("l1_stage_max_latency", self.l1_stage_max_latency.into()),
+            ("l2_hit_rate", self.l2_hit_rate.into()),
+            ("l2_mean_fetch_latency", self.l2_mean_fetch_latency.into()),
+            ("noc_flits", self.noc_flits.into()),
+            ("dram_reads", self.dram_reads.into()),
+            ("dram_writes", self.dram_writes.into()),
+            (
+                "kernels",
+                Json::arr(
+                    self.kernels
+                        .iter()
+                        .map(|k| {
+                            Json::obj(vec![
+                                ("name", k.name.as_str().into()),
+                                ("cycles", k.cycles.into()),
+                                ("insts", k.insts.into()),
+                                ("ipc", k.ipc().into()),
+                                ("l1_mean_latency", k.l1_mean_latency.into()),
+                                ("l1_stage_latency", k.l1_stage_latency.into()),
+                                ("l1_hit_rate", k.l1_hit_rate.into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("host_seconds", self.host_seconds.into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_rate_combines_local_and_remote() {
+        let s = L1Stats {
+            accesses: 10,
+            local_hits: 5,
+            remote_hits: 2,
+            ..Default::default()
+        };
+        assert!((s.hit_rate() - 0.7).abs() < 1e-12);
+        assert!((s.local_hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(L1Stats::default().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn load_tracker_waits_for_all_requests() {
+        let mut t = LoadLatencyTracker::default();
+        t.issue(0, 1, 7, 3, 100);
+        assert_eq!(t.complete_one(0, 1, 7, 120), None);
+        assert_eq!(t.complete_one(0, 1, 7, 180), None);
+        assert_eq!(
+            t.complete_one(0, 1, 7, 150),
+            Some(180),
+            "last completion finishes the load at the max cycle"
+        );
+        assert_eq!(t.completed_loads, 1);
+        // Latency = max completion (180) - issue (100)
+        assert_eq!(t.total_latency, 80);
+        assert_eq!(t.outstanding(), 0);
+    }
+
+    #[test]
+    fn load_tracker_mean_and_histogram() {
+        let mut t = LoadLatencyTracker::default();
+        t.issue(0, 0, 1, 1, 0);
+        t.complete_one(0, 0, 1, 32);
+        t.issue(0, 0, 2, 1, 0);
+        t.complete_one(0, 0, 2, 96);
+        assert_eq!(t.mean(), 64.0);
+        assert_eq!(t.max_latency, 96);
+        assert_eq!(t.histogram[5], 1, "32 in [32,64)");
+        assert_eq!(t.histogram[6], 1, "96 in [64,128)");
+    }
+
+    #[test]
+    fn kernel_ipc() {
+        let k = KernelStats {
+            name: "k0".into(),
+            cycles: 1000,
+            insts: 750,
+            ..Default::default()
+        };
+        assert!((k.ipc() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sim_result_json_is_parseable() {
+        let r = SimResult {
+            app: "b+tree".into(),
+            arch: "ata".into(),
+            cycles: 100,
+            insts: 80,
+            ..Default::default()
+        };
+        let j = r.to_json().to_string();
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("app").unwrap().as_str(), Some("b+tree"));
+        assert!((parsed.get("ipc").unwrap().as_f64().unwrap() - 0.8).abs() < 1e-9);
+    }
+}

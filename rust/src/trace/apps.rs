@@ -1,0 +1,582 @@
+//! The ten benchmark application models (§IV: Rodinia 3.1, Tango,
+//! Polybench), classified by inter-core locality exactly as the paper
+//! classifies them.
+//!
+//! Each model is a statistical twin of the real application's memory
+//! behaviour: kernel count and per-kernel footprints, shared-region sizes
+//! and reuse skews are chosen so the generated traces land in the paper's
+//! locality class and reproduce the per-kernel diversity Fig 9 relies on.
+//! The `notes` field documents the reasoning per app (the substitution
+//! record DESIGN.md §5 points at).
+
+use super::{AppModel, KernelModel, LocalityClass, Pattern};
+
+/// Paper order: five high inter-core locality apps…
+pub const HIGH_LOCALITY_APPS: [&str; 5] = ["b+tree", "cfd", "hotspot", "SN", "conv3d"];
+/// …and five low inter-core locality apps.
+pub const LOW_LOCALITY_APPS: [&str; 5] = ["doitgen", "HS3D", "sradv1", "backprop", "lud"];
+
+/// All ten, high-locality first (Fig 8's x-axis order).
+pub fn all_app_names() -> Vec<&'static str> {
+    HIGH_LOCALITY_APPS
+        .iter()
+        .chain(LOW_LOCALITY_APPS.iter())
+        .copied()
+        .collect()
+}
+
+/// Look up an application model by name.
+pub fn app(name: &str) -> Option<AppModel> {
+    all_apps().into_iter().find(|a| a.name == name)
+}
+
+/// The full registry.
+pub fn all_apps() -> Vec<AppModel> {
+    vec![
+        btree(),
+        cfd(),
+        hotspot(),
+        squeezenet(),
+        conv3d(),
+        doitgen(),
+        hs3d(),
+        sradv1(),
+        backprop(),
+        lud(),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// High inter-core locality
+// ---------------------------------------------------------------------------
+
+fn btree() -> AppModel {
+    // Rodinia b+tree: batched key lookups walk a B+ tree. The root and
+    // inner levels are touched by every warp on every core — a textbook
+    // shared hot set with Zipf-like level reuse; leaves are effectively
+    // private. The paper's decoupled baseline *wins* on b+tree (Fig 8):
+    // sharing gains dominate because accesses spread over many distinct
+    // hot lines (large tree) so home-slice bank pressure stays moderate.
+    AppModel {
+        name: "b+tree",
+        suite: "rodinia",
+        class: LocalityClass::High,
+        notes: "shared upper tree levels (hot, zipf); large shared footprint \
+                spreads over home slices, so decoupled-sharing also profits",
+        kernels: vec![
+            KernelModel {
+                name: "findK",
+                warps_per_core: 16,
+                loads_per_warp: 48,
+                alu_per_load: 3,
+                lines_per_load: 2,
+                narrow_fraction: 0.5,
+                shared_lines: 4608,
+                shared_fraction: 0.88,
+                shared_pattern: Pattern::Zipf(0.5),
+                private_lines: 256,
+                private_pattern: Pattern::Sequential,
+                write_fraction: 0.02,
+            },
+            KernelModel {
+                name: "findRangeK",
+                warps_per_core: 16,
+                loads_per_warp: 44,
+                alu_per_load: 3,
+                lines_per_load: 2,
+                narrow_fraction: 0.5,
+                shared_lines: 4608,
+                shared_fraction: 0.85,
+                shared_pattern: Pattern::Zipf(0.5),
+                private_lines: 384,
+                private_pattern: Pattern::Sequential,
+                write_fraction: 0.05,
+            },
+        ],
+    }
+}
+
+fn cfd() -> AppModel {
+    // Rodinia cfd (Euler3D): unstructured-mesh flux computation; ghost
+    // cells / face neighbours are read by the cores owning adjacent mesh
+    // partitions. Decoupled also wins here per Fig 8.
+    AppModel {
+        name: "cfd",
+        suite: "rodinia",
+        class: LocalityClass::High,
+        notes: "ghost-cell faces shared between adjacent partitions; \
+                wide shared region with mild skew",
+        kernels: vec![
+            KernelModel {
+                name: "compute_flux",
+                warps_per_core: 16,
+                loads_per_warp: 48,
+                alu_per_load: 4,
+                lines_per_load: 2,
+                narrow_fraction: 0.3,
+                shared_lines: 3072,
+                shared_fraction: 0.7,
+                shared_pattern: Pattern::Zipf(0.6),
+                private_lines: 512,
+                private_pattern: Pattern::Sequential,
+                write_fraction: 0.08,
+            },
+            KernelModel {
+                name: "time_step",
+                warps_per_core: 12,
+                loads_per_warp: 32,
+                alu_per_load: 3,
+                lines_per_load: 1,
+                narrow_fraction: 0.3,
+                shared_lines: 2048,
+                shared_fraction: 0.65,
+                shared_pattern: Pattern::Sequential,
+                private_lines: 512,
+                private_pattern: Pattern::Sequential,
+                write_fraction: 0.15,
+            },
+            KernelModel {
+                name: "compute_step_factor",
+                warps_per_core: 12,
+                loads_per_warp: 28,
+                alu_per_load: 3,
+                lines_per_load: 1,
+                narrow_fraction: 0.4,
+                shared_lines: 2048,
+                shared_fraction: 0.6,
+                shared_pattern: Pattern::Zipf(0.5),
+                private_lines: 384,
+                private_pattern: Pattern::Sequential,
+                write_fraction: 0.1,
+            },
+        ],
+    }
+}
+
+fn hotspot() -> AppModel {
+    // Rodinia hotspot: 2D thermal stencil; halo rows at tile borders are
+    // read by both neighbouring cores' blocks each iteration.
+    AppModel {
+        name: "hotspot",
+        suite: "rodinia",
+        class: LocalityClass::High,
+        notes: "halo rows shared by neighbouring tiles; sequential sweeps",
+        kernels: vec![
+            KernelModel {
+                name: "calculate_temp",
+                warps_per_core: 16,
+                loads_per_warp: 44,
+                alu_per_load: 3,
+                lines_per_load: 2,
+                narrow_fraction: 0.2,
+                shared_lines: 768,
+                shared_fraction: 0.55,
+                shared_pattern: Pattern::Zipf(0.9),
+                private_lines: 448,
+                private_pattern: Pattern::Sequential,
+                write_fraction: 0.12,
+            },
+            KernelModel {
+                name: "calculate_temp_iter2",
+                warps_per_core: 16,
+                loads_per_warp: 44,
+                alu_per_load: 3,
+                lines_per_load: 2,
+                narrow_fraction: 0.2,
+                shared_lines: 768,
+                shared_fraction: 0.6,
+                shared_pattern: Pattern::Zipf(0.9),
+                private_lines: 448,
+                private_pattern: Pattern::Sequential,
+                write_fraction: 0.12,
+            },
+        ],
+    }
+}
+
+fn squeezenet() -> AppModel {
+    // Tango SN (SqueezeNet inference): a deep stack of conv layers. The
+    // filter weights of each layer are *small and red-hot* — every core
+    // reads the same few hundred lines while streaming its own feature-map
+    // slice. That concentration is poison for decoupled-sharing (all
+    // cores converge on the few home slices holding the weights → Fig 8
+    // shows SN *below* private for decoupled) and ideal for ATA (each
+    // core ends up with a local replica after one remote fetch).
+    // Kernel sizes alternate squeeze (1x1, tiny weights) / expand (3x3).
+    let squeeze = |name: &'static str, weights: u32, fmap: u32| KernelModel {
+        name,
+        warps_per_core: 14,
+        loads_per_warp: 34,
+        alu_per_load: 2,
+        lines_per_load: 2,
+        narrow_fraction: 0.3,
+        shared_lines: weights,
+        shared_fraction: 0.75,
+        shared_pattern: Pattern::Zipf(1.1),
+        private_lines: fmap,
+        private_pattern: Pattern::Sequential,
+        write_fraction: 0.1,
+    };
+    AppModel {
+        name: "SN",
+        suite: "tango",
+        class: LocalityClass::High,
+        notes: "small red-hot shared filter weights per layer; convergence \
+                on few lines crushes decoupled-sharing on several kernels",
+        kernels: vec![
+            squeeze("conv1", 96, 640),
+            squeeze("fire2_squeeze", 48, 512),
+            squeeze("fire2_expand", 160, 512),
+            squeeze("fire3_squeeze", 48, 512),
+            squeeze("fire3_expand", 160, 512),
+            squeeze("fire4_squeeze", 96, 448),
+            squeeze("fire4_expand", 320, 448),
+            squeeze("fire5_squeeze", 96, 384),
+            squeeze("fire5_expand", 320, 384),
+            squeeze("conv10", 640, 320),
+        ],
+    }
+}
+
+fn conv3d() -> AppModel {
+    // Polybench conv3d: 3D convolution; every core reads the same small
+    // filter and overlapping input planes. Like SN, the shared set is
+    // narrow → decoupled-sharing underperforms private (Fig 8).
+    let k = |name: &'static str, shared: u32, shared_frac: f64| KernelModel {
+        name,
+        warps_per_core: 14,
+        loads_per_warp: 40,
+        alu_per_load: 2,
+        lines_per_load: 2,
+        narrow_fraction: 0.2,
+        shared_lines: shared,
+        shared_fraction: shared_frac,
+        shared_pattern: Pattern::Zipf(1.0),
+        private_lines: 640,
+        private_pattern: Pattern::Strided(4),
+        write_fraction: 0.1,
+    };
+    AppModel {
+        name: "conv3d",
+        suite: "polybench",
+        class: LocalityClass::High,
+        notes: "tiny shared filter + overlapped input planes; narrow hot set",
+        kernels: vec![
+            k("conv3d_k1", 128, 0.7),
+            k("conv3d_k2", 192, 0.65),
+            k("conv3d_k3", 128, 0.75),
+            k("conv3d_k4", 256, 0.6),
+        ],
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Low inter-core locality
+// ---------------------------------------------------------------------------
+
+fn doitgen() -> AppModel {
+    // Polybench doitgen: per-core tile GEMM-like kernel; each core works
+    // a disjoint tile. Almost nothing is shared, so sharing architectures
+    // can only lose — decoupled scatters every private line to a remote
+    // home slice and pays crossbar + bank conflicts on *every* access
+    // (Fig 8 shows doitgen among decoupled's worst).
+    AppModel {
+        name: "doitgen",
+        suite: "polybench",
+        class: LocalityClass::Low,
+        notes: "disjoint per-core GEMM tiles; decoupled pays the crossbar on \
+                every access for zero sharing benefit",
+        kernels: vec![
+            KernelModel {
+                name: "doitgen_main",
+                warps_per_core: 12,
+                loads_per_warp: 48,
+                alu_per_load: 6,
+                lines_per_load: 2,
+                narrow_fraction: 0.15,
+                shared_lines: 64,
+                shared_fraction: 0.04,
+                shared_pattern: Pattern::Zipf(0.8),
+                private_lines: 1280,
+                private_pattern: Pattern::Sequential,
+                write_fraction: 0.12,
+            },
+            KernelModel {
+                name: "doitgen_sum",
+                warps_per_core: 10,
+                loads_per_warp: 28,
+                alu_per_load: 4,
+                lines_per_load: 1,
+                narrow_fraction: 0.2,
+                shared_lines: 64,
+                shared_fraction: 0.05,
+                shared_pattern: Pattern::Zipf(0.8),
+                private_lines: 896,
+                private_pattern: Pattern::Sequential,
+                write_fraction: 0.2,
+            },
+        ],
+    }
+}
+
+fn hs3d() -> AppModel {
+    // Rodinia hotspot3D: 3D stencil over a large grid; each core sweeps
+    // its own z-slab with strided plane hops. Shared halos are a tiny
+    // fraction of traffic. Fig 9(b): ATA beats decoupled on all kernels.
+    let k = |name: &'static str, stride: u32| KernelModel {
+        name,
+        warps_per_core: 12,
+        loads_per_warp: 40,
+        alu_per_load: 5,
+        lines_per_load: 2,
+        narrow_fraction: 0.2,
+        shared_lines: 256,
+        shared_fraction: 0.08,
+        shared_pattern: Pattern::Sequential,
+        private_lines: 1536,
+        private_pattern: Pattern::Strided(stride),
+        write_fraction: 0.12,
+    };
+    AppModel {
+        name: "HS3D",
+        suite: "rodinia",
+        class: LocalityClass::Low,
+        notes: "large private z-slabs, strided plane walks, thin halos",
+        kernels: vec![
+            k("hotspotOpt_k1", 1),
+            k("hotspotOpt_k2", 8),
+            k("hotspotOpt_k3", 1),
+            k("hotspotOpt_k4", 16),
+            k("hotspotOpt_k5", 8),
+            k("hotspotOpt_k6", 1),
+        ],
+    }
+}
+
+fn sradv1() -> AppModel {
+    // Rodinia srad_v1: ~16 tiny kernels (reduction, prepare, srad, srad2,
+    // compress...). Mostly disjoint tiles, but kernels 4, 9 and 14
+    // (reduction-flavoured) hammer a *small* region — under decoupled
+    // those collapse onto one or two home slices and serialize (the
+    // paper's Fig 9(d) shows exactly k4/k9/k14 cratering).
+    let streaming = |name: &'static str| KernelModel {
+        name,
+        warps_per_core: 12,
+        loads_per_warp: 20,
+        alu_per_load: 5,
+        lines_per_load: 1,
+        narrow_fraction: 0.25,
+        shared_lines: 96,
+        shared_fraction: 0.06,
+        shared_pattern: Pattern::Zipf(0.7),
+        private_lines: 768,
+        private_pattern: Pattern::Sequential,
+        write_fraction: 0.15,
+    };
+    let reduction = |name: &'static str| KernelModel {
+        name,
+        warps_per_core: 16,
+        loads_per_warp: 26,
+        alu_per_load: 1,
+        lines_per_load: 2,
+        narrow_fraction: 0.6,
+        shared_lines: 24, // tiny convergent region
+        shared_fraction: 0.45,
+        shared_pattern: Pattern::Zipf(1.2),
+        private_lines: 512,
+        private_pattern: Pattern::Sequential,
+        write_fraction: 0.25,
+    };
+    let mut kernels = Vec::new();
+    for i in 0..16 {
+        let name: &'static str = Box::leak(format!("srad_k{i}").into_boxed_str());
+        if i == 4 || i == 9 || i == 14 {
+            kernels.push(reduction(name));
+        } else {
+            kernels.push(streaming(name));
+        }
+    }
+    AppModel {
+        name: "sradv1",
+        suite: "rodinia",
+        class: LocalityClass::Low,
+        notes: "16 small kernels; k4/k9/k14 are reduction-like and converge \
+                on a tiny region — decoupled's home slices serialize there",
+        kernels,
+    }
+}
+
+fn backprop() -> AppModel {
+    // Rodinia backprop: NN training; each core updates its own weight
+    // slice, with a small shared bias/output vector.
+    AppModel {
+        name: "backprop",
+        suite: "rodinia",
+        class: LocalityClass::Low,
+        notes: "private weight slices, small shared bias vector",
+        kernels: vec![
+            KernelModel {
+                name: "layerforward",
+                warps_per_core: 12,
+                loads_per_warp: 36,
+                alu_per_load: 4,
+                lines_per_load: 2,
+                narrow_fraction: 0.25,
+                shared_lines: 160,
+                shared_fraction: 0.12,
+                shared_pattern: Pattern::Zipf(0.9),
+                private_lines: 1024,
+                private_pattern: Pattern::Sequential,
+                write_fraction: 0.1,
+            },
+            KernelModel {
+                name: "adjust_weights",
+                warps_per_core: 12,
+                loads_per_warp: 32,
+                alu_per_load: 4,
+                lines_per_load: 2,
+                narrow_fraction: 0.25,
+                shared_lines: 160,
+                shared_fraction: 0.1,
+                shared_pattern: Pattern::Zipf(0.9),
+                private_lines: 1024,
+                private_pattern: Pattern::Sequential,
+                write_fraction: 0.3,
+            },
+        ],
+    }
+}
+
+fn lud() -> AppModel {
+    // Rodinia lud: blocked LU decomposition; diagonal/perimeter/internal
+    // kernels work mostly disjoint blocks, with the diagonal block mildly
+    // shared during the perimeter phase.
+    AppModel {
+        name: "lud",
+        suite: "rodinia",
+        class: LocalityClass::Low,
+        notes: "blocked LU; mild diagonal-block sharing, strided walks",
+        kernels: vec![
+            KernelModel {
+                name: "lud_diagonal",
+                warps_per_core: 8,
+                loads_per_warp: 24,
+                alu_per_load: 6,
+                lines_per_load: 1,
+                narrow_fraction: 0.3,
+                shared_lines: 128,
+                shared_fraction: 0.2,
+                shared_pattern: Pattern::Sequential,
+                private_lines: 512,
+                private_pattern: Pattern::Strided(8),
+                write_fraction: 0.18,
+            },
+            KernelModel {
+                name: "lud_perimeter",
+                warps_per_core: 12,
+                loads_per_warp: 32,
+                alu_per_load: 5,
+                lines_per_load: 2,
+                narrow_fraction: 0.25,
+                shared_lines: 128,
+                shared_fraction: 0.15,
+                shared_pattern: Pattern::Sequential,
+                private_lines: 896,
+                private_pattern: Pattern::Strided(8),
+                write_fraction: 0.15,
+            },
+            KernelModel {
+                name: "lud_internal",
+                warps_per_core: 14,
+                loads_per_warp: 40,
+                alu_per_load: 6,
+                lines_per_load: 2,
+                narrow_fraction: 0.2,
+                shared_lines: 96,
+                shared_fraction: 0.08,
+                shared_pattern: Pattern::Sequential,
+                private_lines: 1152,
+                private_pattern: Pattern::Sequential,
+                write_fraction: 0.12,
+            },
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuConfig, L1ArchKind};
+    use crate::trace::signature::{exact_locality, sample_core_traces};
+
+    #[test]
+    fn registry_has_all_ten_apps() {
+        let apps = all_apps();
+        assert_eq!(apps.len(), 10);
+        for name in all_app_names() {
+            assert!(app(name).is_some(), "missing app {name}");
+        }
+        assert!(app("nonexistent").is_none());
+    }
+
+    #[test]
+    fn classes_match_paper_split() {
+        for name in HIGH_LOCALITY_APPS {
+            assert_eq!(app(name).unwrap().class, LocalityClass::High, "{name}");
+        }
+        for name in LOW_LOCALITY_APPS {
+            assert_eq!(app(name).unwrap().class, LocalityClass::Low, "{name}");
+        }
+    }
+
+    #[test]
+    fn kernel_counts_support_fig9() {
+        assert!(app("SN").unwrap().kernels.len() >= 8, "SN is a deep net");
+        assert_eq!(app("sradv1").unwrap().kernels.len(), 16);
+        assert!(app("conv3d").unwrap().kernels.len() >= 4);
+        assert!(app("HS3D").unwrap().kernels.len() >= 4);
+    }
+
+    #[test]
+    fn measured_locality_respects_classes() {
+        // The generated traces must actually separate the two classes —
+        // this is the property the whole evaluation hangs on.
+        let cfg = GpuConfig::paper(L1ArchKind::Private);
+        let mut high_scores = vec![];
+        let mut low_scores = vec![];
+        for a in all_apps() {
+            // Full paper scale: scaled-down variants shrink footprints and
+            // distort the set-intersection metric.
+            let wl = a.workload(&cfg);
+            let traces = sample_core_traces(&wl, cfg.cores, 16_384);
+            let (score, _) = exact_locality(&traces);
+            match a.class {
+                LocalityClass::High => high_scores.push((a.name, score)),
+                LocalityClass::Low => low_scores.push((a.name, score)),
+            }
+        }
+        let min_high = high_scores
+            .iter()
+            .cloned()
+            .fold(("", f64::MAX), |m, x| if x.1 < m.1 { x } else { m });
+        let max_low = low_scores
+            .iter()
+            .cloned()
+            .fold(("", f64::MIN), |m, x| if x.1 > m.1 { x } else { m });
+        assert!(
+            min_high.1 > max_low.1,
+            "locality classes must separate: weakest high {min_high:?} vs strongest low {max_low:?}"
+        );
+    }
+
+    #[test]
+    fn srad_reduction_kernels_are_convergent() {
+        let a = app("sradv1").unwrap();
+        for (i, k) in a.kernels.iter().enumerate() {
+            if i == 4 || i == 9 || i == 14 {
+                assert!(k.shared_lines < 64, "k{i} must converge on a tiny region");
+                assert!(k.shared_fraction > 0.3);
+            }
+        }
+    }
+}

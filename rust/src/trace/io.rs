@@ -1,0 +1,262 @@
+//! Workload (de)serialization: save generated workloads and replay
+//! external traces through the simulator.
+//!
+//! The JSON schema is compact and stable:
+//!
+//! ```json
+//! {
+//!   "name": "b+tree",
+//!   "kernels": [{
+//!     "name": "findK",
+//!     "programs": [              // one entry per core
+//!       [                        // one entry per warp
+//!         {"a": 4},              // 4 ALU issue slots
+//!         {"l": [[12, 15]]},     // load: line 12, sector mask 0b1111
+//!         {"s": [[40, 3]]}       // store: line 40, sectors 0b0011
+//!       ]
+//!     ]
+//!   }]
+//! }
+//! ```
+//!
+//! This is also the interchange point for users who want to drive the
+//! simulator from real GPU traces (e.g. converted GPGPU-Sim/Accel-Sim
+//! memory traces): produce this JSON and `ata-sim run --trace file`.
+
+use crate::core::{WarpInst, WarpProgram};
+use crate::engine::{KernelSpec, Workload};
+use crate::util::json::{Json, JsonError};
+
+#[derive(Debug, thiserror::Error)]
+pub enum TraceIoError {
+    #[error("json: {0}")]
+    Json(#[from] JsonError),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("schema: {0}")]
+    Schema(String),
+}
+
+fn inst_to_json(inst: &WarpInst) -> Json {
+    let reqs = |v: &Vec<(u64, u8)>| {
+        Json::Arr(
+            v.iter()
+                .map(|&(line, sectors)| {
+                    Json::Arr(vec![Json::Num(line as f64), Json::Num(sectors as f64)])
+                })
+                .collect(),
+        )
+    };
+    match inst {
+        WarpInst::Alu(n) => Json::obj(vec![("a", (*n as u64).into())]),
+        WarpInst::Load(v) => Json::obj(vec![("l", reqs(v))]),
+        WarpInst::Store(v) => Json::obj(vec![("s", reqs(v))]),
+    }
+}
+
+fn inst_from_json(j: &Json) -> Result<WarpInst, TraceIoError> {
+    let bad = |m: &str| TraceIoError::Schema(m.to_string());
+    if let Some(n) = j.get("a") {
+        let n = n.as_u64().ok_or_else(|| bad("'a' must be an integer"))?;
+        return Ok(WarpInst::Alu(n.min(u16::MAX as u64) as u16));
+    }
+    let parse_reqs = |arr: &Json| -> Result<Vec<(u64, u8)>, TraceIoError> {
+        arr.as_arr()
+            .ok_or_else(|| bad("requests must be an array"))?
+            .iter()
+            .map(|pair| {
+                let p = pair.as_arr().filter(|p| p.len() == 2).ok_or_else(|| {
+                    bad("request must be [line, sectors]")
+                })?;
+                let line = p[0].as_u64().ok_or_else(|| bad("line must be u64"))?;
+                let sectors =
+                    p[1].as_u64().filter(|&s| s > 0 && s < 256).ok_or_else(|| {
+                        bad("sectors must be 1..=255")
+                    })? as u8;
+                Ok((line, sectors))
+            })
+            .collect()
+    };
+    if let Some(l) = j.get("l") {
+        let reqs = parse_reqs(l)?;
+        if reqs.is_empty() {
+            return Err(bad("load must carry at least one request"));
+        }
+        return Ok(WarpInst::Load(reqs));
+    }
+    if let Some(s) = j.get("s") {
+        return Ok(WarpInst::Store(parse_reqs(s)?));
+    }
+    Err(bad("instruction must be one of {a, l, s}"))
+}
+
+pub fn workload_to_json(wl: &Workload) -> Json {
+    Json::obj(vec![
+        ("name", wl.name.as_str().into()),
+        (
+            "kernels",
+            Json::Arr(
+                wl.kernels
+                    .iter()
+                    .map(|k| {
+                        Json::obj(vec![
+                            ("name", k.name.as_str().into()),
+                            (
+                                "programs",
+                                Json::Arr(
+                                    k.programs
+                                        .iter()
+                                        .map(|core| {
+                                            Json::Arr(
+                                                core.iter()
+                                                    .map(|p| {
+                                                        Json::Arr(
+                                                            p.insts()
+                                                                .iter()
+                                                                .map(inst_to_json)
+                                                                .collect(),
+                                                        )
+                                                    })
+                                                    .collect(),
+                                            )
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+pub fn workload_from_json(j: &Json) -> Result<Workload, TraceIoError> {
+    let bad = |m: &str| TraceIoError::Schema(m.to_string());
+    let name = j
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| bad("missing workload name"))?
+        .to_string();
+    let mut kernels = Vec::new();
+    for kj in j
+        .get("kernels")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| bad("missing kernels array"))?
+    {
+        let kname = kj
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| bad("missing kernel name"))?
+            .to_string();
+        let mut programs = Vec::new();
+        for core in kj
+            .get("programs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| bad("missing programs array"))?
+        {
+            let mut warps = Vec::new();
+            for warp in core.as_arr().ok_or_else(|| bad("core entry must be array"))? {
+                let insts: Result<Vec<WarpInst>, _> = warp
+                    .as_arr()
+                    .ok_or_else(|| bad("warp entry must be array"))?
+                    .iter()
+                    .map(inst_from_json)
+                    .collect();
+                warps.push(WarpProgram::new(insts?));
+            }
+            programs.push(warps);
+        }
+        kernels.push(KernelSpec {
+            name: kname,
+            programs,
+        });
+    }
+    Ok(Workload { name, kernels })
+}
+
+pub fn save(wl: &Workload, path: &str) -> Result<(), TraceIoError> {
+    std::fs::write(path, workload_to_json(wl).to_string())?;
+    Ok(())
+}
+
+pub fn load(path: &str) -> Result<Workload, TraceIoError> {
+    let text = std::fs::read_to_string(path)?;
+    workload_from_json(&Json::parse(&text)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuConfig, L1ArchKind};
+    use crate::trace::synth;
+
+    #[test]
+    fn roundtrip_preserves_generated_workload() {
+        let cfg = GpuConfig::tiny(L1ArchKind::Private);
+        let wl = synth::locality_knob(0.6, 0.25).workload(&cfg);
+        let j = workload_to_json(&wl);
+        let back = workload_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(wl.name, back.name);
+        assert_eq!(wl.kernels.len(), back.kernels.len());
+        for (a, b) in wl.kernels.iter().zip(&back.kernels) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.programs, b.programs);
+        }
+    }
+
+    #[test]
+    fn file_roundtrip_and_replay_determinism() {
+        use crate::engine::run_workload;
+        let cfg = GpuConfig::tiny(L1ArchKind::Ata);
+        let wl = synth::locality_knob(0.7, 0.25).workload(&cfg);
+        let path = std::env::temp_dir().join("ata_trace_test.json");
+        let path = path.to_str().unwrap();
+        save(&wl, path).unwrap();
+        let loaded = load(path).unwrap();
+        std::fs::remove_file(path).ok();
+        // Replaying the serialized workload must give identical results.
+        let a = run_workload(&cfg, &wl);
+        let b = run_workload(&cfg, &loaded);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.insts, b.insts);
+    }
+
+    #[test]
+    fn schema_errors_are_reported() {
+        let bad = |text: &str| {
+            workload_from_json(&Json::parse(text).unwrap())
+                .expect_err("must reject malformed trace")
+        };
+        bad(r#"{"kernels": []}"#); // missing name
+        bad(r#"{"name": "x"}"#); // missing kernels
+        bad(r#"{"name":"x","kernels":[{"name":"k","programs":[[[{"z":1}]]]}]}"#);
+        bad(r#"{"name":"x","kernels":[{"name":"k","programs":[[[{"l":[]}]]]}]}"#);
+        bad(r#"{"name":"x","kernels":[{"name":"k","programs":[[[{"l":[[5,0]]}]]]}]}"#);
+    }
+
+    #[test]
+    fn hand_written_trace_runs() {
+        let text = r#"{
+          "name": "hand",
+          "kernels": [{
+            "name": "k0",
+            "programs": [
+              [[{"a": 2}, {"l": [[100, 15], [101, 15]]}, {"s": [[100, 3]]}]],
+              [[{"l": [[100, 15]]}]],
+              [[{"a": 1}]],
+              [[{"a": 1}]],
+              [[{"a": 1}]],
+              [[{"a": 1}]],
+              [[{"a": 1}]],
+              [[{"a": 1}]]
+            ]
+          }]
+        }"#;
+        let wl = workload_from_json(&Json::parse(text).unwrap()).unwrap();
+        let cfg = GpuConfig::tiny(L1ArchKind::Ata);
+        let r = crate::engine::run_workload(&cfg, &wl);
+        assert!(r.insts >= 10);
+        assert!(r.l1.accesses == 4);
+    }
+}

@@ -1,0 +1,424 @@
+//! Workload models.
+//!
+//! The paper evaluates ten applications from Rodinia 3.1, Tango and
+//! Polybench on GPGPU-Sim.  Those CUDA binaries and the simulator's
+//! front-end are not available here, so this module generates
+//! *statistical access-pattern models*: per-warp instruction streams
+//! whose inter-core replication, footprint, reuse skew, stride pattern,
+//! coalescing and intensity are set per application to match the paper's
+//! classification (high vs low inter-core locality, §IV) and per-kernel
+//! diversity (§IV-B).  DESIGN.md §5 documents the substitution.
+
+pub mod apps;
+pub mod io;
+pub mod signature;
+pub mod synth;
+
+use crate::config::GpuConfig;
+use crate::core::{WarpInst, WarpProgram};
+use crate::engine::{KernelSpec, Workload};
+use crate::mem::{LineAddr, SectorMask};
+use crate::util::rng::{Pcg32, SplitMix64, Zipf};
+
+/// Spatial/temporal pattern of a region's accesses.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Pattern {
+    /// Warp walks the region sequentially (streaming: stencil rows,
+    /// matrix tiles). High row-buffer + sector locality.
+    Sequential,
+    /// Fixed stride in lines (column walks, plane hops).
+    Strided(u32),
+    /// Zipf-skewed reuse with the given exponent (pointer chasing over a
+    /// hot index, shared filter weights).
+    Zipf(f64),
+}
+
+/// One kernel's statistical model.
+#[derive(Debug, Clone)]
+pub struct KernelModel {
+    pub name: &'static str,
+    /// Warps launched per core.
+    pub warps_per_core: usize,
+    /// Load instructions per warp.
+    pub loads_per_warp: usize,
+    /// Mean ALU instructions between loads (compute intensity).
+    pub alu_per_load: u16,
+    /// Cache lines per coalesced load (1 = fully coalesced, 4 = scattered).
+    pub lines_per_load: u32,
+    /// Fraction of accesses that touch only one 32 B sector (vs the full
+    /// 128 B line).
+    pub narrow_fraction: f64,
+    /// Size of the region shared by all cores (lines).
+    pub shared_lines: u32,
+    /// Probability a load targets the shared region.
+    pub shared_fraction: f64,
+    pub shared_pattern: Pattern,
+    /// Size of each core's private region (lines).
+    pub private_lines: u32,
+    pub private_pattern: Pattern,
+    /// Fraction of memory instructions that are stores.
+    pub write_fraction: f64,
+}
+
+impl Default for KernelModel {
+    fn default() -> Self {
+        KernelModel {
+            name: "kernel",
+            warps_per_core: 16,
+            loads_per_warp: 32,
+            alu_per_load: 4,
+            lines_per_load: 2,
+            narrow_fraction: 0.25,
+            shared_lines: 1024,
+            shared_fraction: 0.5,
+            shared_pattern: Pattern::Zipf(0.8),
+            private_lines: 512,
+            private_pattern: Pattern::Sequential,
+            write_fraction: 0.1,
+        }
+    }
+}
+
+/// Locality class per the paper's §IV classification.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LocalityClass {
+    High,
+    Low,
+}
+
+/// A full application model.
+#[derive(Debug, Clone)]
+pub struct AppModel {
+    pub name: &'static str,
+    pub suite: &'static str,
+    pub class: LocalityClass,
+    pub kernels: Vec<KernelModel>,
+    /// What the real application does and why the knobs are set this way.
+    pub notes: &'static str,
+}
+
+/// Region bases: all cores share [SHARED_BASE, ...); each core's private
+/// region starts at PRIVATE_STRIDE * (core+1) so regions never collide.
+pub const SHARED_BASE: LineAddr = 0;
+pub const PRIVATE_STRIDE: LineAddr = 1 << 24;
+
+/// Stateful per-warp address cursor.
+struct RegionCursor {
+    base: LineAddr,
+    size: u32,
+    pattern: Pattern,
+    cursor: u32,
+    zipf: Option<Zipf>,
+}
+
+impl RegionCursor {
+    fn new(base: LineAddr, size: u32, pattern: Pattern, start: u32) -> Self {
+        let zipf = match pattern {
+            Pattern::Zipf(e) => Some(Zipf::new(size.max(1), e)),
+            _ => None,
+        };
+        RegionCursor {
+            base,
+            size: size.max(1),
+            pattern,
+            cursor: start,
+            zipf,
+        }
+    }
+
+    fn next(&mut self, rng: &mut Pcg32) -> LineAddr {
+        let off = match self.pattern {
+            Pattern::Sequential => {
+                let o = self.cursor % self.size;
+                self.cursor = self.cursor.wrapping_add(1);
+                o
+            }
+            Pattern::Strided(s) => {
+                let o = self.cursor % self.size;
+                self.cursor = self.cursor.wrapping_add(s.max(1));
+                o
+            }
+            Pattern::Zipf(_) => self.zipf.as_ref().unwrap().sample(rng),
+        };
+        self.base + off as LineAddr
+    }
+}
+
+impl KernelModel {
+    /// Generate this kernel's per-core warp programs.
+    ///
+    /// Determinism: the stream is a pure function of (cfg.seed, app_salt,
+    /// kernel_idx, core, warp).
+    pub fn build(&self, cfg: &GpuConfig, app_salt: u64, kernel_idx: usize) -> KernelSpec {
+        let warps = self.warps_per_core.min(cfg.max_warps_per_core);
+        let programs = (0..cfg.cores)
+            .map(|core| {
+                (0..warps)
+                    .map(|warp| self.build_warp(cfg, app_salt, kernel_idx, core, warp))
+                    .collect()
+            })
+            .collect();
+        KernelSpec {
+            name: self.name.to_string(),
+            programs,
+        }
+    }
+
+    fn build_warp(
+        &self,
+        cfg: &GpuConfig,
+        app_salt: u64,
+        kernel_idx: usize,
+        core: usize,
+        warp: usize,
+    ) -> WarpProgram {
+        let mut mix = SplitMix64::new(
+            cfg.seed
+                ^ app_salt
+                ^ ((kernel_idx as u64) << 48)
+                ^ ((core as u64) << 32)
+                ^ ((warp as u64) << 16),
+        );
+        let mut rng = Pcg32::new(mix.next_u64(), mix.next_u64());
+
+        // Warps start at spread-out offsets so sequential warps cover the
+        // region cooperatively (CUDA blocks striping over the data).
+        let shared_start =
+            (warp as u32).wrapping_mul(self.shared_lines / self.warps_per_core.max(1) as u32);
+        let private_start =
+            (warp as u32).wrapping_mul(self.private_lines / self.warps_per_core.max(1) as u32);
+        let mut shared = RegionCursor::new(
+            SHARED_BASE,
+            self.shared_lines,
+            self.shared_pattern,
+            shared_start,
+        );
+        let mut private = RegionCursor::new(
+            PRIVATE_STRIDE * (core as LineAddr + 1),
+            self.private_lines,
+            self.private_pattern,
+            private_start,
+        );
+
+        let mut insts = Vec::with_capacity(self.loads_per_warp * 2);
+        for _ in 0..self.loads_per_warp {
+            if self.alu_per_load > 0 {
+                let gap = rng.geometric(1.0 / (self.alu_per_load as f64 + 1.0), 64) as u16;
+                if gap > 0 {
+                    insts.push(WarpInst::Alu(gap));
+                }
+            }
+            let mut reqs: Vec<(LineAddr, SectorMask)> =
+                Vec::with_capacity(self.lines_per_load as usize);
+            for _ in 0..self.lines_per_load.max(1) {
+                let use_shared = rng.chance(self.shared_fraction) && self.shared_lines > 0;
+                let line = if use_shared {
+                    shared.next(&mut rng)
+                } else {
+                    private.next(&mut rng)
+                };
+                let sectors: SectorMask = if rng.chance(self.narrow_fraction) {
+                    1 << rng.next_below(4)
+                } else {
+                    0b1111
+                };
+                if let Some(r) = reqs.iter_mut().find(|(l, _)| *l == line) {
+                    r.1 |= sectors; // coalesce duplicate lines
+                } else {
+                    reqs.push((line, sectors));
+                }
+            }
+            if rng.chance(self.write_fraction) {
+                insts.push(WarpInst::Store(reqs));
+            } else {
+                insts.push(WarpInst::Load(reqs));
+            }
+        }
+        WarpProgram::new(insts)
+    }
+}
+
+impl AppModel {
+    /// Build the multi-kernel workload for this app on `cfg`.
+    pub fn workload(&self, cfg: &GpuConfig) -> Workload {
+        let salt = self.name.bytes().fold(0xCBF2_9CE4_8422_2325u64, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x1000_0000_01B3)
+        });
+        Workload {
+            name: self.name.to_string(),
+            kernels: self
+                .kernels
+                .iter()
+                .enumerate()
+                .map(|(i, k)| k.build(cfg, salt, i))
+                .collect(),
+        }
+    }
+
+    /// Scale intensity (warps × loads) by `factor` for quick test runs.
+    pub fn scaled(&self, factor: f64) -> AppModel {
+        let mut out = self.clone();
+        for k in &mut out.kernels {
+            k.warps_per_core = ((k.warps_per_core as f64 * factor).round() as usize).max(1);
+            k.loads_per_warp = ((k.loads_per_warp as f64 * factor).round() as usize).max(2);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::L1ArchKind;
+    use crate::trace::signature::{exact_locality, sample_core_traces};
+
+    fn cfg() -> GpuConfig {
+        GpuConfig::tiny(L1ArchKind::Private)
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let m = KernelModel::default();
+        let a = m.build(&cfg(), 1, 0);
+        let b = m.build(&cfg(), 1, 0);
+        assert_eq!(a.programs, b.programs);
+        let c = m.build(&cfg(), 2, 0);
+        assert_ne!(a.programs, c.programs, "different app salt differs");
+    }
+
+    #[test]
+    fn shared_fraction_controls_intercore_locality() {
+        let mk = |sf: f64| KernelModel {
+            shared_fraction: sf,
+            shared_lines: 256,
+            private_lines: 256,
+            ..Default::default()
+        };
+        let cfg = cfg();
+        let hi = AppModel {
+            name: "hi",
+            suite: "synthetic",
+            class: LocalityClass::High,
+            kernels: vec![mk(0.9)],
+            notes: "",
+        };
+        let lo = AppModel {
+            name: "lo",
+            suite: "synthetic",
+            class: LocalityClass::Low,
+            kernels: vec![mk(0.0)],
+            notes: "",
+        };
+        let t_hi = sample_core_traces(&hi.workload(&cfg), cfg.cores, 4096);
+        let t_lo = sample_core_traces(&lo.workload(&cfg), cfg.cores, 4096);
+        let (s_hi, r_hi) = exact_locality(&t_hi);
+        let (s_lo, r_lo) = exact_locality(&t_lo);
+        assert!(s_hi > 0.3, "high sharing score {s_hi}");
+        assert!(s_lo < 0.05, "low sharing score {s_lo}");
+        assert!(r_hi > r_lo, "replication {r_hi} vs {r_lo}");
+    }
+
+    #[test]
+    fn private_regions_never_collide_across_cores() {
+        let m = KernelModel {
+            shared_fraction: 0.0,
+            ..Default::default()
+        };
+        let spec = m.build(&cfg(), 7, 0);
+        let traces = sample_core_traces(
+            &Workload {
+                name: "x".into(),
+                kernels: vec![spec],
+            },
+            cfg().cores,
+            100_000,
+        );
+        use std::collections::HashSet;
+        let mut all: HashSet<u64> = HashSet::new();
+        for t in &traces {
+            for &l in t {
+                assert!(all.insert(l), "line {l} appears in two cores' private regions");
+            }
+        }
+    }
+
+    #[test]
+    fn patterns_produce_expected_shapes() {
+        let mut rng = Pcg32::new(1, 1);
+        let mut seq = RegionCursor::new(100, 8, Pattern::Sequential, 0);
+        let lines: Vec<u64> = (0..10).map(|_| seq.next(&mut rng)).collect();
+        assert_eq!(lines[..8], [100, 101, 102, 103, 104, 105, 106, 107]);
+        assert_eq!(lines[8], 100, "wraps");
+
+        let mut strided = RegionCursor::new(0, 100, Pattern::Strided(10), 0);
+        let s: Vec<u64> = (0..3).map(|_| strided.next(&mut rng)).collect();
+        assert_eq!(s, [0, 10, 20]);
+
+        let mut z = RegionCursor::new(0, 1000, Pattern::Zipf(1.0), 0);
+        let mut head = 0;
+        for _ in 0..1000 {
+            if z.next(&mut rng) < 10 {
+                head += 1;
+            }
+        }
+        assert!(head > 250, "zipf cursor skews to the head: {head}");
+    }
+
+    #[test]
+    fn write_fraction_generates_stores() {
+        let m = KernelModel {
+            write_fraction: 0.5,
+            ..Default::default()
+        };
+        let spec = m.build(&cfg(), 3, 0);
+        let (mut loads, mut stores) = (0, 0);
+        for p in spec.programs.iter().flatten() {
+            for i in p.insts() {
+                match i {
+                    WarpInst::Load(_) => loads += 1,
+                    WarpInst::Store(_) => stores += 1,
+                    _ => {}
+                }
+            }
+        }
+        let frac = stores as f64 / (loads + stores) as f64;
+        assert!((0.4..0.6).contains(&frac), "store fraction {frac}");
+    }
+
+    #[test]
+    fn scaled_reduces_work() {
+        let app = AppModel {
+            name: "x",
+            suite: "s",
+            class: LocalityClass::High,
+            kernels: vec![KernelModel::default()],
+            notes: "",
+        };
+        let small = app.scaled(0.25);
+        assert_eq!(small.kernels[0].warps_per_core, 4);
+        assert_eq!(small.kernels[0].loads_per_warp, 8);
+        let wl = small.workload(&cfg());
+        assert!(wl.total_requests() < app.workload(&cfg()).total_requests());
+    }
+
+    #[test]
+    fn coalescing_merges_duplicate_lines() {
+        // With one shared hot line, duplicate lines in one load must merge.
+        let m = KernelModel {
+            shared_lines: 1,
+            shared_fraction: 1.0,
+            lines_per_load: 4,
+            narrow_fraction: 0.0,
+            ..Default::default()
+        };
+        let spec = m.build(&cfg(), 9, 0);
+        for p in spec.programs.iter().flatten() {
+            for i in p.insts() {
+                if let WarpInst::Load(reqs) | WarpInst::Store(reqs) = i {
+                    assert_eq!(reqs.len(), 1, "all 4 lines coalesce into one");
+                    assert_eq!(reqs[0].0, SHARED_BASE);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! Tiny CLI argument parser (the offline crate set has no `clap`).
+//!
+//! Grammar: `prog <subcommand> [--flag] [--key value] [--key=value] [pos..]`.
+//! Typed getters parse on demand and collect errors with helpful messages.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("option --{0} expects a value")]
+    MissingValue(String),
+    #[error("option --{0}: cannot parse '{1}' as {2}")]
+    BadValue(String, String, &'static str),
+    #[error("unknown option --{0}")]
+    Unknown(String),
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` when the next token isn't an option,
+                    // otherwise a bare flag.
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.options.insert(rest.to_string(), v);
+                        }
+                        _ => out.flags.push(rest.to_string()),
+                    }
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args, CliError> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::BadValue(name.into(), v.into(), "usize")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::BadValue(name.into(), v.into(), "u64")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::BadValue(name.into(), v.into(), "f64")),
+        }
+    }
+
+    /// Comma-separated list option, e.g. `--apps b+tree,cfd`.
+    pub fn get_list(&self, name: &str) -> Vec<String> {
+        self.get(name)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = parse(&["run", "b+tree", "cfd"]);
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["b+tree", "cfd"]);
+    }
+
+    #[test]
+    fn key_value_both_syntaxes() {
+        let a = parse(&["run", "--arch", "ata", "--cores=30"]);
+        assert_eq!(a.get("arch"), Some("ata"));
+        assert_eq!(a.get_usize("cores", 0).unwrap(), 30);
+    }
+
+    #[test]
+    fn bare_flags() {
+        let a = parse(&["run", "--verbose", "--arch", "ata", "--json"]);
+        assert!(a.flag("verbose"));
+        assert!(a.flag("json"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.get("arch"), Some("ata"));
+    }
+
+    #[test]
+    fn flag_followed_by_option_not_swallowed() {
+        let a = parse(&["--dry-run", "--out=x.json"]);
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.get("out"), Some("x.json"));
+    }
+
+    #[test]
+    fn typed_getters_and_defaults() {
+        let a = parse(&["x", "--f", "1.5"]);
+        assert_eq!(a.get_f64("f", 0.0).unwrap(), 1.5);
+        assert_eq!(a.get_f64("g", 2.5).unwrap(), 2.5);
+        assert_eq!(a.get_u64("seed", 42).unwrap(), 42);
+    }
+
+    #[test]
+    fn bad_value_errors() {
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse(&["x", "--apps", "b+tree, cfd ,SN"]);
+        assert_eq!(a.get_list("apps"), vec!["b+tree", "cfd", "SN"]);
+        assert!(a.get_list("none").is_empty());
+    }
+}

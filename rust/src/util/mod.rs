@@ -1,0 +1,11 @@
+//! Self-contained substrates: RNG, JSON, CLI parsing, text tables.
+//!
+//! The build environment resolves crates offline from a fixed vendor set
+//! (no `rand`/`serde`/`clap`), so these are first-class modules with their
+//! own tests rather than dependencies.
+
+pub mod cli;
+pub mod fxhash;
+pub mod json;
+pub mod rng;
+pub mod table;

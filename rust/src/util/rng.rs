@@ -1,0 +1,349 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline crate set has no `rand`, so the simulator carries its own
+//! small, well-known generators: SplitMix64 for seeding / one-shot mixing
+//! and PCG32 (XSH-RR 64/32) for streams.  Every simulator component takes
+//! an explicit seed so whole experiments replay bit-identically — the
+//! integration tests assert this.
+
+/// SplitMix64: fast 64-bit mixer, used for seed derivation.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG32 (XSH-RR 64/32): the simulator's workhorse stream generator.
+///
+/// `stream` selects one of 2^63 distinct sequences, letting each core /
+/// warp / component own an independent stream derived from one root seed.
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6_364_136_223_846_793_005;
+
+impl Pcg32 {
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Self {
+            state: 0,
+            inc: (stream << 1) | 1,
+        };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive a child generator; used to fan a root seed out to components.
+    pub fn split(&mut self, salt: u64) -> Pcg32 {
+        let mut mix = SplitMix64::new(self.next_u64() ^ salt);
+        Pcg32::new(mix.next_u64(), mix.next_u64())
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, bound)` without modulo bias (Lemire reduction).
+    #[inline]
+    pub fn next_below(&mut self, bound: u32) -> u32 {
+        debug_assert!(bound > 0);
+        let mut x = self.next_u32();
+        let mut m = (x as u64) * (bound as u64);
+        let mut l = m as u32;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u32();
+                m = (x as u64) * (bound as u64);
+                l = m as u32;
+            }
+        }
+        (m >> 32) as u32
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: u32, hi: u32) -> u32 {
+        debug_assert!(lo < hi);
+        lo + self.next_below(hi - lo)
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Bernoulli draw.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u32 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample an index from unnormalized weights.
+    pub fn weighted_index(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        debug_assert!(total > 0.0);
+        let mut x = self.next_f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            if x < *w {
+                return i;
+            }
+            x -= w;
+        }
+        weights.len() - 1
+    }
+
+    /// Geometric-ish gap: number of failures before a success with prob `p`,
+    /// capped to keep pathological draws bounded.
+    pub fn geometric(&mut self, p: f64, cap: u32) -> u32 {
+        if p >= 1.0 {
+            return 0;
+        }
+        let p = p.max(1e-9);
+        let u = self.next_f64().max(1e-300);
+        let g = (u.ln() / (1.0 - p).ln()).floor();
+        (g as u32).min(cap)
+    }
+}
+
+/// A Zipf sampler over `n` items (power-law reuse, used by workload models
+/// for hot-line distributions).  Rejection-inversion sampling (Hörmann &
+/// Derflinger) over the continuous Zipf density.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    n: u32,
+    exponent: f64,
+    h_integral_x1: f64,
+    h_integral_n: f64,
+    s: f64,
+}
+
+impl Zipf {
+    pub fn new(n: u32, exponent: f64) -> Self {
+        assert!(n > 0);
+        let h_integral_x1 = Self::h_integral(1.5, exponent) - 1.0;
+        let h_integral_n = Self::h_integral(n as f64 + 0.5, exponent);
+        let s = 2.0
+            - Self::h_integral_inv(
+                Self::h_integral(2.5, exponent) - Self::h(2.0, exponent),
+                exponent,
+            );
+        Self {
+            n,
+            exponent,
+            h_integral_x1,
+            h_integral_n,
+            s,
+        }
+    }
+
+    fn h_integral(x: f64, e: f64) -> f64 {
+        let log_x = x.ln();
+        helper2((1.0 - e) * log_x) * log_x
+    }
+
+    fn h(x: f64, e: f64) -> f64 {
+        (-e * x.ln()).exp()
+    }
+
+    fn h_integral_inv(x: f64, e: f64) -> f64 {
+        let mut t = x * (1.0 - e);
+        if t < -1.0 {
+            t = -1.0;
+        }
+        (helper1(t) * x).exp()
+    }
+
+    /// Draw a 0-based rank (0 is the hottest item).
+    pub fn sample(&self, rng: &mut Pcg32) -> u32 {
+        loop {
+            let u = self.h_integral_n
+                + rng.next_f64() * (self.h_integral_x1 - self.h_integral_n);
+            let x = Self::h_integral_inv(u, self.exponent);
+            let k64 = x.clamp(1.0, self.n as f64);
+            let k = ((k64 + 0.5) as u32).clamp(1, self.n);
+            if (k as f64 - x).abs() <= self.s
+                || u >= Self::h_integral(k as f64 + 0.5, self.exponent)
+                    - Self::h(k as f64, self.exponent)
+            {
+                return k - 1;
+            }
+        }
+    }
+}
+
+/// `log1p(x) / x`, stable near 0.
+fn helper1(x: f64) -> f64 {
+    if x.abs() > 1e-8 {
+        x.ln_1p() / x
+    } else {
+        1.0 - x * (0.5 - x * (1.0 / 3.0 - 0.25 * x))
+    }
+}
+
+/// `expm1(x) / x`, stable near 0.
+fn helper2(x: f64) -> f64 {
+    if x.abs() > 1e-8 {
+        x.exp_m1() / x
+    } else {
+        1.0 + x * 0.5 * (1.0 + x * (1.0 / 3.0) * (1.0 + 0.25 * x))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_known_sequence_is_deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn pcg_streams_differ() {
+        let mut a = Pcg32::new(1, 0);
+        let mut b = Pcg32::new(1, 1);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4, "streams should be nearly disjoint, {same} collisions");
+    }
+
+    #[test]
+    fn next_below_is_in_range_and_covers() {
+        let mut rng = Pcg32::new(7, 3);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = rng.next_below(10) as usize;
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all buckets should be hit");
+    }
+
+    #[test]
+    fn next_f64_unit_interval() {
+        let mut rng = Pcg32::new(9, 1);
+        for _ in 0..1000 {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn chance_rate_roughly_matches() {
+        let mut rng = Pcg32::new(11, 5);
+        let hits = (0..10_000).filter(|_| rng.chance(0.3)).count();
+        assert!((2700..3300).contains(&hits), "got {hits}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg32::new(13, 1);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>(), "astronomically unlikely");
+    }
+
+    #[test]
+    fn weighted_index_respects_weights() {
+        let mut rng = Pcg32::new(17, 2);
+        let w = [1.0, 0.0, 9.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..10_000 {
+            counts[rng.weighted_index(&w)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        assert!(counts[2] > counts[0] * 5);
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_in_range() {
+        let z = Zipf::new(1000, 1.0);
+        let mut rng = Pcg32::new(23, 4);
+        let mut head = 0usize;
+        for _ in 0..10_000 {
+            let k = z.sample(&mut rng);
+            assert!(k < 1000);
+            if k < 10 {
+                head += 1;
+            }
+        }
+        // Zipf(1.0, n=1000): top-10 mass ≈ H(10)/H(1000) ≈ 0.39
+        assert!(head > 2500, "zipf head mass too small: {head}");
+    }
+
+    #[test]
+    fn zipf_exponent_zero_is_uniformish() {
+        let z = Zipf::new(100, 0.01);
+        let mut rng = Pcg32::new(37, 8);
+        let mut counts = vec![0usize; 100];
+        for _ in 0..20_000 {
+            counts[z.sample(&mut rng) as usize] += 1;
+        }
+        let max = *counts.iter().max().unwrap();
+        let min = *counts.iter().min().unwrap();
+        assert!(min > 0 && max < min * 4, "min={min} max={max}");
+    }
+
+    #[test]
+    fn geometric_mean_tracks_p() {
+        let mut rng = Pcg32::new(29, 6);
+        let n = 20_000;
+        let total: u64 = (0..n).map(|_| rng.geometric(0.25, 1000) as u64).sum();
+        let mean = total as f64 / n as f64;
+        // E[failures before success] = (1-p)/p = 3.0
+        assert!((2.8..3.2).contains(&mean), "mean {mean}");
+    }
+
+    #[test]
+    fn split_children_independent() {
+        let mut root = Pcg32::new(31, 7);
+        let mut c1 = root.split(1);
+        let mut c2 = root.split(2);
+        let same = (0..64).filter(|_| c1.next_u32() == c2.next_u32()).count();
+        assert!(same < 4);
+    }
+}

@@ -1,0 +1,226 @@
+//! Text rendering for benchmark output: aligned tables and ASCII bar
+//! charts, so every `cargo bench` target prints the same rows/series the
+//! paper's tables and figures report.
+
+use std::fmt::Write as _;
+
+/// A simple column-aligned text table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str) -> Self {
+        Table {
+            title: title.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn header(mut self, cols: &[&str]) -> Self {
+        self.header = cols.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self
+            .header
+            .len()
+            .max(self.rows.iter().map(|r| r.len()).max().unwrap_or(0));
+        let mut widths = vec![0usize; ncols];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = widths[i].max(h.chars().count());
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "== {} ==", self.title);
+        }
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (i, w) in widths.iter().enumerate() {
+                let cell = cells.get(i).map(|s| s.as_str()).unwrap_or("");
+                let pad = w - cell.chars().count();
+                // Right-align numeric-looking cells, left-align text.
+                let numeric = cell
+                    .chars()
+                    .all(|c| c.is_ascii_digit() || ".-+%x×".contains(c))
+                    && !cell.is_empty();
+                if numeric {
+                    line.push_str(&" ".repeat(pad));
+                    line.push_str(cell);
+                } else {
+                    line.push_str(cell);
+                    line.push_str(&" ".repeat(pad));
+                }
+                if i + 1 < widths.len() {
+                    line.push_str("  ");
+                }
+            }
+            line
+        };
+        if !self.header.is_empty() {
+            let _ = writeln!(out, "{}", fmt_row(&self.header, &widths));
+            let total: usize = widths.iter().sum::<usize>() + 2 * (ncols - 1);
+            let _ = writeln!(out, "{}", "-".repeat(total));
+        }
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+/// Horizontal ASCII bar chart — one bar per labeled value, like a figure
+/// series.  `baseline` draws a reference column (e.g. private cache = 1.0).
+#[derive(Debug, Clone)]
+pub struct BarChart {
+    title: String,
+    bars: Vec<(String, f64)>,
+    baseline: Option<f64>,
+    width: usize,
+}
+
+impl BarChart {
+    pub fn new(title: &str) -> Self {
+        BarChart {
+            title: title.to_string(),
+            bars: Vec::new(),
+            baseline: None,
+            width: 50,
+        }
+    }
+
+    pub fn baseline(mut self, v: f64) -> Self {
+        self.baseline = Some(v);
+        self
+    }
+
+    pub fn bar(&mut self, label: &str, value: f64) -> &mut Self {
+        self.bars.push((label.to_string(), value));
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "-- {} --", self.title);
+        }
+        let max = self
+            .bars
+            .iter()
+            .map(|(_, v)| *v)
+            .fold(self.baseline.unwrap_or(0.0), f64::max)
+            .max(1e-12);
+        let lwidth = self.bars.iter().map(|(l, _)| l.chars().count()).max().unwrap_or(0);
+        for (label, value) in &self.bars {
+            let n = ((value / max) * self.width as f64).round().max(0.0) as usize;
+            let mut bar: String = "█".repeat(n.min(self.width));
+            if let Some(b) = self.baseline {
+                let bpos = ((b / max) * self.width as f64).round() as usize;
+                // Mark the baseline with '|' if it's beyond the bar tip.
+                if bpos > n && bpos <= self.width {
+                    bar.push_str(&" ".repeat(bpos - n - 1));
+                    bar.push('|');
+                }
+            }
+            let _ = writeln!(
+                out,
+                "{label:<lw$}  {value:>8.3}  {bar}",
+                lw = lwidth,
+            );
+        }
+        out
+    }
+}
+
+/// Format a ratio as a percentage delta, e.g. 1.12 -> "+12.0%".
+pub fn pct_delta(ratio: f64) -> String {
+    format!("{:+.1}%", (ratio - 1.0) * 100.0)
+}
+
+/// Geometric mean (the paper's "on average" for normalized IPC).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = xs.iter().map(|x| x.max(1e-12).ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+/// Arithmetic mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment() {
+        let mut t = Table::new("demo").header(&["app", "ipc", "norm"]);
+        t.row(vec!["b+tree".into(), "1.25".into(), "1.12".into()]);
+        t.row(vec!["cfd".into(), "0.5".into(), "1.08".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("b+tree"));
+        // numeric right-alignment: "1.25" and " 0.5" line up on the right
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 5);
+    }
+
+    #[test]
+    fn table_handles_ragged_rows() {
+        let mut t = Table::new("").header(&["a", "b"]);
+        t.row(vec!["x".into()]);
+        t.row(vec!["y".into(), "z".into(), "extra".into()]);
+        let s = t.render();
+        assert!(s.contains("extra"));
+    }
+
+    #[test]
+    fn barchart_renders_scaled_bars() {
+        let mut c = BarChart::new("ipc").baseline(1.0);
+        c.bar("private", 1.0);
+        c.bar("ata", 1.12);
+        let s = c.render();
+        assert!(s.contains("ata"));
+        let private_len = s.lines().find(|l| l.starts_with("private")).unwrap().matches('█').count();
+        let ata_len = s.lines().find(|l| l.starts_with("ata")).unwrap().matches('█').count();
+        assert!(ata_len > private_len);
+    }
+
+    #[test]
+    fn pct_delta_formats() {
+        assert_eq!(pct_delta(1.12), "+12.0%");
+        assert_eq!(pct_delta(0.9), "-10.0%");
+    }
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn mean_basic() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+    }
+}

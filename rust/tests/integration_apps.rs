@@ -1,0 +1,137 @@
+//! Application-level integration: the ten workload models through the
+//! full stack, checking the paper's figure-level shapes at reduced scale.
+
+use ata_cache::config::{GpuConfig, L1ArchKind};
+use ata_cache::coordinator::Sweep;
+use ata_cache::engine::run_workload;
+use ata_cache::trace::{apps, LocalityClass};
+use ata_cache::util::json::Json;
+
+#[test]
+fn every_app_runs_on_every_arch() {
+    for app in apps::all_apps() {
+        let small = app.scaled(0.15);
+        for arch in L1ArchKind::ALL {
+            let cfg = GpuConfig::paper(arch);
+            let r = run_workload(&cfg, &small.workload(&cfg));
+            assert!(r.cycles > 0 && r.insts > 0, "{}/{:?}", app.name, arch);
+            assert_eq!(r.kernels.len(), app.kernels.len());
+            assert!(r.l1.accesses > 0);
+        }
+    }
+}
+
+#[test]
+fn fig8_shape_holds_at_reduced_scale() {
+    // The coarse orderings of Fig 8 (cheap version of the bench).
+    let sweep = Sweep::fig8(0.25);
+    let r = sweep.run();
+
+    // ATA ≥ decoupled overall on both classes.
+    for class in [LocalityClass::High, LocalityClass::Low] {
+        let ata = r.class_geomean_ipc(L1ArchKind::Ata, class);
+        let dec = r.class_geomean_ipc(L1ArchKind::DecoupledSharing, class);
+        assert!(ata > dec, "{class:?}: ata {ata} vs decoupled {dec}");
+    }
+    // ATA never collapses below private by more than a few percent.
+    for app in apps::all_app_names() {
+        let n = r.norm_ipc(L1ArchKind::Ata, app).unwrap();
+        assert!(n > 0.93, "ATA must not lose badly on {app}: {n}");
+    }
+    // SN hurts decoupled (narrow hot weight sets); conv3d's loss shows at
+    // the bench's full scale (fig8_ipc) — intensity-dependent.
+    let n = r.norm_ipc(L1ArchKind::DecoupledSharing, "SN").unwrap();
+    assert!(n < 1.0, "decoupled should lose on SN: {n}");
+}
+
+#[test]
+fn fig10_latency_ordering_holds() {
+    let sweep = Sweep::fig8(0.25);
+    let r = sweep.run();
+    let mut dec_sum = 0.0;
+    let mut ata_sum = 0.0;
+    for app in apps::all_app_names() {
+        dec_sum += r.norm_latency(L1ArchKind::DecoupledSharing, app).unwrap();
+        ata_sum += r.norm_latency(L1ArchKind::Ata, app).unwrap();
+    }
+    let dec_avg = dec_sum / 10.0;
+    let ata_avg = ata_sum / 10.0;
+    assert!(
+        dec_avg > ata_avg,
+        "decoupled latency ({dec_avg:.2}x) must exceed ATA ({ata_avg:.2}x)"
+    );
+    assert!(dec_avg > 1.15, "decoupled adds substantial latency: {dec_avg:.2}x");
+    assert!(ata_avg < 1.5, "ATA latency stays near private: {ata_avg:.2}x");
+}
+
+#[test]
+fn hit_rates_follow_table1_column1() {
+    // Shared organizations must beat the private cache's hit rate on
+    // high-locality apps (Table I column 1).
+    let sweep = Sweep::paper(0.25);
+    let r = sweep.run();
+    for app in ["SN", "hotspot", "conv3d"] {
+        let p = r.get(L1ArchKind::Private, app).unwrap().l1.hit_rate();
+        let a = r.get(L1ArchKind::Ata, app).unwrap().l1.hit_rate();
+        assert!(a > p, "{app}: ATA hit {a:.3} must beat private {p:.3}");
+    }
+}
+
+#[test]
+fn l2_bandwidth_demand_drops_with_sharing() {
+    // Table I column 5: sharing architectures demand less L2 bandwidth on
+    // high-locality apps (misses filtered by remote hits).
+    let sweep = Sweep::paper(0.25);
+    let r = sweep.run();
+    for app in ["SN", "hotspot", "b+tree"] {
+        let p = r.get(L1ArchKind::Private, app).unwrap().noc_flits;
+        let a = r.get(L1ArchKind::Ata, app).unwrap().noc_flits;
+        assert!(
+            a < p,
+            "{app}: ATA L2 traffic {a} must undercut private {p}"
+        );
+    }
+}
+
+#[test]
+fn srad_reduction_kernels_crater_under_decoupled() {
+    let cfg_p = GpuConfig::paper(L1ArchKind::Private);
+    let cfg_d = GpuConfig::paper(L1ArchKind::DecoupledSharing);
+    // Full-ish intensity: the convergence effect is load-dependent.
+    let app = apps::app("sradv1").unwrap().scaled(0.5);
+    let base = run_workload(&cfg_p, &app.workload(&cfg_p));
+    let dec = run_workload(&cfg_d, &app.workload(&cfg_d));
+    // The three reduction kernels must be among decoupled's worst.
+    let norm: Vec<f64> = base
+        .kernels
+        .iter()
+        .zip(&dec.kernels)
+        .map(|(b, d)| d.ipc() / b.ipc().max(1e-12))
+        .collect();
+    let avg_conv: f64 = [4, 9, 14].iter().map(|&i| norm[i]).sum::<f64>() / 3.0;
+    let avg_rest: f64 = norm
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| ![4usize, 9, 14].contains(i))
+        .map(|(_, &x)| x)
+        .sum::<f64>()
+        / 13.0;
+    assert!(
+        avg_conv < avg_rest,
+        "reduction kernels (avg {avg_conv:.3}) must underperform streaming ones (avg {avg_rest:.3}) under decoupled"
+    );
+}
+
+#[test]
+fn results_json_roundtrips() {
+    let cfg = GpuConfig::paper(L1ArchKind::Ata);
+    let app = apps::app("lud").unwrap().scaled(0.15);
+    let r = run_workload(&cfg, &app.workload(&cfg));
+    let parsed = Json::parse(&r.to_json().to_string()).unwrap();
+    assert_eq!(parsed.get("app").unwrap().as_str(), Some("lud"));
+    assert_eq!(
+        parsed.get("kernels").unwrap().as_arr().unwrap().len(),
+        r.kernels.len()
+    );
+    assert!(parsed.path("l1.accesses").unwrap().as_u64().unwrap() > 0);
+}

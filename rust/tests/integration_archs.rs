@@ -1,0 +1,176 @@
+//! Cross-architecture integration tests: the paper's qualitative claims
+//! must hold end-to-end through the full engine.
+
+use ata_cache::config::{GpuConfig, L1ArchKind};
+use ata_cache::coordinator::Sweep;
+use ata_cache::engine::{run_workload, Engine};
+use ata_cache::trace::synth;
+
+fn sweep(archs: Vec<L1ArchKind>, apps: Vec<ata_cache::trace::AppModel>) -> ata_cache::coordinator::SweepResults {
+    Sweep {
+        cfg: GpuConfig::paper(L1ArchKind::Private),
+        archs,
+        apps,
+        scale: 1.0,
+        threads: 4,
+    }
+    .run()
+}
+
+#[test]
+fn ata_matches_private_when_nothing_is_shared() {
+    // §III-A: "for applications with low inter-core locality … ATA-Cache
+    // is almost equivalent to the private cache".
+    let r = sweep(
+        vec![L1ArchKind::Private, L1ArchKind::Ata],
+        vec![synth::pure_streaming().scaled(0.5)],
+    );
+    let n = r.norm_ipc(L1ArchKind::Ata, "synth[stream]").unwrap();
+    assert!(
+        (0.97..=1.05).contains(&n),
+        "zero-sharing ATA must track private: {n}"
+    );
+    let ata = r.get(L1ArchKind::Ata, "synth[stream]").unwrap();
+    assert_eq!(ata.l1.remote_hits, 0, "nothing to share");
+}
+
+#[test]
+fn ata_beats_both_baselines_at_high_sharing() {
+    let r = sweep(
+        vec![
+            L1ArchKind::Private,
+            L1ArchKind::RemoteSharing,
+            L1ArchKind::DecoupledSharing,
+            L1ArchKind::Ata,
+        ],
+        vec![synth::locality_knob(0.9, 0.5)],
+    );
+    let app = "synth[s=0.90]";
+    let ata = r.norm_ipc(L1ArchKind::Ata, app).unwrap();
+    let dec = r.norm_ipc(L1ArchKind::DecoupledSharing, app).unwrap();
+    let rem = r.norm_ipc(L1ArchKind::RemoteSharing, app).unwrap();
+    assert!(ata > 1.0, "ATA must profit from sharing: {ata}");
+    assert!(ata > dec, "ATA {ata} must beat decoupled {dec}");
+    assert!(ata > rem, "ATA {ata} must beat remote-sharing {rem}");
+}
+
+#[test]
+fn ata_exploits_sharing_monotonically() {
+    let apps: Vec<_> = [0.0, 0.5, 0.95]
+        .iter()
+        .map(|&s| synth::locality_knob(s, 0.4))
+        .collect();
+    let names: Vec<&str> = apps.iter().map(|a| a.name).collect();
+    let r = sweep(vec![L1ArchKind::Private, L1ArchKind::Ata], apps);
+    let n0 = r.norm_ipc(L1ArchKind::Ata, names[0]).unwrap();
+    let n2 = r.norm_ipc(L1ArchKind::Ata, names[2]).unwrap();
+    assert!(
+        n2 > n0 + 0.02,
+        "ATA gain must grow with sharing: {n0} -> {n2}"
+    );
+}
+
+#[test]
+fn decoupled_craters_on_convergent_hammer() {
+    let r = sweep(
+        vec![L1ArchKind::Private, L1ArchKind::DecoupledSharing, L1ArchKind::Ata],
+        vec![synth::convergent_hammer()],
+    );
+    let app = "synth[hammer]";
+    let dec = r.norm_ipc(L1ArchKind::DecoupledSharing, app).unwrap();
+    let ata = r.norm_ipc(L1ArchKind::Ata, app).unwrap();
+    assert!(
+        ata > dec,
+        "convergence is decoupled's worst case: ata {ata} vs dec {dec}"
+    );
+    let d = r.get(L1ArchKind::DecoupledSharing, app).unwrap();
+    assert!(
+        d.l1.bank_conflict_cycles + d.l1.sharing_net_cycles > 0,
+        "hammer must create serialization"
+    );
+}
+
+#[test]
+fn remote_sharing_pays_probe_critical_path() {
+    // Global misses under remote-sharing must show a longer L1 stage than
+    // under private (probe round trip before L2 dispatch).
+    let r = sweep(
+        vec![L1ArchKind::Private, L1ArchKind::RemoteSharing],
+        vec![synth::pure_streaming().scaled(0.5)],
+    );
+    let lat = r.norm_latency(L1ArchKind::RemoteSharing, "synth[stream]").unwrap();
+    assert!(lat > 1.1, "probe round trip must inflate miss path: {lat}x");
+    let rem = r.get(L1ArchKind::RemoteSharing, "synth[stream]").unwrap();
+    assert!(rem.l1.probes_sent > 0);
+}
+
+#[test]
+fn engine_is_deterministic_across_archs_and_threads() {
+    for arch in L1ArchKind::ALL {
+        let cfg = GpuConfig::paper(arch);
+        let wl = synth::locality_knob(0.6, 0.25).workload(&cfg);
+        let a = run_workload(&cfg, &wl);
+        let b = run_workload(&cfg, &wl);
+        assert_eq!(a.cycles, b.cycles, "{arch:?} must be deterministic");
+        assert_eq!(a.insts, b.insts);
+        assert_eq!(a.l1.local_hits, b.l1.local_hits);
+        assert_eq!(a.l1.remote_hits, b.l1.remote_hits);
+    }
+}
+
+#[test]
+fn replication_audit_private_vs_ata_vs_decoupled() {
+    // After a fully-shared workload: private replicates everywhere,
+    // decoupled holds exactly one copy, ATA replicates on use.
+    let mk = || synth::convergent_hammer().scaled(0.5);
+    let hot_line = 0u64; // hottest shared line lives at SHARED_BASE
+
+    let cfg = GpuConfig::paper(L1ArchKind::Private);
+    let mut eng = Engine::new(&cfg);
+    eng.run(&mk().workload(&cfg));
+    let priv_holders = (0..30).filter(|&c| eng.resident_lines(c).contains(&hot_line)).count();
+
+    let cfg = GpuConfig::paper(L1ArchKind::DecoupledSharing);
+    let mut eng = Engine::new(&cfg);
+    eng.run(&mk().workload(&cfg));
+    let dec_holders = (0..30).filter(|&c| eng.resident_lines(c).contains(&hot_line)).count();
+
+    let cfg = GpuConfig::paper(L1ArchKind::Ata);
+    let mut eng = Engine::new(&cfg);
+    eng.run(&mk().workload(&cfg));
+    let ata_holders = (0..30).filter(|&c| eng.resident_lines(c).contains(&hot_line)).count();
+
+    assert!(priv_holders >= 25, "private replicates: {priv_holders}/30");
+    assert!(dec_holders <= 3, "decoupled: one copy per cluster: {dec_holders}");
+    assert!(ata_holders >= 25, "ATA replicates on use: {ata_holders}");
+}
+
+#[test]
+fn stores_do_not_leak_across_archs() {
+    // Write-heavy workload: every arch must finish and count writes.
+    let mut app = synth::locality_knob(0.5, 0.3);
+    app.kernels[0].write_fraction = 0.5;
+    for arch in L1ArchKind::ALL {
+        let cfg = GpuConfig::paper(arch);
+        let r = run_workload(&cfg, &app.workload(&cfg));
+        assert!(r.l1.writes > 0, "{arch:?} must process writes");
+        assert!(r.cycles > 0);
+    }
+}
+
+#[test]
+fn dirty_remote_fallbacks_only_with_writeback_policy() {
+    use ata_cache::config::WritePolicy;
+    let mut app = synth::locality_knob(0.9, 0.3);
+    app.kernels[0].write_fraction = 0.3;
+
+    let mut cfg = GpuConfig::paper(L1ArchKind::Ata);
+    cfg.l1.write_policy = WritePolicy::WriteBackLocal;
+    let wb = run_workload(&cfg, &app.workload(&cfg));
+
+    cfg.l1.write_policy = WritePolicy::WriteThrough;
+    let wt = run_workload(&cfg, &app.workload(&cfg));
+
+    assert!(wb.l1.dirty_remote_fallbacks > 0, "write-back-local creates dirty remotes");
+    assert_eq!(wt.l1.dirty_remote_fallbacks, 0, "write-through never has dirty lines");
+}

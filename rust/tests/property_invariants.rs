@@ -1,0 +1,235 @@
+//! Property tests over simulator invariants, via the in-tree testkit.
+
+use ata_cache::cache::{Probe, SectoredCache, TagArray};
+use ata_cache::mem::decode;
+use ata_cache::noc::Islip;
+use ata_cache::resource::{Calendar, Server};
+use ata_cache::testkit::{check, int_range, one_of, vec_of, Gen};
+use ata_cache::util::rng::Pcg32;
+
+#[test]
+fn property_address_decode_roundtrips() {
+    let gen = vec_of(int_range(0, u32::MAX as u64), int_range(64, 128));
+    check("decode-roundtrip", 0xA11CE, 50, &gen, |lines| {
+        for &line in lines {
+            for sets in [1usize, 2, 8, 64, 512] {
+                let s = decode::set_index(line, sets);
+                let t = decode::tag(line, sets);
+                if decode::line_from(t, s, sets) != line {
+                    return Err(format!("line {line} sets {sets} failed"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_tag_array_never_stores_duplicates() {
+    // After any sequence of fills, a line appears in at most one way of
+    // one set.
+    let gen = vec_of(int_range(0, 63), int_range(50, 300));
+    check("tag-no-dups", 0xBEEF, 30, &gen, |fills| {
+        let mut ta = TagArray::new(4, 4);
+        for &line in fills {
+            ta.fill(line, 0b1111);
+        }
+        let mut resident = ta.resident_lines();
+        let before = resident.len();
+        resident.dedup();
+        if resident.len() != before {
+            return Err("duplicate resident line".into());
+        }
+        if before > 16 {
+            return Err(format!("occupancy {before} exceeds capacity"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_fill_then_peek_hits() {
+    // After fill(line, s), peek(line, s) is a full hit — under arbitrary
+    // interleavings with other fills.
+    let pair = Gen::new(|rng: &mut Pcg32| (rng.next_below(128) as u64, (rng.next_below(15) + 1) as u8));
+    let gen = vec_of(pair, int_range(20, 200));
+    check("fill-peek-hit", 0xF1A7, 40, &gen, |ops| {
+        let mut c = SectoredCache::new(8, 4, 8, 8);
+        for &(line, sectors) in ops {
+            c.fill(line, sectors);
+            match c.peek(line, sectors) {
+                Probe::Hit { .. } => {}
+                other => return Err(format!("{line}/{sectors:#b}: {other:?}")),
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_calendar_never_double_books() {
+    // Reservations with identical occupancy must never overlap.
+    let op = Gen::new(|rng: &mut Pcg32| {
+        (rng.next_below(2000) as u64, (rng.next_below(6) + 1) as u32)
+    });
+    let gen = vec_of(op, int_range(50, 400));
+    check("calendar-disjoint", 0xCA1, 30, &gen, |ops| {
+        let mut cal = Calendar::new();
+        let mut granted: Vec<(u64, u64)> = Vec::new();
+        for &(now, occ) in ops {
+            let g = cal.reserve(now, occ);
+            if g < now {
+                return Err(format!("grant {g} before request time {now}"));
+            }
+            let iv = (g, g + occ as u64);
+            for &(s, e) in &granted {
+                if iv.0 < e && s < iv.1 {
+                    return Err(format!("overlap: {iv:?} vs {:?}", (s, e)));
+                }
+            }
+            granted.push(iv);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_calendar_matches_server_on_monotone_feeds() {
+    let gen = vec_of(int_range(0, 3), int_range(20, 200));
+    check("calendar-fifo", 0x5E4, 30, &gen, |gaps| {
+        let mut cal = Calendar::new();
+        let mut srv = Server::new();
+        let mut now = 0u64;
+        for &gap in gaps {
+            now += gap;
+            let a = cal.reserve(now, 3);
+            let b = srv.reserve(now, 3);
+            if a != b {
+                return Err(format!("at {now}: calendar {a} vs server {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_islip_is_a_matching() {
+    // Every arbitration result is a valid matching: no output granted
+    // twice, no input matched twice, and matches only where requested.
+    let pattern = Gen::new(|rng: &mut Pcg32| {
+        let wants: Vec<Vec<bool>> = (0..8)
+            .map(|_| (0..6).map(|_| rng.chance(0.3)).collect())
+            .collect();
+        wants
+    });
+    let gen = vec_of(pattern, int_range(5, 30));
+    check("islip-matching", 0x151, 20, &gen, |rounds| {
+        let mut arb = Islip::new(8, 6);
+        for wants in rounds {
+            let m = arb.arbitrate(wants, 2);
+            let mut out_used = [false; 6];
+            for (i, slot) in m.iter().enumerate() {
+                if let Some(o) = slot {
+                    if !wants[i][*o] {
+                        return Err(format!("grant without request: {i}->{o}"));
+                    }
+                    if out_used[*o] {
+                        return Err(format!("output {o} double-granted"));
+                    }
+                    out_used[*o] = true;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_mshr_waiter_conservation() {
+    // Every allocated/merged request comes back exactly once on fill.
+    use ata_cache::cache::{Mshr, MshrOutcome};
+    use ata_cache::mem::{AccessKind, MemRequest};
+    let op = Gen::new(|rng: &mut Pcg32| (rng.next_below(16) as u64, rng.chance(0.3)));
+    let gen = vec_of(op, int_range(30, 150));
+    check("mshr-conservation", 0x3141, 30, &gen, |ops| {
+        let mut mshr = Mshr::new(8, 4);
+        let mut accepted = 0u64;
+        let mut returned = 0u64;
+        for (i, &(line, do_fill)) in ops.iter().enumerate() {
+            if do_fill {
+                returned += mshr.fill(line).len() as u64;
+            } else {
+                let req = MemRequest {
+                    id: i as u64,
+                    core: 0,
+                    warp: 0,
+                    inst: i as u64,
+                    line,
+                    sectors: 1,
+                    kind: AccessKind::Load,
+                    issue_cycle: 0,
+                };
+                match mshr.allocate(req) {
+                    MshrOutcome::Allocated | MshrOutcome::Merged => accepted += 1,
+                    MshrOutcome::Full => {}
+                }
+            }
+        }
+        // Drain the rest.
+        for line in 0..16u64 {
+            returned += mshr.fill(line).len() as u64;
+        }
+        if accepted != returned {
+            return Err(format!("accepted {accepted} != returned {returned}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_aggregated_probe_equals_individual_probes() {
+    use ata_cache::config::{GpuConfig, L1ArchKind};
+    use ata_cache::l1arch::ata_tag::AggregatedTagArray;
+    use ata_cache::l1arch::common::CoreL1;
+
+    let op = Gen::new(|rng: &mut Pcg32| (rng.next_below(4) as usize, rng.next_below(96) as u64));
+    let gen = vec_of(op, int_range(50, 250));
+    check("ata-union", 0xA6A, 20, &gen, |fills| {
+        let cfg = GpuConfig::tiny(L1ArchKind::Ata);
+        let mut cluster: Vec<CoreL1> = (0..4).map(|_| CoreL1::new(&cfg)).collect();
+        for &(c, line) in fills {
+            cluster[c].cache.fill(line, 0b1111);
+        }
+        for line in 0..96u64 {
+            let agg = AggregatedTagArray::probe(&cluster, 0, line, 0b1111);
+            for idx in 1..4 {
+                let hit = matches!(cluster[idx].cache.peek(line, 0b1111), Probe::Hit { .. });
+                let in_agg = agg.remote_holders.iter().any(|&(i, _)| i == idx);
+                if hit != in_agg {
+                    return Err(format!("cache {idx} line {line}: {hit} vs {in_agg}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_locality_knob_orders_scores() {
+    use ata_cache::config::{GpuConfig, L1ArchKind};
+    use ata_cache::trace::signature::{exact_locality, sample_core_traces};
+    use ata_cache::trace::synth;
+    let gen = one_of(vec![(0.1f64, 0.7f64), (0.0, 0.5), (0.2, 0.9), (0.3, 0.8)]);
+    check("knob-order", 0x10CA1, 6, &gen, |&(lo, hi)| {
+        let cfg = GpuConfig::tiny(L1ArchKind::Private);
+        let score = |s: f64| {
+            let wl = synth::locality_knob(s, 0.3).workload(&cfg);
+            exact_locality(&sample_core_traces(&wl, cfg.cores, 4096)).0
+        };
+        let (a, b) = (score(lo), score(hi));
+        if a > b {
+            return Err(format!("knob {lo}->{a:.3} vs {hi}->{b:.3} not ordered"));
+        }
+        Ok(())
+    });
+}
