@@ -296,14 +296,44 @@ impl Default for GpuConfig {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+/// Why a configuration could not be built, loaded, or validated.
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("invalid config: {0}")]
     Invalid(String),
-    #[error("json: {0}")]
-    Json(#[from] crate::util::json::JsonError),
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Json(crate::util::json::JsonError),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Invalid(m) => write!(f, "invalid config: {m}"),
+            ConfigError::Json(e) => write!(f, "json: {e}"),
+            ConfigError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ConfigError::Invalid(_) => None,
+            ConfigError::Json(e) => Some(e),
+            ConfigError::Io(e) => Some(e),
+        }
+    }
+}
+
+impl From<crate::util::json::JsonError> for ConfigError {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        ConfigError::Json(e)
+    }
+}
+
+impl From<std::io::Error> for ConfigError {
+    fn from(e: std::io::Error) -> Self {
+        ConfigError::Io(e)
+    }
 }
 
 impl GpuConfig {

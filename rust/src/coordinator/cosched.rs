@@ -1,0 +1,359 @@
+//! Co-scheduling sweep: app-pair combinations × L1 organizations, with
+//! per-app normalized IPC, slowdown vs. solo execution, and a CIAO-style
+//! interference matrix.
+//!
+//! For every unordered app pair (i ≤ j) and architecture the sweep runs
+//! one co-execution ([`crate::engine::Engine::run_multi`]) of the two
+//! apps on the two halves of the GPU, plus one *solo* baseline per app
+//! and partition position: the app alone on exactly the cores (and in
+//! exactly the address space) it occupies in the co-run, with the rest of
+//! the GPU idle.  Slowdown of app `x` co-run with `y` is then
+//! `solo_ipc(x) / co_ipc(x)` — pure interference through the shared L1
+//! organization, NoC, L2 and DRAM, with the capacity loss of
+//! partitioning already factored out.
+
+use std::sync::Mutex;
+
+use crate::config::{GpuConfig, L1ArchKind};
+use crate::core::CorePartition;
+use crate::engine::{Engine, MultiWorkload};
+use crate::stats::MultiResult;
+use crate::trace::{apps, co_workload_placed, AppModel};
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// A co-scheduling sweep specification.
+#[derive(Debug, Clone)]
+pub struct CoSchedSweep {
+    pub cfg: GpuConfig,
+    pub archs: Vec<L1ArchKind>,
+    pub apps: Vec<AppModel>,
+    /// Workload intensity multiplier (1.0 = paper scale).
+    pub scale: f64,
+    pub threads: usize,
+    /// When true, lanes keep their generated addresses so co-run
+    /// instances read-share data; default is disjoint address spaces.
+    pub share_address_space: bool,
+}
+
+/// One co-run: apps `i` and `j` (registry indices, `i <= j`) under `arch`.
+#[derive(Debug, Clone)]
+pub struct PairResult {
+    pub arch: L1ArchKind,
+    pub i: usize,
+    pub j: usize,
+    pub result: MultiResult,
+}
+
+/// One solo baseline: app `app` alone on partition position `pos`.
+#[derive(Debug, Clone)]
+pub struct SoloResult {
+    pub arch: L1ArchKind,
+    pub app: usize,
+    pub pos: usize,
+    pub result: MultiResult,
+}
+
+impl CoSchedSweep {
+    /// Default sweep: all ten paper apps, private baseline + ATA, paper
+    /// GPU split in half.
+    pub fn paper(scale: f64) -> Self {
+        CoSchedSweep {
+            cfg: GpuConfig::paper(L1ArchKind::Private),
+            archs: vec![L1ArchKind::Private, L1ArchKind::Ata],
+            apps: apps::all_apps(),
+            scale,
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            share_address_space: false,
+        }
+    }
+
+    /// The two half-GPU partitions every pair runs on.
+    pub fn partitions(&self) -> Vec<CorePartition> {
+        CorePartition::even(self.cfg.cores, 2).expect("config has at least 2 cores")
+    }
+
+    /// Build a (solo or pair) co-workload with lanes at the given
+    /// positions.  The address slot is the *position*, not the lane
+    /// index, so solo baselines replay the exact co-run address stream.
+    fn workload_at(
+        &self,
+        cfg: &GpuConfig,
+        apps: &[&AppModel],
+        parts: &[CorePartition],
+        positions: &[usize],
+    ) -> MultiWorkload {
+        let scaled: Vec<AppModel> = apps.iter().map(|a| a.scaled(self.scale)).collect();
+        co_workload_placed(cfg, &scaled, parts, positions, self.share_address_space)
+            .expect("co-sched partitions are valid by construction")
+    }
+
+    /// Run all (arch × pair) co-runs and (arch × app × position) solo
+    /// baselines, work-stealing across threads.  Results are
+    /// deterministic regardless of `threads`.
+    pub fn run(&self) -> CoSchedResults {
+        let parts = self.partitions();
+        #[derive(Clone, Copy)]
+        enum Job {
+            Solo { arch: L1ArchKind, app: usize, pos: usize },
+            Pair { arch: L1ArchKind, i: usize, j: usize },
+        }
+        let mut jobs: Vec<Job> = Vec::new();
+        for &arch in &self.archs {
+            for app in 0..self.apps.len() {
+                for pos in 0..parts.len() {
+                    jobs.push(Job::Solo { arch, app, pos });
+                }
+            }
+            for i in 0..self.apps.len() {
+                for j in i..self.apps.len() {
+                    jobs.push(Job::Pair { arch, i, j });
+                }
+            }
+        }
+        let jobs = Mutex::new(jobs);
+        let pairs = Mutex::new(Vec::new());
+        let solos = Mutex::new(Vec::new());
+        let n_threads = self.threads.max(1);
+        std::thread::scope(|s| {
+            for _ in 0..n_threads {
+                s.spawn(|| loop {
+                    let job = { jobs.lock().unwrap().pop() };
+                    let Some(job) = job else { break };
+                    match job {
+                        Job::Solo { arch, app, pos } => {
+                            let mut cfg = self.cfg.clone();
+                            cfg.l1_arch = arch;
+                            let multi =
+                                self.workload_at(&cfg, &[&self.apps[app]], &[parts[pos]], &[pos]);
+                            let result = Engine::new(&cfg).run_multi(&multi);
+                            solos.lock().unwrap().push(SoloResult { arch, app, pos, result });
+                        }
+                        Job::Pair { arch, i, j } => {
+                            let mut cfg = self.cfg.clone();
+                            cfg.l1_arch = arch;
+                            let multi = self.workload_at(
+                                &cfg,
+                                &[&self.apps[i], &self.apps[j]],
+                                &[parts[0], parts[1]],
+                                &[0, 1],
+                            );
+                            let result = Engine::new(&cfg).run_multi(&multi);
+                            pairs.lock().unwrap().push(PairResult { arch, i, j, result });
+                        }
+                    }
+                });
+            }
+        });
+        let mut pairs = pairs.into_inner().unwrap();
+        let mut solos = solos.into_inner().unwrap();
+        // Deterministic ordering regardless of thread finish order.
+        pairs.sort_by_key(|p| (p.arch.name(), p.i, p.j));
+        solos.sort_by_key(|r| (r.arch.name(), r.app, r.pos));
+        CoSchedResults {
+            app_names: self.apps.iter().map(|a| a.name.to_string()).collect(),
+            pairs,
+            solos,
+        }
+    }
+}
+
+/// Aggregated co-scheduling output with the interference lookups.
+#[derive(Debug, Clone, Default)]
+pub struct CoSchedResults {
+    pub app_names: Vec<String>,
+    pub pairs: Vec<PairResult>,
+    pub solos: Vec<SoloResult>,
+}
+
+impl CoSchedResults {
+    /// Solo baseline of app `app` (registry index) at position `pos`.
+    pub fn solo(&self, arch: L1ArchKind, app: usize, pos: usize) -> Option<&MultiResult> {
+        self.solos
+            .iter()
+            .find(|r| r.arch == arch && r.app == app && r.pos == pos)
+            .map(|r| &r.result)
+    }
+
+    /// Co-run of apps `i` and `j` (order-insensitive).
+    pub fn pair(&self, arch: L1ArchKind, i: usize, j: usize) -> Option<&PairResult> {
+        let (a, b) = if i <= j { (i, j) } else { (j, i) };
+        self.pairs
+            .iter()
+            .find(|p| p.arch == arch && p.i == a && p.j == b)
+    }
+
+    /// IPC of app `x` inside the co-run with `other`.
+    pub fn co_ipc(&self, arch: L1ArchKind, x: usize, other: usize) -> Option<f64> {
+        let p = self.pair(arch, x, other)?;
+        // Lane 0 holds the smaller index (or `x` itself for self-pairs).
+        let lane = if x <= other { 0 } else { 1 };
+        Some(p.result.apps[lane].ipc())
+    }
+
+    /// IPC of app `x` running alone on the cores it occupies in the
+    /// co-run with `other`.
+    pub fn solo_ipc(&self, arch: L1ArchKind, x: usize, other: usize) -> Option<f64> {
+        let pos = if x <= other { 0 } else { 1 };
+        Some(self.solo(arch, x, pos)?.apps[0].ipc())
+    }
+
+    /// Normalized IPC of app `x` co-run with `other` (1.0 = no
+    /// interference; this is Fig-8-style normalization, but against the
+    /// partitioned solo baseline instead of a different architecture).
+    pub fn norm_ipc(&self, arch: L1ArchKind, x: usize, other: usize) -> Option<f64> {
+        let solo = self.solo_ipc(arch, x, other)?;
+        let co = self.co_ipc(arch, x, other)?;
+        (solo > 0.0).then(|| co / solo)
+    }
+
+    /// Slowdown of app `x` when co-run with `other` (CIAO's metric;
+    /// ≥ 1.0 means interference hurt).
+    pub fn slowdown(&self, arch: L1ArchKind, x: usize, other: usize) -> Option<f64> {
+        let co = self.co_ipc(arch, x, other)?;
+        let solo = self.solo_ipc(arch, x, other)?;
+        (co > 0.0).then(|| solo / co)
+    }
+
+    /// Full interference matrix: `m[x][y]` = slowdown of app `x` when
+    /// co-run with app `y`.
+    pub fn interference_matrix(&self, arch: L1ArchKind) -> Vec<Vec<f64>> {
+        let n = self.app_names.len();
+        (0..n)
+            .map(|x| {
+                (0..n)
+                    .map(|y| self.slowdown(arch, x, y).unwrap_or(0.0))
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Render the interference matrix as a table (rows = victim app,
+    /// columns = co-runner).
+    pub fn render_matrix(&self, arch: L1ArchKind) -> String {
+        self.render_matrix_from(arch, &self.interference_matrix(arch))
+    }
+
+    /// [`render_matrix`](Self::render_matrix) with a precomputed matrix,
+    /// for callers that also need the raw values.
+    pub fn render_matrix_from(&self, arch: L1ArchKind, m: &[Vec<f64>]) -> String {
+        let mut header: Vec<&str> = vec!["slowdown of ↓ with →"];
+        header.extend(self.app_names.iter().map(String::as_str));
+        let mut t = Table::new(&format!("interference matrix — {}", arch.name()))
+            .header(&header);
+        for (x, row) in m.iter().enumerate() {
+            let mut cells = vec![self.app_names[x].clone()];
+            cells.extend(row.iter().map(|v| format!("{v:.3}")));
+            t.row(cells);
+        }
+        t.render()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "apps",
+                Json::arr(self.app_names.iter().map(|n| n.as_str().into()).collect()),
+            ),
+            (
+                "solos",
+                Json::arr(
+                    self.solos
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("arch", r.arch.name().into()),
+                                ("app", r.app.into()),
+                                ("pos", r.pos.into()),
+                                ("result", r.result.to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "pairs",
+                Json::arr(
+                    self.pairs
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("arch", p.arch.name().into()),
+                                ("i", p.i.into()),
+                                ("j", p.j.into()),
+                                ("result", p.result.to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().pretty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::synth;
+
+    fn tiny_sweep() -> CoSchedSweep {
+        CoSchedSweep {
+            cfg: GpuConfig::tiny(L1ArchKind::Private),
+            archs: vec![L1ArchKind::Private, L1ArchKind::Ata],
+            apps: vec![synth::locality_knob(0.8, 0.25), synth::pure_streaming().scaled(0.25)],
+            scale: 1.0,
+            threads: 2,
+            share_address_space: false,
+        }
+    }
+
+    #[test]
+    fn sweep_runs_all_pairs_and_solos() {
+        let r = tiny_sweep().run();
+        // 2 archs × (3 unordered pairs + 2 apps × 2 positions).
+        assert_eq!(r.pairs.len(), 6);
+        assert_eq!(r.solos.len(), 8);
+        for arch in [L1ArchKind::Private, L1ArchKind::Ata] {
+            for x in 0..2 {
+                for y in 0..2 {
+                    let s = r.slowdown(arch, x, y).unwrap();
+                    assert!(s > 0.0, "{} {x} vs {y}: {s}", arch.name());
+                    let n = r.norm_ipc(arch, x, y).unwrap();
+                    assert!((0.01..=100.0).contains(&n));
+                }
+            }
+        }
+        let m = r.interference_matrix(L1ArchKind::Ata);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[0].len(), 2);
+        assert!(r.render_matrix(L1ArchKind::Ata).contains("interference"));
+    }
+
+    #[test]
+    fn cosched_parallel_equals_serial() {
+        let mut s = tiny_sweep();
+        let a = s.run();
+        s.threads = 1;
+        let b = s.run();
+        assert_eq!(a.pairs.len(), b.pairs.len());
+        for (x, y) in a.pairs.iter().zip(&b.pairs) {
+            assert_eq!(x.result.cycles, y.result.cycles, "{}/{}", x.i, x.j);
+            assert_eq!(x.result.insts, y.result.insts);
+        }
+        for (x, y) in a.solos.iter().zip(&b.solos) {
+            assert_eq!(x.result.cycles, y.result.cycles);
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_parseable() {
+        let r = tiny_sweep().run();
+        let j = r.to_json().to_string();
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("apps").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

@@ -1,8 +1,12 @@
 //! Experiment coordinator: sweeps architectures × applications across
 //! worker threads, aggregates results, and produces the paper's tables
-//! and figures.
+//! and figures — plus the co-scheduling sweep ([`cosched`]) that measures
+//! inter-application interference under shared L1 organizations.
 
+pub mod cosched;
 pub mod landscape;
+
+pub use cosched::{CoSchedResults, CoSchedSweep};
 
 use std::sync::Mutex;
 

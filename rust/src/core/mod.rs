@@ -15,6 +15,81 @@ pub use program::{WarpInst, WarpProgram};
 use crate::config::GpuConfig;
 use crate::mem::{AccessKind, MemRequest, ReqId};
 
+/// A contiguous block of SIMT cores assigned to one co-executing
+/// application (the unit of spatial multitasking in
+/// [`crate::engine::MultiWorkload`]).
+///
+/// Partitions are expressed in *global* core ids; `local`/`global`
+/// translate between an application's core-local view (how its
+/// [`KernelSpec`](crate::engine::KernelSpec) programs are indexed) and
+/// the engine's global view (how requests are routed through the shared
+/// L1 organization).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CorePartition {
+    /// First global core id owned by this partition.
+    pub first: usize,
+    /// Number of cores in the partition.
+    pub count: usize,
+}
+
+impl CorePartition {
+    /// One past the last global core id.
+    pub fn end(&self) -> usize {
+        self.first + self.count
+    }
+
+    /// Does this partition own global core `core`?
+    pub fn contains(&self, core: usize) -> bool {
+        (self.first..self.end()).contains(&core)
+    }
+
+    /// Global core id of partition-local core `local`.
+    pub fn global(&self, local: usize) -> usize {
+        debug_assert!(local < self.count);
+        self.first + local
+    }
+
+    /// Partition-local index of global core `core`.
+    pub fn local(&self, core: usize) -> usize {
+        debug_assert!(self.contains(core));
+        core - self.first
+    }
+
+    /// Split `total` cores into consecutive disjoint partitions of the
+    /// given sizes.  Fails when a size is zero or the sizes oversubscribe
+    /// `total`; under-subscription is allowed (the tail cores stay idle).
+    pub fn split(total: usize, sizes: &[usize]) -> Result<Vec<CorePartition>, String> {
+        let mut first = 0;
+        let mut out = Vec::with_capacity(sizes.len());
+        for (i, &count) in sizes.iter().enumerate() {
+            if count == 0 {
+                return Err(format!("partition {i} has zero cores"));
+            }
+            if first + count > total {
+                return Err(format!(
+                    "partitions need {} cores but the GPU has {total}",
+                    sizes.iter().sum::<usize>()
+                ));
+            }
+            out.push(CorePartition { first, count });
+            first += count;
+        }
+        Ok(out)
+    }
+
+    /// Split `total` cores evenly into `n` partitions (remainder cores go
+    /// to the leading partitions, one each).
+    pub fn even(total: usize, n: usize) -> Result<Vec<CorePartition>, String> {
+        if n == 0 || n > total {
+            return Err(format!("cannot split {total} cores into {n} partitions"));
+        }
+        let base = total / n;
+        let extra = total % n;
+        let sizes: Vec<usize> = (0..n).map(|i| base + usize::from(i < extra)).collect();
+        CorePartition::split(total, &sizes)
+    }
+}
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum WarpState {
     /// Can issue at or after the contained cycle.
@@ -449,5 +524,29 @@ mod tests {
         c0.tick(0, &mut o0);
         c1.tick(0, &mut o1);
         assert_ne!(o0.requests[0].0.id, o1.requests[0].0.id);
+    }
+
+    #[test]
+    fn core_partition_split_and_mapping() {
+        let parts = CorePartition::split(8, &[3, 5]).unwrap();
+        assert_eq!(parts[0], CorePartition { first: 0, count: 3 });
+        assert_eq!(parts[1], CorePartition { first: 3, count: 5 });
+        assert!(parts[1].contains(3) && parts[1].contains(7) && !parts[1].contains(2));
+        assert_eq!(parts[1].global(2), 5);
+        assert_eq!(parts[1].local(5), 2);
+        assert!(CorePartition::split(8, &[4, 5]).is_err(), "oversubscribed");
+        assert!(CorePartition::split(8, &[0, 4]).is_err(), "zero-size");
+        // Under-subscription leaves tail cores idle.
+        assert_eq!(CorePartition::split(8, &[2]).unwrap()[0].count, 2);
+    }
+
+    #[test]
+    fn core_partition_even_distributes_remainder() {
+        let parts = CorePartition::even(30, 4).unwrap();
+        let sizes: Vec<usize> = parts.iter().map(|p| p.count).collect();
+        assert_eq!(sizes, vec![8, 8, 7, 7]);
+        assert_eq!(parts.last().unwrap().end(), 30);
+        assert!(CorePartition::even(4, 0).is_err());
+        assert!(CorePartition::even(2, 3).is_err());
     }
 }

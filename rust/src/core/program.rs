@@ -60,6 +60,19 @@ impl WarpProgram {
             .sum()
     }
 
+    /// Shift every referenced line address by `delta` — used to give each
+    /// co-executed application a disjoint address space (line addresses
+    /// are virtual, so a plain offset models per-process isolation).
+    pub fn offset_lines(&mut self, delta: LineAddr) {
+        for inst in &mut self.insts {
+            if let WarpInst::Load(reqs) | WarpInst::Store(reqs) = inst {
+                for (line, _) in reqs.iter_mut() {
+                    *line = line.wrapping_add(delta);
+                }
+            }
+        }
+    }
+
     /// Distinct lines the program touches (footprint).
     pub fn touched_lines(&self) -> Vec<LineAddr> {
         let mut lines: Vec<LineAddr> = self

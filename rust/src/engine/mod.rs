@@ -5,23 +5,49 @@
 //! reservation model, so warp wake-ups arrive through a calendar heap and
 //! idle stretches (every warp blocked on memory) are fast-forwarded —
 //! the common case for memory-bound GPU workloads.
+//!
+//! Two execution modes share the machinery:
+//!
+//! * [`Engine::run`] — one application occupies every core (the paper's
+//!   evaluation setup).
+//! * [`Engine::run_multi`] — N applications co-execute on disjoint
+//!   [`CorePartition`]s while *sharing* the L1 organization, NoC, L2 and
+//!   DRAM, so inter-application interference (and ATA's filtering of it)
+//!   becomes measurable.  Each app advances through its own kernel
+//!   sequence independently inside one cycle loop, and statistics are
+//!   attributed per app ([`AppCoStats`]).
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 use std::time::Instant;
 
 use crate::config::GpuConfig;
-use crate::core::{IssueBatch, SimtCore, WarpProgram};
+use crate::core::{CorePartition, IssueBatch, SimtCore, WarpProgram};
 use crate::l1arch::{self, L1Arch};
 use crate::l2::MemSystem;
-use crate::stats::{KernelStats, LoadLatencyTracker, SimResult};
+use crate::mem::LineAddr;
+use crate::stats::{AppCoStats, KernelStats, LoadLatencyTracker, MultiResult, SimResult};
 
 /// One kernel launch: a set of warp programs per core.
 #[derive(Debug, Clone, Default)]
 pub struct KernelSpec {
     pub name: String,
-    /// `programs[core]` = warp programs for that core.
+    /// `programs[core]` = warp programs for that core.  In solo runs the
+    /// outer index is the global core id; inside an [`AppLane`] it is the
+    /// partition-local core index.
     pub programs: Vec<Vec<WarpProgram>>,
+}
+
+impl KernelSpec {
+    /// Shift every line address in the kernel by `delta` (see
+    /// [`Workload::offset_lines`]).
+    pub fn offset_lines(&mut self, delta: LineAddr) {
+        for programs in &mut self.programs {
+            for p in programs {
+                p.offset_lines(delta);
+            }
+        }
+    }
 }
 
 /// A whole application: an ordered list of kernels (Fig 9's unit
@@ -33,9 +59,92 @@ pub struct Workload {
 }
 
 impl Workload {
+    /// Total coalesced memory requests the workload will issue.
     pub fn total_requests(&self) -> u64 {
         self.kernels
             .iter()
+            .flat_map(|k| k.programs.iter().flatten())
+            .map(WarpProgram::request_count)
+            .sum()
+    }
+
+    /// Shift every line address by `delta`.  Co-execution uses this to
+    /// give each application a disjoint virtual address space; pass a
+    /// shared offset (or zero) to model read-shared segments between
+    /// applications instead.
+    pub fn offset_lines(&mut self, delta: LineAddr) {
+        for k in &mut self.kernels {
+            k.offset_lines(delta);
+        }
+    }
+}
+
+/// One co-executing application: its kernel sequence plus the core
+/// partition it owns.  `kernels[*].programs` are indexed by
+/// partition-local core (length must equal `partition.count`).
+#[derive(Debug, Clone, Default)]
+pub struct AppLane {
+    pub name: String,
+    pub kernels: Vec<KernelSpec>,
+    pub partition: CorePartition,
+}
+
+/// A co-execution workload: N applications on disjoint core partitions,
+/// sharing the memory system below the cores.  Built by hand or via
+/// [`crate::trace::co_workload`].
+#[derive(Debug, Clone, Default)]
+pub struct MultiWorkload {
+    /// Display name, conventionally `"appA+appB"`.
+    pub name: String,
+    pub lanes: Vec<AppLane>,
+}
+
+impl MultiWorkload {
+    /// Check partition disjointness and program shapes against `cfg`.
+    pub fn validate(&self, cfg: &GpuConfig) -> Result<(), String> {
+        if self.lanes.is_empty() {
+            return Err("multi-workload has no lanes".into());
+        }
+        let mut used = vec![false; cfg.cores];
+        for lane in &self.lanes {
+            if lane.kernels.is_empty() {
+                return Err(format!("lane '{}' has no kernels", lane.name));
+            }
+            if lane.partition.count == 0 || lane.partition.end() > cfg.cores {
+                return Err(format!(
+                    "lane '{}' partition [{}, {}) outside the {}-core GPU",
+                    lane.name,
+                    lane.partition.first,
+                    lane.partition.end(),
+                    cfg.cores
+                ));
+            }
+            for c in lane.partition.first..lane.partition.end() {
+                if used[c] {
+                    return Err(format!("core {c} assigned to two lanes"));
+                }
+                used[c] = true;
+            }
+            for k in &lane.kernels {
+                if k.programs.len() != lane.partition.count {
+                    return Err(format!(
+                        "lane '{}' kernel '{}' has {} core programs for a {}-core partition",
+                        lane.name,
+                        k.name,
+                        k.programs.len(),
+                        lane.partition.count
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Total coalesced memory requests across all lanes.
+    pub fn total_requests(&self) -> u64 {
+        self.lanes
+            .iter()
+            .flat_map(|l| &l.kernels)
             .flat_map(|k| k.programs.iter().flatten())
             .map(WarpProgram::request_count)
             .sum()
@@ -99,6 +208,280 @@ impl Engine {
             dram_reads: self.mem.dram_stats().reads,
             dram_writes: self.mem.dram_stats().writes,
             kernels,
+            host_seconds: host_start.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// Run N applications concurrently on disjoint core partitions.
+    ///
+    /// All lanes start at cycle 0 and advance through their own kernel
+    /// sequences independently: when a lane's kernel finishes at cycle
+    /// `T`, its next kernel starts issuing at `T + 1` (a one-cycle
+    /// launch boundary) while the other lanes keep running — no barrier
+    /// between lanes.  The L1 organization, NoC, L2 and DRAM are shared,
+    /// so lanes contend exactly as co-scheduled applications would —
+    /// including cross-app remote L1 hits when lanes share lines inside
+    /// one cluster.
+    ///
+    /// Relation to [`Engine::run`]: for a single-kernel lane the timing
+    /// is bit-identical to a solo run with the other cores idle (tested
+    /// below); across kernel boundaries the solo path launches at `T`
+    /// rather than `T + 1`, so a K-kernel lane finishes at most `K - 1`
+    /// cycles later than the equivalent solo run.
+    ///
+    /// Determinism: for a fixed config and workload the result is
+    /// bit-identical across runs (lanes are ticked in declaration order,
+    /// cores in partition order within each lane, and the wake calendar
+    /// orders ties by (cycle, core, warp)).
+    pub fn run_multi(&mut self, multi: &MultiWorkload) -> MultiResult {
+        let host_start = Instant::now();
+        if let Err(e) = multi.validate(&self.cfg) {
+            panic!("invalid multi-workload: {e}");
+        }
+        debug_assert!(self.wakes.is_empty());
+        let start_cycle = self.cycle;
+
+        /// Mutable per-lane execution state.
+        struct LaneRun {
+            kernel_idx: usize,
+            /// Cores of the currently active kernel (empty once done).
+            cores: Vec<SimtCore>,
+            done: bool,
+            finish_cycle: u64,
+            insts: u64,
+            requests: u64,
+            tracker: LoadLatencyTracker,
+            stage_tracker: LoadLatencyTracker,
+            kernels_out: Vec<KernelStats>,
+            k_start_cycle: u64,
+            k_start_insts: u64,
+            k_start_loads: u64,
+            k_start_lat: u64,
+            k_start_stage_loads: u64,
+            k_start_stage_lat: u64,
+        }
+
+        let launch = |lane: &AppLane, kernel_idx: usize, cfg: &GpuConfig| -> Vec<SimtCore> {
+            lane.kernels[kernel_idx]
+                .programs
+                .iter()
+                .enumerate()
+                .map(|(j, progs)| {
+                    SimtCore::new(lane.partition.global(j) as u32, cfg, progs.clone())
+                })
+                .collect()
+        };
+
+        let mut lanes: Vec<LaneRun> = multi
+            .lanes
+            .iter()
+            .map(|lane| LaneRun {
+                kernel_idx: 0,
+                cores: launch(lane, 0, &self.cfg),
+                done: false,
+                finish_cycle: 0,
+                insts: 0,
+                requests: 0,
+                tracker: LoadLatencyTracker::default(),
+                stage_tracker: LoadLatencyTracker::default(),
+                kernels_out: Vec::new(),
+                k_start_cycle: start_cycle,
+                k_start_insts: 0,
+                k_start_loads: 0,
+                k_start_lat: 0,
+                k_start_stage_loads: 0,
+                k_start_stage_lat: 0,
+            })
+            .collect();
+
+        // Global core id → lane index (usize::MAX for idle cores).
+        let mut owner = vec![usize::MAX; self.cfg.cores];
+        for (li, lane) in multi.lanes.iter().enumerate() {
+            for c in lane.partition.first..lane.partition.end() {
+                owner[c] = li;
+            }
+        }
+
+        let l1_before = *self.l1.stats();
+        let l2_before = self.mem.stats;
+        let dram_before = self.mem.dram_stats();
+        let noc_before = self.mem.noc_flits();
+        // Deadlock guard: the co-run may legitimately span many kernels
+        // per lane, so scale the solo path's per-kernel budget.
+        let total_kernels: u64 = multi.lanes.iter().map(|l| l.kernels.len() as u64).sum();
+        let max_cycles = MAX_KERNEL_CYCLES.saturating_mul(total_kernels.max(1));
+        let mut batch = IssueBatch::default();
+        let mut last_sweep = self.cycle;
+        loop {
+            let now = self.cycle;
+
+            // 1. Deliver due wake-ups to the owning lane's core.
+            while let Some(&Reverse((t, core, warp))) = self.wakes.peek() {
+                if t > now {
+                    break;
+                }
+                self.wakes.pop();
+                let li = owner[core as usize];
+                let local = multi.lanes[li].partition.local(core as usize);
+                lanes[li].cores[local].load_complete(warp, t);
+            }
+
+            // 2. Tick every active lane's cores; attribute issued insts.
+            batch.requests.clear();
+            batch.insts_issued = 0;
+            for lane in lanes.iter_mut() {
+                if lane.done {
+                    continue;
+                }
+                let before = batch.insts_issued;
+                for core in lane.cores.iter_mut() {
+                    core.tick(now, &mut batch);
+                }
+                lane.insts += batch.insts_issued - before;
+            }
+            self.total_insts += batch.insts_issued;
+
+            // 3. Feed requests through the shared L1 organization,
+            //    tracking load latencies per lane.
+            let mut prev_group: Option<(u32, u32, u64)> = None;
+            for (req, group_n) in batch.requests.iter() {
+                let lane = &mut lanes[owner[req.core as usize]];
+                lane.requests += 1;
+                if *group_n > 0 {
+                    let key = (req.core, req.warp, req.inst);
+                    if prev_group != Some(key) {
+                        lane.tracker.issue(req.core, req.warp, req.inst, *group_n, now);
+                        lane.stage_tracker.issue(req.core, req.warp, req.inst, *group_n, now);
+                        prev_group = Some(key);
+                    }
+                }
+                let res = self.l1.access(req, now, &mut self.mem);
+                if *group_n > 0 {
+                    lane.stage_tracker
+                        .complete_one(req.core, req.warp, req.inst, res.l1_stage_done);
+                    if let Some(load_done) =
+                        lane.tracker.complete_one(req.core, req.warp, req.inst, res.done)
+                    {
+                        self.wakes.push(Reverse((load_done.max(now + 1), req.core, req.warp)));
+                    }
+                }
+            }
+
+            // 4. Kernel completion: advance finished lanes independently.
+            for (li, lane) in lanes.iter_mut().enumerate() {
+                if lane.done || !lane.cores.iter().all(SimtCore::all_done) {
+                    continue;
+                }
+                let spec = &multi.lanes[li].kernels[lane.kernel_idx];
+                let loads = lane.tracker.completed_loads - lane.k_start_loads;
+                let lat = lane.tracker.total_latency - lane.k_start_lat;
+                let stage_loads = lane.stage_tracker.completed_loads - lane.k_start_stage_loads;
+                let stage_lat = lane.stage_tracker.total_latency - lane.k_start_stage_lat;
+                lane.kernels_out.push(KernelStats {
+                    name: spec.name.clone(),
+                    cycles: now - lane.k_start_cycle,
+                    insts: lane.insts - lane.k_start_insts,
+                    l1_mean_latency: if loads == 0 { 0.0 } else { lat as f64 / loads as f64 },
+                    l1_stage_latency: if stage_loads == 0 {
+                        0.0
+                    } else {
+                        stage_lat as f64 / stage_loads as f64
+                    },
+                    // Hit classes are counted in the shared L1 and cannot
+                    // be attributed to one lane; reported as 0 here.
+                    l1_hit_rate: 0.0,
+                });
+                lane.kernel_idx += 1;
+                if lane.kernel_idx < multi.lanes[li].kernels.len() {
+                    lane.cores = launch(&multi.lanes[li], lane.kernel_idx, &self.cfg);
+                    lane.k_start_cycle = now;
+                    lane.k_start_insts = lane.insts;
+                    lane.k_start_loads = lane.tracker.completed_loads;
+                    lane.k_start_lat = lane.tracker.total_latency;
+                    lane.k_start_stage_loads = lane.stage_tracker.completed_loads;
+                    lane.k_start_stage_lat = lane.stage_tracker.total_latency;
+                } else {
+                    lane.done = true;
+                    lane.finish_cycle = now - start_cycle;
+                    lane.cores.clear();
+                }
+            }
+
+            // 5. Termination / advance.
+            if lanes.iter().all(|l| l.done) {
+                break;
+            }
+            let next_ready = lanes
+                .iter()
+                .filter(|l| !l.done)
+                .flat_map(|l| l.cores.iter().map(SimtCore::next_event_hint))
+                .min()
+                .unwrap_or(u64::MAX);
+            let next_wake = self.wakes.peek().map(|Reverse((t, _, _))| *t).unwrap_or(u64::MAX);
+            let next = next_ready.min(next_wake).max(now + 1);
+            if next == u64::MAX {
+                panic!("co-execution '{}' deadlocked at cycle {now}", multi.name);
+            }
+            self.cycle = next;
+
+            if self.cycle - last_sweep > 65_536 {
+                self.l1.sweep(self.cycle);
+                self.mem.sweep_in_flight(self.cycle);
+                last_sweep = self.cycle;
+            }
+            if self.cycle - start_cycle > max_cycles {
+                panic!("co-execution '{}' exceeded {max_cycles} cycles", multi.name);
+            }
+        }
+
+        // Every reported metric is a *per-run delta*, so a reused (warm)
+        // engine yields results that describe only this co-execution.
+        let l1 = self.l1.stats().delta(&l1_before);
+        let l2 = self.mem.stats;
+        let l2_accesses = l2.accesses - l2_before.accesses;
+        let l2_hits = l2.hits - l2_before.hits;
+        let l2_fetches = l2.fetches - l2_before.fetches;
+        let l2_fetch_latency = l2.total_fetch_latency - l2_before.total_fetch_latency;
+        let dram = self.mem.dram_stats();
+
+        let apps: Vec<AppCoStats> = multi
+            .lanes
+            .iter()
+            .zip(&lanes)
+            .map(|(spec, run)| AppCoStats {
+                name: spec.name.clone(),
+                first_core: spec.partition.first,
+                cores: spec.partition.count,
+                finish_cycle: run.finish_cycle,
+                insts: run.insts,
+                loads: run.tracker.completed_loads,
+                mean_load_latency: run.tracker.mean(),
+                stage_mean_latency: run.stage_tracker.mean(),
+                requests: run.requests,
+                kernels: run.kernels_out.clone(),
+            })
+            .collect();
+
+        MultiResult {
+            name: multi.name.clone(),
+            arch: self.l1.kind().name().to_string(),
+            cycles: self.cycle - start_cycle,
+            insts: apps.iter().map(|a| a.insts).sum(),
+            l1,
+            l2_hit_rate: if l2_accesses == 0 {
+                0.0
+            } else {
+                l2_hits as f64 / l2_accesses as f64
+            },
+            l2_mean_fetch_latency: if l2_fetches == 0 {
+                0.0
+            } else {
+                l2_fetch_latency as f64 / l2_fetches as f64
+            },
+            noc_flits: self.mem.noc_flits() - noc_before,
+            dram_reads: dram.reads - dram_before.reads,
+            dram_writes: dram.writes - dram_before.writes,
+            apps,
             host_seconds: host_start.elapsed().as_secs_f64(),
         }
     }
@@ -349,6 +732,174 @@ mod tests {
         let r = run_workload(&cfg, &wl);
         assert!(r.cycles > 100, "a cold DRAM miss takes hundreds of cycles");
         assert!(r.cycles < 100_000, "but the engine must not crawl");
+    }
+
+    /// A lane kernel where partition-local core `c` runs one warp loading
+    /// `lines(c)` then a short ALU tail.
+    fn lane_kernel(cores: usize, lines: impl Fn(usize) -> Vec<u64>) -> KernelSpec {
+        KernelSpec {
+            name: "k".into(),
+            programs: (0..cores)
+                .map(|c| {
+                    let insts: Vec<WarpInst> = lines(c)
+                        .chunks(2)
+                        .map(|ch| WarpInst::Load(ch.iter().map(|&l| (l, 0b1111)).collect()))
+                        .chain(std::iter::once(WarpInst::Alu(4)))
+                        .collect();
+                    vec![WarpProgram::new(insts)]
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn multi_single_lane_matches_padded_solo_run() {
+        // One lane on half the cores must behave exactly like a solo run
+        // whose remaining cores are idle: same shared memory system, same
+        // request stream, same timing.
+        let cfg = GpuConfig::tiny(L1ArchKind::Private);
+        let k = lane_kernel(4, |c| vec![c as u64 * 64, c as u64 * 64 + 1]);
+        let multi = MultiWorkload {
+            name: "solo".into(),
+            lanes: vec![AppLane {
+                name: "a".into(),
+                kernels: vec![k.clone()],
+                partition: CorePartition { first: 0, count: 4 },
+            }],
+        };
+        let mr = Engine::new(&cfg).run_multi(&multi);
+
+        let mut padded = k;
+        padded.programs.resize(cfg.cores, Vec::new());
+        let sr = Engine::new(&cfg).run(&Workload {
+            name: "solo".into(),
+            kernels: vec![padded],
+        });
+        assert_eq!(mr.cycles, sr.cycles);
+        assert_eq!(mr.insts, sr.insts);
+        assert_eq!(mr.l1.accesses, sr.l1.accesses);
+        assert_eq!(mr.apps[0].finish_cycle, sr.cycles);
+        assert_eq!(mr.apps[0].insts, sr.insts);
+    }
+
+    #[test]
+    fn multi_lanes_advance_kernels_independently() {
+        // Lane a: two short kernels. Lane b: one long kernel. Lane a's
+        // second kernel must launch while b is still running, and both
+        // finish cycles must be attributed separately.
+        let cfg = GpuConfig::tiny(L1ArchKind::Private);
+        let short = lane_kernel(4, |c| vec![c as u64 * 8]);
+        let long = lane_kernel(4, |c| (0..16).map(|k| 4096 + c as u64 * 100 + k).collect());
+        let multi = MultiWorkload {
+            name: "a+b".into(),
+            lanes: vec![
+                AppLane {
+                    name: "a".into(),
+                    kernels: vec![short.clone(), short],
+                    partition: CorePartition { first: 0, count: 4 },
+                },
+                AppLane {
+                    name: "b".into(),
+                    kernels: vec![long],
+                    partition: CorePartition { first: 4, count: 4 },
+                },
+            ],
+        };
+        let r = Engine::new(&cfg).run_multi(&multi);
+        assert_eq!(r.apps[0].kernels.len(), 2, "lane a ran both kernels");
+        assert_eq!(r.apps[1].kernels.len(), 1);
+        assert_eq!(
+            r.cycles,
+            r.apps.iter().map(|a| a.finish_cycle).max().unwrap(),
+            "global cycles = last lane's finish"
+        );
+        // Attribution: requests sum to the shared-L1 access count.
+        assert_eq!(
+            r.l1.accesses,
+            r.apps.iter().map(|a| a.requests).sum::<u64>()
+        );
+        assert_eq!(r.insts, r.apps.iter().map(|a| a.insts).sum::<u64>());
+    }
+
+    #[test]
+    fn multi_is_deterministic_across_runs() {
+        let cfg = GpuConfig::tiny(L1ArchKind::Ata);
+        let mk = |salt: u64| lane_kernel(4, move |c| (0..8).map(|k| (salt + c as u64 * 31 + k) % 64).collect());
+        let multi = MultiWorkload {
+            name: "a+b".into(),
+            lanes: vec![
+                AppLane {
+                    name: "a".into(),
+                    kernels: vec![mk(0)],
+                    partition: CorePartition { first: 0, count: 4 },
+                },
+                AppLane {
+                    name: "b".into(),
+                    kernels: vec![mk(17)],
+                    partition: CorePartition { first: 4, count: 4 },
+                },
+            ],
+        };
+        let a = Engine::new(&cfg).run_multi(&multi);
+        let b = Engine::new(&cfg).run_multi(&multi);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.insts, b.insts);
+        assert_eq!(a.l1.local_hits, b.l1.local_hits);
+        assert_eq!(a.l1.remote_hits, b.l1.remote_hits);
+        assert_eq!(a.apps[0].mean_load_latency, b.apps[0].mean_load_latency);
+        assert_eq!(a.apps[1].finish_cycle, b.apps[1].finish_cycle);
+    }
+
+    #[test]
+    fn multi_validate_rejects_bad_shapes() {
+        let cfg = GpuConfig::tiny(L1ArchKind::Private);
+        let k = lane_kernel(4, |c| vec![c as u64]);
+        let lane = |first: usize| AppLane {
+            name: "x".into(),
+            kernels: vec![k.clone()],
+            partition: CorePartition { first, count: 4 },
+        };
+        // Overlapping partitions:
+        let overlap = MultiWorkload {
+            name: "m".into(),
+            lanes: vec![lane(0), lane(2)],
+        };
+        assert!(overlap.validate(&cfg).is_err());
+        // Out of range:
+        let oob = MultiWorkload {
+            name: "m".into(),
+            lanes: vec![lane(6)],
+        };
+        assert!(oob.validate(&cfg).is_err());
+        // Program count mismatch:
+        let mut bad = MultiWorkload {
+            name: "m".into(),
+            lanes: vec![lane(0)],
+        };
+        bad.lanes[0].kernels[0].programs.pop();
+        assert!(bad.validate(&cfg).is_err());
+        // Valid:
+        let good = MultiWorkload {
+            name: "m".into(),
+            lanes: vec![lane(0), lane(4)],
+        };
+        assert!(good.validate(&cfg).is_ok());
+    }
+
+    #[test]
+    fn offset_lines_shifts_the_address_space() {
+        let cfg = GpuConfig::tiny(L1ArchKind::Private);
+        let mut wl = Workload {
+            name: "t".into(),
+            kernels: vec![simple_kernel(&cfg, |c| vec![c as u64])],
+        };
+        let before = wl.total_requests();
+        wl.offset_lines(1 << 34);
+        assert_eq!(wl.total_requests(), before, "offset preserves structure");
+        let all_shifted = wl.kernels.iter().flat_map(|k| k.programs.iter().flatten()).all(|p| {
+            p.touched_lines().iter().all(|&l| l >= (1 << 34))
+        });
+        assert!(all_shifted);
     }
 
     #[test]

@@ -46,21 +46,57 @@ impl AccessResult {
 }
 
 /// A full-GPU L1 organization: receives every core's coalesced requests
-/// in chronological order and returns each request's completion cycle.
+/// and returns each request's completion cycle.
+///
+/// # Contract
+///
+/// **Access ordering.**  The engine calls [`access`](L1Arch::access) with
+/// `now` non-decreasing across calls; within one cycle, requests arrive
+/// in a fixed deterministic order (per-core program order is preserved;
+/// cores are visited in a stable order chosen by the execution mode, not
+/// necessarily ascending core id).  Implementations may rely on this
+/// monotonicity for their reservation calendars, and they must be
+/// deterministic: the same request sequence must produce the same
+/// results, regardless of wall clock or thread placement (each engine
+/// owns its organization exclusively — `Send` but not `Sync`).
+///
+/// **Completion cycles.**  Every access returns an [`AccessResult`] with
+/// `done >= now`; the engine never re-submits a request.  Structural
+/// hazards (MSHR full, bank queue full) are modeled as added latency and
+/// counted in [`L1Stats::rejects`], not surfaced as failures.
+///
+/// **Sweep semantics.**  [`sweep`](L1Arch::sweep) is pure housekeeping:
+/// the engine calls it at coarse intervals (≈ every 64 k cycles) with the
+/// current cycle so implementations can drop landed in-flight entries and
+/// bound memory growth.  It must not change any future access's timing or
+/// any statistic — results must be identical whether or not sweeps run.
+///
+/// **Stats invariants.**  [`stats`](L1Arch::stats) counters are
+/// monotonically non-decreasing; `accesses` increments exactly once per
+/// [`access`](L1Arch::access) call, and each access lands in exactly one
+/// outcome class (`local_hits`, `remote_hits`, `sector_misses`, `misses`,
+/// `mshr_merges`, or `writes`).  `rejects`, conflict-cycle counters and
+/// `probes_sent` are side tallies, not outcome classes.  With multiple
+/// co-executing applications the counters aggregate over all of them —
+/// per-app attribution happens in the engine, which knows the core→app
+/// mapping.
 pub trait L1Arch: std::fmt::Debug + Send {
     /// Process one request issued at `now`.  For loads `done` is the cycle
     /// the data reaches the core; for stores it is the retire cycle of the
     /// write pipeline (cores do not block on it).
     fn access(&mut self, req: &MemRequest, now: u64, mem: &mut MemSystem) -> AccessResult;
 
+    /// Aggregated counters (see the trait-level stats invariants).
     fn stats(&self) -> &L1Stats;
 
+    /// Which organization this is (matches the config that built it).
     fn kind(&self) -> L1ArchKind;
 
     /// Lines currently resident on behalf of `core` (replication audits).
     fn resident_lines(&self, core: usize) -> Vec<LineAddr>;
 
-    /// Periodic housekeeping (drop landed in-flight entries).
+    /// Periodic housekeeping (drop landed in-flight entries).  Must not
+    /// affect timing or statistics — see the trait-level sweep semantics.
     fn sweep(&mut self, now: u64);
 }
 

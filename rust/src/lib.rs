@@ -4,18 +4,24 @@
 //! The crate contains:
 //!
 //! * a cycle-level GPU memory-system simulator — SIMT cores with GTO
-//!   schedulers ([`core`]), sectored caches ([`cache`]), crossbar/ring
-//!   interconnects with iSLIP arbitration ([`noc`]), banked L2 +
-//!   DRAM bank timing ([`l2`], [`dram`]) — configured per the paper's
-//!   Table II ([`config`]);
+//!   schedulers ([`core`](crate::core)), sectored caches ([`cache`]),
+//!   crossbar/ring interconnects with iSLIP arbitration ([`noc`]),
+//!   banked L2 + DRAM bank timing ([`l2`], [`dram`]) — configured per
+//!   the paper's Table II ([`config`]);
 //! * the four L1 organizations of the paper's design space, including
 //!   ATA-Cache itself ([`l1arch`]);
 //! * statistical workload models of the ten benchmark applications
-//!   ([`trace`]);
+//!   ([`trace`]), plus extra models for co-execution studies;
+//! * single-app and multi-app execution engines ([`engine`]): N
+//!   applications can co-execute on disjoint core partitions while
+//!   sharing the L1 organization, NoC, L2 and DRAM, making
+//!   inter-application interference measurable;
 //! * the experiment coordinator regenerating every table and figure
-//!   ([`coordinator`]), with hardware-overhead modeling ([`area`]);
-//! * a PJRT runtime that executes the JAX/Pallas-authored locality
-//!   analytics artifact from Rust ([`runtime`]).
+//!   ([`coordinator`]), the co-scheduling interference sweep
+//!   ([`coordinator::cosched`]), and hardware-overhead modeling
+//!   ([`area`]);
+//! * the locality-analytics pipeline classifying workloads by
+//!   inter-core data replication ([`runtime`]).
 
 pub mod area;
 pub mod bench_harness;

@@ -2,8 +2,10 @@
 //!
 //! Subcommands:
 //!   run        — simulate one application on one L1 organization
+//!   multi      — co-execute N applications on partitioned cores
 //!   sweep      — architectures × applications sweep (Fig 8 driver)
-//!   classify   — inter-core locality classification via the PJRT artifact
+//!   cosched    — app-pair × architecture interference sweep
+//!   classify   — inter-core locality classification pipeline
 //!   landscape  — regenerate Table I from a measured sweep
 //!   overhead   — §IV-D hardware overhead model
 //!   list       — list application models
@@ -11,12 +13,15 @@
 
 use ata_cache::area;
 use ata_cache::config::{GpuConfig, L1ArchKind};
-use ata_cache::coordinator::{landscape, Sweep};
-use ata_cache::engine::Engine;
+use ata_cache::coordinator::{landscape, CoSchedSweep, Sweep};
+use ata_cache::core::CorePartition;
+use ata_cache::engine::{Engine, MultiWorkload};
 use ata_cache::runtime::LocalityAnalyzer;
+use ata_cache::stats::MultiResult;
 use ata_cache::trace::signature::{exact_locality, sample_core_traces};
-use ata_cache::trace::{apps, LocalityClass};
+use ata_cache::trace::{apps, co_workload, LocalityClass};
 use ata_cache::util::cli::Args;
+use ata_cache::util::json::Json;
 use ata_cache::util::table::{pct_delta, BarChart, Table};
 
 fn main() {
@@ -29,8 +34,10 @@ fn main() {
     };
     let code = match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
+        Some("multi") => cmd_multi(&args),
         Some("export-trace") => cmd_export_trace(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("cosched") => cmd_cosched(&args),
         Some("classify") => cmd_classify(&args),
         Some("landscape") => cmd_landscape(&args),
         Some("overhead") => cmd_overhead(&args),
@@ -46,11 +53,15 @@ fn main() {
 
 fn print_usage() {
     eprintln!(
-        "usage: ata-sim <run|sweep|classify|landscape|overhead|list|config> [options]
+        "usage: ata-sim <run|multi|sweep|cosched|classify|landscape|overhead|list|config> [options]
   run       --app <name> | --trace FILE  --arch <private|remote|decoupled|ata>
             [--scale F] [--seed N] [--out FILE]
+  multi     --apps a,b[,c..] [--partition n,m,..] [--arch X] [--scale F]
+            [--share-addr] [--seed N] [--out FILE]
   export-trace --app <name> [--scale F] --out FILE
   sweep     [--archs a,b,..] [--apps x,y,..] [--scale F] [--threads N] [--out FILE]
+  cosched   [--archs a,b,..] [--apps x,y,..] [--scale F] [--threads N]
+            [--share-addr] [--out FILE]
   classify  [--apps x,y,..] [--artifacts DIR]
   landscape [--scale F]
   overhead
@@ -94,6 +105,180 @@ fn cmd_run(args: &Args) -> i32 {
     println!("{}", r.to_json().pretty());
     if let Some(path) = args.get("out") {
         std::fs::write(path, r.to_json().pretty()).expect("writing --out");
+        println!("wrote {path}");
+    }
+    0
+}
+
+/// Co-execute N applications on partitioned cores and report per-app
+/// IPC, slowdown vs. solo execution on the same cores, and an
+/// interference summary over the shared memory system.
+fn cmd_multi(args: &Args) -> i32 {
+    let arch = L1ArchKind::from_name(args.get_or("arch", "ata")).expect("unknown --arch");
+    let scale = args.get_f64("scale", 0.5).unwrap();
+    let cfg = parse_cfg(args, arch);
+    let names = args.get_list("apps");
+    if names.len() < 2 {
+        eprintln!("multi needs --apps with at least two comma-separated names");
+        return 2;
+    }
+    let mut models = Vec::new();
+    for name in &names {
+        let Some(app) = apps::app(name) else {
+            eprintln!("unknown app '{name}' (see `ata-sim list`)");
+            return 2;
+        };
+        models.push(app.scaled(scale));
+    }
+    let sizes: Vec<usize> = if args.get("partition").is_some() {
+        let parsed: Result<Vec<usize>, _> =
+            args.get_list("partition").iter().map(|s| s.parse()).collect();
+        match parsed {
+            Ok(v) => v,
+            Err(_) => {
+                eprintln!("--partition expects comma-separated core counts, e.g. 8,8");
+                return 2;
+            }
+        }
+    } else {
+        // Even split over the whole GPU.
+        match CorePartition::even(cfg.cores, models.len()) {
+            Ok(parts) => parts.iter().map(|p| p.count).collect(),
+            Err(e) => {
+                eprintln!("cannot partition cores: {e}");
+                return 2;
+            }
+        }
+    };
+    let share = args.flag("share-addr");
+    let multi = match co_workload(&cfg, &models, &sizes, share) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("cannot build co-workload: {e}");
+            return 2;
+        }
+    };
+    println!(
+        "co-running {} on {} ({} requests{}) …",
+        multi.name,
+        arch.name(),
+        multi.total_requests(),
+        if share { ", shared address space" } else { "" }
+    );
+    let co = Engine::new(&cfg).run_multi(&multi);
+
+    // Solo baselines: each lane alone on exactly its cores and address
+    // space, the rest of the GPU idle.  Run in parallel (deterministic:
+    // each run is independent and collected by lane index).
+    let solos: Vec<MultiResult> = std::thread::scope(|s| {
+        let handles: Vec<_> = multi
+            .lanes
+            .iter()
+            .map(|lane| {
+                let cfg = &cfg;
+                s.spawn(move || {
+                    let solo = MultiWorkload {
+                        name: lane.name.clone(),
+                        lanes: vec![lane.clone()],
+                    };
+                    Engine::new(cfg).run_multi(&solo)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("solo run")).collect()
+    });
+
+    let mut t = Table::new(&format!("co-execution — {} on {}", multi.name, arch.name()))
+        .header(&[
+            "app", "cores", "co IPC", "solo IPC", "norm IPC", "slowdown", "load lat", "requests",
+        ]);
+    for (app, solo) in co.apps.iter().zip(&solos) {
+        let solo_ipc = solo.apps[0].ipc();
+        let norm = if solo_ipc > 0.0 { app.ipc() / solo_ipc } else { 0.0 };
+        let slow = if app.ipc() > 0.0 { solo_ipc / app.ipc() } else { 0.0 };
+        t.row(vec![
+            app.name.clone(),
+            format!("{}..{}", app.first_core, app.first_core + app.cores),
+            format!("{:.3}", app.ipc()),
+            format!("{solo_ipc:.3}"),
+            format!("{norm:.3}"),
+            format!("{slow:.3}x"),
+            format!("{:.1}", app.mean_load_latency),
+            app.requests.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "interference summary: agg IPC {:.3} | L1 hit {:.1}% (local {:.1}%, remote hits {}) | \
+         bank-conflict cyc {} | sharing-net cyc {} | probes {} | L2 hit {:.1}% | dram r/w {}/{}",
+        co.ipc(),
+        co.l1.hit_rate() * 100.0,
+        co.l1.local_hit_rate() * 100.0,
+        co.l1.remote_hits,
+        co.l1.bank_conflict_cycles,
+        co.l1.sharing_net_cycles,
+        co.l1.probes_sent,
+        co.l2_hit_rate * 100.0,
+        co.dram_reads,
+        co.dram_writes,
+    );
+    if let Some(path) = args.get("out") {
+        let json = Json::obj(vec![
+            ("co", co.to_json()),
+            ("solos", Json::arr(solos.iter().map(MultiResult::to_json).collect())),
+        ]);
+        std::fs::write(path, json.pretty()).expect("writing --out");
+        println!("wrote {path}");
+    }
+    0
+}
+
+/// App-pair × architecture interference sweep (CIAO-style matrix).
+fn cmd_cosched(args: &Args) -> i32 {
+    let scale = args.get_f64("scale", 0.25).unwrap();
+    let mut sweep = CoSchedSweep::paper(scale);
+    let arch_list = args.get_list("archs");
+    if !arch_list.is_empty() {
+        sweep.archs = arch_list
+            .iter()
+            .map(|a| L1ArchKind::from_name(a).expect("unknown arch in --archs"))
+            .collect();
+    }
+    let app_list = args.get_list("apps");
+    if !app_list.is_empty() {
+        sweep.apps = app_list
+            .iter()
+            .map(|n| apps::app(n).expect("unknown app in --apps"))
+            .collect();
+    }
+    sweep.threads = args.get_usize("threads", sweep.threads).unwrap();
+    sweep.share_address_space = args.flag("share-addr");
+    let n = sweep.apps.len();
+    println!(
+        "co-scheduling sweep: {} apps → {} pairs × {} archs ({} sims)…",
+        n,
+        n * (n + 1) / 2,
+        sweep.archs.len(),
+        sweep.archs.len() * (n * (n + 1) / 2 + 2 * n),
+    );
+    let results = sweep.run();
+    for &arch in &sweep.archs {
+        // Mean slowdown per victim app under this organization.
+        let m = results.interference_matrix(arch);
+        println!("{}", results.render_matrix_from(arch, &m));
+        let means: Vec<String> = results
+            .app_names
+            .iter()
+            .zip(&m)
+            .map(|(name, row)| {
+                let mean = row.iter().sum::<f64>() / row.len().max(1) as f64;
+                format!("{name} {mean:.3}x")
+            })
+            .collect();
+        println!("mean slowdown ({}): {}\n", arch.name(), means.join(" | "));
+    }
+    if let Some(path) = args.get("out") {
+        results.save(path).expect("writing --out");
         println!("wrote {path}");
     }
     0
@@ -250,7 +435,7 @@ fn cmd_overhead(_args: &Args) -> i32 {
 
 fn cmd_list() -> i32 {
     let mut t = Table::new("application models").header(&["app", "suite", "class", "kernels", "notes"]);
-    for a in apps::all_apps() {
+    for a in apps::all_apps().into_iter().chain(apps::extra_apps()) {
         t.row(vec![
             a.name.to_string(),
             a.suite.to_string(),

@@ -38,6 +38,42 @@ pub struct L1Stats {
 }
 
 impl L1Stats {
+    /// Counters accumulated since `before` (for per-run reporting on a
+    /// reused engine).  Destructures exhaustively so adding a field
+    /// without updating the delta is a compile error.
+    pub fn delta(&self, before: &L1Stats) -> L1Stats {
+        let L1Stats {
+            accesses,
+            local_hits,
+            remote_hits,
+            sector_misses,
+            misses,
+            writes,
+            rejects,
+            bank_conflict_cycles,
+            sharing_net_cycles,
+            probes_sent,
+            dirty_remote_fallbacks,
+            fills,
+            mshr_merges,
+        } = *self;
+        L1Stats {
+            accesses: accesses - before.accesses,
+            local_hits: local_hits - before.local_hits,
+            remote_hits: remote_hits - before.remote_hits,
+            sector_misses: sector_misses - before.sector_misses,
+            misses: misses - before.misses,
+            writes: writes - before.writes,
+            rejects: rejects - before.rejects,
+            bank_conflict_cycles: bank_conflict_cycles - before.bank_conflict_cycles,
+            sharing_net_cycles: sharing_net_cycles - before.sharing_net_cycles,
+            probes_sent: probes_sent - before.probes_sent,
+            dirty_remote_fallbacks: dirty_remote_fallbacks - before.dirty_remote_fallbacks,
+            fills: fills - before.fills,
+            mshr_merges: mshr_merges - before.mshr_merges,
+        }
+    }
+
     pub fn hit_rate(&self) -> f64 {
         if self.accesses == 0 {
             return 0.0;
@@ -227,6 +263,141 @@ impl SimResult {
     }
 }
 
+/// Per-application slice of a co-execution run (see
+/// [`crate::engine::Engine::run_multi`]): instruction/cycle/latency
+/// attribution for the cores one application owns.
+///
+/// Invariants (checked by the co-execution integration tests):
+/// Σ `insts` over apps equals the global instruction count,
+/// Σ `requests` equals the shared L1's access count, and
+/// max `finish_cycle` equals the global cycle count.
+#[derive(Debug, Clone, Default)]
+pub struct AppCoStats {
+    pub name: String,
+    /// First global core id of the app's partition.
+    pub first_core: usize,
+    /// Number of cores the app ran on.
+    pub cores: usize,
+    /// Cycle at which the app's last kernel completed (relative to the
+    /// co-execution start).
+    pub finish_cycle: u64,
+    pub insts: u64,
+    /// Completed load instructions issued by this app's cores.
+    pub loads: u64,
+    /// Mean full load latency (issue → data at core) for this app.
+    pub mean_load_latency: f64,
+    /// Mean L1-stage latency (§IV-C metric) for this app.
+    pub stage_mean_latency: f64,
+    /// Memory requests this app's cores fed into the shared L1.
+    pub requests: u64,
+    /// Per-kernel breakdown.  L1 hit rates are not attributable per app
+    /// (the L1 organization's counters are shared), so
+    /// [`KernelStats::l1_hit_rate`] is reported as 0 here.
+    pub kernels: Vec<KernelStats>,
+}
+
+impl AppCoStats {
+    /// IPC over the app's own residency window (its cores were idle after
+    /// `finish_cycle`, so the window is the fair denominator).
+    pub fn ipc(&self) -> f64 {
+        if self.finish_cycle == 0 {
+            0.0
+        } else {
+            self.insts as f64 / self.finish_cycle as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("first_core", self.first_core.into()),
+            ("cores", self.cores.into()),
+            ("finish_cycle", self.finish_cycle.into()),
+            ("insts", self.insts.into()),
+            ("ipc", self.ipc().into()),
+            ("loads", self.loads.into()),
+            ("mean_load_latency", self.mean_load_latency.into()),
+            ("stage_mean_latency", self.stage_mean_latency.into()),
+            ("requests", self.requests.into()),
+            (
+                "kernels",
+                Json::arr(
+                    self.kernels
+                        .iter()
+                        .map(|k| {
+                            Json::obj(vec![
+                                ("name", k.name.as_str().into()),
+                                ("cycles", k.cycles.into()),
+                                ("insts", k.insts.into()),
+                                ("ipc", k.ipc().into()),
+                                ("l1_mean_latency", k.l1_mean_latency.into()),
+                                ("l1_stage_latency", k.l1_stage_latency.into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Whole co-execution result bundle: global counters over the shared
+/// memory system plus per-application attribution.
+#[derive(Debug, Clone, Default)]
+pub struct MultiResult {
+    /// Workload name (usually `"appA+appB"`).
+    pub name: String,
+    pub arch: String,
+    /// Cycle at which the *last* application finished.
+    pub cycles: u64,
+    pub insts: u64,
+    /// Shared-L1 counters accumulated over all applications.
+    pub l1: L1Stats,
+    pub l2_hit_rate: f64,
+    pub l2_mean_fetch_latency: f64,
+    pub noc_flits: u64,
+    pub dram_reads: u64,
+    pub dram_writes: u64,
+    pub apps: Vec<AppCoStats>,
+    /// Wall-clock seconds the simulation took (host performance metric).
+    pub host_seconds: f64,
+}
+
+impl MultiResult {
+    /// Aggregate IPC over the whole co-execution window.
+    pub fn ipc(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.insts as f64 / self.cycles as f64
+        }
+    }
+
+    /// First app slice with the given name (lanes keep registry names;
+    /// look up by index for self-pairs).
+    pub fn app(&self, name: &str) -> Option<&AppCoStats> {
+        self.apps.iter().find(|a| a.name == name)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("arch", self.arch.as_str().into()),
+            ("cycles", self.cycles.into()),
+            ("insts", self.insts.into()),
+            ("ipc", self.ipc().into()),
+            ("l1", self.l1.to_json()),
+            ("l2_hit_rate", self.l2_hit_rate.into()),
+            ("l2_mean_fetch_latency", self.l2_mean_fetch_latency.into()),
+            ("noc_flits", self.noc_flits.into()),
+            ("dram_reads", self.dram_reads.into()),
+            ("dram_writes", self.dram_writes.into()),
+            ("apps", Json::arr(self.apps.iter().map(AppCoStats::to_json).collect())),
+            ("host_seconds", self.host_seconds.into()),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -298,5 +469,40 @@ mod tests {
         let parsed = Json::parse(&j).unwrap();
         assert_eq!(parsed.get("app").unwrap().as_str(), Some("b+tree"));
         assert!((parsed.get("ipc").unwrap().as_f64().unwrap() - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn multi_result_json_and_per_app_ipc() {
+        let r = MultiResult {
+            name: "a+b".into(),
+            arch: "ata".into(),
+            cycles: 200,
+            insts: 300,
+            apps: vec![
+                AppCoStats {
+                    name: "a".into(),
+                    finish_cycle: 100,
+                    insts: 150,
+                    ..Default::default()
+                },
+                AppCoStats {
+                    name: "b".into(),
+                    finish_cycle: 200,
+                    insts: 150,
+                    ..Default::default()
+                },
+            ],
+            ..Default::default()
+        };
+        assert!((r.ipc() - 1.5).abs() < 1e-12);
+        assert!((r.app("a").unwrap().ipc() - 1.5).abs() < 1e-12);
+        assert!((r.app("b").unwrap().ipc() - 0.75).abs() < 1e-12);
+        let parsed = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("name").unwrap().as_str(), Some("a+b"));
+        assert_eq!(
+            parsed.get("apps").unwrap().as_arr().unwrap().len(),
+            2,
+            "both app slices serialized"
+        );
     }
 }

@@ -27,14 +27,44 @@ use crate::core::{WarpInst, WarpProgram};
 use crate::engine::{KernelSpec, Workload};
 use crate::util::json::{Json, JsonError};
 
-#[derive(Debug, thiserror::Error)]
+/// Failure loading or saving a workload trace file.
+#[derive(Debug)]
 pub enum TraceIoError {
-    #[error("json: {0}")]
-    Json(#[from] JsonError),
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("schema: {0}")]
+    Json(JsonError),
+    Io(std::io::Error),
     Schema(String),
+}
+
+impl std::fmt::Display for TraceIoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TraceIoError::Json(e) => write!(f, "json: {e}"),
+            TraceIoError::Io(e) => write!(f, "io: {e}"),
+            TraceIoError::Schema(m) => write!(f, "schema: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for TraceIoError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TraceIoError::Json(e) => Some(e),
+            TraceIoError::Io(e) => Some(e),
+            TraceIoError::Schema(_) => None,
+        }
+    }
+}
+
+impl From<JsonError> for TraceIoError {
+    fn from(e: JsonError) -> Self {
+        TraceIoError::Json(e)
+    }
+}
+
+impl From<std::io::Error> for TraceIoError {
+    fn from(e: std::io::Error) -> Self {
+        TraceIoError::Io(e)
+    }
 }
 
 fn inst_to_json(inst: &WarpInst) -> Json {

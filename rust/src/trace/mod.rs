@@ -15,8 +15,8 @@ pub mod signature;
 pub mod synth;
 
 use crate::config::GpuConfig;
-use crate::core::{WarpInst, WarpProgram};
-use crate::engine::{KernelSpec, Workload};
+use crate::core::{CorePartition, WarpInst, WarpProgram};
+use crate::engine::{AppLane, KernelSpec, MultiWorkload, Workload};
 use crate::mem::{LineAddr, SectorMask};
 use crate::util::rng::{Pcg32, SplitMix64, Zipf};
 
@@ -266,6 +266,96 @@ impl AppModel {
     }
 }
 
+/// Address-space stride between co-executed applications: each lane's
+/// lines are shifted by `lane_index * APP_SPACE_STRIDE` so separate
+/// processes never false-share (their private regions top out well below
+/// this at `PRIVATE_STRIDE * (cores+1) + footprint` ≈ 2³⁰ lines).
+pub const APP_SPACE_STRIDE: LineAddr = 1 << 34;
+
+/// Build a co-execution workload: `apps[i]` runs on a partition of
+/// `sizes[i]` cores (partitions are carved consecutively from core 0).
+///
+/// Each lane's workload is generated exactly as a solo run on a
+/// `sizes[i]`-core GPU would generate it, then (unless
+/// `share_address_space`) shifted into a disjoint address space.  With
+/// `share_address_space = true` all lanes keep their generated addresses,
+/// modeling co-executed applications that read-share data (same input
+/// replicated, shared libraries/filters) — the scenario where ATA's
+/// cross-app remote hits appear.
+pub fn co_workload(
+    cfg: &GpuConfig,
+    apps: &[AppModel],
+    sizes: &[usize],
+    share_address_space: bool,
+) -> Result<MultiWorkload, String> {
+    if apps.is_empty() {
+        return Err("co-workload needs at least one app".into());
+    }
+    if apps.len() != sizes.len() {
+        return Err(format!(
+            "{} apps but {} partition sizes",
+            apps.len(),
+            sizes.len()
+        ));
+    }
+    let parts = CorePartition::split(cfg.cores, sizes)?;
+    co_workload_parts(cfg, apps, &parts, share_address_space)
+}
+
+/// [`co_workload`] with explicit partition placement — used by the
+/// co-scheduling sweep to run solo baselines on the *same* cores the app
+/// occupies in the co-run.  Address slots default to lane order.
+pub fn co_workload_parts(
+    cfg: &GpuConfig,
+    apps: &[AppModel],
+    parts: &[CorePartition],
+    share_address_space: bool,
+) -> Result<MultiWorkload, String> {
+    let slots: Vec<usize> = (0..apps.len()).collect();
+    co_workload_placed(cfg, apps, parts, &slots, share_address_space)
+}
+
+/// The fully explicit builder: partition placement *and* address-space
+/// slot per lane.  A lane's lines are shifted by
+/// `addr_slots[i] * APP_SPACE_STRIDE` (unless sharing), so a solo
+/// baseline can replay the exact address stream an app had at a given
+/// position of a co-run — keeping `ata-sim multi` and
+/// [`crate::coordinator::CoSchedSweep`] byte-comparable.
+pub fn co_workload_placed(
+    cfg: &GpuConfig,
+    apps: &[AppModel],
+    parts: &[CorePartition],
+    addr_slots: &[usize],
+    share_address_space: bool,
+) -> Result<MultiWorkload, String> {
+    if apps.len() != parts.len() || apps.len() != addr_slots.len() {
+        return Err(format!(
+            "{} apps but {} partitions / {} address slots",
+            apps.len(),
+            parts.len(),
+            addr_slots.len()
+        ));
+    }
+    let mut lanes = Vec::with_capacity(apps.len());
+    for ((app, part), &slot) in apps.iter().zip(parts).zip(addr_slots) {
+        let mut sub = cfg.clone();
+        sub.cores = part.count;
+        let mut wl = app.workload(&sub);
+        if !share_address_space {
+            wl.offset_lines(APP_SPACE_STRIDE * slot as LineAddr);
+        }
+        lanes.push(AppLane {
+            name: app.name.to_string(),
+            kernels: wl.kernels,
+            partition: *part,
+        });
+    }
+    Ok(MultiWorkload {
+        name: apps.iter().map(|a| a.name).collect::<Vec<_>>().join("+"),
+        lanes,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -420,5 +510,45 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn co_workload_partitions_and_isolates_address_spaces() {
+        let cfg = cfg(); // 8 cores
+        let a = apps::app("b+tree").unwrap().scaled(0.25);
+        let b = apps::app("doitgen").unwrap().scaled(0.25);
+        let multi = co_workload(&cfg, &[a.clone(), b.clone()], &[4, 4], false).unwrap();
+        assert_eq!(multi.lanes.len(), 2);
+        assert_eq!(multi.name, "b+tree+doitgen");
+        assert_eq!(multi.lanes[0].partition, CorePartition { first: 0, count: 4 });
+        assert_eq!(multi.lanes[1].partition, CorePartition { first: 4, count: 4 });
+        multi.validate(&cfg).unwrap();
+        // Disjoint address spaces: lane 1's lines all sit above the stride.
+        let lane_lines = |lane: &AppLane| -> Vec<LineAddr> {
+            lane.kernels
+                .iter()
+                .flat_map(|k| k.programs.iter().flatten())
+                .flat_map(|p| p.touched_lines())
+                .collect()
+        };
+        assert!(lane_lines(&multi.lanes[0]).iter().all(|&l| l < APP_SPACE_STRIDE));
+        assert!(lane_lines(&multi.lanes[1]).iter().all(|&l| l >= APP_SPACE_STRIDE));
+
+        // Shared address space: two instances of one app overlap heavily.
+        let shared = co_workload(&cfg, &[a.clone(), a.clone()], &[4, 4], true).unwrap();
+        let s0: std::collections::HashSet<LineAddr> =
+            lane_lines(&shared.lanes[0]).into_iter().collect();
+        let s1: std::collections::HashSet<LineAddr> =
+            lane_lines(&shared.lanes[1]).into_iter().collect();
+        assert!(s0.intersection(&s1).count() > 0, "same app must share lines");
+    }
+
+    #[test]
+    fn co_workload_rejects_bad_shapes() {
+        let cfg = cfg();
+        let a = apps::app("b+tree").unwrap();
+        assert!(co_workload(&cfg, &[], &[], false).is_err());
+        assert!(co_workload(&cfg, &[a.clone()], &[4, 4], false).is_err());
+        assert!(co_workload(&cfg, &[a.clone(), a.clone()], &[6, 6], false).is_err());
     }
 }

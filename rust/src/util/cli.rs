@@ -13,15 +13,30 @@ pub struct Args {
     flags: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+/// Argument-parsing failure (reported to the user on stderr).
+#[derive(Debug)]
 pub enum CliError {
-    #[error("option --{0} expects a value")]
+    /// `--key` appeared in value position with nothing following it.
     MissingValue(String),
-    #[error("option --{0}: cannot parse '{1}' as {2}")]
+    /// `--key value` where the value does not parse as the expected type.
     BadValue(String, String, &'static str),
-    #[error("unknown option --{0}")]
+    /// An option no getter recognises.
     Unknown(String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::MissingValue(k) => write!(f, "option --{k} expects a value"),
+            CliError::BadValue(k, v, ty) => {
+                write!(f, "option --{k}: cannot parse '{v}' as {ty}")
+            }
+            CliError::Unknown(k) => write!(f, "unknown option --{k}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse from an iterator of raw arguments (without argv[0]).

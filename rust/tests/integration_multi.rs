@@ -1,0 +1,159 @@
+//! Co-execution integration tests: determinism across thread counts,
+//! per-app stat attribution, and the cross-application sharing behaviour
+//! of the four L1 organizations under spatial multitasking.
+
+use ata_cache::config::{GpuConfig, L1ArchKind};
+use ata_cache::coordinator::CoSchedSweep;
+use ata_cache::engine::Engine;
+use ata_cache::trace::{co_workload, synth};
+
+fn tiny_pair(arch: L1ArchKind) -> (GpuConfig, ata_cache::engine::MultiWorkload) {
+    let cfg = GpuConfig::tiny(arch);
+    let a = synth::locality_knob(0.8, 0.25);
+    let b = synth::pure_streaming().scaled(0.25);
+    let multi = co_workload(&cfg, &[a, b], &[4, 4], false).unwrap();
+    (cfg, multi)
+}
+
+#[test]
+fn all_four_archs_co_execute_to_completion() {
+    for arch in L1ArchKind::ALL {
+        let (cfg, multi) = tiny_pair(arch);
+        let r = Engine::new(&cfg).run_multi(&multi);
+        assert_eq!(r.arch, arch.name(), "arch recorded");
+        assert_eq!(r.apps.len(), 2);
+        for app in &r.apps {
+            assert!(app.insts > 0, "{}: {} issued nothing", arch.name(), app.name);
+            assert!(app.finish_cycle > 0);
+            assert!(app.ipc() > 0.0);
+        }
+    }
+}
+
+#[test]
+fn per_app_attribution_sums_to_global_totals() {
+    for arch in [L1ArchKind::Private, L1ArchKind::Ata] {
+        let (cfg, multi) = tiny_pair(arch);
+        let r = Engine::new(&cfg).run_multi(&multi);
+        assert_eq!(
+            r.insts,
+            r.apps.iter().map(|a| a.insts).sum::<u64>(),
+            "{}: instruction attribution must partition the total",
+            arch.name()
+        );
+        assert_eq!(
+            r.l1.accesses,
+            r.apps.iter().map(|a| a.requests).sum::<u64>(),
+            "{}: every L1 access belongs to exactly one app",
+            arch.name()
+        );
+        assert_eq!(
+            r.cycles,
+            r.apps.iter().map(|a| a.finish_cycle).max().unwrap(),
+            "{}: the co-run ends when the last app finishes",
+            arch.name()
+        );
+        // Per-kernel attribution nests inside per-app attribution.
+        for app in &r.apps {
+            assert_eq!(
+                app.insts,
+                app.kernels.iter().map(|k| k.insts).sum::<u64>(),
+                "kernel insts sum to app insts"
+            );
+        }
+    }
+}
+
+#[test]
+fn co_execution_is_deterministic_across_runs_and_thread_counts() {
+    // The co-run itself is single-threaded and deterministic; the sweep
+    // around it must stay deterministic for any worker count.
+    let sweep = |threads: usize| CoSchedSweep {
+        cfg: GpuConfig::tiny(L1ArchKind::Private),
+        archs: vec![L1ArchKind::Private, L1ArchKind::Ata],
+        apps: vec![synth::locality_knob(0.8, 0.25), synth::pure_streaming().scaled(0.25)],
+        scale: 1.0,
+        threads,
+        share_address_space: false,
+    };
+    let a = sweep(1).run();
+    let b = sweep(4).run();
+    assert_eq!(a.pairs.len(), b.pairs.len());
+    for (x, y) in a.pairs.iter().zip(&b.pairs) {
+        assert_eq!((x.i, x.j), (y.i, y.j));
+        assert_eq!(x.result.cycles, y.result.cycles);
+        assert_eq!(x.result.insts, y.result.insts);
+        assert_eq!(x.result.l1.local_hits, y.result.l1.local_hits);
+        assert_eq!(x.result.l1.remote_hits, y.result.l1.remote_hits);
+        for (ax, ay) in x.result.apps.iter().zip(&y.result.apps) {
+            assert_eq!(ax.finish_cycle, ay.finish_cycle);
+            assert_eq!(ax.mean_load_latency, ay.mean_load_latency);
+        }
+    }
+    for (x, y) in a.solos.iter().zip(&b.solos) {
+        assert_eq!(x.result.cycles, y.result.cycles);
+    }
+}
+
+#[test]
+fn cross_app_sharing_becomes_remote_hits_on_ata_but_not_private() {
+    // Two single-core instances of a high-sharing app in ONE cluster,
+    // sharing the address space (read-shared input).  Every line one
+    // app's core fills can only be remote-hit by the *other* app, so any
+    // remote hit is cross-application by construction.
+    let mut cfg = GpuConfig::tiny(L1ArchKind::Ata);
+    cfg.cores = 2;
+    cfg.clusters = 1;
+    cfg.sharing.ata_comparator_groups = 2;
+    cfg.validate().unwrap();
+    let app = synth::locality_knob(0.9, 0.5);
+    let multi = co_workload(&cfg, &[app.clone(), app.clone()], &[1, 1], true).unwrap();
+    let ata = Engine::new(&cfg).run_multi(&multi);
+    assert!(
+        ata.l1.remote_hits + ata.l1.mshr_merges > 0,
+        "cross-app sharing must be exploited: {:?}",
+        ata.l1
+    );
+
+    let mut cfg_p = cfg.clone();
+    cfg_p.l1_arch = L1ArchKind::Private;
+    let private = Engine::new(&cfg_p).run_multi(&multi);
+    assert_eq!(private.l1.remote_hits, 0, "private caches cannot share");
+    assert!(
+        ata.l1.misses <= private.l1.misses,
+        "ATA must not add misses: {} vs {}",
+        ata.l1.misses,
+        private.l1.misses
+    );
+
+    // With disjoint address spaces the same pairing shares nothing.
+    let isolated = co_workload(&cfg, &[app.clone(), app], &[1, 1], false).unwrap();
+    let iso = Engine::new(&cfg).run_multi(&isolated);
+    assert_eq!(iso.l1.remote_hits, 0, "isolated apps must not share lines");
+}
+
+#[test]
+fn solo_baseline_brackets_co_run_interference() {
+    // Sanity on the slowdown metric: co-running with a streaming app
+    // must not *speed up* the victim beyond noise, and the slowdown
+    // lookups must be populated for every (victim, co-runner) pair.
+    let sweep = CoSchedSweep {
+        cfg: GpuConfig::tiny(L1ArchKind::Private),
+        archs: vec![L1ArchKind::Private],
+        apps: vec![synth::locality_knob(0.8, 0.25), synth::pure_streaming().scaled(0.25)],
+        scale: 1.0,
+        threads: 2,
+        share_address_space: false,
+    };
+    let r = sweep.run();
+    for x in 0..2 {
+        for y in 0..2 {
+            let s = r.slowdown(L1ArchKind::Private, x, y).unwrap();
+            assert!(
+                s > 0.95,
+                "co-running cannot meaningfully speed up {x} vs {y}: {s}"
+            );
+            assert!(s < 100.0, "slowdown out of range: {s}");
+        }
+    }
+}

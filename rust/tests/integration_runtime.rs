@@ -1,6 +1,7 @@
-//! PJRT runtime integration: the AOT JAX/Pallas artifact classifying the
+//! Locality-runtime integration: the analytics pipeline classifying the
 //! actual workload models, cross-checked against the simulator-side
-//! replication audit.  Skips gracefully when `make artifacts` has not run.
+//! replication audit.  Runs against the native pipeline; when an AOT
+//! metadata sidecar exists under `artifacts/` its shapes are honoured.
 
 use ata_cache::config::{GpuConfig, L1ArchKind};
 use ata_cache::engine::Engine;
@@ -8,17 +9,13 @@ use ata_cache::runtime::LocalityAnalyzer;
 use ata_cache::trace::signature::{exact_locality, sample_core_traces};
 use ata_cache::trace::{apps, LocalityClass};
 
-fn analyzer() -> Option<LocalityAnalyzer> {
-    if !std::path::Path::new("artifacts/locality.hlo.txt").exists() {
-        eprintln!("skipping: artifacts not built (run `make artifacts`)");
-        return None;
-    }
-    Some(LocalityAnalyzer::load("artifacts").expect("artifact loads"))
+fn analyzer() -> LocalityAnalyzer {
+    LocalityAnalyzer::load("artifacts").expect("analyzer loads")
 }
 
 #[test]
 fn artifact_classifies_all_ten_apps_like_the_paper() {
-    let Some(an) = analyzer() else { return };
+    let an = analyzer();
     let cfg = GpuConfig::paper(L1ArchKind::Private);
     let mut high_scores: Vec<f32> = Vec::new();
     let mut low_scores: Vec<f32> = Vec::new();
@@ -40,7 +37,7 @@ fn artifact_classifies_all_ten_apps_like_the_paper() {
 
 #[test]
 fn artifact_score_tracks_exact_sets_on_app_traces() {
-    let Some(an) = analyzer() else { return };
+    let an = analyzer();
     let cfg = GpuConfig::paper(L1ArchKind::Private);
     for name in ["SN", "doitgen", "hotspot"] {
         let app = apps::app(name).unwrap();
@@ -65,7 +62,7 @@ fn artifact_replication_matches_simulator_cache_audit() {
     // End-to-end cross-check: run the hammer workload on the private
     // simulator, audit which cores hold replicated lines, and confirm the
     // artifact's replication factor agrees in direction (hammer >> stream).
-    let Some(an) = analyzer() else { return };
+    let an = analyzer();
     let cfg = GpuConfig::paper(L1ArchKind::Private);
 
     let hammer = ata_cache::trace::synth::convergent_hammer();
