@@ -118,7 +118,7 @@ fn main() {
         let mut res = XbarReservation::new(8, 4, 0, u64::MAX);
         let mut last = 0u64;
         for (k, &d) in dsts.iter().enumerate() {
-            last = last.max(res.transfer(k % 8, d, 0, 4));
+            last = last.max(res.transfer(k % 8, d, 0, 4).grant);
         }
         println!(
             "crossbar model agreement (hotspot, {pkts} pkts): detailed {det_cycles} cyc vs reservation {last} cyc ({:+.1}%)",

@@ -17,7 +17,7 @@ use std::sync::Mutex;
 use crate::config::{GpuConfig, L1ArchKind};
 use crate::core::CorePartition;
 use crate::engine::{Engine, MultiWorkload};
-use crate::stats::MultiResult;
+use crate::stats::{ContentionBreakdown, MultiResult, ResourceClass};
 use crate::trace::{apps, co_workload_placed, AppModel};
 use crate::util::json::Json;
 use crate::util::table::Table;
@@ -215,6 +215,29 @@ impl CoSchedResults {
         (co > 0.0).then(|| solo / co)
     }
 
+    /// Per-resource stall cycles app `x` *gains* when co-run with `other`
+    /// relative to running alone on the same cores and address space —
+    /// i.e. which shared resource the co-runner steals from it.  Classes
+    /// where the co-run queued less (scheduling jitter) clamp to zero.
+    pub fn stolen_breakdown(
+        &self,
+        arch: L1ArchKind,
+        x: usize,
+        other: usize,
+    ) -> Option<ContentionBreakdown> {
+        let p = self.pair(arch, x, other)?;
+        // Lane index in the co-run == partition position of the solo
+        // baseline (lane 0 holds the smaller registry index).
+        let pos = if x <= other { 0 } else { 1 };
+        let co = &p.result.apps[pos].contention;
+        let solo = &self.solo(arch, x, pos)?.apps[0].contention;
+        let mut out = ContentionBreakdown::default();
+        for class in ResourceClass::ALL {
+            out.add(class, co.get(class).saturating_sub(solo.get(class)));
+        }
+        Some(out)
+    }
+
     /// Full interference matrix: `m[x][y]` = slowdown of app `x` when
     /// co-run with app `y`.
     pub fn interference_matrix(&self, arch: L1ArchKind) -> Vec<Vec<f64>> {
@@ -331,6 +354,16 @@ mod tests {
         assert_eq!(m.len(), 2);
         assert_eq!(m[0].len(), 2);
         assert!(r.render_matrix(L1ArchKind::Ata).contains("interference"));
+        // The stolen-resource lookup is populated for every pairing and
+        // never reports a class the co-run did not actually queue on.
+        for x in 0..2 {
+            for y in 0..2 {
+                let stolen = r.stolen_breakdown(L1ArchKind::Ata, x, y).unwrap();
+                let co = r.pair(L1ArchKind::Ata, x, y).unwrap();
+                let lane = if x <= y { 0 } else { 1 };
+                assert!(stolen.total() <= co.result.apps[lane].contention.total());
+            }
+        }
     }
 
     #[test]

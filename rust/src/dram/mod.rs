@@ -13,7 +13,7 @@
 
 use crate::config::DramConfig;
 use crate::mem::{decode, LineAddr};
-use crate::resource::Calendar;
+use crate::resource::{Calendar, Grant};
 
 /// Outcome class of one DRAM access (for stats).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -112,17 +112,27 @@ impl Dram {
         self.bus[ctrl].would_accept(now, self.queue_horizon)
     }
 
-    /// Service a line access (`sectors` 32 B bursts); returns the cycle
-    /// the data transfer completes.
-    pub fn access(&mut self, line: LineAddr, now: u64, sectors: u32, is_write: bool) -> u64 {
+    /// Cycles a requester must stall before the controller's finite queue
+    /// admits it (0 when `would_accept`) — the backpressure retry point.
+    pub fn admission_delay(&self, line: LineAddr, now: u64) -> u64 {
+        let (ctrl, _) = decode::dram_bank(line, self.controllers, self.banks_per);
+        self.bus[ctrl].drain_cycle(now, self.queue_horizon) - now
+    }
+
+    /// Service a line access (`sectors` 32 B bursts).  The returned
+    /// [`Grant`] carries the data-transfer completion cycle (`grant`) and
+    /// the queueing delay (`queued` = bank-ready wait + data-bus wait,
+    /// excluding activation/CAS service time).
+    pub fn access(&mut self, line: LineAddr, now: u64, sectors: u32, is_write: bool) -> Grant {
         let (ctrl, bank_idx) = decode::dram_bank(line, self.controllers, self.banks_per);
         let row = decode::dram_row(line);
         let t = self.t;
         let bank = &mut self.banks[ctrl][bank_idx];
 
         // Column command can start once the bank is ready and the request
-        // has arrived.
+        // has arrived.  Waiting for a busy bank is queueing, not service.
         let mut start = now.max(bank.ready);
+        let bank_wait = start - now;
         let outcome;
         match bank.open_row {
             Some(r) if r == row => {
@@ -159,8 +169,8 @@ impl Dram {
         // tCCD between column commands on the same bank.
         let n = sectors.max(1) as u64;
         let col_ready = start + t.cl;
-        let bus_grant = self.bus[ctrl].reserve(col_ready, (n * t.burst) as u32);
-        let done = bus_grant + n * t.burst;
+        let bus = self.bus[ctrl].reserve(col_ready, (n * t.burst) as u32);
+        let done = bus.grant + n * t.burst;
         bank.ready = start + n * t.ccd;
         if is_write {
             // Write recovery gates the next precharge; reads after writes
@@ -177,7 +187,7 @@ impl Dram {
             RowOutcome::Conflict => self.stats.row_conflicts += 1,
         }
         self.stats.total_service_cycles += done - now;
-        done
+        Grant::new(done, bank_wait + bus.queued)
     }
 
     /// Mean service latency in core cycles.
@@ -202,10 +212,11 @@ mod tests {
     #[test]
     fn first_access_pays_activate() {
         let mut d = dram();
-        let done = d.access(0, 0, 1, false);
+        let g = d.access(0, 0, 1, false);
         // tRCD + tCL + burst, all scaled by 1.365/3.5 ≈ 0.39:
         // ≥ (20+20+4)*0.39 ≈ 17 core cycles.
-        assert!(done >= 15, "got {done}");
+        assert!(g.grant >= 15, "got {}", g.grant);
+        assert_eq!(g.queued, 0, "idle bank and bus: activation is service");
         assert_eq!(d.stats.row_misses, 1);
     }
 
@@ -214,7 +225,7 @@ mod tests {
         let mut d = dram();
         d.access(0, 0, 1, false);
         let t0 = 10_000;
-        let hit_done = d.access(1, t0, 1, false) - t0; // same 2 KiB row
+        let hit_done = d.access(1, t0, 1, false).grant - t0; // same 2 KiB row
         assert_eq!(d.stats.row_hits, 1);
 
         let mut d2 = dram();
@@ -229,7 +240,7 @@ mod tests {
             }
         }
         let other = other.expect("found conflicting line");
-        let conf_done = d2.access(other, t0, 1, false) - t0;
+        let conf_done = d2.access(other, t0, 1, false).grant - t0;
         assert_eq!(d2.stats.row_conflicts, 1);
         assert!(
             conf_done > hit_done,
@@ -254,7 +265,8 @@ mod tests {
         let s = sibling.unwrap();
         let d1 = d.access(0, 0, 4, false);
         let d2 = d.access(s, 0, 4, false);
-        assert_ne!(d1, d2, "shared data bus must serialize bursts");
+        assert_ne!(d1.grant, d2.grant, "shared data bus must serialize bursts");
+        assert!(d2.queued > 0, "bus wait must be reported as queueing");
     }
 
     #[test]
@@ -271,18 +283,19 @@ mod tests {
         let o = other.unwrap();
         let d1 = d.access(0, 0, 1, false);
         let d2 = d.access(o, 0, 1, false);
-        // Both independent: same service time from time 0.
+        // Both independent: same service time from time 0, no queueing.
         assert_eq!(d1, d2);
+        assert_eq!(d2.queued, 0);
     }
 
     #[test]
     fn write_recovery_delays_reads() {
         let mut d = dram();
         d.access(0, 0, 1, true);
-        let t_after_write = d.access(1, 0, 1, false); // same bank row hit after write
+        let t_after_write = d.access(1, 0, 1, false).grant; // same bank row hit after write
         let mut d2 = dram();
         d2.access(0, 0, 1, false);
-        let t_after_read = d2.access(1, 0, 1, false);
+        let t_after_read = d2.access(1, 0, 1, false).grant;
         assert!(
             t_after_write > t_after_read,
             "tCDLR must delay read-after-write ({t_after_write} vs {t_after_read})"
@@ -294,10 +307,14 @@ mod tests {
     fn queue_horizon_backpressures() {
         let mut d = dram();
         assert!(d.would_accept(0, 0));
+        assert_eq!(d.admission_delay(0, 0), 0);
         for _ in 0..2000 {
             d.access(0, 0, 4, false);
         }
         assert!(!d.would_accept(0, 0), "saturated controller must reject");
+        let delay = d.admission_delay(0, 0);
+        assert!(delay > 0);
+        assert!(d.would_accept(0, delay), "retry at the drain cycle succeeds");
     }
 
     #[test]

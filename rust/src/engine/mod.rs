@@ -21,12 +21,24 @@ use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 use std::time::Instant;
 
+/// Per-run deltas of the shared memory-system counters (see
+/// [`Engine::mem_deltas`]).
+struct MemDeltas {
+    l2_hit_rate: f64,
+    l2_mean_fetch_latency: f64,
+    noc_flits: u64,
+    dram_reads: u64,
+    dram_writes: u64,
+}
+
 use crate::config::GpuConfig;
 use crate::core::{CorePartition, IssueBatch, SimtCore, WarpProgram};
 use crate::l1arch::{self, L1Arch};
 use crate::l2::MemSystem;
 use crate::mem::LineAddr;
-use crate::stats::{AppCoStats, KernelStats, LoadLatencyTracker, MultiResult, SimResult};
+use crate::stats::{
+    AppCoStats, ContentionStats, KernelStats, LoadLatencyTracker, MultiResult, SimResult,
+};
 
 /// One kernel launch: a set of warp programs per core.
 #[derive(Debug, Clone, Default)]
@@ -185,31 +197,97 @@ impl Engine {
     }
 
     /// Run a full workload; caches stay warm across kernels.
+    ///
+    /// Every reported metric is a *per-run delta*: on a reused (warm)
+    /// engine the result describes only this run, mirroring
+    /// [`Engine::run_multi`].  The latency trackers are reset at run
+    /// start (no loads can be outstanding between runs), so means and
+    /// maxima are per-run too.
     pub fn run(&mut self, workload: &Workload) -> SimResult {
         let host_start = Instant::now();
+        let start_cycle = self.cycle;
+        let start_insts = self.total_insts;
+        debug_assert_eq!(self.tracker.outstanding(), 0);
+        debug_assert_eq!(self.stage_tracker.outstanding(), 0);
+        self.tracker = LoadLatencyTracker::default();
+        self.stage_tracker = LoadLatencyTracker::default();
+        let l1_before = *self.l1.stats();
+        let l2_before = self.mem.stats;
+        let dram_before = self.mem.dram_stats();
+        let noc_before = self.mem.noc_flits();
+        let con_before = self.contention();
+
         let mut kernels = Vec::with_capacity(workload.kernels.len());
         for k in &workload.kernels {
             kernels.push(self.run_kernel(k));
         }
-        let l1 = *self.l1.stats();
+
+        let l1 = self.l1.stats().delta(&l1_before);
+        let md = self.mem_deltas(&l2_before, dram_before, noc_before);
+        let contention = *self.contention().delta(&con_before).total();
         SimResult {
             app: workload.name.clone(),
             arch: self.l1.kind().name().to_string(),
-            cycles: self.cycle,
-            insts: self.total_insts,
+            cycles: self.cycle - start_cycle,
+            insts: self.total_insts - start_insts,
             l1,
+            loads: self.tracker.completed_loads,
             l1_mean_load_latency: self.tracker.mean(),
             l1_max_load_latency: self.tracker.max_latency,
             l1_stage_mean_latency: self.stage_tracker.mean(),
             l1_stage_max_latency: self.stage_tracker.max_latency,
-            l2_hit_rate: self.mem.l2_hit_rate(),
-            l2_mean_fetch_latency: self.mem.mean_fetch_latency(),
-            noc_flits: self.mem.noc_flits(),
-            dram_reads: self.mem.dram_stats().reads,
-            dram_writes: self.mem.dram_stats().writes,
+            l2_hit_rate: md.l2_hit_rate,
+            l2_mean_fetch_latency: md.l2_mean_fetch_latency,
+            noc_flits: md.noc_flits,
+            dram_reads: md.dram_reads,
+            dram_writes: md.dram_writes,
+            contention,
             kernels,
             host_seconds: host_start.elapsed().as_secs_f64(),
         }
+    }
+
+    /// Per-run deltas of the shared memory-system counters against a
+    /// snapshot taken at run start (used identically by [`Engine::run`]
+    /// and [`Engine::run_multi`]).
+    fn mem_deltas(
+        &self,
+        l2_before: &crate::l2::L2Stats,
+        dram_before: crate::dram::DramStats,
+        noc_before: u64,
+    ) -> MemDeltas {
+        let l2 = self.mem.stats;
+        let accesses = l2.accesses - l2_before.accesses;
+        let hits = l2.hits - l2_before.hits;
+        let fetches = l2.fetches - l2_before.fetches;
+        let fetch_latency = l2.total_fetch_latency - l2_before.total_fetch_latency;
+        let dram = self.mem.dram_stats();
+        MemDeltas {
+            l2_hit_rate: if accesses == 0 {
+                0.0
+            } else {
+                hits as f64 / accesses as f64
+            },
+            l2_mean_fetch_latency: if fetches == 0 {
+                0.0
+            } else {
+                fetch_latency as f64 / fetches as f64
+            },
+            noc_flits: self.mem.noc_flits() - noc_before,
+            dram_reads: dram.reads - dram_before.reads,
+            dram_writes: dram.writes - dram_before.writes,
+        }
+    }
+
+    /// End-to-end per-core contention attribution: the L1 organization's
+    /// share (tag/data banks, comparators, intra-cluster fabric, MSHR
+    /// stalls) combined with the memory system's (NoC links, L2 slices,
+    /// DRAM).  Counters are cumulative over the engine's lifetime; take
+    /// deltas for per-run reporting.
+    pub fn contention(&self) -> ContentionStats {
+        let mut c = self.l1.contention().clone();
+        c.absorb(self.mem.contention());
+        c
     }
 
     /// Run N applications concurrently on disjoint core partitions.
@@ -306,6 +384,7 @@ impl Engine {
         let l2_before = self.mem.stats;
         let dram_before = self.mem.dram_stats();
         let noc_before = self.mem.noc_flits();
+        let con_before = self.contention();
         // Deadlock guard: the co-run may legitimately span many kernels
         // per lane, so scale the solo path's per-kernel budget.
         let total_kernels: u64 = multi.lanes.iter().map(|l| l.kernels.len() as u64).sum();
@@ -437,12 +516,8 @@ impl Engine {
         // Every reported metric is a *per-run delta*, so a reused (warm)
         // engine yields results that describe only this co-execution.
         let l1 = self.l1.stats().delta(&l1_before);
-        let l2 = self.mem.stats;
-        let l2_accesses = l2.accesses - l2_before.accesses;
-        let l2_hits = l2.hits - l2_before.hits;
-        let l2_fetches = l2.fetches - l2_before.fetches;
-        let l2_fetch_latency = l2.total_fetch_latency - l2_before.total_fetch_latency;
-        let dram = self.mem.dram_stats();
+        let md = self.mem_deltas(&l2_before, dram_before, noc_before);
+        let con = self.contention().delta(&con_before);
 
         let apps: Vec<AppCoStats> = multi
             .lanes
@@ -458,6 +533,10 @@ impl Engine {
                 mean_load_latency: run.tracker.mean(),
                 stage_mean_latency: run.stage_tracker.mean(),
                 requests: run.requests,
+                // Which resources this app's cores stalled on during the
+                // co-run — compare against the solo baseline to see what a
+                // co-runner steals.
+                contention: con.lane_total(spec.partition.first, spec.partition.count),
                 kernels: run.kernels_out.clone(),
             })
             .collect();
@@ -468,19 +547,12 @@ impl Engine {
             cycles: self.cycle - start_cycle,
             insts: apps.iter().map(|a| a.insts).sum(),
             l1,
-            l2_hit_rate: if l2_accesses == 0 {
-                0.0
-            } else {
-                l2_hits as f64 / l2_accesses as f64
-            },
-            l2_mean_fetch_latency: if l2_fetches == 0 {
-                0.0
-            } else {
-                l2_fetch_latency as f64 / l2_fetches as f64
-            },
-            noc_flits: self.mem.noc_flits() - noc_before,
-            dram_reads: dram.reads - dram_before.reads,
-            dram_writes: dram.writes - dram_before.writes,
+            l2_hit_rate: md.l2_hit_rate,
+            l2_mean_fetch_latency: md.l2_mean_fetch_latency,
+            noc_flits: md.noc_flits,
+            dram_reads: md.dram_reads,
+            dram_writes: md.dram_writes,
+            contention: *con.total(),
             apps,
             host_seconds: host_start.elapsed().as_secs_f64(),
         }
@@ -719,6 +791,61 @@ mod tests {
         // Second kernel re-reads the same line: all hits.
         assert!(r.kernels[1].l1_hit_rate > 0.9, "{:?}", r.kernels[1]);
         assert!(r.kernels[1].l1_mean_latency < r.kernels[0].l1_mean_latency);
+    }
+
+    #[test]
+    fn warm_engine_reports_per_run_deltas() {
+        // Regression for per-run delta accounting: running the same
+        // workload twice on ONE engine must report each run's own
+        // counters (not cumulative totals), with no zero-divisions in the
+        // mean latencies, and the deltas must partition the cumulative
+        // counters exactly.
+        let cfg = GpuConfig::tiny(L1ArchKind::Ata);
+        let wl = Workload {
+            name: "t".into(),
+            kernels: vec![simple_kernel(&cfg, |c| {
+                (0..8).map(|k| (c as u64 * 13 + k) % 32).collect()
+            })],
+        };
+        let mut eng = Engine::new(&cfg);
+        let r1 = eng.run(&wl);
+        let r2 = eng.run(&wl);
+        // Count-based metrics are workload properties — identical runs.
+        assert_eq!(r1.insts, r2.insts);
+        assert_eq!(r1.l1.accesses, r2.l1.accesses);
+        assert_eq!(r1.loads, r2.loads);
+        assert!(r1.loads > 0);
+        // Deltas partition the engine's cumulative counters.
+        assert_eq!(
+            eng.l1_stats().accesses,
+            r1.l1.accesses + r2.l1.accesses,
+            "per-run deltas must sum to the cumulative total"
+        );
+        let mut merged = r1.contention;
+        merged.merge(&r2.contention);
+        assert_eq!(
+            *eng.contention().total(),
+            merged,
+            "contention deltas must partition the cumulative breakdown"
+        );
+        // Timing metrics are per-run: the warm second run cannot be slower
+        // than the cold first, and no mean divides by zero.
+        assert!(r2.cycles > 0 && r2.cycles <= r1.cycles);
+        assert!(r2.l1_mean_load_latency.is_finite() && r2.l1_mean_load_latency >= 1.0);
+        assert!(r2.l1_stage_mean_latency.is_finite());
+        assert!(r2.l1.local_hits >= r1.l1.local_hits, "warm caches hit more");
+        // Determinism: a second engine reproduces both runs bit-identically
+        // (including the new contention breakdown).
+        let mut eng2 = Engine::new(&cfg);
+        let b1 = eng2.run(&wl);
+        let b2 = eng2.run(&wl);
+        assert_eq!(r1.cycles, b1.cycles);
+        assert_eq!(r2.cycles, b2.cycles);
+        assert_eq!(r1.l1_mean_load_latency, b1.l1_mean_load_latency);
+        assert_eq!(r2.l1_mean_load_latency, b2.l1_mean_load_latency);
+        assert_eq!(r1.contention, b1.contention);
+        assert_eq!(r2.contention, b2.contention);
+        assert_eq!(r2.l1.local_hits, b2.l1.local_hits);
     }
 
     #[test]

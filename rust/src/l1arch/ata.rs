@@ -24,10 +24,10 @@ use crate::config::{GpuConfig, L1ArchKind};
 use crate::l2::MemSystem;
 use crate::mem::{decode, LineAddr, MemRequest};
 use crate::noc::XbarReservation;
-use crate::stats::L1Stats;
+use crate::stats::{ContentionStats, L1Stats, ResourceClass};
 
 use super::ata_tag::{AggregatedTagArray, AggregateProbe};
-use super::common::{handle_store, install_fill, CoreL1, L1Timing};
+use super::common::{handle_store, install_fill, mshr_dispatch, CoreL1, L1Timing};
 use super::{AccessResult, ClusterMap, L1Arch};
 
 #[derive(Debug)]
@@ -40,6 +40,7 @@ pub struct AtaCache {
     map: ClusterMap,
     timing: L1Timing,
     stats: L1Stats,
+    con: ContentionStats,
     xbar_latency: u32,
     fill_local: bool,
 }
@@ -70,6 +71,7 @@ impl AtaCache {
             map: ClusterMap::new(cfg),
             timing: L1Timing::new(cfg),
             stats: L1Stats::default(),
+            con: ContentionStats::new(cfg.cores),
             xbar_latency: cfg.sharing.cluster_xbar_latency,
             fill_local: cfg.sharing.fill_local_on_remote_hit,
         }
@@ -97,11 +99,12 @@ impl AtaCache {
                 start + 1 + self.timing.latency as u64,
             );
         }
-        let s = l1.mshr.earliest(start);
+        let s = mshr_dispatch(l1, req.core, start, &mut self.stats, &mut self.con);
         let fill = mem.fetch(req, s);
-        l1.mshr.occupy_until(start, fill);
+        l1.mshr.occupy_until(s, fill);
         let usable = install_fill(
             &mut self.cores[req.core as usize],
+            req.core,
             req.core,
             req.line,
             req.sectors,
@@ -124,8 +127,11 @@ impl L1Arch for AtaCache {
         let cluster = self.map.cluster_of(core);
         let my_idx = self.map.index_in_cluster(core);
 
-        // Every request flows through the aggregated tag array first.
-        let t_tag = self.tag_arrays[cluster].lookup_timing(now);
+        // Every request flows through the aggregated tag array first
+        // (comparator-group arbitration is the contention knob of §III-B).
+        let tag = self.tag_arrays[cluster].lookup_timing(now);
+        self.con.add(core, ResourceClass::AtaComparator, tag.queued);
+        let t_tag = tag.grant;
 
         if req.is_write() {
             // §III-C: writes are local-only; the tag pipeline still ran.
@@ -136,6 +142,7 @@ impl L1Arch for AtaCache {
                 &self.timing,
                 mem,
                 &mut self.stats,
+                &mut self.con,
             );
         }
 
@@ -156,9 +163,10 @@ impl L1Arch for AtaCache {
             // the local data array.
             self.cores[core].cache.tags.lookup(req.line, req.sectors);
             let bank = decode::l1_bank(req.line, self.timing.banks);
-            let grant = self.cores[core].banks.reserve(bank, t_tag, 1);
-            self.stats.bank_conflict_cycles += grant - t_tag;
-            return AccessResult::served(grant + self.timing.latency as u64);
+            let g = self.cores[core].banks.reserve(bank, t_tag, 1);
+            self.stats.bank_conflict_cycles += g.queued;
+            self.con.add(core, ResourceClass::L1DataBank, g.queued);
+            return AccessResult::served(g.grant + self.timing.latency as u64);
         }
 
         // Fig 7(a): remote hit — only clean copies are usable.
@@ -169,8 +177,9 @@ impl L1Arch for AtaCache {
             let arrive = {
                 let a = self.xbars[cluster].transfer(my_idx, holder_idx, t_tag, 1);
                 let uncontended = t_tag + self.xbar_latency as u64 + 2;
-                self.stats.sharing_net_cycles += a.saturating_sub(uncontended);
-                a
+                self.stats.sharing_net_cycles += a.grant.saturating_sub(uncontended);
+                self.con.add(core, ResourceClass::ClusterXbar, a.queued);
+                a.grant
             };
             // ...the holder's data array serves it (bank contention is the
             // residual sharing cost the paper acknowledges)...
@@ -180,20 +189,23 @@ impl L1Arch for AtaCache {
                 .in_flight_ready(req.line, arrive)
                 .unwrap_or(arrive);
             let g = self.cores[holder].banks.reserve(bank, avail, 1);
-            self.stats.bank_conflict_cycles += g - avail;
+            self.stats.bank_conflict_cycles += g.queued;
+            self.con.add(core, ResourceClass::L1DataBank, g.queued);
             self.cores[holder].cache.tags.lookup(req.line, req.sectors); // LRU touch on use
-            let data_start = g + self.timing.latency as u64;
+            let data_start = g.grant + self.timing.latency as u64;
             // ...and the data crosses back.
             let flits = self.timing.data_flits(req.sector_count());
             let back = {
                 let a = self.xbars[cluster].transfer(holder_idx, my_idx, data_start, flits);
                 let uncontended = data_start + self.xbar_latency as u64 + 2 * flits as u64;
-                self.stats.sharing_net_cycles += a.saturating_sub(uncontended);
-                a
+                self.stats.sharing_net_cycles += a.grant.saturating_sub(uncontended);
+                self.con.add(core, ResourceClass::ClusterXbar, a.queued);
+                a.grant
             };
             if self.fill_local {
                 let usable = install_fill(
                     &mut self.cores[core],
+                    req.core,
                     req.core,
                     req.line,
                     req.sectors,
@@ -229,6 +241,10 @@ impl L1Arch for AtaCache {
 
     fn stats(&self) -> &L1Stats {
         &self.stats
+    }
+
+    fn contention(&self) -> &ContentionStats {
+        &self.con
     }
 
     fn kind(&self) -> L1ArchKind {

@@ -19,7 +19,7 @@
 
 use crate::cache::Probe;
 use crate::mem::{LineAddr, SectorMask};
-use crate::resource::MultiPort;
+use crate::resource::{Grant, MultiPort};
 
 use super::common::CoreL1;
 
@@ -80,11 +80,12 @@ impl AggregatedTagArray {
         }
     }
 
-    /// Reserve a comparator group at `now`; returns the cycle the hit
-    /// vector is available.
-    pub fn lookup_timing(&mut self, now: u64) -> u64 {
-        let grant = self.comparators.reserve(now, 1);
-        grant + self.tag_latency as u64
+    /// Reserve a comparator group at `now`.  The returned [`Grant`]
+    /// carries the cycle the hit vector is available (`grant`) and the
+    /// comparator-group arbitration delay (`queued`).
+    pub fn lookup_timing(&mut self, now: u64) -> Grant {
+        let g = self.comparators.reserve(now, 1);
+        Grant::new(g.grant + self.tag_latency as u64, g.queued)
     }
 
     /// Compare `line` against every cluster cache's tags in parallel.
@@ -204,10 +205,10 @@ mod tests {
     fn comparator_groups_conflict_free_at_provisioned_width() {
         // One group per core: N simultaneous lookups all start at `now`.
         let mut ata = AggregatedTagArray::new(4, 2);
-        let t: Vec<u64> = (0..4).map(|_| ata.lookup_timing(100)).collect();
-        assert!(t.iter().all(|&x| x == 102), "{t:?}");
+        let t: Vec<Grant> = (0..4).map(|_| ata.lookup_timing(100)).collect();
+        assert!(t.iter().all(|&x| x == Grant::new(102, 0)), "{t:?}");
         // A 5th concurrent request on an under-provisioned array queues.
         let t5 = ata.lookup_timing(100);
-        assert_eq!(t5, 103);
+        assert_eq!(t5, Grant::new(103, 1));
     }
 }

@@ -12,9 +12,9 @@ use crate::config::{GpuConfig, L1ArchKind};
 use crate::l2::MemSystem;
 use crate::mem::{decode, LineAddr, MemRequest};
 use crate::noc::XbarReservation;
-use crate::stats::L1Stats;
+use crate::stats::{ContentionStats, L1Stats, ResourceClass};
 
-use super::common::{install_fill, CoreL1, L1Timing};
+use super::common::{install_fill, mshr_dispatch, CoreL1, L1Timing};
 use super::{AccessResult, ClusterMap, L1Arch};
 
 #[derive(Debug)]
@@ -25,6 +25,7 @@ pub struct DecoupledSharingL1 {
     map: ClusterMap,
     timing: L1Timing,
     stats: L1Stats,
+    con: ContentionStats,
     xbar_latency: u32,
 }
 
@@ -46,6 +47,7 @@ impl DecoupledSharingL1 {
             map: ClusterMap::new(cfg),
             timing: L1Timing::new(cfg),
             stats: L1Stats::default(),
+            con: ContentionStats::new(cfg.cores),
             xbar_latency: cfg.sharing.cluster_xbar_latency,
         }
     }
@@ -57,16 +59,19 @@ impl DecoupledSharingL1 {
         self.map.global_core(cluster, idx)
     }
 
-    /// Route a request header from `core` to `home` over the cluster
-    /// crossbar; returns arrival cycle and accounts queueing.
-    fn route(&mut self, core: usize, home: usize, now: u64, flits: u32) -> u64 {
+    /// Route a packet from `core` to `home` over the cluster crossbar;
+    /// returns the arrival cycle and charges queueing to `attr_core` (the
+    /// requesting core, which may differ from the sending endpoint on the
+    /// data-return hop).
+    fn route(&mut self, core: usize, home: usize, now: u64, flits: u32, attr_core: usize) -> u64 {
         let cluster = self.map.cluster_of(core);
         let src = self.map.index_in_cluster(core);
         let dst = self.map.index_in_cluster(home);
-        let arrive = self.xbars[cluster].transfer(src, dst, now, flits);
+        let g = self.xbars[cluster].transfer(src, dst, now, flits);
         let uncontended = now + self.xbar_latency as u64 + 2 * flits as u64;
-        self.stats.sharing_net_cycles += arrive.saturating_sub(uncontended);
-        arrive
+        self.stats.sharing_net_cycles += g.grant.saturating_sub(uncontended);
+        self.con.add(attr_core, ResourceClass::ClusterXbar, g.queued);
+        g.grant
     }
 }
 
@@ -84,25 +89,30 @@ impl L1Arch for DecoupledSharingL1 {
                 now
             } else {
                 let flits = self.timing.data_flits(req.sector_count());
-                self.route(core, home, now, flits)
+                self.route(core, home, now, flits, core)
             };
             let l1 = &mut self.caches[home];
             let bank = decode::l1_bank(req.line, self.timing.banks);
             let g = l1.banks.reserve(bank, t_arrive, 1);
-            self.stats.bank_conflict_cycles += g - t_arrive;
+            self.stats.bank_conflict_cycles += g.queued;
+            self.con.add(core, ResourceClass::L1DataBank, g.queued);
             let (_, evicted) = l1.cache.fill(req.line, req.sectors);
             l1.cache.tags.mark_dirty(req.line, req.sectors);
             if let Some(ev) = evicted {
-                mem.write(home, ev.line, ev.dirty_sectors.count_ones(), g);
+                debug_assert!(ev.dirty_sectors != 0, "clean victims are not reported");
+                if ev.dirty_sectors != 0 {
+                    // Routed through the home port, charged to the writer.
+                    mem.write_for(home, ev.line, ev.dirty_sectors.count_ones(), g.grant, core);
+                }
             }
-            return AccessResult::served(g + 1);
+            return AccessResult::served(g.grant + 1);
         }
 
         // Load: route to home, access the slice, route the data back.
         let t_arrive = if is_local_slice {
             now
         } else {
-            self.route(core, home, now, 1)
+            self.route(core, home, now, 1, core)
         };
 
         let l1 = &mut self.caches[home];
@@ -122,8 +132,9 @@ impl L1Arch for DecoupledSharingL1 {
                     self.stats.remote_hits += 1;
                 }
                 let g = l1.banks.reserve(bank, t_arrive, 1);
-                self.stats.bank_conflict_cycles += g - t_arrive;
-                let d = g + self.timing.latency as u64;
+                self.stats.bank_conflict_cycles += g.queued;
+                self.con.add(core, ResourceClass::L1DataBank, g.queued);
+                let d = g.grant + self.timing.latency as u64;
                 (d, d)
             }
             probe => {
@@ -132,7 +143,9 @@ impl L1Arch for DecoupledSharingL1 {
                     (ready.max(t_arrive) + 1, t_arrive + 1 + self.timing.latency as u64)
                 } else {
                     // Tag probe costs one bank cycle on a miss too.
-                    let t_tag = l1.banks.reserve(bank, t_arrive, 1) + 1;
+                    let g = l1.banks.reserve(bank, t_arrive, 1);
+                    self.con.add(core, ResourceClass::L1TagBank, g.queued);
+                    let t_tag = g.grant + 1;
                     let fetch_sectors = match probe {
                         Probe::SectorMiss { missing, .. } => {
                             self.stats.sector_misses += 1;
@@ -144,18 +157,22 @@ impl L1Arch for DecoupledSharingL1 {
                         }
                     };
                     // The home slice owns the miss: its NoC port issues the
-                    // L2 fetch and the fill lands in the home cache.
-                    let s = l1.mshr.earliest(t_tag);
+                    // L2 fetch and the fill lands in the home cache.  All
+                    // stalls (MSHR-full and the memory side) are still
+                    // charged to the *requesting* core — it is the one
+                    // whose access waits (`fetch_for`).
+                    let s = mshr_dispatch(l1, req.core, t_tag, &mut self.stats, &mut self.con);
                     let fetch_req = MemRequest {
                         core: home as u32,
                         sectors: fetch_sectors,
                         ..*req
                     };
-                    let fill = mem.fetch(&fetch_req, s);
-                    self.caches[home].mshr.occupy_until(t_tag, fill);
+                    let fill = mem.fetch_for(&fetch_req, s, core);
+                    self.caches[home].mshr.occupy_until(s, fill);
                     let usable = install_fill(
                         &mut self.caches[home],
                         home as u32,
+                        req.core,
                         req.line,
                         fetch_sectors,
                         fill,
@@ -178,7 +195,7 @@ impl L1Arch for DecoupledSharingL1 {
             // decoupled latency includes it); for a miss the stage already
             // ended at L2 dispatch.
             let flits = self.timing.data_flits(req.sector_count());
-            let back = self.route(home, core, data_ready, flits);
+            let back = self.route(home, core, data_ready, flits, core);
             let stage_back = if stage == data_ready { back } else { stage };
             AccessResult::new(back, stage_back)
         }
@@ -186,6 +203,10 @@ impl L1Arch for DecoupledSharingL1 {
 
     fn stats(&self) -> &L1Stats {
         &self.stats
+    }
+
+    fn contention(&self) -> &ContentionStats {
+        &self.con
     }
 
     fn kind(&self) -> L1ArchKind {

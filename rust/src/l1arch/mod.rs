@@ -20,7 +20,7 @@ pub mod remote;
 use crate::config::{GpuConfig, L1ArchKind};
 use crate::l2::MemSystem;
 use crate::mem::{LineAddr, MemRequest};
-use crate::stats::L1Stats;
+use crate::stats::{ContentionStats, L1Stats};
 
 /// Outcome of one request through an L1 organization.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -88,6 +88,14 @@ pub trait L1Arch: std::fmt::Debug + Send {
 
     /// Aggregated counters (see the trait-level stats invariants).
     fn stats(&self) -> &L1Stats;
+
+    /// Per-core, per-resource queueing attribution for the L1-side
+    /// resources this organization owns (tag/data banks, comparator
+    /// groups, the intra-cluster fabric, MSHR-full stalls).  Charged to
+    /// the requesting core; monotone like the scalar counters.  The
+    /// engine combines this with the memory system's share
+    /// ([`MemSystem::contention`]) into the end-to-end breakdown.
+    fn contention(&self) -> &ContentionStats;
 
     /// Which organization this is (matches the config that built it).
     fn kind(&self) -> L1ArchKind;

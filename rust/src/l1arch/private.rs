@@ -7,7 +7,7 @@
 use crate::config::{GpuConfig, L1ArchKind};
 use crate::l2::MemSystem;
 use crate::mem::{LineAddr, MemRequest};
-use crate::stats::L1Stats;
+use crate::stats::{ContentionStats, L1Stats};
 
 use super::common::{handle_store, local_load, CoreL1, L1Timing};
 use super::{AccessResult, L1Arch};
@@ -17,6 +17,7 @@ pub struct PrivateL1 {
     cores: Vec<CoreL1>,
     timing: L1Timing,
     stats: L1Stats,
+    con: ContentionStats,
 }
 
 impl PrivateL1 {
@@ -25,6 +26,7 @@ impl PrivateL1 {
             cores: (0..cfg.cores).map(|_| CoreL1::new(cfg)).collect(),
             timing: L1Timing::new(cfg),
             stats: L1Stats::default(),
+            con: ContentionStats::new(cfg.cores),
         }
     }
 }
@@ -34,14 +36,18 @@ impl L1Arch for PrivateL1 {
         self.stats.accesses += 1;
         let l1 = &mut self.cores[req.core as usize];
         if req.is_write() {
-            handle_store(l1, req, now, &self.timing, mem, &mut self.stats)
+            handle_store(l1, req, now, &self.timing, mem, &mut self.stats, &mut self.con)
         } else {
-            local_load(l1, req, now, &self.timing, mem, &mut self.stats)
+            local_load(l1, req, now, &self.timing, mem, &mut self.stats, &mut self.con)
         }
     }
 
     fn stats(&self) -> &L1Stats {
         &self.stats
+    }
+
+    fn contention(&self) -> &ContentionStats {
+        &self.con
     }
 
     fn kind(&self) -> L1ArchKind {

@@ -21,10 +21,10 @@ use crate::config::{GpuConfig, L1ArchKind};
 use crate::l2::MemSystem;
 use crate::mem::{decode, LineAddr, MemRequest};
 use crate::noc::Ring;
-use crate::stats::L1Stats;
+use crate::stats::{ContentionStats, L1Stats, ResourceClass};
 use crate::util::rng::Pcg32;
 
-use super::common::{handle_store, install_fill, CoreL1, L1Timing};
+use super::common::{handle_store, install_fill, mshr_dispatch, CoreL1, L1Timing};
 use super::{AccessResult, ClusterMap, L1Arch};
 
 #[derive(Debug)]
@@ -34,6 +34,7 @@ pub struct RemoteSharingL1 {
     map: ClusterMap,
     timing: L1Timing,
     stats: L1Stats,
+    con: ContentionStats,
     predictor: bool,
     predictor_accuracy: f64,
     fill_local: bool,
@@ -58,6 +59,7 @@ impl RemoteSharingL1 {
             map: ClusterMap::new(cfg),
             timing: L1Timing::new(cfg),
             stats: L1Stats::default(),
+            con: ContentionStats::new(cfg.cores),
             predictor: cfg.sharing.probe_predictor,
             predictor_accuracy: cfg.sharing.predictor_accuracy,
             fill_local: cfg.sharing.fill_local_on_remote_hit,
@@ -93,7 +95,7 @@ impl L1Arch for RemoteSharingL1 {
         self.stats.accesses += 1;
         if req.is_write() {
             let l1 = &mut self.cores[req.core as usize];
-            return handle_store(l1, req, now, &self.timing, mem, &mut self.stats);
+            return handle_store(l1, req, now, &self.timing, mem, &mut self.stats, &mut self.con);
         }
 
         let core = req.core as usize;
@@ -113,9 +115,10 @@ impl L1Arch for RemoteSharingL1 {
                     );
                 }
                 self.stats.local_hits += 1;
-                let grant = self.cores[core].banks.reserve(bank, now, 1);
-                self.stats.bank_conflict_cycles += grant - now;
-                return AccessResult::served(grant + self.timing.latency as u64);
+                let g = self.cores[core].banks.reserve(bank, now, 1);
+                self.stats.bank_conflict_cycles += g.queued;
+                self.con.add(core, ResourceClass::L1DataBank, g.queued);
+                return AccessResult::served(g.grant + self.timing.latency as u64);
             }
             _ => {
                 // In-flight merge check before probing.
@@ -127,7 +130,9 @@ impl L1Arch for RemoteSharingL1 {
                     );
                 }
                 // The local tag probe costs one bank cycle.
-                t_tag = self.cores[core].banks.reserve(bank, now, 1) + 1;
+                let g = self.cores[core].banks.reserve(bank, now, 1);
+                self.con.add(core, ResourceClass::L1TagBank, g.queued);
+                t_tag = g.grant + 1;
             }
         }
 
@@ -149,11 +154,16 @@ impl L1Arch for RemoteSharingL1 {
         let ring = &mut self.rings[cluster];
         let uncontended = (self.map.cores_per_cluster - 1) as u64
             * (ring.ser_cycles(self.probe_bytes) as u64 + 1);
-        let probe_done = ring.broadcast(my_stop, t_tag, self.probe_bytes);
+        let probe = ring.broadcast(my_stop, t_tag, self.probe_bytes);
+        let probe_done = probe.grant;
         self.stats.sharing_net_cycles += probe_done.saturating_sub(t_tag + uncontended);
+        self.con.add(core, ResourceClass::ClusterXbar, probe.queued);
 
         // Remote caches process the probe: one cycle on the probed line's
         // bank at every peer (the extra tag-resource cost of probing).
+        // The occupancy is what matters — the probe itself does not wait
+        // for the peer banks, so its own grant delay is *not* charged to
+        // the breakdown (the delayed peer accesses charge theirs).
         let peer_ids: Vec<usize> = self.map.peers(core).collect();
         for peer in peer_ids {
             self.cores[peer].banks.reserve(bank, probe_done, 1);
@@ -170,14 +180,17 @@ impl L1Arch for RemoteSharingL1 {
                     .cores[peer]
                     .in_flight_ready(req.line, probe_done)
                     .unwrap_or(probe_done);
-                let data_start = self.cores[peer].banks.reserve(bank, avail, 1)
-                    + self.timing.latency as u64;
+                let g = self.cores[peer].banks.reserve(bank, avail, 1);
+                self.con.add(core, ResourceClass::L1DataBank, g.queued);
+                let data_start = g.grant + self.timing.latency as u64;
                 let bytes = req.sector_count() as usize * self.timing.sector_bytes + 8;
-                let arrive =
-                    self.rings[cluster].send(peer_stop, my_stop, data_start, bytes);
+                let back = self.rings[cluster].send(peer_stop, my_stop, data_start, bytes);
+                self.con.add(core, ResourceClass::ClusterXbar, back.queued);
+                let arrive = back.grant;
                 if self.fill_local {
                     let usable = install_fill(
                         &mut self.cores[core],
+                        req.core,
                         req.core,
                         req.line,
                         req.sectors,
@@ -207,6 +220,10 @@ impl L1Arch for RemoteSharingL1 {
         &self.stats
     }
 
+    fn contention(&self) -> &ContentionStats {
+        &self.con
+    }
+
     fn kind(&self) -> L1ArchKind {
         L1ArchKind::RemoteSharing
     }
@@ -226,11 +243,12 @@ impl RemoteSharingL1 {
     fn miss_to_l2(&mut self, req: &MemRequest, start: u64, mem: &mut MemSystem) -> AccessResult {
         self.stats.misses += 1;
         let l1 = &mut self.cores[req.core as usize];
-        let s = l1.mshr.earliest(start);
+        let s = mshr_dispatch(l1, req.core, start, &mut self.stats, &mut self.con);
         let fill = mem.fetch(req, s);
-        l1.mshr.occupy_until(start, fill);
+        l1.mshr.occupy_until(s, fill);
         let usable = install_fill(
             &mut self.cores[req.core as usize],
+            req.core,
             req.core,
             req.line,
             req.sectors,

@@ -14,6 +14,7 @@ use crate::dram::Dram;
 use crate::mem::{decode, LineAddr, MemRequest};
 use crate::noc::XbarReservation;
 use crate::resource::BankedCalendar;
+use crate::stats::{ContentionStats, ResourceClass};
 use crate::util::fxhash::FxHashMap;
 
 #[derive(Debug, Clone, Copy, Default)]
@@ -30,6 +31,9 @@ pub struct L2Stats {
     /// Sum of round-trip latencies for fetches (for mean).
     pub total_fetch_latency: u64,
     pub fetches: u64,
+    /// Requests that stalled on a full finite buffer (NoC injection port
+    /// or DRAM controller queue) and retried at the backlog-drain cycle.
+    pub backpressure_stalls: u64,
 }
 
 /// In-flight fill tracking for MSHR-style merging at L2.
@@ -50,6 +54,9 @@ pub struct MemSystem {
     dram: Dram,
     in_flight: FxHashMap<LineAddr, InFlight>,
     pub stats: L2Stats,
+    /// Per-core contention attribution for the memory side (NoC links, L2
+    /// slice ports, DRAM) — charged to the *requesting* core.
+    con: ContentionStats,
     // Geometry/timing captured from config.
     n_slices: usize,
     l2_latency: u32,
@@ -78,6 +85,7 @@ impl MemSystem {
             dram: Dram::new(&cfg.dram, cfg.core_clock_ghz),
             in_flight: FxHashMap::default(),
             stats: L2Stats::default(),
+            con: ContentionStats::new(cfg.cores),
             n_slices: cfg.l2.slices,
             l2_latency: cfg.l2.latency,
             flit_bytes: cfg.noc.flit_bytes,
@@ -98,18 +106,50 @@ impl MemSystem {
 
     /// Full miss round trip for a read: returns the cycle the fill data
     /// arrives back at the requesting core's L1.
+    ///
+    /// Every queued cycle along the way — NoC injection backpressure,
+    /// crossbar ports, the slice access port, the DRAM controller queue,
+    /// bank and bus waits, and the response crossing — is charged to
+    /// `req.core` in the per-resource [`ContentionStats`].
     pub fn fetch(&mut self, req: &MemRequest, now: u64) -> u64 {
+        self.fetch_for(req, now, req.core as usize)
+    }
+
+    /// [`fetch`](Self::fetch) with the contention charged to `attr_core`
+    /// instead of `req.core`.  Decoupled-sharing issues misses from the
+    /// line's *home slice* (`req.core` is the NoC endpoint) while the
+    /// queueing is suffered by the core whose load waits — attribution
+    /// must follow the sufferer so per-app lane rollups stay honest.
+    pub fn fetch_for(&mut self, req: &MemRequest, now: u64, attr_core: usize) -> u64 {
+        // `core` is the physical NoC endpoint (where the request enters
+        // and the data returns); `attr_core` is who the queueing is
+        // charged to.  They coincide except on decoupled's home-slice
+        // misses.
+        let core = req.core as usize;
         let slice = decode::l2_slice(req.line, self.n_slices);
         let sectors = req.sector_count().max(1);
 
+        // Finite input buffer: when the core's injection port backlog
+        // exceeds the buffer horizon the request stalls *upstream* (in the
+        // L1 / MSHR) and retries at the backlog-drain cycle instead of
+        // reserving into an unbounded future.
+        let stall = self.req_net.admission_delay(core, now);
+        if stall > 0 {
+            self.stats.backpressure_stalls += 1;
+            self.con.add(attr_core, ResourceClass::NocLink, stall);
+        }
+        let start = now + stall;
+
         // Request crossing (header-only packet for reads).
         self.stats.request_flits += self.header_flits as u64;
-        let at_slice = self
-            .req_net
-            .transfer(req.core as usize, slice, now, self.header_flits);
+        let req_hop = self.req_net.transfer(core, slice, start, self.header_flits);
+        self.con.add(attr_core, ResourceClass::NocLink, req_hop.queued);
+        let at_slice = req_hop.grant;
 
         // Slice bank port (tag + data pipeline occupancy).
-        let grant = self.slice_ports.reserve(slice, at_slice, 1);
+        let port = self.slice_ports.reserve(slice, at_slice, 1);
+        self.con.add(attr_core, ResourceClass::L2Slice, port.queued);
+        let grant = port.grant;
 
         self.stats.accesses += 1;
         let data_ready = match self.slices[slice].tags.lookup(req.line, req.sectors) {
@@ -135,12 +175,23 @@ impl MemSystem {
                         Probe::SectorMiss { missing, .. } => missing.count_ones(),
                         _ => 4, // fetch the whole line on a line miss
                     };
-                    let dram_done =
-                        self.dram
-                            .access(req.line, grant + self.l2_latency as u64, fetch_sectors, false);
-                    // Fill the slice; dirty victim goes back to DRAM.
+                    // DRAM controller queue backpressure, then the access.
+                    let dram_at = grant + self.l2_latency as u64;
+                    let dstall = self.dram.admission_delay(req.line, dram_at);
+                    if dstall > 0 {
+                        self.stats.backpressure_stalls += 1;
+                        self.dram.stats.queue_rejects += 1;
+                        self.con.add(attr_core, ResourceClass::Dram, dstall);
+                    }
+                    let d = self.dram.access(req.line, dram_at + dstall, fetch_sectors, false);
+                    self.con.add(attr_core, ResourceClass::Dram, d.queued);
+                    let dram_done = d.grant;
+                    // Fill the slice; dirty victim goes back to DRAM
+                    // (clean victims need no writeback — fill only reports
+                    // dirty ones).
                     let (_, evicted) = self.slices[slice].fill(req.line, 0b1111);
                     if let Some(ev) = evicted {
+                        debug_assert!(ev.dirty_sectors != 0, "clean victims are not reported");
                         self.stats.writebacks_to_dram += 1;
                         self.dram
                             .access(ev.line, dram_done, ev.dirty_sectors.count_ones(), true);
@@ -154,9 +205,9 @@ impl MemSystem {
         // Response crossing back to the core with the data sectors.
         let flits = self.data_flits(sectors);
         self.stats.response_flits += flits as u64;
-        let at_core = self
-            .resp_net
-            .transfer(slice, req.core as usize, data_ready, flits);
+        let resp_hop = self.resp_net.transfer(slice, core, data_ready, flits);
+        self.con.add(attr_core, ResourceClass::NocLink, resp_hop.queued);
+        let at_core = resp_hop.grant;
 
         self.stats.total_fetch_latency += at_core - now;
         self.stats.fetches += 1;
@@ -165,14 +216,31 @@ impl MemSystem {
 
     /// Write (write-through store or a dirty-line writeback from an L1):
     /// fire-and-forget — occupies the request network and the slice, data
-    /// is absorbed by the L2 (write-allocate).
+    /// is absorbed by the L2 (write-allocate).  Queueing is attributed to
+    /// the issuing core even though nothing waits on the completion.
     pub fn write(&mut self, core: usize, line: LineAddr, sectors: u32, now: u64) {
+        self.write_for(core, line, sectors, now, core)
+    }
+
+    /// [`write`](Self::write) with the contention charged to `attr_core`
+    /// instead of the injecting port's core — decoupled-sharing victim
+    /// writebacks leave through the home slice's port but are caused by
+    /// (and charged to) the requesting core.
+    pub fn write_for(&mut self, core: usize, line: LineAddr, sectors: u32, now: u64, attr_core: usize) {
         let slice = decode::l2_slice(line, self.n_slices);
         let flits = self.data_flits(sectors);
+        let stall = self.req_net.admission_delay(core, now);
+        if stall > 0 {
+            self.stats.backpressure_stalls += 1;
+            self.con.add(attr_core, ResourceClass::NocLink, stall);
+        }
         self.stats.request_flits += flits as u64;
         self.stats.writes += 1;
-        let at_slice = self.req_net.transfer(core, slice, now, flits);
-        let grant = self.slice_ports.reserve(slice, at_slice, 1);
+        let hop = self.req_net.transfer(core, slice, now + stall, flits);
+        self.con.add(attr_core, ResourceClass::NocLink, hop.queued);
+        let port = self.slice_ports.reserve(slice, hop.grant, 1);
+        self.con.add(attr_core, ResourceClass::L2Slice, port.queued);
+        let grant = port.grant;
         match self.slices[slice].tags.lookup(line, 0) {
             Probe::Hit { .. } | Probe::SectorMiss { .. } => {
                 let mask = ((1u16 << sectors.min(4)) - 1) as u8;
@@ -185,6 +253,7 @@ impl MemSystem {
                 let (_, evicted) = self.slices[slice].fill(line, mask);
                 self.slices[slice].tags.mark_dirty(line, mask);
                 if let Some(ev) = evicted {
+                    debug_assert!(ev.dirty_sectors != 0, "clean victims are not reported");
                     self.stats.writebacks_to_dram += 1;
                     self.dram.access(
                         ev.line,
@@ -195,6 +264,12 @@ impl MemSystem {
                 }
             }
         }
+    }
+
+    /// Memory-side per-core contention attribution (combined with the L1
+    /// organization's share by [`crate::engine::Engine::contention`]).
+    pub fn contention(&self) -> &ContentionStats {
+        &self.con
     }
 
     pub fn mean_fetch_latency(&self) -> f64 {

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   run        — simulate one application on one L1 organization
 //!   multi      — co-execute N applications on partitioned cores
+//!   contention — per-resource stall breakdown across L1 organizations
 //!   sweep      — architectures × applications sweep (Fig 8 driver)
 //!   cosched    — app-pair × architecture interference sweep
 //!   classify   — inter-core locality classification pipeline
@@ -17,7 +18,7 @@ use ata_cache::coordinator::{landscape, CoSchedSweep, Sweep};
 use ata_cache::core::CorePartition;
 use ata_cache::engine::{Engine, MultiWorkload};
 use ata_cache::runtime::LocalityAnalyzer;
-use ata_cache::stats::MultiResult;
+use ata_cache::stats::{MultiResult, ResourceClass, SimResult};
 use ata_cache::trace::signature::{exact_locality, sample_core_traces};
 use ata_cache::trace::{apps, co_workload, LocalityClass};
 use ata_cache::util::cli::Args;
@@ -35,6 +36,7 @@ fn main() {
     let code = match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
         Some("multi") => cmd_multi(&args),
+        Some("contention") => cmd_contention(&args),
         Some("export-trace") => cmd_export_trace(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("cosched") => cmd_cosched(&args),
@@ -53,11 +55,13 @@ fn main() {
 
 fn print_usage() {
     eprintln!(
-        "usage: ata-sim <run|multi|sweep|cosched|classify|landscape|overhead|list|config> [options]
+        "usage: ata-sim <run|multi|contention|sweep|cosched|classify|landscape|overhead|list|config> [options]
   run       --app <name> | --trace FILE  --arch <private|remote|decoupled|ata>
             [--scale F] [--seed N] [--out FILE]
   multi     --apps a,b[,c..] [--partition n,m,..] [--arch X] [--scale F]
             [--share-addr] [--seed N] [--out FILE]
+  contention [--apps x,y,.. | --app <name>] [--archs a,b,..] [--scale F]
+            [--seed N] [--out FILE]
   export-trace --app <name> [--scale F] --out FILE
   sweep     [--archs a,b,..] [--apps x,y,..] [--scale F] [--threads N] [--out FILE]
   cosched   [--archs a,b,..] [--apps x,y,..] [--scale F] [--threads N]
@@ -222,11 +226,100 @@ fn cmd_multi(args: &Args) -> i32 {
         co.dram_reads,
         co.dram_writes,
     );
+    let mut st = Table::new("per-resource stall breakdown (queued cycles per app)")
+        .header(&{
+            let mut h = vec!["app"];
+            h.extend(ResourceClass::ALL.iter().map(|c| c.name()));
+            h.push("total");
+            h
+        });
+    for app in &co.apps {
+        let mut cells = vec![app.name.clone()];
+        cells.extend(ResourceClass::ALL.iter().map(|&c| app.contention.get(c).to_string()));
+        cells.push(app.contention.total().to_string());
+        st.row(cells);
+    }
+    println!("{}", st.render());
     if let Some(path) = args.get("out") {
         let json = Json::obj(vec![
             ("co", co.to_json()),
             ("solos", Json::arr(solos.iter().map(MultiResult::to_json).collect())),
         ]);
+        std::fs::write(path, json.pretty()).expect("writing --out");
+        println!("wrote {path}");
+    }
+    0
+}
+
+/// Per-resource stall-breakdown comparison: where do private, remote,
+/// decoupled and ATA burn their cycles for a given application (the
+/// paper's Fig. 3 / Fig. 11 style contention analysis)?
+fn cmd_contention(args: &Args) -> i32 {
+    let scale = args.get_f64("scale", 0.25).unwrap();
+    let archs: Vec<L1ArchKind> = {
+        let l = args.get_list("archs");
+        if l.is_empty() {
+            L1ArchKind::ALL.to_vec()
+        } else {
+            l.iter()
+                .map(|a| L1ArchKind::from_name(a).expect("unknown arch in --archs"))
+                .collect()
+        }
+    };
+    let names: Vec<String> = {
+        let l = args.get_list("apps");
+        if l.is_empty() {
+            vec![args.get_or("app", "b+tree").to_string()]
+        } else {
+            l
+        }
+    };
+    let mut all_results: Vec<SimResult> = Vec::new();
+    for name in &names {
+        let Some(app) = apps::app(name) else {
+            eprintln!("unknown app '{name}' (see `ata-sim list`)");
+            return 2;
+        };
+        let results: Vec<(L1ArchKind, SimResult)> = archs
+            .iter()
+            .map(|&arch| {
+                let cfg = parse_cfg(args, arch);
+                let wl = app.scaled(scale).workload(&cfg);
+                (arch, Engine::new(&cfg).run(&wl))
+            })
+            .collect();
+
+        let mut header: Vec<&str> = vec!["resource"];
+        header.extend(archs.iter().map(|a| a.name()));
+        let mut t = Table::new(&format!(
+            "per-resource stall breakdown — {name} (queued cycles)"
+        ))
+        .header(&header);
+        for class in ResourceClass::ALL {
+            let mut cells = vec![class.name().to_string()];
+            cells.extend(results.iter().map(|(_, r)| r.contention.get(class).to_string()));
+            t.row(cells);
+        }
+        let mut total = vec!["total".to_string()];
+        total.extend(results.iter().map(|(_, r)| r.contention.total().to_string()));
+        t.row(total);
+        let mut per_kinst = vec!["stall cyc / 1k inst".to_string()];
+        per_kinst.extend(results.iter().map(|(_, r)| {
+            if r.insts == 0 {
+                "0.0".to_string()
+            } else {
+                format!("{:.1}", r.contention.total() as f64 * 1000.0 / r.insts as f64)
+            }
+        }));
+        t.row(per_kinst);
+        let mut ipc = vec!["ipc".to_string()];
+        ipc.extend(results.iter().map(|(_, r)| format!("{:.3}", r.ipc())));
+        t.row(ipc);
+        println!("{}", t.render());
+        all_results.extend(results.into_iter().map(|(_, r)| r));
+    }
+    if let Some(path) = args.get("out") {
+        let json = Json::arr(all_results.iter().map(SimResult::to_json).collect());
         std::fs::write(path, json.pretty()).expect("writing --out");
         println!("wrote {path}");
     }

@@ -13,7 +13,7 @@
 use std::collections::VecDeque;
 
 use super::islip::Islip;
-use crate::resource::Calendar;
+use crate::resource::{Calendar, Grant};
 
 /// A packet in flight through the detailed crossbar.
 #[derive(Debug, Clone, PartialEq)]
@@ -164,15 +164,28 @@ impl XbarReservation {
         self.inputs[input].would_accept(now, self.buffer_limit)
     }
 
-    /// Reserve a transfer; returns the cycle the packet is delivered at
-    /// the output.
-    pub fn transfer(&mut self, input: usize, output: usize, now: u64, flits: u32) -> u64 {
+    /// Cycles a sender must stall before the finite input buffer admits a
+    /// new packet (0 when `would_accept`).  Backpressured senders retry at
+    /// `now + admission_delay` instead of reserving into an unbounded
+    /// future — see `resource::Calendar::drain_cycle`.
+    pub fn admission_delay(&self, input: usize, now: u64) -> u64 {
+        self.inputs[input].drain_cycle(now, self.buffer_limit) - now
+    }
+
+    /// Reserve a transfer.  The returned [`Grant`] carries the delivery
+    /// cycle at the output (`grant`) and the pure queueing delay accrued
+    /// on the input and output ports (`queued` — excludes switch latency
+    /// and flit serialization).
+    pub fn transfer(&mut self, input: usize, output: usize, now: u64, flits: u32) -> Grant {
         let in_grant = self.inputs[input].reserve(now, flits);
         // Head flit reaches the output port once granted + switch latency;
         // the output port then serializes the packet out.
-        let at_output = in_grant + self.latency as u64;
+        let at_output = in_grant.grant + self.latency as u64;
         let out_grant = self.outputs[output].reserve(at_output, flits);
-        out_grant + flits as u64
+        Grant::new(
+            out_grant.grant + flits as u64,
+            in_grant.queued + out_grant.queued,
+        )
     }
 
     pub fn output_backlog(&self, output: usize, now: u64) -> u64 {
@@ -258,7 +271,9 @@ mod tests {
     fn reservation_uncontended_latency() {
         let mut x = XbarReservation::new(2, 2, 3, 512);
         // grant in at 10, out at 13, delivered 13+4=17
-        assert_eq!(x.transfer(0, 1, 10, 4), 17);
+        let g = x.transfer(0, 1, 10, 4);
+        assert_eq!(g.grant, 17);
+        assert_eq!(g.queued, 0, "empty crossbar has no queueing");
     }
 
     #[test]
@@ -266,18 +281,23 @@ mod tests {
         let mut x = XbarReservation::new(2, 1, 0, 512);
         let d1 = x.transfer(0, 0, 0, 4);
         let d2 = x.transfer(1, 0, 0, 4);
-        assert_eq!(d1, 4);
-        assert_eq!(d2, 8, "output port serializes like the detailed model");
+        assert_eq!(d1.grant, 4);
+        assert_eq!(d2.grant, 8, "output port serializes like the detailed model");
+        assert_eq!(d2.queued, 4, "second packet queued behind the first");
     }
 
     #[test]
     fn reservation_buffer_horizon() {
         let mut x = XbarReservation::new(1, 1, 0, 8);
         assert!(x.would_accept(0, 0));
+        assert_eq!(x.admission_delay(0, 0), 0);
         for _ in 0..3 {
             x.transfer(0, 0, 0, 4);
         }
         assert!(!x.would_accept(0, 0), "12 cycles of backlog > 8 limit");
+        let d = x.admission_delay(0, 0);
+        assert_eq!(d, 4, "backlog 12 drains to the 8-cycle horizon at t=4");
+        assert!(x.would_accept(0, d), "retry at the drain cycle succeeds");
     }
 
     #[test]
@@ -303,7 +323,7 @@ mod tests {
         let mut res = XbarReservation::new(n, 1, 0, 1 << 20);
         let mut last = 0u64;
         for k in 0..pkts {
-            last = last.max(res.transfer(k % n, 0, 0, 4));
+            last = last.max(res.transfer(k % n, 0, 0, 4).grant);
         }
         let det_rate = cycles as f64;
         let res_rate = last as f64;

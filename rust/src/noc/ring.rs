@@ -7,7 +7,7 @@
 //! latency plus serialization (`ceil(bytes/width)`) and queueing on every
 //! link.  Probes are metadata-sized (1 flit); data replies carry sectors.
 
-use crate::resource::Calendar;
+use crate::resource::{Calendar, Grant};
 
 #[derive(Debug, Clone)]
 pub struct Ring {
@@ -44,44 +44,51 @@ impl Ring {
         (bytes.div_ceil(self.width_bytes)).max(1) as u32
     }
 
-    /// Send `bytes` from `src` to `dst` starting at `now`; returns arrival
-    /// cycle.  Reserves every traversed link in order (wormhole-ish: the
-    /// message occupies each link for its serialization time).
-    pub fn send(&mut self, src: usize, dst: usize, now: u64, bytes: usize) -> u64 {
+    /// Send `bytes` from `src` to `dst` starting at `now`.  Reserves every
+    /// traversed link in order (wormhole-ish: the message occupies each
+    /// link for its serialization time).  The returned [`Grant`] carries
+    /// the arrival cycle (`grant`) and the queueing delay summed over all
+    /// traversed links (`queued` — excludes hop latency + serialization).
+    pub fn send(&mut self, src: usize, dst: usize, now: u64, bytes: usize) -> Grant {
         let hops = self.hops(src, dst);
         if hops == 0 {
-            return now;
+            return Grant::new(now, 0);
         }
         let ser = self.ser_cycles(bytes);
         let mut t = now;
+        let mut queued = 0u64;
         let n = self.links.len();
         for h in 0..hops {
             let link = (src + h) % n;
-            let grant = self.links[link].reserve(t, ser);
+            let g = self.links[link].reserve(t, ser);
             self.flit_cycles += ser as u64;
-            t = grant + self.hop_latency as u64;
+            queued += g.queued;
+            t = g.grant + self.hop_latency as u64;
         }
         // Arrival once the tail clears the final link.
-        t + ser as u64 - 1
+        Grant::new(t + ser as u64 - 1, queued)
     }
 
     /// Broadcast from `src` to every other stop (a probe that visits all
-    /// remote caches); returns the cycle the *last* stop receives it.
-    /// This is the full-ring traversal the remote-sharing design pays on
-    /// every miss when no predictor filters it.
-    pub fn broadcast(&mut self, src: usize, now: u64, bytes: usize) -> u64 {
+    /// remote caches); the grant is the cycle the *last* stop receives it,
+    /// `queued` the summed link queueing.  This is the full-ring traversal
+    /// the remote-sharing design pays on every miss when no predictor
+    /// filters it.
+    pub fn broadcast(&mut self, src: usize, now: u64, bytes: usize) -> Grant {
         let n = self.links.len();
         let ser = self.ser_cycles(bytes);
         let mut t = now;
+        let mut queued = 0u64;
         let mut last_arrival = now;
         for h in 0..n - 1 {
             let link = (src + h) % n;
-            let grant = self.links[link].reserve(t, ser);
+            let g = self.links[link].reserve(t, ser);
             self.flit_cycles += ser as u64;
-            t = grant + self.hop_latency as u64;
+            queued += g.queued;
+            t = g.grant + self.hop_latency as u64;
             last_arrival = t + ser as u64 - 1;
         }
-        last_arrival
+        Grant::new(last_arrival, queued)
     }
 
     /// Aggregate queue pressure (cycles of backlog across links).
@@ -107,18 +114,20 @@ mod tests {
     fn uncontended_latency_scales_with_hops() {
         let mut r = Ring::new(10, 2, 32);
         // 1 hop, 32B = 1 ser cycle: grant 100, +2 hop, tail at +0 -> 102
-        assert_eq!(r.send(0, 1, 100, 32), 102);
+        let g = r.send(0, 1, 100, 32);
+        assert_eq!(g.grant, 102);
+        assert_eq!(g.queued, 0, "empty ring has no queueing");
         // 5 hops from fresh ring state:
         let mut r2 = Ring::new(10, 2, 32);
-        assert_eq!(r2.send(0, 5, 100, 32), 110);
+        assert_eq!(r2.send(0, 5, 100, 32).grant, 110);
     }
 
     #[test]
     fn serialization_adds_for_large_payloads() {
         let mut r = Ring::new(4, 1, 32);
-        let small = r.send(0, 1, 0, 32);
+        let small = r.send(0, 1, 0, 32).grant;
         let mut r2 = Ring::new(4, 1, 32);
-        let big = r2.send(0, 1, 0, 128); // 4 flits
+        let big = r2.send(0, 1, 0, 128).grant; // 4 flits
         assert!(big > small, "128B ({big}) should arrive later than 32B ({small})");
         assert_eq!(big - small, 3, "3 extra serialization cycles");
     }
@@ -128,13 +137,15 @@ mod tests {
         let mut r = Ring::new(4, 1, 32);
         let a = r.send(0, 2, 0, 128); // occupies links 0,1
         let b = r.send(0, 2, 0, 128); // queues behind on link 0
-        assert!(b > a);
+        assert!(b.grant > a.grant);
+        assert!(b.queued > 0, "second message must report its queueing");
+        assert_eq!(a.queued, 0);
     }
 
     #[test]
     fn broadcast_visits_all_stops() {
         let mut r = Ring::new(10, 2, 32);
-        let done = r.broadcast(0, 0, 32);
+        let done = r.broadcast(0, 0, 32).grant;
         // 9 links to traverse: each grant adds >= hop latency.
         assert!(done >= 18, "broadcast done at {done}");
         assert!(r.backlog(0) > 0);
@@ -143,6 +154,6 @@ mod tests {
     #[test]
     fn same_stop_send_is_free() {
         let mut r = Ring::new(4, 1, 32);
-        assert_eq!(r.send(2, 2, 77, 128), 77);
+        assert_eq!(r.send(2, 2, 77, 128), Grant::new(77, 0));
     }
 }

@@ -8,6 +8,35 @@
 //! each resource in non-decreasing time order, this is equivalent to a
 //! FIFO queue in front of the server but costs O(1) per request — the
 //! queueing delay (`grant - now`) *is* the contention the paper measures.
+//!
+//! Every reservation returns a typed [`Grant`] carrying both the grant
+//! cycle and the queueing delay, so callers can attribute contention to
+//! the resource that caused it (see [`crate::stats::ContentionBreakdown`])
+//! instead of folding it silently into latency.
+
+/// The outcome of one reservation: when service starts and how long the
+/// request queued for it.
+///
+/// For plain servers `grant - request_time == queued`; for composite
+/// resources (crossbar transfers, ring sends) `grant` is the completion
+/// cycle of the whole operation and `queued` is the *pure queueing* part —
+/// the cycles spent waiting behind other traffic, excluding switch
+/// latency and serialization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Grant {
+    /// Cycle the reservation takes effect (service start, or delivery for
+    /// composite operations — see the type-level docs).
+    pub grant: u64,
+    /// Cycles spent queued behind other traffic for this reservation.
+    pub queued: u64,
+}
+
+impl Grant {
+    #[inline]
+    pub fn new(grant: u64, queued: u64) -> Self {
+        Grant { grant, queued }
+    }
+}
 
 /// A single server with a backlog horizon.
 #[derive(Debug, Clone)]
@@ -21,12 +50,12 @@ impl Server {
     }
 
     /// Reserve `occupancy` cycles starting no earlier than `now`.
-    /// Returns the grant cycle (when service *starts*).
+    /// Returns the grant (service-start cycle + queueing delay).
     #[inline]
-    pub fn reserve(&mut self, now: u64, occupancy: u32) -> u64 {
+    pub fn reserve(&mut self, now: u64, occupancy: u32) -> Grant {
         let grant = self.next_free.max(now);
         self.next_free = grant + occupancy as u64;
-        grant
+        Grant::new(grant, grant - now)
     }
 
     /// Cycles of queued work beyond `now` (0 if idle).
@@ -41,6 +70,13 @@ impl Server {
     #[inline]
     pub fn would_accept(&self, now: u64, limit: u64) -> bool {
         self.backlog(now) <= limit
+    }
+
+    /// Earliest cycle at-or-after `now` at which the backlog has drained
+    /// to `limit` — the retry cycle for a stalled upstream component.
+    #[inline]
+    pub fn drain_cycle(&self, now: u64, limit: u64) -> u64 {
+        now.max(self.next_free.saturating_sub(limit))
     }
 }
 
@@ -73,7 +109,7 @@ impl Banked {
     }
 
     #[inline]
-    pub fn reserve(&mut self, bank: usize, now: u64, occupancy: u32) -> u64 {
+    pub fn reserve(&mut self, bank: usize, now: u64, occupancy: u32) -> Grant {
         self.banks[bank].reserve(now, occupancy)
     }
 
@@ -106,9 +142,9 @@ impl MultiPort {
         MultiPort { ports: vec![0; k] }
     }
 
-    /// Reserve the earliest-available port. Returns the grant cycle.
+    /// Reserve the earliest-available port.
     #[inline]
-    pub fn reserve(&mut self, now: u64, occupancy: u32) -> u64 {
+    pub fn reserve(&mut self, now: u64, occupancy: u32) -> Grant {
         // Find the port that frees first.
         let (idx, &earliest) = self
             .ports
@@ -118,7 +154,7 @@ impl MultiPort {
             .unwrap();
         let grant = earliest.max(now);
         self.ports[idx] = grant + occupancy as u64;
-        grant
+        Grant::new(grant, grant - now)
     }
 
     #[inline]
@@ -138,9 +174,9 @@ impl MultiPort {
 
     /// Occupy the earliest-free port until `until` (dynamic-duration
     /// reservation — e.g. an MSHR entry held from allocate to fill).
-    /// Returns the cycle the port became available (the grant).
+    /// Returns the grant (the cycle the port became available).
     #[inline]
-    pub fn occupy_until(&mut self, now: u64, until: u64) -> u64 {
+    pub fn occupy_until(&mut self, now: u64, until: u64) -> Grant {
         let idx = self
             .ports
             .iter()
@@ -150,7 +186,7 @@ impl MultiPort {
             .unwrap();
         let grant = self.ports[idx].max(now);
         self.ports[idx] = until.max(grant);
-        grant
+        Grant::new(grant, grant - now)
     }
 }
 
@@ -190,8 +226,9 @@ impl Calendar {
     }
 
     /// Reserve `occ` consecutive cycles starting no earlier than `now`;
-    /// returns the grant (start) cycle, filling the earliest gap.
-    pub fn reserve(&mut self, now: u64, occ: u32) -> u64 {
+    /// returns the grant (start cycle + queueing delay), filling the
+    /// earliest gap.
+    pub fn reserve(&mut self, now: u64, occ: u32) -> Grant {
         let occ = occ.max(1) as u64;
         // Prune intervals that ended far before `now`: arrivals may be
         // non-monotone by up to PRUNE_SLACK, never more.
@@ -230,7 +267,7 @@ impl Calendar {
             (false, true) => self.busy[idx].0 = t,
             (false, false) => self.busy.insert(idx, (t, end)),
         }
-        t
+        Grant::new(t, t - now)
     }
 
     /// Pending work at-or-after `now` (buffer-occupancy proxy).
@@ -243,6 +280,35 @@ impl Calendar {
 
     pub fn would_accept(&self, now: u64, limit: u64) -> bool {
         self.backlog(now) <= limit
+    }
+
+    /// Earliest cycle at-or-after `now` at which the backlog has drained
+    /// to `limit` cycles of pending work.  This is the retry cycle for a
+    /// finite-buffer stall: instead of reserving into an unbounded future,
+    /// a backpressured upstream component waits until this cycle and then
+    /// re-offers its request (see `l2::MemSystem::fetch`).
+    pub fn drain_cycle(&self, now: u64, limit: u64) -> u64 {
+        if self.backlog(now) <= limit {
+            return now;
+        }
+        // Walk intervals from the tail, accumulating the work that lies
+        // strictly after the candidate drain point.
+        let mut after = 0u64;
+        for &(s, e) in self.busy.iter().rev() {
+            let s = s.max(now);
+            if e <= s {
+                continue; // entirely in the past
+            }
+            let work = e - s;
+            if after + work > limit {
+                // The drain point lies inside [s, e): remaining work at t
+                // is (e - t) + after, solve (e - t) + after == limit.
+                let t = e - (limit - after);
+                return t.max(s).max(now);
+            }
+            after += work;
+        }
+        now
     }
 }
 
@@ -268,7 +334,7 @@ impl BankedCalendar {
     }
 
     #[inline]
-    pub fn reserve(&mut self, bank: usize, now: u64, occ: u32) -> u64 {
+    pub fn reserve(&mut self, bank: usize, now: u64, occ: u32) -> Grant {
         self.banks[bank].reserve(now, occ)
     }
 
@@ -285,17 +351,17 @@ mod tests {
     #[test]
     fn idle_server_grants_immediately() {
         let mut s = Server::new();
-        assert_eq!(s.reserve(100, 4), 100);
+        assert_eq!(s.reserve(100, 4), Grant::new(100, 0));
         assert_eq!(s.backlog(100), 4);
     }
 
     #[test]
     fn busy_server_serializes() {
         let mut s = Server::new();
-        assert_eq!(s.reserve(10, 2), 10); // busy until 12
-        assert_eq!(s.reserve(10, 2), 12); // queued behind
-        assert_eq!(s.reserve(11, 2), 14);
-        assert_eq!(s.reserve(100, 2), 100); // idle again later
+        assert_eq!(s.reserve(10, 2).grant, 10); // busy until 12
+        assert_eq!(s.reserve(10, 2), Grant::new(12, 2)); // queued behind
+        assert_eq!(s.reserve(11, 2), Grant::new(14, 3));
+        assert_eq!(s.reserve(100, 2), Grant::new(100, 0)); // idle again later
     }
 
     #[test]
@@ -308,25 +374,28 @@ mod tests {
         assert!(!s.would_accept(0, 16));
         assert!(s.would_accept(0, 64));
         assert!(s.would_accept(39, 4));
+        // Drain cycle: backlog(t) == 16 at t = 40 - 16 = 24.
+        assert_eq!(s.drain_cycle(0, 16), 24);
+        assert_eq!(s.drain_cycle(30, 16), 30, "already drained");
     }
 
     #[test]
     fn banked_banks_are_independent() {
         let mut b = Banked::new(4);
-        assert_eq!(b.reserve(0, 0, 10), 0);
-        assert_eq!(b.reserve(1, 0, 10), 0, "bank 1 idle");
-        assert_eq!(b.reserve(0, 0, 10), 10, "bank 0 queued");
+        assert_eq!(b.reserve(0, 0, 10).grant, 0);
+        assert_eq!(b.reserve(1, 0, 10).grant, 0, "bank 1 idle");
+        assert_eq!(b.reserve(0, 0, 10), Grant::new(10, 10), "bank 0 queued");
         assert_eq!(b.total_backlog(0), 30);
     }
 
     #[test]
     fn multiport_spreads_across_ports() {
         let mut m = MultiPort::new(2);
-        assert_eq!(m.reserve(0, 4), 0); // port A busy till 4
-        assert_eq!(m.reserve(0, 4), 0); // port B busy till 4
-        assert_eq!(m.reserve(0, 4), 4); // back to A
-        assert_eq!(m.reserve(0, 4), 4); // back to B
-        assert_eq!(m.reserve(0, 4), 8);
+        assert_eq!(m.reserve(0, 4).grant, 0); // port A busy till 4
+        assert_eq!(m.reserve(0, 4).grant, 0); // port B busy till 4
+        assert_eq!(m.reserve(0, 4), Grant::new(4, 4)); // back to A
+        assert_eq!(m.reserve(0, 4), Grant::new(4, 4)); // back to B
+        assert_eq!(m.reserve(0, 4), Grant::new(8, 8));
     }
 
     #[test]
@@ -339,15 +408,16 @@ mod tests {
         arrivals.sort_unstable();
         for a in arrivals {
             let g = s.reserve(a, 3);
-            assert!(g >= last);
-            last = g;
+            assert!(g.grant >= last);
+            assert_eq!(g.queued, g.grant - a, "queued is the grant delay");
+            last = g.grant;
         }
     }
 }
 
 impl Banked {
     /// Reserve on bank 0 — convenience for single-bank uses in tests.
-    pub fn reserve0(&mut self, now: u64, occupancy: u32) -> u64 {
+    pub fn reserve0(&mut self, now: u64, occupancy: u32) -> Grant {
         self.reserve(0, now, occupancy)
     }
 }
@@ -359,20 +429,20 @@ mod calendar_tests {
     #[test]
     fn grants_gap_before_future_booking() {
         let mut c = Calendar::new();
-        assert_eq!(c.reserve(1000, 4), 1000, "future booking");
+        assert_eq!(c.reserve(1000, 4).grant, 1000, "future booking");
         // A present-time request must NOT queue behind it.
-        assert_eq!(c.reserve(10, 4), 10);
+        assert_eq!(c.reserve(10, 4), Grant::new(10, 0));
         // And the gap between them is usable too.
-        assert_eq!(c.reserve(10, 4), 14);
+        assert_eq!(c.reserve(10, 4), Grant::new(14, 4));
     }
 
     #[test]
     fn respects_existing_intervals() {
         let mut c = Calendar::new();
         c.reserve(10, 10); // [10,20)
-        assert_eq!(c.reserve(5, 5), 5, "gap [5,10) exactly fits");
-        assert_eq!(c.reserve(5, 5), 20, "now everything before 20 is busy");
-        assert_eq!(c.reserve(12, 3), 25, "inside busy -> after [20,25)");
+        assert_eq!(c.reserve(5, 5).grant, 5, "gap [5,10) exactly fits");
+        assert_eq!(c.reserve(5, 5).grant, 20, "now everything before 20 is busy");
+        assert_eq!(c.reserve(12, 3).grant, 25, "inside busy -> after [20,25)");
     }
 
     #[test]
@@ -406,11 +476,31 @@ mod calendar_tests {
     }
 
     #[test]
+    fn drain_cycle_finds_retry_point() {
+        let mut c = Calendar::new();
+        c.reserve(100, 10); // busy [100, 110)
+        // Already under the limit now:
+        assert_eq!(c.drain_cycle(0, 10), 0);
+        // Limit 4: backlog(t) == 4 at t = 106.
+        assert_eq!(c.drain_cycle(0, 4), 106);
+        assert_eq!(c.backlog(c.drain_cycle(0, 4)), 4);
+        // Limit 0: fully drained only at the end of the booking.
+        assert_eq!(c.drain_cycle(0, 0), 110);
+        // Multiple intervals:
+        let mut c2 = Calendar::new();
+        c2.reserve(0, 10); // [0, 10)
+        c2.reserve(100, 10); // [100, 110)
+        let t = c2.drain_cycle(0, 12);
+        assert!(c2.backlog(t) <= 12, "backlog at drain point");
+        assert!(t == 0 || c2.backlog(t - 1) > 12, "earliest such cycle");
+    }
+
+    #[test]
     fn banked_calendar_independent_banks() {
         let mut b = BankedCalendar::new(2);
-        assert_eq!(b.reserve(0, 0, 10), 0);
-        assert_eq!(b.reserve(1, 0, 10), 0);
-        assert_eq!(b.reserve(0, 0, 10), 10);
+        assert_eq!(b.reserve(0, 0, 10).grant, 0);
+        assert_eq!(b.reserve(1, 0, 10).grant, 0);
+        assert_eq!(b.reserve(0, 0, 10), Grant::new(10, 10));
     }
 
     #[test]

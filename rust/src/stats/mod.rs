@@ -5,6 +5,192 @@
 use crate::util::fxhash::FxHashMap;
 use crate::util::json::Json;
 
+/// The shared-resource classes whose queueing delay the simulator
+/// attributes (the CIAO-style decomposition of inter-thread interference;
+/// see PAPERS.md).  Every reservation in the memory hierarchy charges its
+/// queued cycles to exactly one of these classes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ResourceClass {
+    /// L1 tag-pipeline bank occupancy (miss-path tag probes).
+    L1TagBank,
+    /// L1 data-array bank serialization (the paper's bank-conflict
+    /// mechanism — the decoupled-sharing pathology of Fig. 3).
+    L1DataBank,
+    /// ATA aggregated-tag comparator-group arbitration (§III-B).
+    AtaComparator,
+    /// Intra-cluster sharing fabric: the decoupled/ATA crossbar ports and
+    /// the remote-sharing probe/data ring.
+    ClusterXbar,
+    /// Cores ↔ L2 interconnect ports, including finite-input-buffer
+    /// backpressure stalls.
+    NocLink,
+    /// L2 slice access-port serialization.
+    L2Slice,
+    /// DRAM bank-ready waits, data-bus queueing, and controller-queue
+    /// backpressure stalls.
+    Dram,
+    /// Dispatch stalls because the L1 MSHR pool was full.
+    MshrFull,
+}
+
+impl ResourceClass {
+    pub const COUNT: usize = 8;
+    pub const ALL: [ResourceClass; ResourceClass::COUNT] = [
+        ResourceClass::L1TagBank,
+        ResourceClass::L1DataBank,
+        ResourceClass::AtaComparator,
+        ResourceClass::ClusterXbar,
+        ResourceClass::NocLink,
+        ResourceClass::L2Slice,
+        ResourceClass::Dram,
+        ResourceClass::MshrFull,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ResourceClass::L1TagBank => "l1-tag-bank",
+            ResourceClass::L1DataBank => "l1-data-bank",
+            ResourceClass::AtaComparator => "ata-comparator",
+            ResourceClass::ClusterXbar => "cluster-xbar",
+            ResourceClass::NocLink => "noc-link",
+            ResourceClass::L2Slice => "l2-slice",
+            ResourceClass::Dram => "dram",
+            ResourceClass::MshrFull => "mshr-full",
+        }
+    }
+}
+
+/// Queued cycles per resource class — the per-resource stall breakdown of
+/// the paper's Fig. 3 / Fig. 11 style analysis (where do private, shared,
+/// remote and ATA organizations burn their cycles).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ContentionBreakdown {
+    cycles: [u64; ResourceClass::COUNT],
+}
+
+impl ContentionBreakdown {
+    #[inline]
+    pub fn add(&mut self, class: ResourceClass, cycles: u64) {
+        self.cycles[class as usize] += cycles;
+    }
+
+    #[inline]
+    pub fn get(&self, class: ResourceClass) -> u64 {
+        self.cycles[class as usize]
+    }
+
+    /// Total queued cycles across all resource classes.
+    pub fn total(&self) -> u64 {
+        self.cycles.iter().sum()
+    }
+
+    /// Stall cycles on the remote path — the intra-cluster sharing fabric
+    /// (probe ring / cluster crossbar) a request crosses to reach another
+    /// core's data.  The paper's headline claim is that ATA's probe
+    /// filtering strictly shrinks this relative to remote-sharing.
+    pub fn remote_path(&self) -> u64 {
+        self.get(ResourceClass::ClusterXbar)
+    }
+
+    pub fn merge(&mut self, other: &ContentionBreakdown) {
+        for (a, b) in self.cycles.iter_mut().zip(other.cycles.iter()) {
+            *a += b;
+        }
+    }
+
+    /// Counters accumulated since `before` (per-run reporting on a warm
+    /// engine).  Counters are monotone, so plain subtraction is safe.
+    pub fn delta(&self, before: &ContentionBreakdown) -> ContentionBreakdown {
+        let mut out = ContentionBreakdown::default();
+        for (i, o) in out.cycles.iter_mut().enumerate() {
+            *o = self.cycles[i] - before.cycles[i];
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = ResourceClass::ALL
+            .iter()
+            .map(|&c| (c.name(), self.get(c).into()))
+            .collect();
+        fields.push(("total", self.total().into()));
+        Json::obj(fields)
+    }
+}
+
+/// Per-core contention attribution: one [`ContentionBreakdown`] per
+/// requesting core plus the aggregate.  Components charge the *suffering*
+/// core (the one whose request queued), so `Engine::run_multi` can roll
+/// cores up into application lanes and show which resource one app steals
+/// from another.
+#[derive(Debug, Clone, Default)]
+pub struct ContentionStats {
+    per_core: Vec<ContentionBreakdown>,
+    total: ContentionBreakdown,
+}
+
+impl ContentionStats {
+    pub fn new(cores: usize) -> Self {
+        ContentionStats {
+            per_core: vec![ContentionBreakdown::default(); cores],
+            total: ContentionBreakdown::default(),
+        }
+    }
+
+    /// Charge `cycles` of queueing on `class` to `core`.  Zero-cycle adds
+    /// are accepted (and free) so call sites stay branchless.
+    #[inline]
+    pub fn add(&mut self, core: usize, class: ResourceClass, cycles: u64) {
+        if cycles > 0 {
+            self.per_core[core].add(class, cycles);
+            self.total.add(class, cycles);
+        }
+    }
+
+    pub fn total(&self) -> &ContentionBreakdown {
+        &self.total
+    }
+
+    pub fn per_core(&self) -> &[ContentionBreakdown] {
+        &self.per_core
+    }
+
+    /// Sum of the breakdowns of cores `[first, first + count)` — an
+    /// application lane's share under spatial multitasking.
+    pub fn lane_total(&self, first: usize, count: usize) -> ContentionBreakdown {
+        let mut out = ContentionBreakdown::default();
+        for c in &self.per_core[first..first + count] {
+            out.merge(c);
+        }
+        out
+    }
+
+    /// Element-wise accumulate (combining the L1 organization's stats with
+    /// the memory system's).  Both sides must cover the same core count.
+    pub fn absorb(&mut self, other: &ContentionStats) {
+        debug_assert_eq!(self.per_core.len(), other.per_core.len());
+        for (a, b) in self.per_core.iter_mut().zip(other.per_core.iter()) {
+            a.merge(b);
+        }
+        self.total.merge(&other.total);
+    }
+
+    /// Counters accumulated since `before` (per-run deltas on a warm
+    /// engine).
+    pub fn delta(&self, before: &ContentionStats) -> ContentionStats {
+        debug_assert_eq!(self.per_core.len(), before.per_core.len());
+        ContentionStats {
+            per_core: self
+                .per_core
+                .iter()
+                .zip(before.per_core.iter())
+                .map(|(a, b)| a.delta(b))
+                .collect(),
+            total: self.total.delta(&before.total),
+        }
+    }
+}
+
 /// Per-L1-organization counters (aggregated over the whole GPU).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct L1Stats {
@@ -198,6 +384,8 @@ pub struct SimResult {
     pub cycles: u64,
     pub insts: u64,
     pub l1: L1Stats,
+    /// Completed load instructions (denominator of the mean latencies).
+    pub loads: u64,
     pub l1_mean_load_latency: f64,
     pub l1_max_load_latency: u64,
     /// The paper's §IV-C metric: completion of the L1 access stage.
@@ -208,6 +396,9 @@ pub struct SimResult {
     pub noc_flits: u64,
     pub dram_reads: u64,
     pub dram_writes: u64,
+    /// Per-resource stall breakdown accumulated over the run (Fig. 3 /
+    /// Fig. 11 style contention decomposition).
+    pub contention: ContentionBreakdown,
     pub kernels: Vec<KernelStats>,
     /// Wall-clock seconds the simulation took (host performance metric).
     pub host_seconds: f64,
@@ -230,6 +421,7 @@ impl SimResult {
             ("insts", self.insts.into()),
             ("ipc", self.ipc().into()),
             ("l1", self.l1.to_json()),
+            ("loads", self.loads.into()),
             ("l1_mean_load_latency", self.l1_mean_load_latency.into()),
             ("l1_max_load_latency", self.l1_max_load_latency.into()),
             ("l1_stage_mean_latency", self.l1_stage_mean_latency.into()),
@@ -239,6 +431,7 @@ impl SimResult {
             ("noc_flits", self.noc_flits.into()),
             ("dram_reads", self.dram_reads.into()),
             ("dram_writes", self.dram_writes.into()),
+            ("contention", self.contention.to_json()),
             (
                 "kernels",
                 Json::arr(
@@ -290,6 +483,12 @@ pub struct AppCoStats {
     pub stage_mean_latency: f64,
     /// Memory requests this app's cores fed into the shared L1.
     pub requests: u64,
+    /// Per-resource stall breakdown over this app's cores: the queueing
+    /// this app suffered on each shared resource during the co-run.
+    /// Compared against the app's solo baseline this shows *which*
+    /// resource a co-runner steals (see
+    /// [`crate::coordinator::CoSchedResults::stolen_breakdown`]).
+    pub contention: ContentionBreakdown,
     /// Per-kernel breakdown.  L1 hit rates are not attributable per app
     /// (the L1 organization's counters are shared), so
     /// [`KernelStats::l1_hit_rate`] is reported as 0 here.
@@ -319,6 +518,7 @@ impl AppCoStats {
             ("mean_load_latency", self.mean_load_latency.into()),
             ("stage_mean_latency", self.stage_mean_latency.into()),
             ("requests", self.requests.into()),
+            ("contention", self.contention.to_json()),
             (
                 "kernels",
                 Json::arr(
@@ -358,6 +558,9 @@ pub struct MultiResult {
     pub noc_flits: u64,
     pub dram_reads: u64,
     pub dram_writes: u64,
+    /// Per-resource stall breakdown over the whole co-run (Σ of the
+    /// per-app breakdowns plus any stalls on idle-core resources).
+    pub contention: ContentionBreakdown,
     pub apps: Vec<AppCoStats>,
     /// Wall-clock seconds the simulation took (host performance metric).
     pub host_seconds: f64,
@@ -392,6 +595,7 @@ impl MultiResult {
             ("noc_flits", self.noc_flits.into()),
             ("dram_reads", self.dram_reads.into()),
             ("dram_writes", self.dram_writes.into()),
+            ("contention", self.contention.to_json()),
             ("apps", Json::arr(self.apps.iter().map(AppCoStats::to_json).collect())),
             ("host_seconds", self.host_seconds.into()),
         ])
@@ -469,6 +673,71 @@ mod tests {
         let parsed = Json::parse(&j).unwrap();
         assert_eq!(parsed.get("app").unwrap().as_str(), Some("b+tree"));
         assert!((parsed.get("ipc").unwrap().as_f64().unwrap() - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn contention_breakdown_accumulates_and_deltas() {
+        let mut b = ContentionBreakdown::default();
+        b.add(ResourceClass::L1DataBank, 10);
+        b.add(ResourceClass::Dram, 5);
+        b.add(ResourceClass::Dram, 2);
+        assert_eq!(b.get(ResourceClass::Dram), 7);
+        assert_eq!(b.total(), 17);
+        assert_eq!(b.remote_path(), 0);
+        b.add(ResourceClass::ClusterXbar, 3);
+        assert_eq!(b.remote_path(), 3);
+
+        let before = {
+            let mut x = ContentionBreakdown::default();
+            x.add(ResourceClass::Dram, 4);
+            x
+        };
+        let d = b.delta(&before);
+        assert_eq!(d.get(ResourceClass::Dram), 3);
+        assert_eq!(d.get(ResourceClass::L1DataBank), 10);
+        assert_eq!(d.total(), b.total() - 4);
+
+        let j = Json::parse(&b.to_json().to_string()).unwrap();
+        assert_eq!(j.get("dram").unwrap().as_u64(), Some(7));
+        assert_eq!(j.get("total").unwrap().as_u64(), Some(20));
+    }
+
+    #[test]
+    fn contention_stats_attributes_per_core_and_lanes() {
+        let mut c = ContentionStats::new(4);
+        c.add(0, ResourceClass::NocLink, 5);
+        c.add(1, ResourceClass::NocLink, 7);
+        c.add(3, ResourceClass::MshrFull, 2);
+        c.add(2, ResourceClass::Dram, 0); // zero adds are free no-ops
+        assert_eq!(c.total().total(), 14);
+        assert_eq!(c.per_core()[1].get(ResourceClass::NocLink), 7);
+        assert_eq!(c.per_core()[2].total(), 0);
+        // Lane rollup: cores [0, 2) vs [2, 4).
+        assert_eq!(c.lane_total(0, 2).get(ResourceClass::NocLink), 12);
+        assert_eq!(c.lane_total(2, 2).get(ResourceClass::MshrFull), 2);
+        // Per-core sums reconcile with the aggregate.
+        let mut sum = ContentionBreakdown::default();
+        for b in c.per_core() {
+            sum.merge(b);
+        }
+        assert_eq!(sum, *c.total());
+
+        // absorb + delta round-trip.
+        let snapshot = c.clone();
+        let mut more = ContentionStats::new(4);
+        more.add(0, ResourceClass::Dram, 9);
+        c.absorb(&more);
+        let d = c.delta(&snapshot);
+        assert_eq!(d.total().total(), 9);
+        assert_eq!(d.per_core()[0].get(ResourceClass::Dram), 9);
+    }
+
+    #[test]
+    fn resource_class_names_are_unique() {
+        let mut names: Vec<&str> = ResourceClass::ALL.iter().map(|c| c.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), ResourceClass::COUNT);
     }
 
     #[test]

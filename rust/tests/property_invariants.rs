@@ -78,16 +78,53 @@ fn property_calendar_never_double_books() {
         let mut granted: Vec<(u64, u64)> = Vec::new();
         for &(now, occ) in ops {
             let g = cal.reserve(now, occ);
-            if g < now {
-                return Err(format!("grant {g} before request time {now}"));
+            if g.grant < now {
+                return Err(format!("grant {} before request time {now}", g.grant));
             }
-            let iv = (g, g + occ as u64);
+            if g.queued != g.grant - now {
+                return Err(format!("queued {} != grant delay {}", g.queued, g.grant - now));
+            }
+            let iv = (g.grant, g.grant + occ as u64);
             for &(s, e) in &granted {
                 if iv.0 < e && s < iv.1 {
                     return Err(format!("overlap: {iv:?} vs {:?}", (s, e)));
                 }
             }
             granted.push(iv);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_calendar_drain_cycle_is_earliest_admission() {
+    // drain_cycle must return the earliest cycle at which the backlog has
+    // fallen to the limit — the finite-buffer retry point.
+    let op = Gen::new(|rng: &mut Pcg32| {
+        (rng.next_below(500) as u64, (rng.next_below(8) + 1) as u32)
+    });
+    let gen = vec_of(op, int_range(20, 120));
+    check("calendar-drain", 0xD4A1, 30, &gen, |ops| {
+        let mut cal = Calendar::new();
+        for &(now, occ) in ops {
+            cal.reserve(now, occ);
+        }
+        for limit in [0u64, 3, 10, 50] {
+            for now in [0u64, 100, 400] {
+                let t = cal.drain_cycle(now, limit);
+                if t < now {
+                    return Err(format!("drain {t} before now {now}"));
+                }
+                if cal.backlog(t) > limit {
+                    return Err(format!(
+                        "backlog {} at drain point {t} exceeds limit {limit}",
+                        cal.backlog(t)
+                    ));
+                }
+                if t > now && cal.backlog(t - 1) <= limit {
+                    return Err(format!("drain {t} is not the earliest admission"));
+                }
+            }
         }
         Ok(())
     });
@@ -105,7 +142,7 @@ fn property_calendar_matches_server_on_monotone_feeds() {
             let a = cal.reserve(now, 3);
             let b = srv.reserve(now, 3);
             if a != b {
-                return Err(format!("at {now}: calendar {a} vs server {b}"));
+                return Err(format!("at {now}: calendar {a:?} vs server {b:?}"));
             }
         }
         Ok(())
