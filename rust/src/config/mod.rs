@@ -22,10 +22,24 @@ pub enum L1ArchKind {
     DecoupledSharing,
     /// The paper's contribution: aggregated tag array + remote-shared data.
     Ata,
+    /// ATA probing plus CIAO-style interference-aware bypass: remote hits
+    /// whose holder-side banks/fabric ports are contended are redirected
+    /// to L2 instead of queueing on the peer cache (see PAPERS.md, CIAO).
+    AtaBypass,
 }
 
 impl L1ArchKind {
-    pub const ALL: [L1ArchKind; 4] = [
+    pub const ALL: [L1ArchKind; 5] = [
+        L1ArchKind::Private,
+        L1ArchKind::RemoteSharing,
+        L1ArchKind::DecoupledSharing,
+        L1ArchKind::Ata,
+        L1ArchKind::AtaBypass,
+    ];
+
+    /// The paper's original four-organization design space (the golden
+    /// set the equivalence fixtures pin; excludes later extensions).
+    pub const PAPER: [L1ArchKind; 4] = [
         L1ArchKind::Private,
         L1ArchKind::RemoteSharing,
         L1ArchKind::DecoupledSharing,
@@ -38,6 +52,7 @@ impl L1ArchKind {
             L1ArchKind::RemoteSharing => "remote",
             L1ArchKind::DecoupledSharing => "decoupled",
             L1ArchKind::Ata => "ata",
+            L1ArchKind::AtaBypass => "ata-bypass",
         }
     }
 
@@ -47,6 +62,7 @@ impl L1ArchKind {
             "remote" | "remote-sharing" => Some(L1ArchKind::RemoteSharing),
             "decoupled" | "decoupled-sharing" => Some(L1ArchKind::DecoupledSharing),
             "ata" | "ata-cache" => Some(L1ArchKind::Ata),
+            "ata-bypass" | "ata-bypass-cache" => Some(L1ArchKind::AtaBypass),
             _ => None,
         }
     }
@@ -239,6 +255,11 @@ pub struct SharingConfig {
     /// this is very rare; it is measured, not assumed, when the write
     /// policy is WriteBackLocal).
     pub fill_local_on_remote_hit: bool,
+    /// `ata-bypass` only: a remote hit is redirected to L2 when the
+    /// holder-side pressure estimate (holder data-bank backlog + crossbar
+    /// port backlog, in cycles) exceeds this threshold.  CIAO-style
+    /// interference-aware bypass; 0 bypasses every contended remote hit.
+    pub bypass_backlog_threshold: u64,
 }
 
 impl Default for SharingConfig {
@@ -253,6 +274,7 @@ impl Default for SharingConfig {
             ata_tag_latency: 2,
             ata_comparator_groups: 10,
             fill_local_on_remote_hit: true,
+            bypass_backlog_threshold: 8,
         }
     }
 }
@@ -532,6 +554,10 @@ impl GpuConfig {
                         "fill_local_on_remote_hit",
                         self.sharing.fill_local_on_remote_hit.into(),
                     ),
+                    (
+                        "bypass_backlog_threshold",
+                        self.sharing.bypass_backlog_threshold.into(),
+                    ),
                 ]),
             ),
         ])
@@ -626,6 +652,10 @@ impl GpuConfig {
                 g_usize(s, "ata_comparator_groups", cfg.sharing.ata_comparator_groups);
             cfg.sharing.fill_local_on_remote_hit =
                 g_bool(s, "fill_local_on_remote_hit", cfg.sharing.fill_local_on_remote_hit);
+            cfg.sharing.bypass_backlog_threshold = s
+                .get("bypass_backlog_threshold")
+                .and_then(Json::as_u64)
+                .unwrap_or(cfg.sharing.bypass_backlog_threshold);
         }
         Ok(cfg)
     }

@@ -190,6 +190,19 @@ impl Dram {
         Grant::new(done, bank_wait + bus.queued)
     }
 
+    /// Admission-gated read: wait out the controller queue's backpressure
+    /// (counted in `queue_rejects`), then access.  Returns the access
+    /// grant plus the admission stall so the caller can attribute the
+    /// whole wait; `grant.queued` excludes the stall (bank/bus wait only).
+    pub fn read_gated(&mut self, line: LineAddr, now: u64, sectors: u32) -> (Grant, u64) {
+        let stall = self.admission_delay(line, now);
+        if stall > 0 {
+            self.stats.queue_rejects += 1;
+        }
+        let g = self.access(line, now + stall, sectors, false);
+        (g, stall)
+    }
+
     /// Mean service latency in core cycles.
     pub fn mean_latency(&self) -> f64 {
         let n = self.stats.reads + self.stats.writes;

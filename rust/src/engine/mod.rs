@@ -35,9 +35,9 @@ use crate::config::GpuConfig;
 use crate::core::{CorePartition, IssueBatch, SimtCore, WarpProgram};
 use crate::l1arch::{self, L1Arch};
 use crate::l2::MemSystem;
-use crate::mem::LineAddr;
+use crate::mem::{LineAddr, MemTxn};
 use crate::stats::{
-    AppCoStats, ContentionStats, KernelStats, LoadLatencyTracker, MultiResult, SimResult,
+    AppCoStats, ContentionStats, HopStats, KernelStats, LoadLatencyTracker, MultiResult, SimResult,
 };
 
 /// One kernel launch: a set of warp programs per core.
@@ -175,6 +175,9 @@ pub struct Engine {
     tracker: LoadLatencyTracker,
     /// The paper's §IV-C metric: issue → L1-stage completion.
     stage_tracker: LoadLatencyTracker,
+    /// Per-hop latency decomposition read off every transaction
+    /// (cumulative over the engine's lifetime; results report deltas).
+    hops: HopStats,
     cycle: u64,
     /// (wake_cycle, core, warp) calendar.
     wakes: BinaryHeap<Reverse<(u64, u32, u32)>>,
@@ -190,6 +193,7 @@ impl Engine {
             mem: MemSystem::new(cfg),
             tracker: LoadLatencyTracker::default(),
             stage_tracker: LoadLatencyTracker::default(),
+            hops: HopStats::default(),
             cycle: 0,
             wakes: BinaryHeap::new(),
             total_insts: 0,
@@ -216,6 +220,7 @@ impl Engine {
         let dram_before = self.mem.dram_stats();
         let noc_before = self.mem.noc_flits();
         let con_before = self.contention();
+        let hops_before = self.hops;
 
         let mut kernels = Vec::with_capacity(workload.kernels.len());
         for k in &workload.kernels {
@@ -225,6 +230,7 @@ impl Engine {
         let l1 = self.l1.stats().delta(&l1_before);
         let md = self.mem_deltas(&l2_before, dram_before, noc_before);
         let contention = *self.contention().delta(&con_before).total();
+        let hops = self.hops.delta(&hops_before);
         SimResult {
             app: workload.name.clone(),
             arch: self.l1.kind().name().to_string(),
@@ -242,6 +248,7 @@ impl Engine {
             dram_reads: md.dram_reads,
             dram_writes: md.dram_writes,
             contention,
+            hops,
             kernels,
             host_seconds: host_start.elapsed().as_secs_f64(),
         }
@@ -385,6 +392,7 @@ impl Engine {
         let dram_before = self.mem.dram_stats();
         let noc_before = self.mem.noc_flits();
         let con_before = self.contention();
+        let hops_before = self.hops;
         // Deadlock guard: the co-run may legitimately span many kernels
         // per lane, so scale the solo path's per-kernel budget.
         let total_kernels: u64 = multi.lanes.iter().map(|l| l.kernels.len() as u64).sum();
@@ -434,12 +442,14 @@ impl Engine {
                         prev_group = Some(key);
                     }
                 }
-                let res = self.l1.access(req, now, &mut self.mem);
+                let mut txn = MemTxn::new(*req, now);
+                self.l1.access(&mut txn, &mut self.mem);
+                self.hops.record(&txn.hops, &txn.queued);
                 if *group_n > 0 {
                     lane.stage_tracker
-                        .complete_one(req.core, req.warp, req.inst, res.l1_stage_done);
+                        .complete_one(req.core, req.warp, req.inst, txn.l1_stage_done());
                     if let Some(load_done) =
-                        lane.tracker.complete_one(req.core, req.warp, req.inst, res.done)
+                        lane.tracker.complete_one(req.core, req.warp, req.inst, txn.done())
                     {
                         self.wakes.push(Reverse((load_done.max(now + 1), req.core, req.warp)));
                     }
@@ -553,6 +563,7 @@ impl Engine {
             dram_reads: md.dram_reads,
             dram_writes: md.dram_writes,
             contention: *con.total(),
+            hops: self.hops.delta(&hops_before),
             apps,
             host_seconds: host_start.elapsed().as_secs_f64(),
         }
@@ -627,12 +638,14 @@ impl Engine {
                         prev_group = Some(key);
                     }
                 }
-                let res = self.l1.access(req, now, &mut self.mem);
+                let mut txn = MemTxn::new(*req, now);
+                self.l1.access(&mut txn, &mut self.mem);
+                self.hops.record(&txn.hops, &txn.queued);
                 if *group_n > 0 {
                     self.stage_tracker
-                        .complete_one(req.core, req.warp, req.inst, res.l1_stage_done);
+                        .complete_one(req.core, req.warp, req.inst, txn.l1_stage_done());
                     if let Some(load_done) =
-                        self.tracker.complete_one(req.core, req.warp, req.inst, res.done)
+                        self.tracker.complete_one(req.core, req.warp, req.inst, txn.done())
                     {
                         self.wakes.push(Reverse((load_done.max(now + 1), req.core, req.warp)));
                     }
@@ -1027,6 +1040,34 @@ mod tests {
             p.touched_lines().iter().all(|&l| l >= (1 << 34))
         });
         assert!(all_shifted);
+    }
+
+    #[test]
+    fn hop_stats_reconcile_with_counters() {
+        let cfg = GpuConfig::tiny(L1ArchKind::Ata);
+        let wl = Workload {
+            name: "t".into(),
+            kernels: vec![simple_kernel(&cfg, |c| {
+                (0..8).map(|k| (c as u64 * 13 + k) % 32).collect()
+            })],
+        };
+        let mut eng = Engine::new(&cfg);
+        let r = eng.run(&wl);
+        // Every access opened exactly one transaction.
+        assert_eq!(r.hops.txns, r.l1.accesses);
+        assert!(r.hops.mem_trips > 0, "cold run must dispatch misses");
+        assert!(
+            r.hops.mean_mem_service() > cfg.l2.latency as f64,
+            "memory service includes the L2 round trip: {}",
+            r.hops.mean_mem_service()
+        );
+        // The transaction-accumulated queueing is a subset of the per-core
+        // ledger (fire-and-forget writebacks never ride a transaction).
+        assert!(r.hops.queued.total() <= r.contention.total());
+        // Warm second run: per-run hop deltas, no carry-over.
+        let r2 = eng.run(&wl);
+        assert_eq!(r2.hops.txns, r2.l1.accesses);
+        assert!(r2.hops.mem_trips < r.hops.mem_trips, "warm caches fetch less");
     }
 
     #[test]

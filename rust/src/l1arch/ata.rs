@@ -1,6 +1,6 @@
-//! ATA-Cache (§III) — the paper's contribution.
+//! ATA-Cache (§III) — the paper's contribution, as a policy.
 //!
-//! Tag arrays are aggregated per cluster ([`ata_tag`]), data stays
+//! Tag arrays are aggregated per cluster ([`super::ata_tag`]), data stays
 //! remote-shared: each L1 data array maps the whole address space and sits
 //! next to its core.  The request distributor implements Fig 7's three
 //! cases on the hit vector:
@@ -17,259 +17,134 @@
 //!
 //! Writes are processed only in the source core's local cache with a
 //! dirty bit; a remote read that would hit a dirty copy falls back to L2
-//! (§III-C).
+//! (§III-C).  The mechanism steps (front end, crossbar hit, miss) live in
+//! the shared pipeline so `ata-bypass` can reuse them verbatim.
 
 use crate::cache::Probe;
 use crate::config::{GpuConfig, L1ArchKind};
 use crate::l2::MemSystem;
-use crate::mem::{decode, LineAddr, MemRequest};
-use crate::noc::XbarReservation;
-use crate::stats::{ContentionStats, L1Stats, ResourceClass};
+use crate::mem::MemTxn;
 
-use super::ata_tag::{AggregatedTagArray, AggregateProbe};
-use super::common::{handle_store, install_fill, mshr_dispatch, CoreL1, L1Timing};
-use super::{AccessResult, ClusterMap, L1Arch};
+use super::pipeline::{FabricNeeds, PipelineCtx, SharingPolicy};
+
+/// Registry constructor.
+pub fn policy(cfg: &GpuConfig) -> Box<dyn SharingPolicy> {
+    Box::new(AtaPolicy {
+        fill_local: cfg.sharing.fill_local_on_remote_hit,
+    })
+}
+
+/// Interference hook consulted on a clean remote hit:
+/// `(ctx, cluster, holder_idx, txn, t_tag) -> divert-to-L2?`.  The ATA
+/// paper never diverts (`None`); `ata-bypass` plugs its holder-pressure
+/// check in here — the *only* place the two organizations differ.
+pub type BypassCheck = dyn Fn(&PipelineCtx, usize, usize, &MemTxn, u64) -> bool;
+
+/// The Fig 7 request distributor, shared verbatim by `ata` and
+/// `ata-bypass`: aggregated front end, then the three cases on the hit
+/// vector, with the optional bypass hook on case (a).
+pub fn distribute(
+    p: &mut PipelineCtx,
+    txn: &mut MemTxn,
+    mem: &mut MemSystem,
+    fill_local: bool,
+    bypass: Option<&BypassCheck>,
+) {
+    let core = txn.req.core as usize;
+    let cluster = p.map.cluster_of(core);
+
+    // Every request flows through the aggregated tag array first
+    // (comparator-group arbitration is the contention knob of §III-B).
+    let t_tag = p.ata_front_end(cluster, txn);
+
+    if txn.req.is_write() {
+        // §III-C: writes are local-only; the tag pipeline still ran.
+        p.store_local(txn, t_tag, mem);
+        return;
+    }
+
+    let agg = p.ata_probe(txn);
+
+    // Fig 7(b): local hit has priority — never diverted.
+    if matches!(agg.local, Probe::Hit { .. }) {
+        // Tags present but fill still in flight → merge, not hit.
+        if let Some((d, s)) = p.try_merge(core, txn.req.line, t_tag) {
+            txn.complete(d, s);
+            return;
+        }
+        p.stats.local_hits += 1;
+        // The lookup already identified the way; update LRU and access
+        // the local data array.
+        p.cores[core].cache.tags.lookup(txn.req.line, txn.req.sectors);
+        let done = p.hit_data_access(core, txn, t_tag);
+        txn.serve(done);
+        return;
+    }
+
+    // Fig 7(a): remote hit — only clean copies are usable, and the
+    // bypass hook may redirect a contended holder's hit to L2.
+    if let Some(holder_idx) = agg.clean_remote() {
+        if bypass.is_some_and(|check| check(p, cluster, holder_idx, txn, t_tag)) {
+            p.stats.bypasses += 1;
+            p.stats.misses += 1;
+            let sectors = txn.req.sectors;
+            p.ata_miss(txn, sectors, t_tag, mem);
+            return;
+        }
+        p.ata_remote_hit(holder_idx, t_tag, fill_local, txn, mem);
+        return;
+    }
+
+    if agg.dirty_remote_only() {
+        // §III-C: the remote copy was modified — go to L2.
+        p.stats.dirty_remote_fallbacks += 1;
+    }
+
+    // Local sector-miss: fetch only the missing sectors.
+    if let Probe::SectorMiss { missing, .. } = agg.local {
+        p.stats.sector_misses += 1;
+        p.ata_miss(txn, missing, t_tag, mem);
+        return;
+    }
+
+    // Fig 7(c): global miss — straight to L2, no probe detour.
+    p.stats.misses += 1;
+    let sectors = txn.req.sectors;
+    p.ata_miss(txn, sectors, t_tag, mem);
+}
 
 #[derive(Debug)]
-pub struct AtaCache {
-    cores: Vec<CoreL1>,
-    /// One aggregated tag array per cluster.
-    tag_arrays: Vec<AggregatedTagArray>,
-    /// Intra-cluster data crossbars (remote data access path).
-    xbars: Vec<XbarReservation>,
-    map: ClusterMap,
-    timing: L1Timing,
-    stats: L1Stats,
-    con: ContentionStats,
-    xbar_latency: u32,
+pub struct AtaPolicy {
     fill_local: bool,
 }
 
-impl AtaCache {
-    pub fn new(cfg: &GpuConfig) -> Self {
-        let cpc = cfg.cores_per_cluster();
-        AtaCache {
-            cores: (0..cfg.cores).map(|_| CoreL1::new(cfg)).collect(),
-            tag_arrays: (0..cfg.clusters)
-                .map(|_| {
-                    AggregatedTagArray::new(
-                        cfg.sharing.ata_comparator_groups,
-                        cfg.sharing.ata_tag_latency,
-                    )
-                })
-                .collect(),
-            xbars: (0..cfg.clusters)
-                .map(|_| {
-                    XbarReservation::new(
-                        cpc,
-                        cpc,
-                        cfg.sharing.cluster_xbar_latency,
-                        cfg.noc.in_buffer_flits as u64,
-                    )
-                })
-                .collect(),
-            map: ClusterMap::new(cfg),
-            timing: L1Timing::new(cfg),
-            stats: L1Stats::default(),
-            con: ContentionStats::new(cfg.cores),
-            xbar_latency: cfg.sharing.cluster_xbar_latency,
-            fill_local: cfg.sharing.fill_local_on_remote_hit,
-        }
-    }
-
-    /// Aggregated-tag-array probe for `req` (functional part).
-    fn probe(&self, req: &MemRequest) -> AggregateProbe {
-        let core = req.core as usize;
-        let cluster = self.map.cluster_of(core);
-        let base = cluster * self.map.cores_per_cluster;
-        AggregatedTagArray::probe(
-            &self.cores[base..base + self.map.cores_per_cluster],
-            self.map.index_in_cluster(core),
-            req.line,
-            req.sectors,
-        )
-    }
-
-    fn miss_to_l2(&mut self, req: &MemRequest, start: u64, mem: &mut MemSystem) -> AccessResult {
-        let l1 = &mut self.cores[req.core as usize];
-        if let Some(ready) = l1.in_flight_ready(req.line, start) {
-            self.stats.mshr_merges += 1;
-            return AccessResult::new(
-                ready.max(start) + 1,
-                start + 1 + self.timing.latency as u64,
-            );
-        }
-        let s = mshr_dispatch(l1, req.core, start, &mut self.stats, &mut self.con);
-        let fill = mem.fetch(req, s);
-        l1.mshr.occupy_until(s, fill);
-        let usable = install_fill(
-            &mut self.cores[req.core as usize],
-            req.core,
-            req.core,
-            req.line,
-            req.sectors,
-            fill,
-            &self.timing,
-            mem,
-            &mut self.stats,
-        );
-        // Fig 7(c): the L1 stage ends at L2 dispatch (+ pipeline depth) —
-        // no probe detour, so this matches the private cache's critical
-        // path.
-        AccessResult::new(usable + 1, s + self.timing.latency as u64)
-    }
-}
-
-impl L1Arch for AtaCache {
-    fn access(&mut self, req: &MemRequest, now: u64, mem: &mut MemSystem) -> AccessResult {
-        self.stats.accesses += 1;
-        let core = req.core as usize;
-        let cluster = self.map.cluster_of(core);
-        let my_idx = self.map.index_in_cluster(core);
-
-        // Every request flows through the aggregated tag array first
-        // (comparator-group arbitration is the contention knob of §III-B).
-        let tag = self.tag_arrays[cluster].lookup_timing(now);
-        self.con.add(core, ResourceClass::AtaComparator, tag.queued);
-        let t_tag = tag.grant;
-
-        if req.is_write() {
-            // §III-C: writes are local-only; the tag pipeline still ran.
-            return handle_store(
-                &mut self.cores[core],
-                req,
-                t_tag,
-                &self.timing,
-                mem,
-                &mut self.stats,
-                &mut self.con,
-            );
-        }
-
-        let agg = self.probe(req);
-
-        // Fig 7(b): local hit has priority.
-        if matches!(agg.local, Probe::Hit { .. }) {
-            // Tags present but fill still in flight → merge, not hit.
-            if let Some(ready) = self.cores[core].in_flight_ready(req.line, t_tag) {
-                self.stats.mshr_merges += 1;
-                return AccessResult::new(
-                    ready.max(t_tag) + 1,
-                    t_tag + 1 + self.timing.latency as u64,
-                );
-            }
-            self.stats.local_hits += 1;
-            // The lookup already identified the way; update LRU and access
-            // the local data array.
-            self.cores[core].cache.tags.lookup(req.line, req.sectors);
-            let bank = decode::l1_bank(req.line, self.timing.banks);
-            let g = self.cores[core].banks.reserve(bank, t_tag, 1);
-            self.stats.bank_conflict_cycles += g.queued;
-            self.con.add(core, ResourceClass::L1DataBank, g.queued);
-            return AccessResult::served(g.grant + self.timing.latency as u64);
-        }
-
-        // Fig 7(a): remote hit — only clean copies are usable.
-        if let Some(holder_idx) = agg.clean_remote() {
-            self.stats.remote_hits += 1;
-            let holder = self.map.global_core(cluster, holder_idx);
-            // Request header crosses to the holder...
-            let arrive = {
-                let a = self.xbars[cluster].transfer(my_idx, holder_idx, t_tag, 1);
-                let uncontended = t_tag + self.xbar_latency as u64 + 2;
-                self.stats.sharing_net_cycles += a.grant.saturating_sub(uncontended);
-                self.con.add(core, ResourceClass::ClusterXbar, a.queued);
-                a.grant
-            };
-            // ...the holder's data array serves it (bank contention is the
-            // residual sharing cost the paper acknowledges)...
-            let bank = decode::l1_bank(req.line, self.timing.banks);
-            // If the holder's own fill is still in flight, data waits.
-            let avail = self.cores[holder]
-                .in_flight_ready(req.line, arrive)
-                .unwrap_or(arrive);
-            let g = self.cores[holder].banks.reserve(bank, avail, 1);
-            self.stats.bank_conflict_cycles += g.queued;
-            self.con.add(core, ResourceClass::L1DataBank, g.queued);
-            self.cores[holder].cache.tags.lookup(req.line, req.sectors); // LRU touch on use
-            let data_start = g.grant + self.timing.latency as u64;
-            // ...and the data crosses back.
-            let flits = self.timing.data_flits(req.sector_count());
-            let back = {
-                let a = self.xbars[cluster].transfer(holder_idx, my_idx, data_start, flits);
-                let uncontended = data_start + self.xbar_latency as u64 + 2 * flits as u64;
-                self.stats.sharing_net_cycles += a.grant.saturating_sub(uncontended);
-                self.con.add(core, ResourceClass::ClusterXbar, a.queued);
-                a.grant
-            };
-            if self.fill_local {
-                let usable = install_fill(
-                    &mut self.cores[core],
-                    req.core,
-                    req.core,
-                    req.line,
-                    req.sectors,
-                    back,
-                    &self.timing,
-                    mem,
-                    &mut self.stats,
-                );
-                return AccessResult::new(usable + 1, back);
-            }
-            return AccessResult::served(back + 1);
-        }
-
-        if agg.dirty_remote_only() {
-            // §III-C: the remote copy was modified — go to L2.
-            self.stats.dirty_remote_fallbacks += 1;
-        }
-
-        // Local sector-miss: fetch only the missing sectors.
-        if let Probe::SectorMiss { missing, .. } = agg.local {
-            self.stats.sector_misses += 1;
-            let partial = MemRequest {
-                sectors: missing,
-                ..*req
-            };
-            return self.miss_to_l2(&partial, t_tag, mem);
-        }
-
-        // Fig 7(c): global miss — straight to L2, no probe detour.
-        self.stats.misses += 1;
-        self.miss_to_l2(req, t_tag, mem)
-    }
-
-    fn stats(&self) -> &L1Stats {
-        &self.stats
-    }
-
-    fn contention(&self) -> &ContentionStats {
-        &self.con
-    }
-
+impl SharingPolicy for AtaPolicy {
     fn kind(&self) -> L1ArchKind {
         L1ArchKind::Ata
     }
 
-    fn resident_lines(&self, core: usize) -> Vec<LineAddr> {
-        self.cores[core].cache.tags.resident_lines()
+    fn resources(&self) -> FabricNeeds {
+        FabricNeeds {
+            xbar: true,
+            aggregated_tags: true,
+            ..FabricNeeds::default()
+        }
     }
 
-    fn sweep(&mut self, now: u64) {
-        for c in &mut self.cores {
-            c.sweep(now);
-        }
+    fn access(&mut self, p: &mut PipelineCtx, txn: &mut MemTxn, mem: &mut MemSystem) {
+        distribute(p, txn, mem, self.fill_local, None);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mem::AccessKind;
+    use crate::l1arch::{access_once, build, L1Arch};
+    use crate::mem::{AccessKind, LineAddr, MemRequest};
 
-    fn setup() -> (AtaCache, MemSystem) {
+    fn setup() -> (Box<dyn L1Arch>, MemSystem) {
         let cfg = GpuConfig::tiny(L1ArchKind::Ata);
-        (AtaCache::new(&cfg), MemSystem::new(&cfg))
+        (build(&cfg), MemSystem::new(&cfg))
     }
 
     fn load(id: u64, core: u32, line: LineAddr) -> MemRequest {
@@ -288,35 +163,35 @@ mod tests {
     #[test]
     fn local_hit_latency_close_to_private() {
         let (mut a, mut mem) = setup();
-        let d1 = a.access(&load(1, 0, 42), 0, &mut mem).done;
+        let d1 = access_once(a.as_mut(), &load(1, 0, 42), 0, &mut mem).done();
         let t = d1 + 100;
-        let ata_hit = a.access(&load(2, 0, 42), t, &mut mem).done - t;
+        let ata_hit = access_once(a.as_mut(), &load(2, 0, 42), t, &mut mem).done() - t;
 
         let cfg = GpuConfig::tiny(L1ArchKind::Private);
-        let mut p = super::super::private::PrivateL1::new(&cfg);
+        let mut p = build(&cfg);
         let mut mem2 = MemSystem::new(&cfg);
-        let d2 = p.access(&load(1, 0, 42), 0, &mut mem2).done;
+        let d2 = access_once(p.as_mut(), &load(1, 0, 42), 0, &mut mem2).done();
         let t2 = d2 + 100;
-        let priv_hit = p.access(&load(2, 0, 42), t2, &mut mem2).done - t2;
+        let priv_hit = access_once(p.as_mut(), &load(2, 0, 42), t2, &mut mem2).done() - t2;
 
         // ATA pays only the aggregated-tag pipeline (2 cycles by default).
         assert!(
             ata_hit <= priv_hit + 3,
             "ATA local hit {ata_hit} vs private {priv_hit}"
         );
-        assert_eq!(a.stats.local_hits, 1);
+        assert_eq!(a.stats().local_hits, 1);
     }
 
     #[test]
     fn remote_hit_without_probe_and_no_l2() {
         let (mut a, mut mem) = setup();
-        let d1 = a.access(&load(1, 0, 42), 0, &mut mem).done;
+        let d1 = access_once(a.as_mut(), &load(1, 0, 42), 0, &mut mem).done();
         let l2_before = mem.stats.accesses;
         let t = d1 + 100;
-        let d2 = a.access(&load(2, 1, 42), t, &mut mem).done;
-        assert_eq!(a.stats.remote_hits, 1);
+        let d2 = access_once(a.as_mut(), &load(2, 1, 42), t, &mut mem).done();
+        assert_eq!(a.stats().remote_hits, 1);
         assert_eq!(mem.stats.accesses, l2_before, "no L2 traffic");
-        assert_eq!(a.stats.probes_sent, 0, "ATA never sends probes");
+        assert_eq!(a.stats().probes_sent, 0, "ATA never sends probes");
         assert!(d2 > t);
     }
 
@@ -333,18 +208,18 @@ mod tests {
             c
         };
         let cfg_a = cluster10(L1ArchKind::Ata);
-        let mut a = AtaCache::new(&cfg_a);
+        let mut a = build(&cfg_a);
         let mut mem_a = MemSystem::new(&cfg_a);
-        let d = a.access(&load(1, 0, 42), 0, &mut mem_a).done;
+        let d = access_once(a.as_mut(), &load(1, 0, 42), 0, &mut mem_a).done();
         let t = d + 100;
-        let ata_remote = a.access(&load(2, 9, 42), t, &mut mem_a).done - t;
+        let ata_remote = access_once(a.as_mut(), &load(2, 9, 42), t, &mut mem_a).done() - t;
 
         let cfg_r = cluster10(L1ArchKind::RemoteSharing);
-        let mut r = super::super::remote::RemoteSharingL1::new(&cfg_r);
+        let mut r = build(&cfg_r);
         let mut mem_r = MemSystem::new(&cfg_r);
-        let d2 = r.access(&load(1, 0, 42), 0, &mut mem_r).done;
+        let d2 = access_once(r.as_mut(), &load(1, 0, 42), 0, &mut mem_r).done();
         let t2 = d2 + 100;
-        let rs_remote = r.access(&load(2, 9, 42), t2, &mut mem_r).done - t2;
+        let rs_remote = access_once(r.as_mut(), &load(2, 9, 42), t2, &mut mem_r).done() - t2;
 
         assert!(
             ata_remote < rs_remote,
@@ -355,12 +230,12 @@ mod tests {
     #[test]
     fn global_miss_critical_path_matches_private() {
         let (mut a, mut mem_a) = setup();
-        let ata_miss = a.access(&load(1, 0, 42), 0, &mut mem_a).done;
+        let ata_miss = access_once(a.as_mut(), &load(1, 0, 42), 0, &mut mem_a).done();
 
         let cfg = GpuConfig::tiny(L1ArchKind::Private);
-        let mut p = super::super::private::PrivateL1::new(&cfg);
+        let mut p = build(&cfg);
         let mut mem_p = MemSystem::new(&cfg);
-        let priv_miss = p.access(&load(1, 0, 42), 0, &mut mem_p).done;
+        let priv_miss = access_once(p.as_mut(), &load(1, 0, 42), 0, &mut mem_p).done();
 
         // Identical L2 path; ATA adds only the tag pipeline.
         assert!(
@@ -374,22 +249,22 @@ mod tests {
         let (mut a, mut mem) = setup();
         let mut w = load(1, 0, 42);
         w.kind = AccessKind::Store;
-        a.access(&w, 0, &mut mem);
+        access_once(a.as_mut(), &w, 0, &mut mem);
         let t = 1000;
-        a.access(&load(2, 1, 42), t, &mut mem);
-        assert_eq!(a.stats.dirty_remote_fallbacks, 1);
-        assert_eq!(a.stats.remote_hits, 0);
-        assert_eq!(a.stats.misses, 1);
+        access_once(a.as_mut(), &load(2, 1, 42), t, &mut mem);
+        assert_eq!(a.stats().dirty_remote_fallbacks, 1);
+        assert_eq!(a.stats().remote_hits, 0);
+        assert_eq!(a.stats().misses, 1);
     }
 
     #[test]
     fn remote_hit_fills_local_for_future_hits() {
         let (mut a, mut mem) = setup();
-        let d1 = a.access(&load(1, 0, 42), 0, &mut mem).done;
-        let d2 = a.access(&load(2, 1, 42), d1 + 100, &mut mem).done;
+        let d1 = access_once(a.as_mut(), &load(1, 0, 42), 0, &mut mem).done();
+        let d2 = access_once(a.as_mut(), &load(2, 1, 42), d1 + 100, &mut mem).done();
         let t = d2 + 100;
-        a.access(&load(3, 1, 42), t, &mut mem);
-        assert_eq!(a.stats.local_hits, 1, "second read is a local hit");
+        access_once(a.as_mut(), &load(3, 1, 42), t, &mut mem);
+        assert_eq!(a.stats().local_hits, 1, "second read is a local hit");
         assert!(a.resident_lines(1).contains(&42));
     }
 
@@ -398,19 +273,19 @@ mod tests {
         let (mut a, mut mem) = setup();
         let mut w = load(1, 2, 42);
         w.kind = AccessKind::Store;
-        a.access(&w, 0, &mut mem);
+        access_once(a.as_mut(), &w, 0, &mut mem);
         assert!(a.resident_lines(2).contains(&42));
         assert_eq!(mem.stats.writes, 0, "write-back-local: no L2 traffic yet");
-        assert_eq!(a.stats.writes, 1);
+        assert_eq!(a.stats().writes, 1);
     }
 
     #[test]
     fn cross_cluster_does_not_share() {
         let (mut a, mut mem) = setup();
-        let d = a.access(&load(1, 0, 42), 0, &mut mem).done;
+        let d = access_once(a.as_mut(), &load(1, 0, 42), 0, &mut mem).done();
         // Core 4 is in the other cluster of the tiny config.
-        a.access(&load(2, 4, 42), d + 100, &mut mem);
-        assert_eq!(a.stats.remote_hits, 0);
-        assert_eq!(a.stats.misses, 2);
+        access_once(a.as_mut(), &load(2, 4, 42), d + 100, &mut mem);
+        assert_eq!(a.stats().remote_hits, 0);
+        assert_eq!(a.stats().misses, 2);
     }
 }

@@ -1,0 +1,204 @@
+//! `ata-bypass` — ATA probing plus CIAO-style interference-aware bypass
+//! of contended peer caches (the fifth organization, and the proof that
+//! the shared pipeline + registry make a new organization a policy-sized
+//! change).
+//!
+//! CIAO (Zhang et al., PAPERS.md) observes that when a shared cache
+//! resource is contended, redirecting the *interfering* accesses to the
+//! under-utilized path (L2/DRAM) beats queueing everyone on the hot
+//! resource.  Here the hot resources are a remote holder's data banks and
+//! its crossbar ports: a clean remote hit is normally a win, but when the
+//! holder is already saturated the requester queues behind the holder's
+//! own traffic *and* adds to it.  This policy estimates the holder-side
+//! pressure at tag-resolution time (zero extra messages — the aggregated
+//! tag array already centralizes cluster state) and falls back to the
+//! private-cache miss path when the estimate exceeds
+//! `sharing.bypass_backlog_threshold` cycles.
+//!
+//! Everything except the bypass decision is the ATA distributor shared
+//! with [`super::ata`] (`ata::distribute`): this module contributes only
+//! the pressure estimate plugged into the distributor's
+//! [`BypassCheck`](super::ata::BypassCheck) hook.  Bypassed accesses
+//! count in the `misses` outcome class plus the `bypasses` side tally.
+
+use crate::config::{GpuConfig, L1ArchKind};
+use crate::l2::MemSystem;
+use crate::mem::{decode, MemTxn};
+
+use super::ata::distribute;
+use super::pipeline::{FabricNeeds, PipelineCtx, SharingPolicy};
+
+/// Registry constructor.
+pub fn policy(cfg: &GpuConfig) -> Box<dyn SharingPolicy> {
+    Box::new(AtaBypassPolicy {
+        fill_local: cfg.sharing.fill_local_on_remote_hit,
+        threshold: cfg.sharing.bypass_backlog_threshold,
+    })
+}
+
+#[derive(Debug)]
+pub struct AtaBypassPolicy {
+    fill_local: bool,
+    /// Holder-side pressure (cycles) above which a remote hit bypasses.
+    threshold: u64,
+}
+
+/// Holder-side pressure estimate at `t`: the backlog of the bank the
+/// line maps to, plus the holder's crossbar port backlogs (requests
+/// converging on it and returns leaving it).  Read-only and
+/// deterministic — the decision uses the same reservation state the
+/// access would queue on, and needs no extra messages: the aggregated
+/// tag array already centralizes cluster state.
+fn holder_pressure(
+    p: &PipelineCtx,
+    cluster: usize,
+    holder_idx: usize,
+    txn: &MemTxn,
+    t: u64,
+) -> u64 {
+    let holder = p.map.global_core(cluster, holder_idx);
+    let bank = decode::l1_bank(txn.req.line, p.timing.banks);
+    p.cores[holder].banks.backlog(bank, t)
+        + p.xbars[cluster].output_backlog(holder_idx, t)
+        + p.xbars[cluster].input_backlog(holder_idx, t)
+}
+
+impl SharingPolicy for AtaBypassPolicy {
+    fn kind(&self) -> L1ArchKind {
+        L1ArchKind::AtaBypass
+    }
+
+    fn resources(&self) -> FabricNeeds {
+        FabricNeeds {
+            xbar: true,
+            aggregated_tags: true,
+            ..FabricNeeds::default()
+        }
+    }
+
+    fn access(&mut self, p: &mut PipelineCtx, txn: &mut MemTxn, mem: &mut MemSystem) {
+        // Fig 7, with the CIAO twist on case (a): serve a clean remote
+        // hit only while the holder is calm; otherwise leave it alone
+        // and pay the (uncontended) L2 path instead.
+        let threshold = self.threshold;
+        let check =
+            move |p: &PipelineCtx, cluster: usize, holder_idx: usize, txn: &MemTxn, t: u64| {
+                holder_pressure(p, cluster, holder_idx, txn, t) > threshold
+            };
+        distribute(p, txn, mem, self.fill_local, Some(&check));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::l1arch::{access_once, build, L1Arch};
+    use crate::mem::{AccessKind, LineAddr, MemRequest};
+
+    fn cfg_with_threshold(threshold: u64) -> GpuConfig {
+        let mut cfg = GpuConfig::tiny(L1ArchKind::AtaBypass);
+        cfg.sharing.bypass_backlog_threshold = threshold;
+        cfg
+    }
+
+    fn load(id: u64, core: u32, line: LineAddr) -> MemRequest {
+        MemRequest {
+            id,
+            core,
+            warp: 0,
+            inst: id,
+            line,
+            sectors: 0b1111,
+            kind: AccessKind::Load,
+            issue_cycle: 0,
+        }
+    }
+
+    #[test]
+    fn behaves_like_ata_when_uncontended() {
+        // A calm holder: the single remote hit must be served remotely,
+        // with the same outcome ATA produces.
+        let cfg = cfg_with_threshold(8);
+        let mut b = build(&cfg);
+        let mut mem = MemSystem::new(&cfg);
+        let d1 = access_once(b.as_mut(), &load(1, 0, 42), 0, &mut mem).done();
+        let t = d1 + 100;
+        access_once(b.as_mut(), &load(2, 1, 42), t, &mut mem);
+        assert_eq!(b.stats().remote_hits, 1);
+        assert_eq!(b.stats().bypasses, 0);
+
+        let cfg_a = GpuConfig::tiny(L1ArchKind::Ata);
+        let mut a = build(&cfg_a);
+        let mut mem_a = MemSystem::new(&cfg_a);
+        let e1 = access_once(a.as_mut(), &load(1, 0, 42), 0, &mut mem_a).done();
+        assert_eq!(e1, d1, "identical timing off the contended path");
+    }
+
+    #[test]
+    fn zero_threshold_bypasses_contended_holder() {
+        // Hammer the holder with same-cycle remote hits: with threshold 0
+        // the trailing requests find pressure > 0 and divert to L2.
+        let cfg = cfg_with_threshold(0);
+        let mut b = build(&cfg);
+        let mut mem = MemSystem::new(&cfg);
+        let d1 = access_once(b.as_mut(), &load(1, 0, 42), 0, &mut mem).done();
+        let t = d1 + 100;
+        for c in 1..4u32 {
+            access_once(b.as_mut(), &load(1 + c as u64, c, 42), t, &mut mem);
+        }
+        assert!(b.stats().bypasses > 0, "contended holder must be bypassed");
+        assert!(
+            b.stats().remote_hits >= 1,
+            "the first request still hits remotely"
+        );
+        assert_eq!(
+            b.stats().bypasses + b.stats().remote_hits,
+            3,
+            "every cross-core read either hit remotely or bypassed"
+        );
+    }
+
+    #[test]
+    fn bypass_relieves_holder_bank_pressure() {
+        // Same convergent burst, bypass on vs off: bypassing must strictly
+        // reduce the queueing charged on L1 data banks + cluster fabric.
+        let run = |threshold: Option<u64>| {
+            let cfg = match threshold {
+                Some(th) => cfg_with_threshold(th),
+                None => GpuConfig::tiny(L1ArchKind::Ata),
+            };
+            let mut l1 = build(&cfg);
+            let mut mem = MemSystem::new(&cfg);
+            let d1 = access_once(l1.as_mut(), &load(1, 0, 42), 0, &mut mem).done();
+            let t = d1 + 100;
+            for c in 1..4u32 {
+                for k in 0..8u64 {
+                    access_once(l1.as_mut(), &load(10 + c as u64 * 8 + k, c, 42), t, &mut mem);
+                }
+            }
+            use crate::stats::ResourceClass;
+            l1.contention().total().get(ResourceClass::L1DataBank)
+                + l1.contention().total().get(ResourceClass::ClusterXbar)
+        };
+        let with_bypass = run(Some(0));
+        let without = run(None);
+        assert!(
+            with_bypass < without,
+            "bypass must shed holder-side queueing: {with_bypass} vs {without}"
+        );
+    }
+
+    #[test]
+    fn writes_and_local_hits_never_bypass() {
+        let cfg = cfg_with_threshold(0);
+        let mut b = build(&cfg);
+        let mut mem = MemSystem::new(&cfg);
+        let mut w = load(1, 0, 42);
+        w.kind = AccessKind::Store;
+        access_once(b.as_mut(), &w, 0, &mut mem);
+        let t = 1000;
+        access_once(b.as_mut(), &load(2, 0, 42), t, &mut mem);
+        assert_eq!(b.stats().local_hits, 1);
+        assert_eq!(b.stats().bypasses, 0, "local traffic is never diverted");
+    }
+}

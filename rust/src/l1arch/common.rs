@@ -1,19 +1,17 @@
-//! State and helpers shared by all four L1 organizations.
+//! Per-core state shared by every L1 organization.
 //!
 //! Each GPU core owns one [`CoreL1`]: a sectored cache plus the timing
 //! resources in front of it (tag port, data-array banks, MSHR pool).  The
 //! organizations differ in *who is allowed to reach which CoreL1 and how*
-//! — which is exactly the paper's design space.
-
+//! — which is exactly the paper's design space, and exactly what a
+//! [`SharingPolicy`](super::SharingPolicy) decides on top of the shared
+//! [`pipeline`](super::pipeline).
 
 use crate::cache::SectoredCache;
 use crate::config::{GpuConfig, WritePolicy};
-use crate::mem::{decode, LineAddr, MemRequest, SectorMask};
-use crate::util::fxhash::FxHashMap;
+use crate::mem::LineAddr;
 use crate::resource::{BankedCalendar, MultiPort};
-use crate::stats::{ContentionStats, L1Stats, ResourceClass};
-
-use super::AccessResult;
+use crate::util::fxhash::FxHashMap;
 
 /// One core's L1 storage and timing resources.
 ///
@@ -83,391 +81,26 @@ impl L1Timing {
     }
 }
 
-/// Install a fill into `l1` at `fill_cycle`: updates tags, forwards a
-/// dirty victim to L2, records the in-flight entry.  Returns the cycle the
-/// fill is usable.
-///
-/// Fills use a dedicated write port rather than the read banks: a fill's
-/// timestamp lies in the future relative to the requests currently being
-/// scheduled, and the reservation timeline of a read bank must only be fed
-/// in (near-)monotone time order (see `resource::Server`).  Read/probe
-/// contention - the conflict mechanism the paper studies - is unaffected.
-/// `core_global` is the core whose NoC port carries the victim writeback
-/// (the cache's owner); `attr_core` is the core charged for the
-/// writeback's queueing (the requester whose fill caused the eviction).
-/// They differ only for decoupled-sharing home slices.
-#[allow(clippy::too_many_arguments)]
-pub fn install_fill(
-    l1: &mut CoreL1,
-    core_global: u32,
-    attr_core: u32,
-    line: LineAddr,
-    sectors: SectorMask,
-    fill_cycle: u64,
-    _timing: &L1Timing,
-    mem: &mut crate::l2::MemSystem,
-    stats: &mut L1Stats,
-) -> u64 {
-    let (_, evicted) = l1.cache.fill(line, sectors);
-    stats.fills += 1;
-    if let Some(ev) = evicted {
-        // Only dirty victims generate L2 write traffic; clean victims are
-        // dropped silently.  `TagArray::fill` reports dirty victims only —
-        // the guard makes the invariant explicit and local.  (No policy
-        // check here: decoupled-sharing's home slices hold the only copy
-        // and mark it dirty regardless of the configured L1 policy.)
-        debug_assert!(ev.dirty_sectors != 0, "clean victims are not reported");
-        if ev.dirty_sectors != 0 {
-            mem.write_for(
-                core_global as usize,
-                ev.line,
-                ev.dirty_sectors.count_ones(),
-                fill_cycle,
-                attr_core as usize,
-            );
-        }
-    }
-    l1.in_flight.insert(line, fill_cycle);
-    fill_cycle
-}
-
-/// Dispatch point of a miss through the finite MSHR pool: when every
-/// entry is occupied the miss stalls until one frees, the stall is
-/// attributed to [`ResourceClass::MshrFull`], and the request counts as a
-/// structural-hazard reject.  Both the private/common path and the ATA
-/// path go through this helper so a full pool delays dispatch identically
-/// everywhere.  Returns the dispatch cycle; the caller must
-/// `occupy_until(start, fill)` once the fill time is known.
-pub fn mshr_dispatch(
-    l1: &mut CoreL1,
-    core_global: u32,
-    t_ready: u64,
-    stats: &mut L1Stats,
-    con: &mut ContentionStats,
-) -> u64 {
-    let start = l1.mshr.earliest(t_ready);
-    let stall = start - t_ready;
-    if stall > 0 {
-        stats.rejects += 1;
-        con.add(core_global as usize, ResourceClass::MshrFull, stall);
-    }
-    start
-}
-
-/// The private-cache load path: tag lookup, bank access on a hit, MSHR +
-/// L2 fetch on a miss.  This is the baseline organization's entire
-/// behaviour and the "local cache" half of remote-sharing and ATA-Cache.
-pub fn local_load(
-    l1: &mut CoreL1,
-    req: &MemRequest,
-    now: u64,
-    timing: &L1Timing,
-    mem: &mut crate::l2::MemSystem,
-    stats: &mut L1Stats,
-    con: &mut ContentionStats,
-) -> AccessResult {
-    let core = req.core as usize;
-    let bank = decode::l1_bank(req.line, timing.banks);
-    match l1.cache.tags.lookup(req.line, req.sectors) {
-        crate::cache::Probe::Hit { .. } => {
-            // The tags were installed when the miss was *scheduled*; if the
-            // fill has not landed yet this is really a merge on the
-            // in-flight fetch, not a hit.
-            if let Some(ready) = l1.in_flight_ready(req.line, now) {
-                stats.mshr_merges += 1;
-                return AccessResult::new(
-                    ready.max(now) + 1,
-                    now + 1 + timing.latency as u64,
-                );
-            }
-            stats.local_hits += 1;
-            // Tag+data bank: one (line-wide) operation per cycle; accesses
-            // to the same bank in the same cycle serialize — the paper's
-            // bank-conflict mechanism.
-            let g = l1.banks.reserve(bank, now, 1);
-            stats.bank_conflict_cycles += g.queued;
-            con.add(core, ResourceClass::L1DataBank, g.queued);
-            AccessResult::served(g.grant + timing.latency as u64)
-        }
-        probe => {
-            // Merge onto an in-flight fetch of this line if possible.
-            if let Some(ready) = l1.in_flight_ready(req.line, now) {
-                stats.mshr_merges += 1;
-                return AccessResult::new(
-                    ready.max(now) + 1,
-                    now + 1 + timing.latency as u64,
-                );
-            }
-            // The tag probe costs one bank cycle even on a miss.
-            let g = l1.banks.reserve(bank, now, 1);
-            con.add(core, ResourceClass::L1TagBank, g.queued);
-            let t_tag = g.grant + 1;
-            let fetch_sectors = match probe {
-                crate::cache::Probe::SectorMiss { missing, .. } => {
-                    stats.sector_misses += 1;
-                    missing
-                }
-                _ => {
-                    stats.misses += 1;
-                    // Sector cache: fetch only the requested sectors
-                    // (Table II: 32 B sector fills, GPGPU-Sim behaviour).
-                    req.sectors
-                }
-            };
-            // MSHR entry held from allocation to fill (full pool stalls
-            // dispatch — see `mshr_dispatch`).
-            let start = mshr_dispatch(l1, req.core, t_tag, stats, con);
-            let fetch_req = MemRequest {
-                sectors: fetch_sectors,
-                ..*req
-            };
-            let fill = mem.fetch(&fetch_req, start);
-            l1.mshr.occupy_until(start, fill);
-            let usable = install_fill(
-                l1,
-                req.core,
-                req.core,
-                req.line,
-                fetch_sectors,
-                fill,
-                timing,
-                mem,
-                stats,
-            );
-            // L1 stage = miss detection + forward, charged one pipeline
-            // depth past the dispatch point so hit/miss stages compare.
-            AccessResult::new(usable + 1, start + timing.latency as u64)
-        }
-    }
-}
-
-/// Handle a store according to the configured write policy, entirely
-/// within the request's local cache (§III-C: "for write requests we only
-/// process them in the local cache of the request's source core").
-pub fn handle_store(
-    l1: &mut CoreL1,
-    req: &MemRequest,
-    now: u64,
-    timing: &L1Timing,
-    mem: &mut crate::l2::MemSystem,
-    stats: &mut L1Stats,
-    con: &mut ContentionStats,
-) -> AccessResult {
-    stats.writes += 1;
-    let core = req.core as usize;
-    let bank = decode::l1_bank(req.line, timing.banks);
-    let t_tag = now;
-    match timing.write_policy {
-        WritePolicy::WriteThrough => {
-            // Update the line if present, and always send the data to L2.
-            if l1.cache.tags.mark_dirty(req.line, 0) {
-                // Present: data-array write (dirty bits stay clear in WT —
-                // mark_dirty(.., 0) only touches LRU).
-                let g = l1.banks.reserve(bank, t_tag, 1);
-                stats.bank_conflict_cycles += g.queued;
-                con.add(core, ResourceClass::L1DataBank, g.queued);
-            }
-            mem.write(core, req.line, req.sector_count(), t_tag);
-            AccessResult::served(t_tag + 1)
-        }
-        WritePolicy::WriteBackLocal => {
-            let g = l1.banks.reserve(bank, t_tag, 1);
-            stats.bank_conflict_cycles += g.queued;
-            con.add(core, ResourceClass::L1DataBank, g.queued);
-            // Write-allocate: written sectors become valid + dirty.
-            let (_, evicted) = l1.cache.fill(req.line, req.sectors);
-            l1.cache.tags.mark_dirty(req.line, req.sectors);
-            if let Some(ev) = evicted {
-                debug_assert!(ev.dirty_sectors != 0, "clean victims are not reported");
-                if ev.dirty_sectors != 0 {
-                    mem.write(core, ev.line, ev.dirty_sectors.count_ones(), g.grant);
-                }
-            }
-            AccessResult::served(g.grant + 1)
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::L1ArchKind;
-    use crate::l2::MemSystem;
-    use crate::mem::AccessKind;
-
-    fn setup() -> (CoreL1, L1Timing, MemSystem, L1Stats, ContentionStats) {
-        let cfg = GpuConfig::tiny(L1ArchKind::Private);
-        (
-            CoreL1::new(&cfg),
-            L1Timing::new(&cfg),
-            MemSystem::new(&cfg),
-            L1Stats::default(),
-            ContentionStats::new(cfg.cores),
-        )
-    }
-
-    fn store(line: LineAddr) -> MemRequest {
-        MemRequest {
-            id: 1,
-            core: 0,
-            warp: 0,
-            inst: 0,
-            line,
-            sectors: 0b0011,
-            kind: AccessKind::Store,
-            issue_cycle: 0,
-        }
-    }
-
-    fn load(id: u64, line: LineAddr) -> MemRequest {
-        MemRequest {
-            id,
-            core: 0,
-            warp: 0,
-            inst: id,
-            line,
-            sectors: 0b1111,
-            kind: AccessKind::Load,
-            issue_cycle: 0,
-        }
-    }
 
     #[test]
-    fn install_fill_tracks_in_flight_and_evicts() {
-        let (mut l1, t, mut mem, mut stats, _) = setup();
-        let g = install_fill(&mut l1, 0, 0, 42, 0b1111, 100, &t, &mut mem, &mut stats);
-        assert!(g >= 100);
-        assert_eq!(stats.fills, 1);
-        assert_eq!(l1.in_flight_ready(42, 50), Some(g));
-        assert_eq!(l1.in_flight_ready(42, g + 1), None, "landed");
-        l1.sweep(g + 1);
+    fn in_flight_tracking_and_sweep() {
+        let cfg = GpuConfig::tiny(L1ArchKind::Private);
+        let mut l1 = CoreL1::new(&cfg);
+        l1.in_flight.insert(42, 100);
+        assert_eq!(l1.in_flight_ready(42, 50), Some(100));
+        assert_eq!(l1.in_flight_ready(42, 100), None, "landed");
+        assert_eq!(l1.in_flight_ready(7, 50), None, "unknown line");
+        l1.sweep(101);
         assert!(l1.in_flight.is_empty());
     }
 
     #[test]
-    fn writeback_local_allocates_and_dirties() {
-        let (mut l1, t, mut mem, mut stats, mut con) = setup();
-        handle_store(&mut l1, &store(9), 0, &t, &mut mem, &mut stats, &mut con);
-        assert!(l1.cache.tags.is_dirty(9, 0b0011));
-        assert_eq!(mem.stats.writes, 0, "no L2 traffic on local write");
-        assert_eq!(stats.writes, 1);
-    }
-
-    #[test]
-    fn writethrough_sends_to_l2() {
-        let cfg = {
-            let mut c = GpuConfig::tiny(L1ArchKind::Private);
-            c.l1.write_policy = WritePolicy::WriteThrough;
-            c
-        };
-        let mut l1 = CoreL1::new(&cfg);
-        let t = L1Timing::new(&cfg);
-        let mut mem = MemSystem::new(&cfg);
-        let mut stats = L1Stats::default();
-        let mut con = ContentionStats::new(cfg.cores);
-        handle_store(&mut l1, &store(9), 0, &t, &mut mem, &mut stats, &mut con);
-        assert_eq!(mem.stats.writes, 1, "write-through reaches L2");
-        assert!(!l1.cache.tags.is_dirty(9, 0b0011));
-    }
-
-    #[test]
-    fn dirty_eviction_writes_back() {
-        let (mut l1, t, mut mem, mut stats, mut con) = setup();
-        // Dirty a line, then force enough fills into its set to evict it.
-        handle_store(&mut l1, &store(0), 0, &t, &mut mem, &mut stats, &mut con);
-        let sets = l1.cache.tags.sets() as u64;
-        let assoc = l1.cache.tags.assoc() as u64;
-        for k in 1..=assoc {
-            install_fill(&mut l1, 0, 0, k * sets, 0b1111, 1000, &t, &mut mem, &mut stats);
-        }
-        assert!(mem.stats.writes >= 1, "dirty victim written back to L2");
-    }
-
-    #[test]
-    fn clean_evictions_send_no_l2_writes() {
-        // Pin the L2 write count: evicting *clean* lines must generate
-        // zero write traffic under write-back-local…
-        let (mut l1, t, mut mem, mut stats, _) = setup();
-        let sets = l1.cache.tags.sets() as u64;
-        let assoc = l1.cache.tags.assoc() as u64;
-        for k in 0..assoc * 3 {
-            install_fill(&mut l1, 0, 0, k * sets, 0b1111, 1000, &t, &mut mem, &mut stats);
-        }
-        assert_eq!(mem.stats.writes, 0, "clean victims must not reach L2");
-
-        // …and under write-through the only L2 writes are the stores
-        // themselves (lines are never dirty, so evictions add nothing).
-        let cfg = {
-            let mut c = GpuConfig::tiny(L1ArchKind::Private);
-            c.l1.write_policy = WritePolicy::WriteThrough;
-            c
-        };
-        let mut l1 = CoreL1::new(&cfg);
-        let t = L1Timing::new(&cfg);
-        let mut mem = MemSystem::new(&cfg);
-        let mut stats = L1Stats::default();
-        let mut con = ContentionStats::new(cfg.cores);
-        let n_stores = 5u64;
-        for i in 0..n_stores {
-            handle_store(&mut l1, &store(i), i * 10, &t, &mut mem, &mut stats, &mut con);
-        }
-        let sets = l1.cache.tags.sets() as u64;
-        let assoc = l1.cache.tags.assoc() as u64;
-        for k in 0..assoc * 3 {
-            install_fill(&mut l1, 0, 0, 1 + k * sets, 0b1111, 5000, &t, &mut mem, &mut stats);
-        }
-        assert_eq!(
-            mem.stats.writes, n_stores,
-            "write-through L2 writes == stores, evictions add none"
-        );
-    }
-
-    #[test]
-    fn full_mshr_pool_delays_dispatch_and_counts_rejects() {
-        // Saturate the MSHR pool with same-cycle misses to distinct lines:
-        // dispatch must serialize once the pool is full, each stalled miss
-        // must count a reject, and the stall must land in the breakdown.
-        let cfg = {
-            let mut c = GpuConfig::tiny(L1ArchKind::Private);
-            c.l1.mshr_entries = 2;
-            c
-        };
-        c_assert_mshr(&cfg);
-    }
-
-    fn c_assert_mshr(cfg: &GpuConfig) {
-        let mut l1 = CoreL1::new(cfg);
-        let t = L1Timing::new(cfg);
-        let mut mem = MemSystem::new(cfg);
-        let mut stats = L1Stats::default();
-        let mut con = ContentionStats::new(cfg.cores);
-        let n = 8u64;
-        let mut dispatches = Vec::new();
-        for i in 0..n {
-            // Distinct lines, same arrival cycle → no merges, pure pool
-            // pressure.
-            local_load(&mut l1, &load(i, i * 64), 0, &t, &mut mem, &mut stats, &mut con);
-            dispatches.push(l1.mshr.earliest(0));
-        }
-        assert_eq!(stats.misses, n);
-        assert!(
-            stats.rejects >= n - cfg.l1.mshr_entries as u64,
-            "misses beyond the pool must reject: {} rejects",
-            stats.rejects
-        );
-        assert!(
-            con.total().get(ResourceClass::MshrFull) > 0,
-            "MSHR-full stalls must be attributed: {:?}",
-            con.total()
-        );
-        // The pool's earliest-free horizon must move out as misses pile up.
-        assert!(dispatches.windows(2).all(|w| w[0] <= w[1]));
-        assert!(dispatches[n as usize - 1] > 0, "a full pool delays dispatch");
-    }
-
-    #[test]
     fn data_flits_include_header() {
-        let (_, t, _, _, _) = setup();
+        let t = L1Timing::new(&GpuConfig::tiny(L1ArchKind::Private));
         assert_eq!(t.data_flits(1), 1 + 1); // 32B / 40B flit = 1 + hdr
         assert_eq!(t.data_flits(4), 4 + 1); // 128B -> 4 flits + hdr
     }

@@ -1,4 +1,5 @@
-//! Decoupled-sharing L1 (Ibrahim et al. PACT'20 / HPCA'21) — baseline #3.
+//! Decoupled-sharing L1 (Ibrahim et al. PACT'20 / HPCA'21) — baseline #3,
+//! as a policy.
 //!
 //! The cluster's L1s are address-sliced: every line has exactly one home
 //! cache, and *every* access — local or not — is routed to the home slice.
@@ -6,98 +7,74 @@
 //! but requests from all ten cores converge on the same slice's four data
 //! banks, and the paper's Fig 3 pathology emerges: bank-conflict
 //! serialization inflates L1 latency far beyond the private cache's.
+//!
+//! This is the policy that exercises the transaction's endpoint/attr
+//! split: the home slice is the NoC endpoint for misses and victim
+//! writebacks, while every queued cycle stays charged to the requesting
+//! core (the sufferer).
 
 use crate::cache::Probe;
 use crate::config::{GpuConfig, L1ArchKind};
 use crate::l2::MemSystem;
-use crate::mem::{decode, LineAddr, MemRequest};
-use crate::noc::XbarReservation;
-use crate::stats::{ContentionStats, L1Stats, ResourceClass};
+use crate::mem::{decode, LineAddr, MemTxn};
+use crate::stats::ResourceClass;
 
-use super::common::{install_fill, mshr_dispatch, CoreL1, L1Timing};
-use super::{AccessResult, ClusterMap, L1Arch};
+use super::pipeline::{FabricNeeds, PipelineCtx, SharingPolicy};
 
-#[derive(Debug)]
-pub struct DecoupledSharingL1 {
-    caches: Vec<CoreL1>,
-    /// Intra-cluster request/response crossbars (one pair per cluster).
-    xbars: Vec<XbarReservation>,
-    map: ClusterMap,
-    timing: L1Timing,
-    stats: L1Stats,
-    con: ContentionStats,
-    xbar_latency: u32,
+/// Registry constructor.
+pub fn policy(_cfg: &GpuConfig) -> Box<dyn SharingPolicy> {
+    Box::new(DecoupledPolicy)
 }
 
-impl DecoupledSharingL1 {
-    pub fn new(cfg: &GpuConfig) -> Self {
-        let cpc = cfg.cores_per_cluster();
-        DecoupledSharingL1 {
-            caches: (0..cfg.cores).map(|_| CoreL1::new(cfg)).collect(),
-            xbars: (0..cfg.clusters)
-                .map(|_| {
-                    XbarReservation::new(
-                        cpc,
-                        cpc,
-                        cfg.sharing.cluster_xbar_latency,
-                        cfg.noc.in_buffer_flits as u64,
-                    )
-                })
-                .collect(),
-            map: ClusterMap::new(cfg),
-            timing: L1Timing::new(cfg),
-            stats: L1Stats::default(),
-            con: ContentionStats::new(cfg.cores),
-            xbar_latency: cfg.sharing.cluster_xbar_latency,
+#[derive(Debug)]
+pub struct DecoupledPolicy;
+
+impl DecoupledPolicy {
+    /// Global core id of the home slice for `line` in `core`'s cluster.
+    pub fn home_of(p: &PipelineCtx, core: usize, line: LineAddr) -> usize {
+        let cluster = p.map.cluster_of(core);
+        let idx = decode::home_cache(line, p.map.cores_per_cluster);
+        p.map.global_core(cluster, idx)
+    }
+}
+
+impl SharingPolicy for DecoupledPolicy {
+    fn kind(&self) -> L1ArchKind {
+        L1ArchKind::DecoupledSharing
+    }
+
+    fn resources(&self) -> FabricNeeds {
+        FabricNeeds {
+            xbar: true,
+            ..FabricNeeds::default()
         }
     }
 
-    /// Global core id of the home slice for `line` in `core`'s cluster.
-    fn home_of(&self, core: usize, line: LineAddr) -> usize {
-        let cluster = self.map.cluster_of(core);
-        let idx = decode::home_cache(line, self.map.cores_per_cluster);
-        self.map.global_core(cluster, idx)
-    }
-
-    /// Route a packet from `core` to `home` over the cluster crossbar;
-    /// returns the arrival cycle and charges queueing to `attr_core` (the
-    /// requesting core, which may differ from the sending endpoint on the
-    /// data-return hop).
-    fn route(&mut self, core: usize, home: usize, now: u64, flits: u32, attr_core: usize) -> u64 {
-        let cluster = self.map.cluster_of(core);
-        let src = self.map.index_in_cluster(core);
-        let dst = self.map.index_in_cluster(home);
-        let g = self.xbars[cluster].transfer(src, dst, now, flits);
-        let uncontended = now + self.xbar_latency as u64 + 2 * flits as u64;
-        self.stats.sharing_net_cycles += g.grant.saturating_sub(uncontended);
-        self.con.add(attr_core, ResourceClass::ClusterXbar, g.queued);
-        g.grant
-    }
-}
-
-impl L1Arch for DecoupledSharingL1 {
-    fn access(&mut self, req: &MemRequest, now: u64, mem: &mut MemSystem) -> AccessResult {
-        self.stats.accesses += 1;
-        let core = req.core as usize;
-        let home = self.home_of(core, req.line);
+    fn access(&mut self, p: &mut PipelineCtx, txn: &mut MemTxn, mem: &mut MemSystem) {
+        let core = txn.req.core as usize;
+        let line = txn.req.line;
+        let home = Self::home_of(p, core, line);
         let is_local_slice = home == core;
+        let now = txn.now();
+        let cluster = p.map.cluster_of(core);
+        let my_idx = p.map.index_in_cluster(core);
+        let home_idx = p.map.index_in_cluster(home);
 
         // Writes also go to the home slice (there is only one copy).
-        if req.is_write() {
-            self.stats.writes += 1;
+        if txn.req.is_write() {
+            p.stats.writes += 1;
             let t_arrive = if is_local_slice {
                 now
             } else {
-                let flits = self.timing.data_flits(req.sector_count());
-                self.route(core, home, now, flits, core)
+                let flits = p.timing.data_flits(txn.req.sector_count());
+                p.xbar_route(cluster, my_idx, home_idx, now, flits, txn)
             };
-            let l1 = &mut self.caches[home];
-            let bank = decode::l1_bank(req.line, self.timing.banks);
-            let g = l1.banks.reserve(bank, t_arrive, 1);
-            self.stats.bank_conflict_cycles += g.queued;
-            self.con.add(core, ResourceClass::L1DataBank, g.queued);
-            let (_, evicted) = l1.cache.fill(req.line, req.sectors);
-            l1.cache.tags.mark_dirty(req.line, req.sectors);
+            let bank = decode::l1_bank(line, p.timing.banks);
+            let g = p.cores[home].banks.reserve(bank, t_arrive, 1);
+            p.stats.bank_conflict_cycles += g.queued;
+            txn.charge(&mut p.con, ResourceClass::L1DataBank, g.queued);
+            let (_, evicted) = p.cores[home].cache.fill(line, txn.req.sectors);
+            p.cores[home].cache.tags.mark_dirty(line, txn.req.sectors);
             if let Some(ev) = evicted {
                 debug_assert!(ev.dirty_sectors != 0, "clean victims are not reported");
                 if ev.dirty_sectors != 0 {
@@ -105,121 +82,60 @@ impl L1Arch for DecoupledSharingL1 {
                     mem.write_for(home, ev.line, ev.dirty_sectors.count_ones(), g.grant, core);
                 }
             }
-            return AccessResult::served(g.grant + 1);
+            txn.serve(g.grant + 1);
+            return;
         }
 
         // Load: route to home, access the slice, route the data back.
         let t_arrive = if is_local_slice {
             now
         } else {
-            self.route(core, home, now, 1, core)
+            p.xbar_route(cluster, my_idx, home_idx, now, 1, txn)
         };
 
-        let l1 = &mut self.caches[home];
-        let bank = decode::l1_bank(req.line, self.timing.banks);
         // (data_ready, l1_stage_done at the slice)
-        let (data_ready, stage) = match l1.cache.tags.lookup(req.line, req.sectors) {
-            Probe::Hit { .. } if l1.in_flight_ready(req.line, t_arrive).is_some() => {
+        let (data_ready, stage) = match p.cores[home].cache.tags.lookup(line, txn.req.sectors) {
+            Probe::Hit { .. } if p.cores[home].in_flight_ready(line, t_arrive).is_some() => {
                 // Tags installed at miss-schedule time; fill not landed yet.
-                self.stats.mshr_merges += 1;
-                let d = l1.in_flight_ready(req.line, t_arrive).unwrap().max(t_arrive) + 1;
-                (d, t_arrive + 1 + self.timing.latency as u64)
+                p.try_merge(home, line, t_arrive).unwrap()
             }
             Probe::Hit { .. } => {
                 if is_local_slice {
-                    self.stats.local_hits += 1;
+                    p.stats.local_hits += 1;
                 } else {
-                    self.stats.remote_hits += 1;
+                    p.stats.remote_hits += 1;
                 }
-                let g = l1.banks.reserve(bank, t_arrive, 1);
-                self.stats.bank_conflict_cycles += g.queued;
-                self.con.add(core, ResourceClass::L1DataBank, g.queued);
-                let d = g.grant + self.timing.latency as u64;
+                let d = p.hit_data_access(home, txn, t_arrive);
                 (d, d)
             }
             probe => {
-                if let Some(ready) = l1.in_flight_ready(req.line, t_arrive) {
-                    self.stats.mshr_merges += 1;
-                    (ready.max(t_arrive) + 1, t_arrive + 1 + self.timing.latency as u64)
+                if let Some(merged) = p.try_merge(home, line, t_arrive) {
+                    merged
                 } else {
                     // Tag probe costs one bank cycle on a miss too.
-                    let g = l1.banks.reserve(bank, t_arrive, 1);
-                    self.con.add(core, ResourceClass::L1TagBank, g.queued);
-                    let t_tag = g.grant + 1;
-                    let fetch_sectors = match probe {
-                        Probe::SectorMiss { missing, .. } => {
-                            self.stats.sector_misses += 1;
-                            missing
-                        }
-                        _ => {
-                            self.stats.misses += 1;
-                            req.sectors
-                        }
-                    };
-                    // The home slice owns the miss: its NoC port issues the
-                    // L2 fetch and the fill lands in the home cache.  All
-                    // stalls (MSHR-full and the memory side) are still
+                    let t_tag = p.miss_tag_probe(home, txn, t_arrive);
+                    let fetch_sectors = p.classify_miss(probe, txn.req.sectors);
+                    // The home slice owns the miss: its NoC port issues
+                    // the L2 fetch and the fill lands in the home cache.
+                    // All stalls (MSHR-full and the memory side) are still
                     // charged to the *requesting* core — it is the one
-                    // whose access waits (`fetch_for`).
-                    let s = mshr_dispatch(l1, req.core, t_tag, &mut self.stats, &mut self.con);
-                    let fetch_req = MemRequest {
-                        core: home as u32,
-                        sectors: fetch_sectors,
-                        ..*req
-                    };
-                    let fill = mem.fetch_for(&fetch_req, s, core);
-                    self.caches[home].mshr.occupy_until(s, fill);
-                    let usable = install_fill(
-                        &mut self.caches[home],
-                        home as u32,
-                        req.core,
-                        req.line,
-                        fetch_sectors,
-                        fill,
-                        &self.timing,
-                        mem,
-                        &mut self.stats,
-                    );
-                    // Stage ends when the home slice dispatches to L2
-                    // (+ pipeline depth, matching the other archs).
-                    (usable + 1, s + self.timing.latency as u64)
+                    // whose access waits (`txn.attr_core`).
+                    p.miss_to_l2(home, txn, fetch_sectors, t_tag, mem)
                 }
             }
         };
 
         if is_local_slice {
-            AccessResult::new(data_ready, stage)
+            txn.complete(data_ready, stage);
         } else {
             // Data crosses back to the requesting core.  For a slice hit
             // the return crossing is part of the L1 access (the paper's
             // decoupled latency includes it); for a miss the stage already
             // ended at L2 dispatch.
-            let flits = self.timing.data_flits(req.sector_count());
-            let back = self.route(home, core, data_ready, flits, core);
+            let flits = p.timing.data_flits(txn.req.sector_count());
+            let back = p.xbar_route(cluster, home_idx, my_idx, data_ready, flits, txn);
             let stage_back = if stage == data_ready { back } else { stage };
-            AccessResult::new(back, stage_back)
-        }
-    }
-
-    fn stats(&self) -> &L1Stats {
-        &self.stats
-    }
-
-    fn contention(&self) -> &ContentionStats {
-        &self.con
-    }
-
-    fn kind(&self) -> L1ArchKind {
-        L1ArchKind::DecoupledSharing
-    }
-
-    fn resident_lines(&self, core: usize) -> Vec<LineAddr> {
-        self.caches[core].cache.tags.resident_lines()
-    }
-
-    fn sweep(&mut self, now: u64) {
-        for c in &mut self.caches {
-            c.sweep(now);
+            txn.complete(back, stage_back);
         }
     }
 }
@@ -227,11 +143,17 @@ impl L1Arch for DecoupledSharingL1 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mem::AccessKind;
+    use crate::l1arch::{access_once, build, L1Arch, PipelineL1};
+    use crate::mem::{AccessKind, MemRequest};
 
-    fn setup() -> (DecoupledSharingL1, MemSystem) {
+    fn setup() -> (Box<dyn L1Arch>, MemSystem, GpuConfig) {
         let cfg = GpuConfig::tiny(L1ArchKind::DecoupledSharing);
-        (DecoupledSharingL1::new(&cfg), MemSystem::new(&cfg))
+        (build(&cfg), MemSystem::new(&cfg), cfg)
+    }
+
+    fn home_of(cfg: &GpuConfig, core: usize, line: LineAddr) -> usize {
+        let p = PipelineCtx::new(cfg, FabricNeeds::default());
+        DecoupledPolicy::home_of(&p, core, line)
     }
 
     fn load(id: u64, core: u32, line: LineAddr) -> MemRequest {
@@ -249,48 +171,41 @@ mod tests {
 
     #[test]
     fn single_copy_no_replication() {
-        let (mut d, mut mem) = setup();
-        let t1 = d.access(&load(1, 0, 42), 0, &mut mem).done;
-        d.access(&load(2, 1, 42), t1 + 100, &mut mem);
-        d.access(&load(3, 2, 42), t1 + 200, &mut mem);
+        let (mut d, mut mem, _) = setup();
+        let t1 = access_once(d.as_mut(), &load(1, 0, 42), 0, &mut mem).done();
+        access_once(d.as_mut(), &load(2, 1, 42), t1 + 100, &mut mem);
+        access_once(d.as_mut(), &load(3, 2, 42), t1 + 200, &mut mem);
         // Exactly one cluster cache holds the line.
         let holders = (0..4)
             .filter(|&c| d.resident_lines(c).contains(&42))
             .count();
         assert_eq!(holders, 1, "decoupled keeps a single copy");
-        assert_eq!(d.stats.misses, 1, "only the first access misses");
+        assert_eq!(d.stats().misses, 1, "only the first access misses");
     }
 
     #[test]
     fn second_core_hits_home_slice() {
-        let (mut d, mut mem) = setup();
-        let t1 = d.access(&load(1, 0, 42), 0, &mut mem).done;
+        let (mut d, mut mem, _) = setup();
+        let t1 = access_once(d.as_mut(), &load(1, 0, 42), 0, &mut mem).done();
         let before = mem.stats.accesses;
         let t = t1 + 100;
-        let done = d.access(&load(2, 1, 42), t, &mut mem).done;
+        let done = access_once(d.as_mut(), &load(2, 1, 42), t, &mut mem).done();
         assert_eq!(mem.stats.accesses, before, "hit in home slice, no L2");
-        assert_eq!(d.stats.local_hits + d.stats.remote_hits, 1);
+        assert_eq!(d.stats().local_hits + d.stats().remote_hits, 1);
         assert!(done > t);
     }
 
     #[test]
     fn remote_slice_access_pays_crossbar() {
-        let (mut d, mut mem) = setup();
+        let (mut d, mut mem, cfg) = setup();
         // Find a line homed at core 0 and warm it from core 0 (local),
         // then read from core 1 (remote): remote must be slower.
-        let mut line_home0 = None;
-        for l in 0..1000u64 {
-            if d.home_of(0, l) == 0 {
-                line_home0 = Some(l);
-                break;
-            }
-        }
-        let line = line_home0.unwrap();
-        let t1 = d.access(&load(1, 0, line), 0, &mut mem).done;
+        let line = (0..1000u64).find(|&l| home_of(&cfg, 0, l) == 0).unwrap();
+        let t1 = access_once(d.as_mut(), &load(1, 0, line), 0, &mut mem).done();
         let t = t1 + 1000;
-        let local_hit = d.access(&load(2, 0, line), t, &mut mem).done - t;
+        let local_hit = access_once(d.as_mut(), &load(2, 0, line), t, &mut mem).done() - t;
         let t2 = t + 1000;
-        let remote_hit = d.access(&load(3, 1, line), t2, &mut mem).done - t2;
+        let remote_hit = access_once(d.as_mut(), &load(3, 1, line), t2, &mut mem).done() - t2;
         assert!(
             remote_hit > local_hit,
             "crossbar hop must cost: remote={remote_hit} local={local_hit}"
@@ -299,13 +214,13 @@ mod tests {
 
     #[test]
     fn convergent_access_serializes_on_home_banks() {
-        let (mut d, mut mem) = setup();
+        let (mut d, mut mem, _) = setup();
         // Warm a line, then have every core hit it at the same instant.
-        let t1 = d.access(&load(1, 0, 42), 0, &mut mem).done;
+        let t1 = access_once(d.as_mut(), &load(1, 0, 42), 0, &mut mem).done();
         let t = t1 + 10_000;
         let mut lats = vec![];
         for c in 0..4u32 {
-            lats.push(d.access(&load(10 + c as u64, c, 42), t, &mut mem).done - t);
+            lats.push(access_once(d.as_mut(), &load(10 + c as u64, c, 42), t, &mut mem).done() - t);
         }
         let max = *lats.iter().max().unwrap();
         let min = *lats.iter().min().unwrap();
@@ -315,17 +230,20 @@ mod tests {
         );
         // Serialization shows up at the home slice: either on its banks or
         // on its crossbar port, depending on arrival stagger.
-        assert!(d.stats.bank_conflict_cycles + d.stats.sharing_net_cycles > 0);
+        assert!(d.stats().bank_conflict_cycles + d.stats().sharing_net_cycles > 0);
     }
 
     #[test]
     fn writes_route_to_home_slice() {
-        let (mut d, mut mem) = setup();
+        let cfg = GpuConfig::tiny(L1ArchKind::DecoupledSharing);
+        let mut d = PipelineL1::new(&cfg, policy(&cfg));
+        let mut mem = MemSystem::new(&cfg);
         let mut w = load(1, 1, 42);
         w.kind = AccessKind::Store;
-        d.access(&w, 0, &mut mem);
-        let home = d.home_of(1, 42);
+        access_once(&mut d, &w, 0, &mut mem);
+        let home = home_of(&cfg, 1, 42);
         assert!(d.resident_lines(home).contains(&42));
-        assert!(d.caches[home].cache.tags.is_dirty(42, 0b1111));
+        // The dirty bit lives at the home slice.
+        assert!(d.ctx().cores[home].cache.tags.is_dirty(42, 0b1111));
     }
 }

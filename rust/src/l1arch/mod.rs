@@ -1,4 +1,5 @@
-//! The four L1 cache organizations (§II–III of the paper).
+//! The L1 cache organizations (§II–III of the paper) as policies over one
+//! shared request pipeline.
 //!
 //! | Organization        | Tag lookup              | Data placement        | Sharing path            |
 //! |---------------------|-------------------------|-----------------------|-------------------------|
@@ -6,64 +7,50 @@
 //! | Remote-sharing      | local, then ring probes | per-core, replicated  | probe ring (post-miss)  |
 //! | Decoupled-sharing   | at home slice           | address-sliced        | cluster crossbar (all)  |
 //! | **ATA-Cache**       | aggregated (pre-access) | per-core, replicated  | cluster crossbar (hits) |
+//! | ATA-bypass          | aggregated (pre-access) | per-core, replicated  | crossbar, CIAO bypass   |
 //!
-//! All organizations implement [`L1Arch`]; the engine is organization-
-//! agnostic.
+//! Mechanism lives in [`pipeline`] (tag probes, bank reservations, MSHR
+//! dispatch, fills, fabric crossings — all keyed off the
+//! [`MemTxn`](crate::mem::MemTxn) transaction); each organization is a
+//! [`SharingPolicy`] module registered in [`REGISTRY`].  The engine is
+//! organization-agnostic: it opens a transaction per request and hands it
+//! to [`L1Arch::access`].
 
 pub mod ata;
+pub mod ata_bypass;
 pub mod ata_tag;
 pub mod common;
 pub mod decoupled;
+pub mod pipeline;
 pub mod private;
 pub mod remote;
 
+pub use pipeline::{FabricNeeds, PipelineCtx, PipelineL1, SharingPolicy};
+
 use crate::config::{GpuConfig, L1ArchKind};
 use crate::l2::MemSystem;
-use crate::mem::{LineAddr, MemRequest};
+use crate::mem::{LineAddr, MemRequest, MemTxn};
 use crate::stats::{ContentionStats, L1Stats};
 
-/// Outcome of one request through an L1 organization.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct AccessResult {
-    /// Cycle the data reaches the core (loads) / the write retires.
-    pub done: u64,
-    /// Cycle the *L1 stage* of the access completed: data return for any
-    /// L1 hit (local or remote), or the dispatch-to-L2 point for a miss.
-    /// This is the paper's §IV-C latency metric — it isolates the
-    /// contention added by the L1 organization from L2/DRAM service time.
-    pub l1_stage_done: u64,
-}
-
-impl AccessResult {
-    pub fn new(done: u64, l1_stage_done: u64) -> Self {
-        AccessResult { done, l1_stage_done }
-    }
-
-    /// An access fully served at `done` (hit paths).
-    pub fn served(done: u64) -> Self {
-        AccessResult { done, l1_stage_done: done }
-    }
-}
-
 /// A full-GPU L1 organization: receives every core's coalesced requests
-/// and returns each request's completion cycle.
+/// as open [`MemTxn`] transactions and completes them.
 ///
 /// # Contract
 ///
 /// **Access ordering.**  The engine calls [`access`](L1Arch::access) with
-/// `now` non-decreasing across calls; within one cycle, requests arrive
-/// in a fixed deterministic order (per-core program order is preserved;
-/// cores are visited in a stable order chosen by the execution mode, not
-/// necessarily ascending core id).  Implementations may rely on this
-/// monotonicity for their reservation calendars, and they must be
+/// `txn.now()` non-decreasing across calls; within one cycle, requests
+/// arrive in a fixed deterministic order (per-core program order is
+/// preserved; cores are visited in a stable order chosen by the execution
+/// mode, not necessarily ascending core id).  Implementations may rely on
+/// this monotonicity for their reservation calendars, and they must be
 /// deterministic: the same request sequence must produce the same
 /// results, regardless of wall clock or thread placement (each engine
 /// owns its organization exclusively — `Send` but not `Sync`).
 ///
-/// **Completion cycles.**  Every access returns an [`AccessResult`] with
-/// `done >= now`; the engine never re-submits a request.  Structural
-/// hazards (MSHR full, bank queue full) are modeled as added latency and
-/// counted in [`L1Stats::rejects`], not surfaced as failures.
+/// **Completion.**  Every access completes its transaction
+/// (`txn.done() >= txn.now()`); the engine never re-submits a request.
+/// Structural hazards (MSHR full, bank queue full) are modeled as added
+/// latency and counted in [`L1Stats::rejects`], not surfaced as failures.
 ///
 /// **Sweep semantics.**  [`sweep`](L1Arch::sweep) is pure housekeeping:
 /// the engine calls it at coarse intervals (≈ every 64 k cycles) with the
@@ -75,16 +62,18 @@ impl AccessResult {
 /// monotonically non-decreasing; `accesses` increments exactly once per
 /// [`access`](L1Arch::access) call, and each access lands in exactly one
 /// outcome class (`local_hits`, `remote_hits`, `sector_misses`, `misses`,
-/// `mshr_merges`, or `writes`).  `rejects`, conflict-cycle counters and
-/// `probes_sent` are side tallies, not outcome classes.  With multiple
-/// co-executing applications the counters aggregate over all of them —
-/// per-app attribution happens in the engine, which knows the core→app
-/// mapping.
+/// `mshr_merges`, or `writes`).  `rejects`, `bypasses`, conflict-cycle
+/// counters and `probes_sent` are side tallies, not outcome classes.
+/// With multiple co-executing applications the counters aggregate over
+/// all of them — per-app attribution happens in the engine, which knows
+/// the core→app mapping.
 pub trait L1Arch: std::fmt::Debug + Send {
-    /// Process one request issued at `now`.  For loads `done` is the cycle
-    /// the data reaches the core; for stores it is the retire cycle of the
-    /// write pipeline (cores do not block on it).
-    fn access(&mut self, req: &MemRequest, now: u64, mem: &mut MemSystem) -> AccessResult;
+    /// Process one transaction opened at `txn.now()`.  For loads
+    /// `txn.done()` is the cycle the data reaches the core; for stores it
+    /// is the retire cycle of the write pipeline (cores do not block on
+    /// it).  The organization stamps the transaction's hop timestamps and
+    /// charges its queueing as it goes.
+    fn access(&mut self, txn: &mut MemTxn, mem: &mut MemSystem);
 
     /// Aggregated counters (see the trait-level stats invariants).
     fn stats(&self) -> &L1Stats;
@@ -108,14 +97,78 @@ pub trait L1Arch: std::fmt::Debug + Send {
     fn sweep(&mut self, now: u64);
 }
 
-/// Build the organization selected by `cfg.l1_arch`.
+/// Open a transaction for `req` at `now`, run it through `l1`, and return
+/// the completed transaction (tests and tools; the engine manages its own
+/// transactions).
+pub fn access_once(
+    l1: &mut dyn L1Arch,
+    req: &MemRequest,
+    now: u64,
+    mem: &mut MemSystem,
+) -> MemTxn {
+    let mut txn = MemTxn::new(*req, now);
+    l1.access(&mut txn, mem);
+    txn
+}
+
+/// One registered L1 organization: its kind, CLI name, a one-line
+/// summary, and the policy constructor the shared pipeline wraps.
+pub struct OrgSpec {
+    pub kind: L1ArchKind,
+    pub name: &'static str,
+    pub summary: &'static str,
+    pub build: fn(&GpuConfig) -> Box<dyn SharingPolicy>,
+}
+
+/// The organization registry: every L1 organization the simulator knows,
+/// in presentation order.  `build` consults it; tools iterate it so a new
+/// organization shows up everywhere (run/sweep/contention/bench) by
+/// adding one entry here plus its policy module.
+pub const REGISTRY: &[OrgSpec] = &[
+    OrgSpec {
+        kind: L1ArchKind::Private,
+        name: "private",
+        summary: "per-core private L1 (normalization baseline)",
+        build: private::policy,
+    },
+    OrgSpec {
+        kind: L1ArchKind::RemoteSharing,
+        name: "remote",
+        summary: "private L1s + post-miss probe ring (TACO'16/PACT'19)",
+        build: remote::policy,
+    },
+    OrgSpec {
+        kind: L1ArchKind::DecoupledSharing,
+        name: "decoupled",
+        summary: "address-sliced cluster L1s, all accesses via home slice (PACT'20)",
+        build: decoupled::policy,
+    },
+    OrgSpec {
+        kind: L1ArchKind::Ata,
+        name: "ata",
+        summary: "aggregated tag array + remote-shared data (the paper)",
+        build: ata::policy,
+    },
+    OrgSpec {
+        kind: L1ArchKind::AtaBypass,
+        name: "ata-bypass",
+        summary: "ATA probing + CIAO-style interference-aware peer bypass",
+        build: ata_bypass::policy,
+    },
+];
+
+/// Look up a registry entry by kind.
+pub fn org_spec(kind: L1ArchKind) -> &'static OrgSpec {
+    REGISTRY
+        .iter()
+        .find(|s| s.kind == kind)
+        .expect("every L1ArchKind has a registry entry")
+}
+
+/// Build the organization selected by `cfg.l1_arch`: the shared pipeline
+/// wrapped around the registered policy.
 pub fn build(cfg: &GpuConfig) -> Box<dyn L1Arch> {
-    match cfg.l1_arch {
-        L1ArchKind::Private => Box::new(private::PrivateL1::new(cfg)),
-        L1ArchKind::RemoteSharing => Box::new(remote::RemoteSharingL1::new(cfg)),
-        L1ArchKind::DecoupledSharing => Box::new(decoupled::DecoupledSharingL1::new(cfg)),
-        L1ArchKind::Ata => Box::new(ata::AtaCache::new(cfg)),
-    }
+    Box::new(PipelineL1::new(cfg, (org_spec(cfg.l1_arch).build)(cfg)))
 }
 
 /// Cluster geometry helper shared by the shared organizations.
@@ -176,11 +229,24 @@ mod tests {
     }
 
     #[test]
-    fn factory_builds_every_kind() {
+    fn registry_builds_every_kind() {
         for kind in L1ArchKind::ALL {
             let cfg = GpuConfig::tiny(kind);
             let arch = build(&cfg);
             assert_eq!(arch.kind(), kind);
+        }
+    }
+
+    #[test]
+    fn registry_names_match_kind_names() {
+        assert_eq!(REGISTRY.len(), L1ArchKind::ALL.len());
+        for spec in REGISTRY {
+            assert_eq!(spec.name, spec.kind.name(), "registry/CLI name drift");
+            assert_eq!(
+                L1ArchKind::from_name(spec.name),
+                Some(spec.kind),
+                "registry name must parse back"
+            );
         }
     }
 }

@@ -3,64 +3,35 @@
 //! space; misses go straight to L2; no inter-core path exists, so
 //! replicated lines burn capacity in every requesting core (the
 //! inefficiency motivating the paper).
+//!
+//! As a policy this is the identity distributor: every transaction runs
+//! the pipeline's local load/store path at its own core.
 
 use crate::config::{GpuConfig, L1ArchKind};
 use crate::l2::MemSystem;
-use crate::mem::{LineAddr, MemRequest};
-use crate::stats::{ContentionStats, L1Stats};
+use crate::mem::MemTxn;
 
-use super::common::{handle_store, local_load, CoreL1, L1Timing};
-use super::{AccessResult, L1Arch};
+use super::pipeline::{PipelineCtx, SharingPolicy};
+
+/// Registry constructor.
+pub fn policy(_cfg: &GpuConfig) -> Box<dyn SharingPolicy> {
+    Box::new(PrivatePolicy)
+}
 
 #[derive(Debug)]
-pub struct PrivateL1 {
-    cores: Vec<CoreL1>,
-    timing: L1Timing,
-    stats: L1Stats,
-    con: ContentionStats,
-}
+pub struct PrivatePolicy;
 
-impl PrivateL1 {
-    pub fn new(cfg: &GpuConfig) -> Self {
-        PrivateL1 {
-            cores: (0..cfg.cores).map(|_| CoreL1::new(cfg)).collect(),
-            timing: L1Timing::new(cfg),
-            stats: L1Stats::default(),
-            con: ContentionStats::new(cfg.cores),
-        }
-    }
-}
-
-impl L1Arch for PrivateL1 {
-    fn access(&mut self, req: &MemRequest, now: u64, mem: &mut MemSystem) -> AccessResult {
-        self.stats.accesses += 1;
-        let l1 = &mut self.cores[req.core as usize];
-        if req.is_write() {
-            handle_store(l1, req, now, &self.timing, mem, &mut self.stats, &mut self.con)
-        } else {
-            local_load(l1, req, now, &self.timing, mem, &mut self.stats, &mut self.con)
-        }
-    }
-
-    fn stats(&self) -> &L1Stats {
-        &self.stats
-    }
-
-    fn contention(&self) -> &ContentionStats {
-        &self.con
-    }
-
+impl SharingPolicy for PrivatePolicy {
     fn kind(&self) -> L1ArchKind {
         L1ArchKind::Private
     }
 
-    fn resident_lines(&self, core: usize) -> Vec<LineAddr> {
-        self.cores[core].cache.tags.resident_lines()
-    }
-
-    fn sweep(&mut self, now: u64) {
-        for c in &mut self.cores {
-            c.sweep(now);
+    fn access(&mut self, p: &mut PipelineCtx, txn: &mut MemTxn, mem: &mut MemSystem) {
+        let now = txn.now();
+        if txn.req.is_write() {
+            p.store_local(txn, now, mem);
+        } else {
+            p.local_load(txn, mem);
         }
     }
 }
@@ -68,12 +39,12 @@ impl L1Arch for PrivateL1 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::GpuConfig;
-    use crate::mem::AccessKind;
+    use crate::l1arch::{access_once, build, L1Arch};
+    use crate::mem::{AccessKind, LineAddr, MemRequest};
 
-    fn setup() -> (PrivateL1, MemSystem) {
+    fn setup() -> (Box<dyn L1Arch>, MemSystem) {
         let cfg = GpuConfig::tiny(L1ArchKind::Private);
-        (PrivateL1::new(&cfg), MemSystem::new(&cfg))
+        (build(&cfg), MemSystem::new(&cfg))
     }
 
     fn load(id: u64, core: u32, line: LineAddr) -> MemRequest {
@@ -92,13 +63,13 @@ mod tests {
     #[test]
     fn cold_miss_then_hit() {
         let (mut p, mut mem) = setup();
-        let miss_done = p.access(&load(1, 0, 100), 0, &mut mem).done;
-        assert_eq!(p.stats.misses, 1);
+        let miss_done = access_once(p.as_mut(), &load(1, 0, 100), 0, &mut mem).done();
+        assert_eq!(p.stats().misses, 1);
         assert!(miss_done > 100, "miss pays L2+DRAM");
 
         let t = miss_done + 10;
-        let hit_done = p.access(&load(2, 0, 100), t, &mut mem).done - t;
-        assert_eq!(p.stats.local_hits, 1);
+        let hit_done = access_once(p.as_mut(), &load(2, 0, 100), t, &mut mem).done() - t;
+        assert_eq!(p.stats().local_hits, 1);
         // Hit = tag (1) + bank + 32-cycle array latency.
         assert!(hit_done >= 32 && hit_done < 40, "hit latency {hit_done}");
     }
@@ -106,12 +77,12 @@ mod tests {
     #[test]
     fn no_sharing_between_cores() {
         let (mut p, mut mem) = setup();
-        let d = p.access(&load(1, 0, 100), 0, &mut mem).done;
+        let d = access_once(p.as_mut(), &load(1, 0, 100), 0, &mut mem).done();
         // Core 1 misses on the same line (private caches don't share).
         let t = d + 10;
-        p.access(&load(2, 1, 100), t, &mut mem);
-        assert_eq!(p.stats.misses, 2);
-        assert_eq!(p.stats.remote_hits, 0);
+        access_once(p.as_mut(), &load(2, 1, 100), t, &mut mem);
+        assert_eq!(p.stats().misses, 2);
+        assert_eq!(p.stats().remote_hits, 0);
         // Both cores now hold a replica.
         assert!(p.resident_lines(0).contains(&100));
         assert!(p.resident_lines(1).contains(&100));
@@ -120,11 +91,11 @@ mod tests {
     #[test]
     fn inflight_merge_avoids_duplicate_fetch() {
         let (mut p, mut mem) = setup();
-        p.access(&load(1, 0, 7), 0, &mut mem);
+        access_once(p.as_mut(), &load(1, 0, 7), 0, &mut mem);
         let before = mem.stats.accesses;
-        let d2 = p.access(&load(2, 0, 7), 1, &mut mem).done;
+        let d2 = access_once(p.as_mut(), &load(2, 0, 7), 1, &mut mem).done();
         assert_eq!(mem.stats.accesses, before, "merged, no second L2 access");
-        assert_eq!(p.stats.mshr_merges, 1);
+        assert_eq!(p.stats().mshr_merges, 1);
         assert!(d2 > 1);
     }
 
@@ -133,13 +104,13 @@ mod tests {
         let (mut p, mut mem) = setup();
         // Warm 8 lines that all live in bank 0 (line % 2 == 0 for 2 banks).
         for (i, line) in (0..8u64).map(|k| k * 2).enumerate() {
-            p.access(&load(i as u64, 0, line), 0, &mut mem);
+            access_once(p.as_mut(), &load(i as u64, 0, line), 0, &mut mem);
         }
         let t = 1_000_000;
         for (i, line) in (0..8u64).map(|k| k * 2).enumerate() {
-            p.access(&load(100 + i as u64, 0, line), t, &mut mem);
+            access_once(p.as_mut(), &load(100 + i as u64, 0, line), t, &mut mem);
         }
-        assert!(p.stats.bank_conflict_cycles > 0, "same-bank hits must queue");
+        assert!(p.stats().bank_conflict_cycles > 0, "same-bank hits must queue");
     }
 
     #[test]
@@ -147,12 +118,13 @@ mod tests {
         let (mut p, mut mem) = setup();
         let mut r = load(1, 0, 50);
         r.sectors = 0b0001;
-        let d = p.access(&r, 0, &mut mem).done;
-        assert_eq!(p.stats.misses, 1);
+        let d = access_once(p.as_mut(), &r, 0, &mut mem).done();
+        assert_eq!(p.stats().misses, 1);
         let mut r2 = load(2, 0, 50);
         r2.sectors = 0b0010;
         let t = d + 10;
-        p.access(&r2, t, &mut mem);
-        assert_eq!(p.stats.sector_misses, 1, "line present, sector absent");
+        let txn = access_once(p.as_mut(), &r2, t, &mut mem);
+        assert_eq!(p.stats().sector_misses, 1, "line present, sector absent");
+        assert_eq!(txn.fetch_sectors, 0b0010, "fetch narrowed to the missing sector");
     }
 }

@@ -1,5 +1,5 @@
 //! Remote-sharing L1 (Dublish et al. TACO'16 cooperative caching; Ibrahim
-//! et al. PACT'19 prediction) — baseline #2.
+//! et al. PACT'19 prediction) — baseline #2, as a policy.
 //!
 //! Caches stay private and map the whole address space, but a miss first
 //! probes the other cluster caches over a ring before going to L2 (Fig 2
@@ -19,22 +19,25 @@
 use crate::cache::Probe;
 use crate::config::{GpuConfig, L1ArchKind};
 use crate::l2::MemSystem;
-use crate::mem::{decode, LineAddr, MemRequest};
-use crate::noc::Ring;
-use crate::stats::{ContentionStats, L1Stats, ResourceClass};
+use crate::mem::{decode, MemTxn};
+use crate::stats::ResourceClass;
 use crate::util::rng::Pcg32;
 
-use super::common::{handle_store, install_fill, mshr_dispatch, CoreL1, L1Timing};
-use super::{AccessResult, ClusterMap, L1Arch};
+use super::pipeline::{FabricNeeds, PipelineCtx, SharingPolicy};
+
+/// Registry constructor.
+pub fn policy(cfg: &GpuConfig) -> Box<dyn SharingPolicy> {
+    Box::new(RemotePolicy {
+        predictor: cfg.sharing.probe_predictor,
+        predictor_accuracy: cfg.sharing.predictor_accuracy,
+        fill_local: cfg.sharing.fill_local_on_remote_hit,
+        rng: Pcg32::new(cfg.seed ^ 0x5EAF_00D, 17),
+        probe_bytes: 8,
+    })
+}
 
 #[derive(Debug)]
-pub struct RemoteSharingL1 {
-    cores: Vec<CoreL1>,
-    rings: Vec<Ring>, // one per cluster
-    map: ClusterMap,
-    timing: L1Timing,
-    stats: L1Stats,
-    con: ContentionStats,
+pub struct RemotePolicy {
     predictor: bool,
     predictor_accuracy: f64,
     fill_local: bool,
@@ -43,237 +46,169 @@ pub struct RemoteSharingL1 {
     probe_bytes: usize,
 }
 
-impl RemoteSharingL1 {
-    pub fn new(cfg: &GpuConfig) -> Self {
-        RemoteSharingL1 {
-            cores: (0..cfg.cores).map(|_| CoreL1::new(cfg)).collect(),
-            rings: (0..cfg.clusters)
-                .map(|_| {
-                    Ring::new(
-                        cfg.cores_per_cluster(),
-                        cfg.sharing.ring_hop_latency,
-                        cfg.sharing.ring_width_bytes,
-                    )
-                })
-                .collect(),
-            map: ClusterMap::new(cfg),
-            timing: L1Timing::new(cfg),
-            stats: L1Stats::default(),
-            con: ContentionStats::new(cfg.cores),
-            predictor: cfg.sharing.probe_predictor,
-            predictor_accuracy: cfg.sharing.predictor_accuracy,
-            fill_local: cfg.sharing.fill_local_on_remote_hit,
-            rng: Pcg32::new(cfg.seed ^ 0x5EAF_00D, 17),
-            probe_bytes: 8,
-        }
-    }
-
+impl RemotePolicy {
     /// Find a clean remote holder with all requested sectors.
-    fn find_holder(&self, req: &MemRequest) -> Option<usize> {
-        for peer in self.map.peers(req.core as usize) {
-            match self.cores[peer].cache.peek(req.line, req.sectors) {
-                Probe::Hit { dirty: false, .. } => return Some(peer),
-                _ => {}
+    fn find_holder(&self, p: &PipelineCtx, txn: &MemTxn) -> Option<usize> {
+        for peer in p.map.peers(txn.req.core as usize) {
+            if let Probe::Hit { dirty: false, .. } =
+                p.cores[peer].cache.peek(txn.req.line, txn.req.sectors)
+            {
+                return Some(peer);
             }
         }
         None
     }
 
     /// Does any remote cache hold the line dirty (forcing L2 fallback)?
-    fn dirty_holder_exists(&self, req: &MemRequest) -> bool {
-        self.map.peers(req.core as usize).any(|peer| {
+    fn dirty_holder_exists(&self, p: &PipelineCtx, txn: &MemTxn) -> bool {
+        p.map.peers(txn.req.core as usize).any(|peer| {
             matches!(
-                self.cores[peer].cache.peek(req.line, req.sectors),
+                p.cores[peer].cache.peek(txn.req.line, txn.req.sectors),
                 Probe::Hit { dirty: true, .. }
             )
         })
     }
+
+    /// Miss dispatch (remote-sharing never narrows to missing sectors —
+    /// the probe path already classified the access as a full miss).  The
+    /// L1 stage ends when the miss finally dispatches to L2 — for
+    /// remote-sharing that is *after* the probe round trip, the
+    /// critical-path penalty of Fig 2.
+    fn miss_to_l2(&self, p: &mut PipelineCtx, txn: &mut MemTxn, start: u64, mem: &mut MemSystem) {
+        p.stats.misses += 1;
+        let core = txn.req.core as usize;
+        let sectors = txn.req.sectors;
+        let (d, s) = p.miss_to_l2(core, txn, sectors, start, mem);
+        txn.complete(d, s);
+    }
 }
 
-impl L1Arch for RemoteSharingL1 {
-    fn access(&mut self, req: &MemRequest, now: u64, mem: &mut MemSystem) -> AccessResult {
-        self.stats.accesses += 1;
-        if req.is_write() {
-            let l1 = &mut self.cores[req.core as usize];
-            return handle_store(l1, req, now, &self.timing, mem, &mut self.stats, &mut self.con);
+impl SharingPolicy for RemotePolicy {
+    fn kind(&self) -> L1ArchKind {
+        L1ArchKind::RemoteSharing
+    }
+
+    fn resources(&self) -> FabricNeeds {
+        FabricNeeds {
+            ring: true,
+            ..FabricNeeds::default()
+        }
+    }
+
+    fn access(&mut self, p: &mut PipelineCtx, txn: &mut MemTxn, mem: &mut MemSystem) {
+        let now = txn.now();
+        if txn.req.is_write() {
+            p.store_local(txn, now, mem);
+            return;
         }
 
-        let core = req.core as usize;
-        let cluster = self.map.cluster_of(core);
-        let my_stop = self.map.index_in_cluster(core);
+        let core = txn.req.core as usize;
+        let cluster = p.map.cluster_of(core);
+        let my_stop = p.map.index_in_cluster(core);
 
         // Local tag lookup first (same as private).
-        let bank = decode::l1_bank(req.line, self.timing.banks);
         let t_tag;
-        match self.cores[core].cache.tags.lookup(req.line, req.sectors) {
+        match p.cores[core].cache.tags.lookup(txn.req.line, txn.req.sectors) {
             Probe::Hit { .. } => {
-                if let Some(ready) = self.cores[core].in_flight_ready(req.line, now) {
-                    self.stats.mshr_merges += 1;
-                    return AccessResult::new(
-                        ready.max(now) + 1,
-                        now + 1 + self.timing.latency as u64,
-                    );
+                if let Some((d, s)) = p.try_merge(core, txn.req.line, now) {
+                    txn.complete(d, s);
+                    return;
                 }
-                self.stats.local_hits += 1;
-                let g = self.cores[core].banks.reserve(bank, now, 1);
-                self.stats.bank_conflict_cycles += g.queued;
-                self.con.add(core, ResourceClass::L1DataBank, g.queued);
-                return AccessResult::served(g.grant + self.timing.latency as u64);
+                p.stats.local_hits += 1;
+                let done = p.hit_data_access(core, txn, now);
+                txn.serve(done);
+                return;
             }
             _ => {
                 // In-flight merge check before probing.
-                if let Some(ready) = self.cores[core].in_flight_ready(req.line, now) {
-                    self.stats.mshr_merges += 1;
-                    return AccessResult::new(
-                        ready.max(now) + 1,
-                        now + 1 + self.timing.latency as u64,
-                    );
+                if let Some((d, s)) = p.try_merge(core, txn.req.line, now) {
+                    txn.complete(d, s);
+                    return;
                 }
                 // The local tag probe costs one bank cycle.
-                let g = self.cores[core].banks.reserve(bank, now, 1);
-                self.con.add(core, ResourceClass::L1TagBank, g.queued);
-                t_tag = g.grant + 1;
+                t_tag = p.miss_tag_probe(core, txn, now);
             }
         }
 
-        let holder = self.find_holder(req);
-        let dirty_remote = holder.is_none() && self.dirty_holder_exists(req);
+        let holder = self.find_holder(p, txn);
+        let dirty_remote = holder.is_none() && self.dirty_holder_exists(p, txn);
         if dirty_remote {
-            self.stats.dirty_remote_fallbacks += 1;
+            p.stats.dirty_remote_fallbacks += 1;
         }
 
         // PACT'19 predictor: on a true global miss, skip the probe round
         // trip with probability `predictor_accuracy`.
         if self.predictor && holder.is_none() && self.rng.chance(self.predictor_accuracy) {
             // Straight to L2 — the predictor saved the probe.
-            return self.miss_to_l2(req, t_tag, mem);
+            self.miss_to_l2(p, txn, t_tag, mem);
+            return;
         }
 
         // Probe the ring: metadata visits every peer (the CCN push).
-        self.stats.probes_sent += 1;
-        let ring = &mut self.rings[cluster];
-        let uncontended = (self.map.cores_per_cluster - 1) as u64
+        p.stats.probes_sent += 1;
+        let ring = &mut p.rings[cluster];
+        let uncontended = (p.map.cores_per_cluster - 1) as u64
             * (ring.ser_cycles(self.probe_bytes) as u64 + 1);
         let probe = ring.broadcast(my_stop, t_tag, self.probe_bytes);
         let probe_done = probe.grant;
-        self.stats.sharing_net_cycles += probe_done.saturating_sub(t_tag + uncontended);
-        self.con.add(core, ResourceClass::ClusterXbar, probe.queued);
+        p.stats.sharing_net_cycles += probe_done.saturating_sub(t_tag + uncontended);
+        txn.charge(&mut p.con, ResourceClass::ClusterXbar, probe.queued);
 
         // Remote caches process the probe: one cycle on the probed line's
         // bank at every peer (the extra tag-resource cost of probing).
         // The occupancy is what matters — the probe itself does not wait
         // for the peer banks, so its own grant delay is *not* charged to
         // the breakdown (the delayed peer accesses charge theirs).
-        let peer_ids: Vec<usize> = self.map.peers(core).collect();
+        let bank = decode::l1_bank(txn.req.line, p.timing.banks);
+        let peer_ids: Vec<usize> = p.map.peers(core).collect();
         for peer in peer_ids {
-            self.cores[peer].banks.reserve(bank, probe_done, 1);
+            p.cores[peer].banks.reserve(bank, probe_done, 1);
         }
 
         match holder {
             Some(peer) => {
-                self.stats.remote_hits += 1;
+                p.stats.remote_hits += 1;
                 // Remote data array access, then data rides the ring back.
-                let bank = decode::l1_bank(req.line, self.timing.banks);
-                let peer_stop = self.map.index_in_cluster(peer);
-                // If the holder's fill is still in flight, data waits for it.
-                let avail = self
-                    .cores[peer]
-                    .in_flight_ready(req.line, probe_done)
-                    .unwrap_or(probe_done);
-                let g = self.cores[peer].banks.reserve(bank, avail, 1);
-                self.con.add(core, ResourceClass::L1DataBank, g.queued);
-                let data_start = g.grant + self.timing.latency as u64;
-                let bytes = req.sector_count() as usize * self.timing.sector_bytes + 8;
-                let back = self.rings[cluster].send(peer_stop, my_stop, data_start, bytes);
-                self.con.add(core, ResourceClass::ClusterXbar, back.queued);
+                let peer_stop = p.map.index_in_cluster(peer);
+                // If the holder's fill is still in flight, data waits for
+                // it (historically without a bank-conflict tally — see
+                // `remote_data_access`).
+                let data_start = p.remote_data_access(peer, txn, probe_done, false, false);
+                let bytes = txn.req.sector_count() as usize * p.timing.sector_bytes + 8;
+                let back = p.rings[cluster].send(peer_stop, my_stop, data_start, bytes);
+                txn.charge(&mut p.con, ResourceClass::ClusterXbar, back.queued);
                 let arrive = back.grant;
                 if self.fill_local {
-                    let usable = install_fill(
-                        &mut self.cores[core],
-                        req.core,
-                        req.core,
-                        req.line,
-                        req.sectors,
-                        arrive,
-                        &self.timing,
-                        mem,
-                        &mut self.stats,
-                    );
-                    AccessResult::new(usable + 1, arrive)
+                    let usable = p.install_fill(core, txn, txn.req.sectors, arrive, mem);
+                    txn.complete(usable + 1, arrive);
                 } else {
-                    AccessResult::served(arrive + 1)
+                    txn.serve(arrive + 1);
                 }
             }
             None => {
-                // All remote caches missed: the probe round trip has already
-                // delayed us (the paper's critical-path complaint) — only
-                // now does the request go to L2.
+                // All remote caches missed: the probe round trip has
+                // already delayed us (the paper's critical-path complaint)
+                // — only now does the request go to L2.
                 let t_miss_known = probe_done
-                    + (self.map.cores_per_cluster - 1) as u64
-                        * self.rings[cluster].ser_cycles(self.probe_bytes) as u64;
-                self.miss_to_l2(req, t_miss_known, mem)
+                    + (p.map.cores_per_cluster - 1) as u64
+                        * p.rings[cluster].ser_cycles(self.probe_bytes) as u64;
+                self.miss_to_l2(p, txn, t_miss_known, mem);
             }
         }
-    }
-
-    fn stats(&self) -> &L1Stats {
-        &self.stats
-    }
-
-    fn contention(&self) -> &ContentionStats {
-        &self.con
-    }
-
-    fn kind(&self) -> L1ArchKind {
-        L1ArchKind::RemoteSharing
-    }
-
-    fn resident_lines(&self, core: usize) -> Vec<LineAddr> {
-        self.cores[core].cache.tags.resident_lines()
-    }
-
-    fn sweep(&mut self, now: u64) {
-        for c in &mut self.cores {
-            c.sweep(now);
-        }
-    }
-}
-
-impl RemoteSharingL1 {
-    fn miss_to_l2(&mut self, req: &MemRequest, start: u64, mem: &mut MemSystem) -> AccessResult {
-        self.stats.misses += 1;
-        let l1 = &mut self.cores[req.core as usize];
-        let s = mshr_dispatch(l1, req.core, start, &mut self.stats, &mut self.con);
-        let fill = mem.fetch(req, s);
-        l1.mshr.occupy_until(s, fill);
-        let usable = install_fill(
-            &mut self.cores[req.core as usize],
-            req.core,
-            req.core,
-            req.line,
-            req.sectors,
-            fill,
-            &self.timing,
-            mem,
-            &mut self.stats,
-        );
-        // The L1 stage ends when the miss finally dispatches to L2 — for
-        // remote-sharing that is *after* the probe round trip, the
-        // critical-path penalty of Fig 2 — plus the pipeline depth.
-        AccessResult::new(usable + 1, s + self.timing.latency as u64)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mem::AccessKind;
+    use crate::l1arch::{access_once, build, L1Arch};
+    use crate::mem::{AccessKind, LineAddr, MemRequest};
 
-    fn setup(predictor: bool) -> (RemoteSharingL1, MemSystem) {
+    fn setup(predictor: bool) -> (Box<dyn L1Arch>, MemSystem) {
         let mut cfg = GpuConfig::tiny(L1ArchKind::RemoteSharing);
         cfg.sharing.probe_predictor = predictor;
         cfg.sharing.predictor_accuracy = 1.0;
-        (RemoteSharingL1::new(&cfg), MemSystem::new(&cfg))
+        (build(&cfg), MemSystem::new(&cfg))
     }
 
     fn load(id: u64, core: u32, line: LineAddr) -> MemRequest {
@@ -293,12 +228,12 @@ mod tests {
     fn remote_hit_avoids_l2() {
         let (mut r, mut mem) = setup(false);
         // Core 0 warms line 42.
-        let d = r.access(&load(1, 0, 42), 0, &mut mem).done;
+        let d = access_once(r.as_mut(), &load(1, 0, 42), 0, &mut mem).done();
         let l2_before = mem.stats.accesses;
         // Core 1 (same cluster of 4 in tiny cfg) reads it: remote hit.
         let t = d + 100;
-        let d2 = r.access(&load(2, 1, 42), t, &mut mem).done;
-        assert_eq!(r.stats.remote_hits, 1);
+        let d2 = access_once(r.as_mut(), &load(2, 1, 42), t, &mut mem).done();
+        assert_eq!(r.stats().remote_hits, 1);
         assert_eq!(mem.stats.accesses, l2_before, "no L2 traffic on remote hit");
         assert!(d2 > t, "remote hit still costs ring + remote array time");
     }
@@ -306,36 +241,36 @@ mod tests {
     #[test]
     fn global_miss_pays_probe_before_l2() {
         let (mut r, mut mem) = setup(false);
-        let d_remote = r.access(&load(1, 0, 42), 0, &mut mem).done;
+        let d_remote = access_once(r.as_mut(), &load(1, 0, 42), 0, &mut mem).done();
         // Compare with a private cache's miss time for the same access.
         let cfg = GpuConfig::tiny(L1ArchKind::Private);
-        let mut p = super::super::private::PrivateL1::new(&cfg);
+        let mut p = build(&cfg);
         let mut mem2 = MemSystem::new(&cfg);
-        let d_private = p.access(&load(1, 0, 42), 0, &mut mem2).done;
+        let d_private = access_once(p.as_mut(), &load(1, 0, 42), 0, &mut mem2).done();
         assert!(
             d_remote > d_private,
             "probe round trip must lengthen the L2 critical path ({d_remote} vs {d_private})"
         );
-        assert_eq!(r.stats.probes_sent, 1);
+        assert_eq!(r.stats().probes_sent, 1);
     }
 
     #[test]
     fn predictor_skips_probe_on_global_miss() {
         let (mut r, mut mem) = setup(true);
-        r.access(&load(1, 0, 42), 0, &mut mem);
-        assert_eq!(r.stats.probes_sent, 0, "predictor (accuracy=1.0) skips probe");
-        assert_eq!(r.stats.misses, 1);
+        access_once(r.as_mut(), &load(1, 0, 42), 0, &mut mem);
+        assert_eq!(r.stats().probes_sent, 0, "predictor (accuracy=1.0) skips probe");
+        assert_eq!(r.stats().misses, 1);
     }
 
     #[test]
     fn different_clusters_do_not_share() {
         let (mut r, mut mem) = setup(false);
         // tiny cfg: 8 cores, 2 clusters → cores 0..4 and 4..8.
-        let d = r.access(&load(1, 0, 42), 0, &mut mem).done;
+        let d = access_once(r.as_mut(), &load(1, 0, 42), 0, &mut mem).done();
         let t = d + 100;
-        r.access(&load(2, 4, 42), t, &mut mem);
-        assert_eq!(r.stats.remote_hits, 0, "cross-cluster probes don't happen");
-        assert_eq!(r.stats.misses, 2);
+        access_once(r.as_mut(), &load(2, 4, 42), t, &mut mem);
+        assert_eq!(r.stats().remote_hits, 0, "cross-cluster probes don't happen");
+        assert_eq!(r.stats().misses, 2);
     }
 
     #[test]
@@ -344,24 +279,24 @@ mod tests {
         // Core 0 writes line 42 (write-back-local → dirty in core 0).
         let mut w = load(1, 0, 42);
         w.kind = AccessKind::Store;
-        r.access(&w, 0, &mut mem);
+        access_once(r.as_mut(), &w, 0, &mut mem);
         // Core 1 reads it: remote copy is dirty → L2 fallback.
-        let d = r.access(&load(2, 1, 42), 1000, &mut mem).done;
-        assert_eq!(r.stats.dirty_remote_fallbacks, 1);
-        assert_eq!(r.stats.remote_hits, 0);
-        assert_eq!(r.stats.misses, 1);
+        let d = access_once(r.as_mut(), &load(2, 1, 42), 1000, &mut mem).done();
+        assert_eq!(r.stats().dirty_remote_fallbacks, 1);
+        assert_eq!(r.stats().remote_hits, 0);
+        assert_eq!(r.stats().misses, 1);
         assert!(d > 1000);
     }
 
     #[test]
     fn local_hit_after_remote_fill() {
         let (mut r, mut mem) = setup(false);
-        let d1 = r.access(&load(1, 0, 42), 0, &mut mem).done;
-        let d2 = r.access(&load(2, 1, 42), d1 + 100, &mut mem).done;
+        let d1 = access_once(r.as_mut(), &load(1, 0, 42), 0, &mut mem).done();
+        let d2 = access_once(r.as_mut(), &load(2, 1, 42), d1 + 100, &mut mem).done();
         // Core 1 filled locally; a re-read is now a local hit.
         let t = d2 + 100;
-        let d3 = r.access(&load(3, 1, 42), t, &mut mem).done - t;
-        assert_eq!(r.stats.local_hits, 1);
+        let d3 = access_once(r.as_mut(), &load(3, 1, 42), t, &mut mem).done() - t;
+        assert_eq!(r.stats().local_hits, 1);
         assert!(d3 <= 40, "local hit fast path after fill: {d3}");
     }
 }

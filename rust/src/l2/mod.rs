@@ -11,7 +11,7 @@
 use crate::cache::{Probe, SectoredCache};
 use crate::config::GpuConfig;
 use crate::dram::Dram;
-use crate::mem::{decode, LineAddr, MemRequest};
+use crate::mem::{decode, LineAddr, MemTxn};
 use crate::noc::XbarReservation;
 use crate::resource::BankedCalendar;
 use crate::stats::{ContentionStats, ResourceClass};
@@ -104,30 +104,24 @@ impl MemSystem {
         self.req_net.would_accept(core, now)
     }
 
-    /// Full miss round trip for a read: returns the cycle the fill data
-    /// arrives back at the requesting core's L1.
+    /// Full miss round trip for a read transaction: returns the cycle the
+    /// fill data arrives back at the requesting L1, stamping the
+    /// transaction's `l2_dispatch`/`mem_done` hops along the way.
     ///
-    /// Every queued cycle along the way — NoC injection backpressure,
-    /// crossbar ports, the slice access port, the DRAM controller queue,
-    /// bank and bus waits, and the response crossing — is charged to
-    /// `req.core` in the per-resource [`ContentionStats`].
-    pub fn fetch(&mut self, req: &MemRequest, now: u64) -> u64 {
-        self.fetch_for(req, now, req.core as usize)
-    }
-
-    /// [`fetch`](Self::fetch) with the contention charged to `attr_core`
-    /// instead of `req.core`.  Decoupled-sharing issues misses from the
-    /// line's *home slice* (`req.core` is the NoC endpoint) while the
-    /// queueing is suffered by the core whose load waits — attribution
-    /// must follow the sufferer so per-app lane rollups stay honest.
-    pub fn fetch_for(&mut self, req: &MemRequest, now: u64, attr_core: usize) -> u64 {
-        // `core` is the physical NoC endpoint (where the request enters
-        // and the data returns); `attr_core` is who the queueing is
-        // charged to.  They coincide except on decoupled's home-slice
-        // misses.
-        let core = req.core as usize;
-        let slice = decode::l2_slice(req.line, self.n_slices);
-        let sectors = req.sector_count().max(1);
+    /// The transaction carries the routing split: `txn.endpoint` is the
+    /// physical NoC port (where the request enters and the data returns —
+    /// the home slice for decoupled-sharing misses), while every queued
+    /// cycle — NoC injection backpressure, crossbar ports, the slice
+    /// access port, the DRAM controller queue, bank and bus waits, and
+    /// the response crossing — is charged to `txn.attr_core` (the
+    /// suffering core) via [`MemTxn::charge`], landing in both the
+    /// per-core [`ContentionStats`] and the transaction's own breakdown.
+    pub fn fetch(&mut self, txn: &mut MemTxn, now: u64) -> u64 {
+        let core = txn.endpoint as usize;
+        let line = txn.req.line;
+        let slice = decode::l2_slice(line, self.n_slices);
+        let sectors = txn.fetch_sectors.count_ones().max(1);
+        txn.hops.l2_dispatch = now;
 
         // Finite input buffer: when the core's injection port backlog
         // exceeds the buffer horizon the request stalls *upstream* (in the
@@ -136,37 +130,37 @@ impl MemSystem {
         let stall = self.req_net.admission_delay(core, now);
         if stall > 0 {
             self.stats.backpressure_stalls += 1;
-            self.con.add(attr_core, ResourceClass::NocLink, stall);
+            txn.charge(&mut self.con, ResourceClass::NocLink, stall);
         }
         let start = now + stall;
 
         // Request crossing (header-only packet for reads).
         self.stats.request_flits += self.header_flits as u64;
         let req_hop = self.req_net.transfer(core, slice, start, self.header_flits);
-        self.con.add(attr_core, ResourceClass::NocLink, req_hop.queued);
+        txn.charge(&mut self.con, ResourceClass::NocLink, req_hop.queued);
         let at_slice = req_hop.grant;
 
         // Slice bank port (tag + data pipeline occupancy).
         let port = self.slice_ports.reserve(slice, at_slice, 1);
-        self.con.add(attr_core, ResourceClass::L2Slice, port.queued);
+        txn.charge(&mut self.con, ResourceClass::L2Slice, port.queued);
         let grant = port.grant;
 
         self.stats.accesses += 1;
-        let data_ready = match self.slices[slice].tags.lookup(req.line, req.sectors) {
+        let data_ready = match self.slices[slice].tags.lookup(line, txn.fetch_sectors) {
             Probe::Hit { .. } => {
                 self.stats.hits += 1;
                 grant + self.l2_latency as u64
             }
             probe => {
                 // Sector miss or full miss — check in-flight merge first.
-                if let Some(f) = self.in_flight.get(&req.line) {
+                if let Some(f) = self.in_flight.get(&line) {
                     if f.ready > at_slice {
                         self.stats.hits += 1; // merged: no extra DRAM trip
                         f.ready
                     } else {
                         // Stale entry: the fill landed; treat as hit.
                         self.stats.hits += 1;
-                        self.in_flight.remove(&req.line);
+                        self.in_flight.remove(&line);
                         grant + self.l2_latency as u64
                     }
                 } else {
@@ -177,26 +171,23 @@ impl MemSystem {
                     };
                     // DRAM controller queue backpressure, then the access.
                     let dram_at = grant + self.l2_latency as u64;
-                    let dstall = self.dram.admission_delay(req.line, dram_at);
+                    let (d, dstall) = self.dram.read_gated(line, dram_at, fetch_sectors);
                     if dstall > 0 {
                         self.stats.backpressure_stalls += 1;
-                        self.dram.stats.queue_rejects += 1;
-                        self.con.add(attr_core, ResourceClass::Dram, dstall);
                     }
-                    let d = self.dram.access(req.line, dram_at + dstall, fetch_sectors, false);
-                    self.con.add(attr_core, ResourceClass::Dram, d.queued);
+                    txn.charge(&mut self.con, ResourceClass::Dram, dstall + d.queued);
                     let dram_done = d.grant;
                     // Fill the slice; dirty victim goes back to DRAM
                     // (clean victims need no writeback — fill only reports
                     // dirty ones).
-                    let (_, evicted) = self.slices[slice].fill(req.line, 0b1111);
+                    let (_, evicted) = self.slices[slice].fill(line, 0b1111);
                     if let Some(ev) = evicted {
                         debug_assert!(ev.dirty_sectors != 0, "clean victims are not reported");
                         self.stats.writebacks_to_dram += 1;
                         self.dram
                             .access(ev.line, dram_done, ev.dirty_sectors.count_ones(), true);
                     }
-                    self.in_flight.insert(req.line, InFlight { ready: dram_done });
+                    self.in_flight.insert(line, InFlight { ready: dram_done });
                     dram_done
                 }
             }
@@ -206,8 +197,9 @@ impl MemSystem {
         let flits = self.data_flits(sectors);
         self.stats.response_flits += flits as u64;
         let resp_hop = self.resp_net.transfer(slice, core, data_ready, flits);
-        self.con.add(attr_core, ResourceClass::NocLink, resp_hop.queued);
+        txn.charge(&mut self.con, ResourceClass::NocLink, resp_hop.queued);
         let at_core = resp_hop.grant;
+        txn.hops.mem_done = at_core;
 
         self.stats.total_fetch_latency += at_core - now;
         self.stats.fetches += 1;
@@ -307,7 +299,8 @@ impl MemSystem {
 mod tests {
     use super::*;
     use crate::config::{GpuConfig, L1ArchKind};
-    use crate::mem::AccessKind;
+    use crate::mem::{AccessKind, MemRequest};
+    use crate::stats::ContentionBreakdown;
 
     fn req(id: u64, core: u32, line: LineAddr) -> MemRequest {
         MemRequest {
@@ -322,6 +315,11 @@ mod tests {
         }
     }
 
+    fn fetch(m: &mut MemSystem, r: MemRequest, now: u64) -> u64 {
+        let mut txn = MemTxn::new(r, now);
+        m.fetch(&mut txn, now)
+    }
+
     fn sys() -> MemSystem {
         MemSystem::new(&GpuConfig::tiny(L1ArchKind::Private))
     }
@@ -329,18 +327,42 @@ mod tests {
     #[test]
     fn cold_fetch_pays_l2_latency_plus_dram() {
         let mut m = sys();
-        let done = m.fetch(&req(1, 0, 1000), 0);
+        let done = fetch(&mut m, req(1, 0, 1000), 0);
         let cfg = GpuConfig::tiny(L1ArchKind::Private);
         assert!(done > cfg.l2.latency as u64, "cold miss must include DRAM: {done}");
         assert_eq!(m.stats.misses, 1);
     }
 
     #[test]
+    fn fetch_stamps_hops_and_txn_breakdown() {
+        let mut m = sys();
+        let mut txn = MemTxn::new(req(1, 0, 1000), 7);
+        let done = m.fetch(&mut txn, 7);
+        assert_eq!(txn.hops.l2_dispatch, 7);
+        assert_eq!(txn.hops.mem_done, done);
+        // Cold single fetch: nothing to queue behind.
+        assert_eq!(txn.queued.total(), 0);
+        // Hammering the same port must charge the transactions.
+        let mut worst = ContentionBreakdown::default();
+        for i in 0..50 {
+            let mut t = MemTxn::new(req(10 + i, 0, 1000), 1000);
+            m.fetch(&mut t, 1000);
+            worst.merge(&t.queued);
+        }
+        assert!(worst.total() > 0, "queueing must land on the transactions");
+        assert_eq!(
+            m.contention().total().total(),
+            worst.total(),
+            "transaction-accumulated queueing equals the per-core ledger"
+        );
+    }
+
+    #[test]
     fn second_fetch_hits_in_l2() {
         let mut m = sys();
-        let d1 = m.fetch(&req(1, 0, 1000), 0);
+        let d1 = fetch(&mut m, req(1, 0, 1000), 0);
         let t = d1 + 1000;
-        let d2 = m.fetch(&req(2, 1, 1000), t) - t;
+        let d2 = fetch(&mut m, req(2, 1, 1000), t) - t;
         assert_eq!(m.stats.hits, 1);
         assert!(
             d2 < d1,
@@ -353,9 +375,9 @@ mod tests {
     #[test]
     fn concurrent_same_line_misses_merge() {
         let mut m = sys();
-        m.fetch(&req(1, 0, 500), 0);
+        fetch(&mut m, req(1, 0, 500), 0);
         let before = m.dram_stats().reads;
-        m.fetch(&req(2, 1, 500), 1); // in flight → merged
+        fetch(&mut m, req(2, 1, 500), 1); // in flight → merged
         assert_eq!(m.dram_stats().reads, before, "no duplicate DRAM read");
     }
 
@@ -367,7 +389,7 @@ mod tests {
         assert!(m.stats.request_flits > 1, "write carries data flits");
         // Subsequent read of the written line hits in L2.
         let t = 10_000;
-        m.fetch(&req(1, 0, 77), t);
+        fetch(&mut m, req(1, 0, 77), t);
         assert_eq!(m.stats.hits, 1);
     }
 
@@ -375,14 +397,14 @@ mod tests {
     fn noc_contention_raises_latency_under_load() {
         let mut m = sys();
         // Warm one line so fetches hit in L2 (isolating NoC effects).
-        m.fetch(&req(0, 0, 42), 0);
+        fetch(&mut m, req(0, 0, 42), 0);
         let t0 = 100_000;
-        let solo = m.fetch(&req(1, 0, 42), t0) - t0;
+        let solo = fetch(&mut m, req(1, 0, 42), t0) - t0;
         // Now hammer the same core's input port at one instant.
         let t1 = 200_000;
         let mut worst = 0;
         for i in 0..50 {
-            let d = m.fetch(&req(10 + i, 0, 42), t1) - t1;
+            let d = fetch(&mut m, req(10 + i, 0, 42), t1) - t1;
             worst = worst.max(d);
         }
         assert!(worst > solo, "50 simultaneous fetches must queue: {worst} vs {solo}");
@@ -391,8 +413,8 @@ mod tests {
     #[test]
     fn hit_rate_and_mean_latency_metrics() {
         let mut m = sys();
-        m.fetch(&req(1, 0, 1), 0);
-        m.fetch(&req(2, 0, 1), 100_000);
+        fetch(&mut m, req(1, 0, 1), 0);
+        fetch(&mut m, req(2, 0, 1), 100_000);
         assert!((m.l2_hit_rate() - 0.5).abs() < 1e-9);
         assert!(m.mean_fetch_latency() > 0.0);
     }
@@ -400,7 +422,7 @@ mod tests {
     #[test]
     fn sweep_drops_stale_entries() {
         let mut m = sys();
-        m.fetch(&req(1, 0, 500), 0);
+        fetch(&mut m, req(1, 0, 500), 0);
         assert_eq!(m.in_flight.len(), 1);
         m.sweep_in_flight(u64::MAX);
         assert!(m.in_flight.is_empty());

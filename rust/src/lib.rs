@@ -8,8 +8,11 @@
 //!   crossbar/ring interconnects with iSLIP arbitration ([`noc`]),
 //!   banked L2 + DRAM bank timing ([`l2`], [`dram`]) — configured per
 //!   the paper's Table II ([`config`]);
-//! * the four L1 organizations of the paper's design space, including
-//!   ATA-Cache itself ([`l1arch`]);
+//! * the paper's four L1 organizations plus an interference-aware
+//!   bypass variant, expressed as [`l1arch::SharingPolicy`] modules over
+//!   one shared transaction pipeline ([`l1arch::pipeline`]) and
+//!   registered in [`l1arch::REGISTRY`]; every request travels as a
+//!   first-class [`mem::MemTxn`] with per-hop timestamps;
 //! * statistical workload models of the ten benchmark applications
 //!   ([`trace`]), plus extra models for co-execution studies;
 //! * single-app and multi-app execution engines ([`engine`]): N

@@ -4,15 +4,17 @@
 //!   run        — simulate one application on one L1 organization
 //!   multi      — co-execute N applications on partitioned cores
 //!   contention — per-resource stall breakdown across L1 organizations
+//!   bench      — perf-trajectory baseline: pinned workload per organization
 //!   sweep      — architectures × applications sweep (Fig 8 driver)
 //!   cosched    — app-pair × architecture interference sweep
 //!   classify   — inter-core locality classification pipeline
 //!   landscape  — regenerate Table I from a measured sweep
 //!   overhead   — §IV-D hardware overhead model
-//!   list       — list application models
+//!   list       — list application models and registered organizations
 //!   config     — dump the Table II configuration as JSON
 
 use ata_cache::area;
+use ata_cache::bench_harness::sim_throughput;
 use ata_cache::config::{GpuConfig, L1ArchKind};
 use ata_cache::coordinator::{landscape, CoSchedSweep, Sweep};
 use ata_cache::core::CorePartition;
@@ -37,6 +39,7 @@ fn main() {
         Some("run") => cmd_run(&args),
         Some("multi") => cmd_multi(&args),
         Some("contention") => cmd_contention(&args),
+        Some("bench") => cmd_bench(&args),
         Some("export-trace") => cmd_export_trace(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("cosched") => cmd_cosched(&args),
@@ -55,13 +58,15 @@ fn main() {
 
 fn print_usage() {
     eprintln!(
-        "usage: ata-sim <run|multi|contention|sweep|cosched|classify|landscape|overhead|list|config> [options]
-  run       --app <name> | --trace FILE  --arch <private|remote|decoupled|ata>
+        "usage: ata-sim <run|multi|contention|bench|sweep|cosched|classify|landscape|overhead|list|config> [options]
+  run       --app <name> | --trace FILE
+            --arch <private|remote|decoupled|ata|ata-bypass>
             [--scale F] [--seed N] [--out FILE]
   multi     --apps a,b[,c..] [--partition n,m,..] [--arch X] [--scale F]
             [--share-addr] [--seed N] [--out FILE]
   contention [--apps x,y,.. | --app <name>] [--archs a,b,..] [--scale F]
             [--seed N] [--out FILE]
+  bench     [--app <name>] [--scale F] [--seed N] [--out FILE=BENCH_pr3.json]
   export-trace --app <name> [--scale F] --out FILE
   sweep     [--archs a,b,..] [--apps x,y,..] [--scale F] [--threads N] [--out FILE]
   cosched   [--archs a,b,..] [--apps x,y,..] [--scale F] [--threads N]
@@ -251,9 +256,9 @@ fn cmd_multi(args: &Args) -> i32 {
     0
 }
 
-/// Per-resource stall-breakdown comparison: where do private, remote,
-/// decoupled and ATA burn their cycles for a given application (the
-/// paper's Fig. 3 / Fig. 11 style contention analysis)?
+/// Per-resource stall-breakdown comparison: where does each registered
+/// organization burn its cycles for a given application (the paper's
+/// Fig. 3 / Fig. 11 style contention analysis)?
 fn cmd_contention(args: &Args) -> i32 {
     let scale = args.get_f64("scale", 0.25).unwrap();
     let archs: Vec<L1ArchKind> = {
@@ -323,6 +328,65 @@ fn cmd_contention(args: &Args) -> i32 {
         std::fs::write(path, json.pretty()).expect("writing --out");
         println!("wrote {path}");
     }
+    0
+}
+
+/// Perf-trajectory baseline (`BENCH_pr3.json`): run one pinned, seeded
+/// workload on every registered L1 organization and report wall seconds,
+/// simulated cycles per host second, and IPC.  Future PRs compare against
+/// this file to catch host-performance regressions of the simulator
+/// itself.
+fn cmd_bench(args: &Args) -> i32 {
+    let scale = args.get_f64("scale", 0.25).unwrap();
+    let app_name = args.get_or("app", "b+tree").to_string();
+    let Some(app) = apps::app(&app_name) else {
+        eprintln!("unknown app '{app_name}' (see `ata-sim list`)");
+        return 2;
+    };
+    let out_path = args.get_or("out", "BENCH_pr3.json").to_string();
+    let seed = args.get_u64("seed", GpuConfig::default().seed).unwrap();
+
+    let mut t = Table::new(&format!(
+        "perf baseline — {app_name} @ scale {scale}, seed {seed:#x}"
+    ))
+    .header(&["arch", "cycles", "insts", "IPC", "host s", "Mcyc/s"]);
+    let mut chart = BarChart::new("simulated cycles per host second (higher is faster)");
+    let mut rows = Vec::new();
+    for spec in ata_cache::l1arch::REGISTRY {
+        let mut cfg = GpuConfig::paper(spec.kind);
+        cfg.seed = seed;
+        let wl = app.scaled(scale).workload(&cfg);
+        let r = Engine::new(&cfg).run(&wl);
+        let thru = sim_throughput(r.cycles, r.host_seconds);
+        t.row(vec![
+            spec.name.to_string(),
+            r.cycles.to_string(),
+            r.insts.to_string(),
+            format!("{:.3}", r.ipc()),
+            format!("{:.3}", r.host_seconds),
+            format!("{:.2}", thru / 1e6),
+        ]);
+        chart.bar(spec.name, thru / 1e6);
+        rows.push(Json::obj(vec![
+            ("arch", spec.name.into()),
+            ("cycles", r.cycles.into()),
+            ("insts", r.insts.into()),
+            ("ipc", r.ipc().into()),
+            ("host_seconds", r.host_seconds.into()),
+            ("cycles_per_sec", thru.into()),
+        ]));
+    }
+    println!("{}", t.render());
+    println!("{}", chart.render());
+    let json = Json::obj(vec![
+        ("bench", "pr3".into()),
+        ("app", app_name.as_str().into()),
+        ("scale", scale.into()),
+        ("seed", seed.into()),
+        ("orgs", Json::arr(rows)),
+    ]);
+    std::fs::write(&out_path, json.pretty()).expect("writing bench output");
+    println!("wrote {out_path}");
     0
 }
 
@@ -538,6 +602,11 @@ fn cmd_list() -> i32 {
         ]);
     }
     println!("{}", t.render());
+    let mut orgs = Table::new("registered L1 organizations").header(&["arch", "summary"]);
+    for spec in ata_cache::l1arch::REGISTRY {
+        orgs.row(vec![spec.name.to_string(), spec.summary.to_string()]);
+    }
+    println!("{}", orgs.render());
     0
 }
 
@@ -551,10 +620,4 @@ fn cmd_config(args: &Args) -> i32 {
         println!("{text}");
     }
     0
-}
-
-// Keep BarChart linked for examples that share this binary crate's dep graph.
-#[allow(dead_code)]
-fn _chart_demo() -> String {
-    BarChart::new("demo").render()
 }

@@ -1,7 +1,11 @@
-//! Memory request model: addresses, sectors, and the request type that
-//! flows from SIMT cores through L1 organizations to L2 and DRAM.
+//! Memory request model: addresses, sectors, the request type produced by
+//! the SIMT cores, and the first-class [`MemTxn`] transaction that carries
+//! one request core → L1 tag probe → (local | peer | L2 → DRAM) with
+//! per-hop timestamps and accumulated queueing.
 
 pub mod decode;
+
+use crate::stats::{ContentionBreakdown, ContentionStats, ResourceClass};
 
 /// A 128-byte cache-line address (byte address >> 7).  Line granularity is
 /// the unit of tag lookups and sharing; sectors (32 B) are the unit of
@@ -47,6 +51,123 @@ impl MemRequest {
 
     pub fn sector_count(&self) -> u32 {
         self.sectors.count_ones()
+    }
+}
+
+/// Per-hop timestamps of one transaction's walk down the memory
+/// hierarchy.  Hops that a transaction never reaches stay 0 (e.g. a local
+/// hit never dispatches to L2).  The deltas between consecutive hops are
+/// the paper's Fig. 3 latency decomposition: front-end tag wait, L1 stage,
+/// and L2/DRAM service.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HopTimes {
+    /// Cycle the request was handed to the L1 organization.
+    pub issue: u64,
+    /// Cycle the front-end tag pipeline resolved (probe outcome known).
+    /// Stays `issue` for organizations without a distinct tag front-end.
+    pub tag_done: u64,
+    /// Cycle the L1 stage of the access completed: data return for any L1
+    /// hit (local or remote), or the dispatch-to-L2 point for a miss —
+    /// the paper's §IV-C latency boundary.
+    pub l1_done: u64,
+    /// Cycle a miss was offered to the cores→L2 network (0 = never).
+    pub l2_dispatch: u64,
+    /// Cycle the fill data arrived back at the L1 (0 = no memory trip).
+    pub mem_done: u64,
+    /// Cycle the data reached the core (loads) / the write retired.
+    pub done: u64,
+}
+
+/// One memory request's transaction through the hierarchy.
+///
+/// Constructed once by the engine (or a test harness) and carried by
+/// `&mut` through `l1arch` (tag probe → hit/peer/miss resolution → MSHR
+/// dispatch), `noc`, `l2` and `dram`.  Each layer stamps its hop
+/// timestamps and charges its [`resource::Grant`](crate::resource::Grant)
+/// queueing through [`charge`](MemTxn::charge), so the finished
+/// transaction carries both *where the time went* (hops) and *why*
+/// (per-resource queued cycles).
+#[derive(Debug, Clone)]
+pub struct MemTxn {
+    /// The immutable request identity (who asked for what).
+    pub req: MemRequest,
+    /// Physical NoC endpoint below L1: the core whose injection port the
+    /// miss leaves through and the fill returns to.  Equals `req.core`
+    /// except for decoupled-sharing home-slice misses.
+    pub endpoint: u32,
+    /// Core charged for every queued cycle along the walk — always the
+    /// *suffering* core (the one whose load waits), never a proxy
+    /// endpoint, so per-app lane rollups stay honest.
+    pub attr_core: u32,
+    /// Sectors an L2 fetch should bring in (narrowed on sector misses).
+    pub fetch_sectors: SectorMask,
+    pub hops: HopTimes,
+    /// Grant queueing accumulated along the walk, per resource class.
+    pub queued: ContentionBreakdown,
+}
+
+impl MemTxn {
+    /// Open a transaction for `req` handed to the L1 organization at
+    /// `now`.  (`now` equals `req.issue_cycle` in the engine; tests may
+    /// replay a request at a later cycle.)
+    pub fn new(req: MemRequest, now: u64) -> Self {
+        MemTxn {
+            req,
+            endpoint: req.core,
+            attr_core: req.core,
+            fetch_sectors: req.sectors,
+            hops: HopTimes {
+                issue: now,
+                tag_done: now,
+                ..HopTimes::default()
+            },
+            queued: ContentionBreakdown::default(),
+        }
+    }
+
+    /// Cycle the L1 organization received this transaction.
+    #[inline]
+    pub fn now(&self) -> u64 {
+        self.hops.issue
+    }
+
+    /// Charge `cycles` of queueing on `class`: attributed to
+    /// [`attr_core`](Self::attr_core) in `con` *and* accumulated on the
+    /// transaction itself.  Zero-cycle charges are free no-ops.
+    #[inline]
+    pub fn charge(&mut self, con: &mut ContentionStats, class: ResourceClass, cycles: u64) {
+        if cycles > 0 {
+            con.add(self.attr_core as usize, class, cycles);
+            self.queued.add(class, cycles);
+        }
+    }
+
+    /// Close the transaction: data at core at `done`, L1 stage completed
+    /// at `l1_done` (the §IV-C boundary).
+    #[inline]
+    pub fn complete(&mut self, done: u64, l1_done: u64) {
+        self.hops.done = done;
+        self.hops.l1_done = l1_done;
+    }
+
+    /// Close a transaction fully served at `done` (hit paths: the L1
+    /// stage *is* the whole access).
+    #[inline]
+    pub fn serve(&mut self, done: u64) {
+        self.complete(done, done);
+    }
+
+    /// Cycle the data reached the core (valid after the L1 organization
+    /// returned).
+    #[inline]
+    pub fn done(&self) -> u64 {
+        self.hops.done
+    }
+
+    /// The §IV-C L1-stage completion cycle.
+    #[inline]
+    pub fn l1_stage_done(&self) -> u64 {
+        self.hops.l1_done
     }
 }
 
@@ -103,6 +224,36 @@ mod tests {
     fn is_write() {
         assert!(!req(0, 1, AccessKind::Load).is_write());
         assert!(req(0, 1, AccessKind::Store).is_write());
+    }
+
+    #[test]
+    fn txn_opens_at_now_and_charges_both_ledgers() {
+        let mut txn = MemTxn::new(req(7, 0b0011, AccessKind::Load), 100);
+        assert_eq!(txn.now(), 100);
+        assert_eq!(txn.hops.tag_done, 100, "no front-end by default");
+        assert_eq!(txn.endpoint, txn.req.core);
+        assert_eq!(txn.attr_core, txn.req.core);
+        assert_eq!(txn.fetch_sectors, 0b0011);
+
+        let mut con = ContentionStats::new(4);
+        txn.charge(&mut con, ResourceClass::Dram, 5);
+        txn.charge(&mut con, ResourceClass::Dram, 0); // free no-op
+        txn.charge(&mut con, ResourceClass::NocLink, 2);
+        assert_eq!(txn.queued.get(ResourceClass::Dram), 5);
+        assert_eq!(txn.queued.total(), 7);
+        assert_eq!(con.total().total(), 7, "ledgers agree");
+        assert_eq!(con.per_core()[0].get(ResourceClass::NocLink), 2);
+    }
+
+    #[test]
+    fn txn_complete_and_serve_stamp_hops() {
+        let mut txn = MemTxn::new(req(7, 0b1111, AccessKind::Load), 10);
+        txn.complete(500, 50);
+        assert_eq!(txn.done(), 500);
+        assert_eq!(txn.l1_stage_done(), 50);
+        let mut txn2 = MemTxn::new(req(7, 0b1111, AccessKind::Load), 10);
+        txn2.serve(42);
+        assert_eq!((txn2.done(), txn2.l1_stage_done()), (42, 42));
     }
 
     #[test]

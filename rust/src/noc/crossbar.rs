@@ -191,6 +191,14 @@ impl XbarReservation {
     pub fn output_backlog(&self, output: usize, now: u64) -> u64 {
         self.outputs[output].backlog(now)
     }
+
+    /// Pending work on an input port at `now` — together with
+    /// [`output_backlog`](Self::output_backlog) this is the read-only
+    /// congestion estimate interference-aware policies use (e.g. the
+    /// `ata-bypass` organization's holder-pressure check).
+    pub fn input_backlog(&self, input: usize, now: u64) -> u64 {
+        self.inputs[input].backlog(now)
+    }
 }
 
 #[cfg(test)]

@@ -217,6 +217,12 @@ pub struct L1Stats {
     /// Remote read fell back to L2 because the remote copy was dirty
     /// (§III-C).
     pub dirty_remote_fallbacks: u64,
+    /// Remote hits deliberately redirected to L2 because the holder's
+    /// data banks / fabric ports were contended (the `ata-bypass`
+    /// organization's CIAO-style interference-aware bypass).  A side
+    /// tally: each bypassed access still lands in the `misses` outcome
+    /// class.
+    pub bypasses: u64,
     /// Lines filled into a cache.
     pub fills: u64,
     /// MSHR merges (request piggybacked on an in-flight miss).
@@ -240,6 +246,7 @@ impl L1Stats {
             sharing_net_cycles,
             probes_sent,
             dirty_remote_fallbacks,
+            bypasses,
             fills,
             mshr_merges,
         } = *self;
@@ -255,6 +262,7 @@ impl L1Stats {
             sharing_net_cycles: sharing_net_cycles - before.sharing_net_cycles,
             probes_sent: probes_sent - before.probes_sent,
             dirty_remote_fallbacks: dirty_remote_fallbacks - before.dirty_remote_fallbacks,
+            bypasses: bypasses - before.bypasses,
             fills: fills - before.fills,
             mshr_merges: mshr_merges - before.mshr_merges,
         }
@@ -287,6 +295,7 @@ impl L1Stats {
             ("sharing_net_cycles", self.sharing_net_cycles.into()),
             ("probes_sent", self.probes_sent.into()),
             ("dirty_remote_fallbacks", self.dirty_remote_fallbacks.into()),
+            ("bypasses", self.bypasses.into()),
             ("fills", self.fills.into()),
             ("mshr_merges", self.mshr_merges.into()),
             ("hit_rate", self.hit_rate().into()),
@@ -353,6 +362,95 @@ impl LoadLatencyTracker {
     }
 }
 
+/// Aggregate per-hop latency, read off completed [`crate::mem::MemTxn`]
+/// transactions (the Fig. 3 decomposition as measured data): how long
+/// transactions waited in the tag front-end, how long the L1 stage took,
+/// and how long the memory system below L1 served misses — plus the
+/// transaction-accumulated queueing breakdown as a cross-check against
+/// the per-core [`ContentionStats`] ledger.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct HopStats {
+    /// Transactions recorded.
+    pub txns: u64,
+    /// Σ cycles from issue to tag-pipeline resolution.
+    pub tag_wait_cycles: u64,
+    /// Σ cycles from issue to L1-stage completion (§IV-C).
+    pub l1_stage_cycles: u64,
+    /// Transactions that dispatched a fetch below L1.
+    pub mem_trips: u64,
+    /// Σ cycles from L2 dispatch to fill arrival (misses only).
+    pub mem_service_cycles: u64,
+    /// Σ per-transaction accumulated queueing (subset of the per-core
+    /// contention ledger: fire-and-forget writebacks charge the ledger
+    /// directly and never ride a transaction).
+    pub queued: ContentionBreakdown,
+}
+
+impl HopStats {
+    /// Fold one finished transaction's hops into the aggregate.
+    pub fn record(&mut self, hops: &crate::mem::HopTimes, queued: &ContentionBreakdown) {
+        self.txns += 1;
+        self.tag_wait_cycles += hops.tag_done.saturating_sub(hops.issue);
+        self.l1_stage_cycles += hops.l1_done.saturating_sub(hops.issue);
+        if hops.l2_dispatch > 0 {
+            self.mem_trips += 1;
+            self.mem_service_cycles += hops.mem_done.saturating_sub(hops.l2_dispatch);
+        }
+        self.queued.merge(queued);
+    }
+
+    /// Counters accumulated since `before` (per-run reporting on a warm
+    /// engine).  Destructures exhaustively so a new field without a delta
+    /// is a compile error.
+    pub fn delta(&self, before: &HopStats) -> HopStats {
+        let HopStats {
+            txns,
+            tag_wait_cycles,
+            l1_stage_cycles,
+            mem_trips,
+            mem_service_cycles,
+            queued,
+        } = *self;
+        HopStats {
+            txns: txns - before.txns,
+            tag_wait_cycles: tag_wait_cycles - before.tag_wait_cycles,
+            l1_stage_cycles: l1_stage_cycles - before.l1_stage_cycles,
+            mem_trips: mem_trips - before.mem_trips,
+            mem_service_cycles: mem_service_cycles - before.mem_service_cycles,
+            queued: queued.delta(&before.queued),
+        }
+    }
+
+    pub fn mean_l1_stage(&self) -> f64 {
+        if self.txns == 0 {
+            0.0
+        } else {
+            self.l1_stage_cycles as f64 / self.txns as f64
+        }
+    }
+
+    pub fn mean_mem_service(&self) -> f64 {
+        if self.mem_trips == 0 {
+            0.0
+        } else {
+            self.mem_service_cycles as f64 / self.mem_trips as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("txns", self.txns.into()),
+            ("tag_wait_cycles", self.tag_wait_cycles.into()),
+            ("l1_stage_cycles", self.l1_stage_cycles.into()),
+            ("mem_trips", self.mem_trips.into()),
+            ("mem_service_cycles", self.mem_service_cycles.into()),
+            ("mean_l1_stage", self.mean_l1_stage().into()),
+            ("mean_mem_service", self.mean_mem_service().into()),
+            ("queued", self.queued.to_json()),
+        ])
+    }
+}
+
 /// Per-kernel performance record (Fig 9's unit of comparison).
 #[derive(Debug, Clone, Default)]
 pub struct KernelStats {
@@ -399,6 +497,8 @@ pub struct SimResult {
     /// Per-resource stall breakdown accumulated over the run (Fig. 3 /
     /// Fig. 11 style contention decomposition).
     pub contention: ContentionBreakdown,
+    /// Per-hop latency decomposition read off the run's transactions.
+    pub hops: HopStats,
     pub kernels: Vec<KernelStats>,
     /// Wall-clock seconds the simulation took (host performance metric).
     pub host_seconds: f64,
@@ -432,6 +532,7 @@ impl SimResult {
             ("dram_reads", self.dram_reads.into()),
             ("dram_writes", self.dram_writes.into()),
             ("contention", self.contention.to_json()),
+            ("hops", self.hops.to_json()),
             (
                 "kernels",
                 Json::arr(
@@ -561,6 +662,8 @@ pub struct MultiResult {
     /// Per-resource stall breakdown over the whole co-run (Σ of the
     /// per-app breakdowns plus any stalls on idle-core resources).
     pub contention: ContentionBreakdown,
+    /// Per-hop latency decomposition over the whole co-run's transactions.
+    pub hops: HopStats,
     pub apps: Vec<AppCoStats>,
     /// Wall-clock seconds the simulation took (host performance metric).
     pub host_seconds: f64,
@@ -596,6 +699,7 @@ impl MultiResult {
             ("dram_reads", self.dram_reads.into()),
             ("dram_writes", self.dram_writes.into()),
             ("contention", self.contention.to_json()),
+            ("hops", self.hops.to_json()),
             ("apps", Json::arr(self.apps.iter().map(AppCoStats::to_json).collect())),
             ("host_seconds", self.host_seconds.into()),
         ])
@@ -730,6 +834,63 @@ mod tests {
         let d = c.delta(&snapshot);
         assert_eq!(d.total().total(), 9);
         assert_eq!(d.per_core()[0].get(ResourceClass::Dram), 9);
+    }
+
+    #[test]
+    fn hop_stats_record_and_delta() {
+        use crate::mem::HopTimes;
+        let mut h = HopStats::default();
+        let mut q = ContentionBreakdown::default();
+        q.add(ResourceClass::Dram, 4);
+        // A miss: issue 10, tags at 12, stage at 45, dispatched 14,
+        // fill back at 300, done 301.
+        h.record(
+            &HopTimes {
+                issue: 10,
+                tag_done: 12,
+                l1_done: 45,
+                l2_dispatch: 14,
+                mem_done: 300,
+                done: 301,
+            },
+            &q,
+        );
+        // A hit: no memory trip.
+        h.record(
+            &HopTimes {
+                issue: 20,
+                tag_done: 20,
+                l1_done: 55,
+                l2_dispatch: 0,
+                mem_done: 0,
+                done: 55,
+            },
+            &ContentionBreakdown::default(),
+        );
+        assert_eq!(h.txns, 2);
+        assert_eq!(h.tag_wait_cycles, 2);
+        assert_eq!(h.l1_stage_cycles, 35 + 35);
+        assert_eq!(h.mem_trips, 1);
+        assert_eq!(h.mem_service_cycles, 286);
+        assert_eq!(h.queued.get(ResourceClass::Dram), 4);
+        assert_eq!(h.mean_l1_stage(), 35.0);
+        assert_eq!(h.mean_mem_service(), 286.0);
+
+        let before = HopStats {
+            txns: 1,
+            tag_wait_cycles: 2,
+            l1_stage_cycles: 35,
+            mem_trips: 1,
+            mem_service_cycles: 286,
+            queued: q,
+        };
+        let d = h.delta(&before);
+        assert_eq!(d.txns, 1);
+        assert_eq!(d.mem_trips, 0);
+        assert_eq!(d.queued.total(), 0);
+        let j = Json::parse(&h.to_json().to_string()).unwrap();
+        assert_eq!(j.get("txns").unwrap().as_u64(), Some(2));
+        assert_eq!(j.get("mem_trips").unwrap().as_u64(), Some(1));
     }
 
     #[test]

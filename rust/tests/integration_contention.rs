@@ -9,7 +9,7 @@ use ata_cache::core::{WarpInst, WarpProgram};
 use ata_cache::engine::{Engine, KernelSpec, Workload};
 use ata_cache::l1arch::{self, L1Arch};
 use ata_cache::l2::MemSystem;
-use ata_cache::mem::{AccessKind, MemRequest};
+use ata_cache::mem::{AccessKind, MemRequest, MemTxn};
 use ata_cache::stats::ResourceClass;
 use ata_cache::testkit::{check, int_range, vec_of};
 
@@ -200,7 +200,7 @@ fn mshr_saturation_stalls_ata_and_private_identically() {
         // Distinct far-apart lines, all issued at cycle 0 from one core:
         // misses 3..n find the 2-entry pool full and must stall.
         for i in 0..n {
-            l1.access(&load(i, i * 1024), 0, &mut mem);
+            l1arch::access_once(l1.as_mut(), &load(i, i * 1024), 0, &mut mem);
         }
         let stats = *l1.stats();
         let stalls = l1.contention().total().get(ResourceClass::MshrFull);
@@ -245,7 +245,8 @@ fn noc_backpressure_stalls_are_finite_and_attributed() {
     };
     let mut last = 0;
     for i in 0..32 {
-        last = last.max(mem.fetch(&req(i, i * 512), 0));
+        let mut txn = MemTxn::new(req(i, i * 512), 0);
+        last = last.max(mem.fetch(&mut txn, 0));
     }
     assert!(last > 0);
     assert!(
