@@ -7,6 +7,7 @@
 use ata_cache::bench_harness::{bench_prelude, sim_throughput};
 use ata_cache::config::L1ArchKind;
 use ata_cache::coordinator::Sweep;
+use ata_cache::stats::RunTotals;
 use ata_cache::trace::{apps, LocalityClass};
 use ata_cache::util::table::{pct_delta, Table};
 use std::time::Instant;
@@ -44,10 +45,16 @@ fn main() {
         pct_delta(ata_low / dec_low)
     );
 
-    let cycles: u64 = results.results.iter().map(|r| r.cycles).sum();
+    // Order-preserving per-job totals (results arrive in submission
+    // order from the execution layer).
+    let mut totals = RunTotals::default();
+    for r in &results.results {
+        totals.absorb_sim(r);
+    }
     println!(
-        "\nhost: {:.1}s wall, {:.2}M simulated cycles/s aggregate",
+        "\nhost: {:.1}s wall over {} jobs, {:.2}M simulated cycles/s aggregate",
         host,
-        sim_throughput(cycles, host) / 1e6
+        totals.runs,
+        sim_throughput(totals.cycles, host) / 1e6
     );
 }

@@ -6,16 +6,10 @@
 
 use ata_cache::bench_harness::bench_prelude;
 use ata_cache::config::{GpuConfig, L1ArchKind};
-use ata_cache::engine::Engine;
-use ata_cache::stats::SimResult;
+use ata_cache::coordinator::SweepResults;
+use ata_cache::exec::{JobOutput, JobRunner, ScenarioGrid};
 use ata_cache::trace::apps;
 use ata_cache::util::table::Table;
-
-fn run(app: &str, arch: L1ArchKind, scale: f64) -> SimResult {
-    let cfg = GpuConfig::paper(arch);
-    let wl = apps::app(app).unwrap().scaled(scale).workload(&cfg);
-    Engine::new(&cfg).run(&wl)
-}
 
 fn main() {
     let quick = bench_prelude("fig9_per_kernel — per-kernel IPC (paper Fig 9)");
@@ -28,10 +22,35 @@ fn main() {
         ("HS3D", "ATA >= decoupled on all kernels"),
         ("sradv1", "k4/k9/k14 crater under decoupled"),
     ];
+
+    // All twelve (arch × app) runs as one scenario grid on the worker
+    // pool — the per-case serial loop this bench used to hand-roll.
+    let grid = ScenarioGrid::new(
+        GpuConfig::paper(L1ArchKind::Private),
+        vec![
+            L1ArchKind::Private,
+            L1ArchKind::DecoupledSharing,
+            L1ArchKind::Ata,
+        ],
+        cases
+            .iter()
+            .map(|(app, _)| apps::app(app).unwrap())
+            .collect(),
+        scale,
+    );
+    let jobs = grid.jobs();
+    let results = SweepResults {
+        results: JobRunner::default()
+            .run(&jobs)
+            .into_iter()
+            .map(JobOutput::into_solo)
+            .collect(),
+    };
+
     for (app, note) in cases {
-        let base = run(app, L1ArchKind::Private, scale);
-        let dec = run(app, L1ArchKind::DecoupledSharing, scale);
-        let ata = run(app, L1ArchKind::Ata, scale);
+        let base = results.get(L1ArchKind::Private, app).unwrap();
+        let dec = results.get(L1ArchKind::DecoupledSharing, app).unwrap();
+        let ata = results.get(L1ArchKind::Ata, app).unwrap();
 
         let mut t =
             Table::new(&format!("Fig 9 — {app} ({note})")).header(&["kernel", "decoupled", "ata"]);

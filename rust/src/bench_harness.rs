@@ -6,6 +6,8 @@
 
 use std::time::Instant;
 
+use crate::util::json::Json;
+
 /// Timing statistics over repeated runs.
 #[derive(Debug, Clone, Copy)]
 pub struct Timing {
@@ -65,6 +67,69 @@ pub fn sim_throughput(cycles: u64, host_seconds: f64) -> f64 {
     }
 }
 
+/// Wall-clock comparison of one experiment grid run serially vs. on the
+/// parallel execution layer — the `ata-sim bench` evidence that the
+/// [`crate::exec::JobRunner`] actually buys throughput *and* stays
+/// deterministic.
+#[derive(Debug, Clone)]
+pub struct SpeedupReport {
+    /// Jobs in the grid that was timed.
+    pub jobs: usize,
+    /// Worker count of the parallel run.
+    pub threads: usize,
+    pub serial_seconds: f64,
+    pub parallel_seconds: f64,
+    /// Whether the two runs produced byte-identical canonical output —
+    /// the determinism contract, checked on every bench run.
+    pub identical: bool,
+}
+
+impl SpeedupReport {
+    /// Serial wall time over parallel wall time (> 1.0 means the pool
+    /// helped; ≈ 1.0 on a single-core runner).
+    pub fn speedup(&self) -> f64 {
+        if self.parallel_seconds <= 0.0 {
+            0.0
+        } else {
+            self.serial_seconds / self.parallel_seconds
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("jobs", self.jobs.into()),
+            ("threads", self.threads.into()),
+            ("serial_seconds", self.serial_seconds.into()),
+            ("parallel_seconds", self.parallel_seconds.into()),
+            ("speedup", self.speedup().into()),
+            ("identical", self.identical.into()),
+        ])
+    }
+}
+
+/// Time `run(1)` against `run(threads)` and compare their canonical
+/// output byte-for-byte.  `run` receives a worker count and returns the
+/// run's canonical serialization (e.g. the sweep's pretty JSON).
+pub fn compare_thread_counts<F: FnMut(usize) -> String>(
+    jobs: usize,
+    threads: usize,
+    mut run: F,
+) -> SpeedupReport {
+    let t0 = Instant::now();
+    let serial = run(1);
+    let serial_seconds = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let parallel = run(threads);
+    let parallel_seconds = t1.elapsed().as_secs_f64();
+    SpeedupReport {
+        jobs,
+        threads,
+        serial_seconds,
+        parallel_seconds,
+        identical: serial == parallel,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -82,5 +147,24 @@ mod tests {
     fn throughput_math() {
         assert_eq!(sim_throughput(1000, 0.5), 2000.0);
         assert_eq!(sim_throughput(1000, 0.0), 0.0);
+    }
+
+    #[test]
+    fn speedup_report_compares_and_serializes() {
+        let mut calls = Vec::new();
+        let rep = compare_thread_counts(5, 4, |threads| {
+            calls.push(threads);
+            "same-output".to_string()
+        });
+        assert_eq!(calls, vec![1, 4], "serial first, then parallel");
+        assert_eq!(rep.jobs, 5);
+        assert_eq!(rep.threads, 4);
+        assert!(rep.identical);
+        assert!(rep.speedup() >= 0.0);
+        let j = Json::parse(&rep.to_json().to_string()).unwrap();
+        assert_eq!(j.get("identical").unwrap().as_bool(), Some(true));
+
+        let drift = compare_thread_counts(1, 2, |t| format!("{t}"));
+        assert!(!drift.identical, "differing output must be flagged");
     }
 }

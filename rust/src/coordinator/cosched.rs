@@ -12,11 +12,10 @@
 //! organization, NoC, L2 and DRAM, with the capacity loss of
 //! partitioning already factored out.
 
-use std::sync::Mutex;
-
 use crate::config::{GpuConfig, L1ArchKind};
 use crate::core::CorePartition;
-use crate::engine::{Engine, MultiWorkload};
+use crate::engine::MultiWorkload;
+use crate::exec::{job_seed, JobOutput, JobRunner, SimJob};
 use crate::stats::{ContentionBreakdown, MultiResult, ResourceClass};
 use crate::trace::{apps, co_workload_placed, AppModel};
 use crate::util::json::Json;
@@ -63,7 +62,7 @@ impl CoSchedSweep {
             archs: vec![L1ArchKind::Private, L1ArchKind::Ata],
             apps: apps::all_apps(),
             scale,
-            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            threads: JobRunner::available(),
             share_address_space: false,
         }
     }
@@ -71,6 +70,13 @@ impl CoSchedSweep {
     /// The two half-GPU partitions every pair runs on.
     pub fn partitions(&self) -> Vec<CorePartition> {
         CorePartition::even(self.cfg.cores, 2).expect("config has at least 2 cores")
+    }
+
+    /// Number of simulations the sweep will run: per architecture, one
+    /// solo baseline per (app × position) plus every unordered pair.
+    pub fn job_count(&self) -> usize {
+        let n = self.apps.len();
+        self.archs.len() * (n * self.partitions().len() + n * (n + 1) / 2)
     }
 
     /// Build a (solo or pair) co-workload with lanes at the given
@@ -88,74 +94,91 @@ impl CoSchedSweep {
             .expect("co-sched partitions are valid by construction")
     }
 
-    /// Run all (arch × pair) co-runs and (arch × app × position) solo
-    /// baselines, work-stealing across threads.  Results are
-    /// deterministic regardless of `threads`.
-    pub fn run(&self) -> CoSchedResults {
+    /// Flatten the whole sweep — solo lanes *and* all pairs — into one
+    /// [`SimJob`] list in deterministic submission order: per
+    /// architecture, first every (app × position) solo baseline, then
+    /// every unordered pair (i ≤ j).  The paired `slots` vector records
+    /// how to route each output back into [`CoSchedResults`].
+    fn jobs(&self) -> (Vec<SimJob>, Vec<CoSlot>) {
         let parts = self.partitions();
-        #[derive(Clone, Copy)]
-        enum Job {
-            Solo { arch: L1ArchKind, app: usize, pos: usize },
-            Pair { arch: L1ArchKind, i: usize, j: usize },
-        }
-        let mut jobs: Vec<Job> = Vec::new();
+        let grid_seed = self.cfg.seed;
+        let mut jobs: Vec<SimJob> = Vec::new();
+        let mut slots: Vec<CoSlot> = Vec::new();
         for &arch in &self.archs {
+            let mut cfg = self.cfg.clone();
+            cfg.l1_arch = arch;
             for app in 0..self.apps.len() {
                 for pos in 0..parts.len() {
-                    jobs.push(Job::Solo { arch, app, pos });
+                    let multi = self.workload_at(&cfg, &[&self.apps[app]], &[parts[pos]], &[pos]);
+                    let label = format!("solo/{}/{}@p{pos}", arch.name(), self.apps[app].name);
+                    jobs.push(SimJob::multi(
+                        label,
+                        cfg.clone(),
+                        job_seed(grid_seed, jobs.len()),
+                        multi,
+                    ));
+                    slots.push(CoSlot::Solo { arch, app, pos });
                 }
             }
             for i in 0..self.apps.len() {
                 for j in i..self.apps.len() {
-                    jobs.push(Job::Pair { arch, i, j });
+                    let multi = self.workload_at(
+                        &cfg,
+                        &[&self.apps[i], &self.apps[j]],
+                        &[parts[0], parts[1]],
+                        &[0, 1],
+                    );
+                    let label = format!(
+                        "pair/{}/{}+{}",
+                        arch.name(),
+                        self.apps[i].name,
+                        self.apps[j].name
+                    );
+                    jobs.push(SimJob::multi(
+                        label,
+                        cfg.clone(),
+                        job_seed(grid_seed, jobs.len()),
+                        multi,
+                    ));
+                    slots.push(CoSlot::Pair { arch, i, j });
                 }
             }
         }
-        let jobs = Mutex::new(jobs);
-        let pairs = Mutex::new(Vec::new());
-        let solos = Mutex::new(Vec::new());
-        let n_threads = self.threads.max(1);
-        std::thread::scope(|s| {
-            for _ in 0..n_threads {
-                s.spawn(|| loop {
-                    let job = { jobs.lock().unwrap().pop() };
-                    let Some(job) = job else { break };
-                    match job {
-                        Job::Solo { arch, app, pos } => {
-                            let mut cfg = self.cfg.clone();
-                            cfg.l1_arch = arch;
-                            let multi =
-                                self.workload_at(&cfg, &[&self.apps[app]], &[parts[pos]], &[pos]);
-                            let result = Engine::new(&cfg).run_multi(&multi);
-                            solos.lock().unwrap().push(SoloResult { arch, app, pos, result });
-                        }
-                        Job::Pair { arch, i, j } => {
-                            let mut cfg = self.cfg.clone();
-                            cfg.l1_arch = arch;
-                            let multi = self.workload_at(
-                                &cfg,
-                                &[&self.apps[i], &self.apps[j]],
-                                &[parts[0], parts[1]],
-                                &[0, 1],
-                            );
-                            let result = Engine::new(&cfg).run_multi(&multi);
-                            pairs.lock().unwrap().push(PairResult { arch, i, j, result });
-                        }
-                    }
-                });
+        (jobs, slots)
+    }
+
+    /// Run all (arch × pair) co-runs and (arch × app × position) solo
+    /// baselines on the execution layer's worker pool.  Outputs come
+    /// back in submission order and are routed straight into the result
+    /// vectors — no post-hoc sorting, so the serialized output is
+    /// byte-identical for any `threads` value.
+    pub fn run(&self) -> CoSchedResults {
+        let (jobs, slots) = self.jobs();
+        let outputs = JobRunner::new(self.threads).run(&jobs);
+        let mut pairs = Vec::new();
+        let mut solos = Vec::new();
+        for (slot, output) in slots.into_iter().zip(outputs) {
+            let result = output.into_multi();
+            match slot {
+                CoSlot::Solo { arch, app, pos } => {
+                    solos.push(SoloResult { arch, app, pos, result })
+                }
+                CoSlot::Pair { arch, i, j } => pairs.push(PairResult { arch, i, j, result }),
             }
-        });
-        let mut pairs = pairs.into_inner().unwrap();
-        let mut solos = solos.into_inner().unwrap();
-        // Deterministic ordering regardless of thread finish order.
-        pairs.sort_by_key(|p| (p.arch.name(), p.i, p.j));
-        solos.sort_by_key(|r| (r.arch.name(), r.app, r.pos));
+        }
         CoSchedResults {
             app_names: self.apps.iter().map(|a| a.name.to_string()).collect(),
             pairs,
             solos,
         }
     }
+}
+
+/// Where one flattened co-scheduling job's output lands.
+#[derive(Clone, Copy)]
+enum CoSlot {
+    Solo { arch: L1ArchKind, app: usize, pos: usize },
+    Pair { arch: L1ArchKind, i: usize, j: usize },
 }
 
 /// Aggregated co-scheduling output with the interference lookups.
@@ -380,6 +403,8 @@ mod tests {
         for (x, y) in a.solos.iter().zip(&b.solos) {
             assert_eq!(x.result.cycles, y.result.cycles);
         }
+        // Byte-identical serialized output across thread counts.
+        assert_eq!(a.to_json().pretty(), b.to_json().pretty());
     }
 
     #[test]

@@ -2,16 +2,20 @@
 //! worker threads, aggregates results, and produces the paper's tables
 //! and figures — plus the co-scheduling sweep ([`cosched`]) that measures
 //! inter-application interference under shared L1 organizations.
+//!
+//! All sweep surfaces route through the [`crate::exec`] execution layer:
+//! a sweep declares a [`ScenarioGrid`], materializes
+//! [`SimJob`](crate::exec::SimJob)s, and hands them to a [`JobRunner`] —
+//! results come back in submission order, so output is byte-identical
+//! for any thread count.
 
 pub mod cosched;
 pub mod landscape;
 
 pub use cosched::{CoSchedResults, CoSchedSweep};
 
-use std::sync::Mutex;
-
 use crate::config::{GpuConfig, L1ArchKind};
-use crate::engine::Engine;
+use crate::exec::{JobOutput, JobRunner, ScenarioGrid};
 use crate::stats::SimResult;
 use crate::trace::{apps, AppModel, LocalityClass};
 use crate::util::json::Json;
@@ -42,7 +46,7 @@ impl Sweep {
             ],
             apps: apps::all_apps(),
             scale,
-            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            threads: JobRunner::available(),
         }
     }
 
@@ -58,33 +62,23 @@ impl Sweep {
         s
     }
 
-    /// Run every (arch, app) pair, work-stealing across threads.
+    /// The declarative grid this sweep materializes (arch-major, then
+    /// app — the submission order results come back in).
+    pub fn grid(&self) -> ScenarioGrid {
+        ScenarioGrid::new(self.cfg.clone(), self.archs.clone(), self.apps.clone(), self.scale)
+    }
+
+    /// Run every (arch, app) pair on the execution layer's worker pool.
+    /// Results are in submission order — byte-identical for any
+    /// `threads` value (no post-hoc sorting; the runner's ordering
+    /// guarantee is the determinism mechanism).
     pub fn run(&self) -> SweepResults {
-        let mut jobs: Vec<(L1ArchKind, AppModel)> = Vec::new();
-        for &arch in &self.archs {
-            for app in &self.apps {
-                jobs.push((arch, app.scaled(self.scale)));
-            }
-        }
-        let jobs = Mutex::new(jobs);
-        let results = Mutex::new(Vec::new());
-        let n_threads = self.threads.max(1);
-        std::thread::scope(|s| {
-            for _ in 0..n_threads {
-                s.spawn(|| loop {
-                    let job = { jobs.lock().unwrap().pop() };
-                    let Some((arch, app)) = job else { break };
-                    let mut cfg = self.cfg.clone();
-                    cfg.l1_arch = arch;
-                    let wl = app.workload(&cfg);
-                    let result = Engine::new(&cfg).run(&wl);
-                    results.lock().unwrap().push(result);
-                });
-            }
-        });
-        let mut results = results.into_inner().unwrap();
-        // Deterministic ordering regardless of thread finish order.
-        results.sort_by(|a, b| (a.arch.clone(), a.app.clone()).cmp(&(b.arch.clone(), b.app.clone())));
+        let jobs = self.grid().jobs();
+        let results = JobRunner::new(self.threads)
+            .run(&jobs)
+            .into_iter()
+            .map(JobOutput::into_solo)
+            .collect();
         SweepResults { results }
     }
 }
@@ -164,20 +158,28 @@ mod tests {
     }
 
     #[test]
-    fn sweep_runs_all_pairs_and_sorts() {
+    fn sweep_runs_all_pairs_in_submission_order() {
         let r = tiny_sweep().run();
         assert_eq!(r.results.len(), 4);
         assert!(r.get(L1ArchKind::Ata, "synth[s=0.80]").is_some());
         assert!(r.get(L1ArchKind::Private, "synth[stream]").is_some());
-        // Sorted by (arch, app):
+        // Results come back in the grid's submission order (arch-major,
+        // then app) — never reordered after the fact.
         let keys: Vec<(String, String)> = r
             .results
             .iter()
             .map(|x| (x.arch.clone(), x.app.clone()))
             .collect();
-        let mut sorted = keys.clone();
-        sorted.sort();
-        assert_eq!(keys, sorted);
+        let expect: Vec<(String, String)> = [
+            ("private", "synth[s=0.80]"),
+            ("private", "synth[stream]"),
+            ("ata", "synth[s=0.80]"),
+            ("ata", "synth[stream]"),
+        ]
+        .iter()
+        .map(|(a, b)| (a.to_string(), b.to_string()))
+        .collect();
+        assert_eq!(keys, expect);
     }
 
     #[test]
@@ -198,5 +200,8 @@ mod tests {
             assert_eq!(x.cycles, y.cycles, "{}/{}", x.arch, x.app);
             assert_eq!(x.insts, y.insts);
         }
+        // The strongest form of the contract: the serialized output is
+        // byte-identical across thread counts.
+        assert_eq!(a.to_json().pretty(), b.to_json().pretty());
     }
 }

@@ -16,6 +16,15 @@
 //!   becomes measurable.  Each app advances through its own kernel
 //!   sequence independently inside one cycle loop, and statistics are
 //!   attributed per app ([`AppCoStats`]).
+//!
+//! **Threading contract.**  [`Workload`], [`MultiWorkload`] and the
+//! [`Engine`] itself are `Send` (every component down to the
+//! `Box<dyn L1Arch>` carries the bound), which is what lets the
+//! execution layer ([`crate::exec`]) construct self-contained jobs on
+//! the submitting thread and run one engine per job on a worker pool.
+//! An engine is *not* `Sync`: it is owned and driven by exactly one
+//! worker; determinism comes from the simulation being a pure function
+//! of (config, workload), never from synchronization.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;

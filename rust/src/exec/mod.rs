@@ -1,0 +1,227 @@
+//! Deterministic parallel experiment execution.
+//!
+//! Every figure and table in the paper comes from a *grid* of independent
+//! simulations — architectures × applications (Fig 8, Table I), app pairs
+//! × architectures (the co-scheduling interference matrix), one pinned
+//! workload per registered organization (`ata-sim bench`).  This module
+//! is the single execution layer all of those surfaces route through,
+//! replacing the per-surface serial (or hand-rolled parallel) loops:
+//!
+//! * [`SimJob`] — one fully-resolved simulation: config + materialized
+//!   workload + job seed.  Jobs are built **up front**, before any worker
+//!   starts, so they are `Send`, self-contained, and independent of
+//!   execution order.
+//! * [`JobRunner`] — a `std::thread::scope` worker pool with a
+//!   work-stealing index queue.  Results come back **in submission
+//!   order**, so downstream aggregation never reorders and output is
+//!   byte-identical for any thread count.
+//! * [`ScenarioGrid`] — the declarative grid (config variants ×
+//!   organizations × applications) that materializes a job list in a
+//!   deterministic submission order.
+//!
+//! # Determinism contract
+//!
+//! 1. Each simulation is a pure function of its [`SimJob`] — the engine,
+//!    workload and all component RNGs derive from the job's own config;
+//!    no RNG state is shared between jobs or threaded through the
+//!    dispatch loop.
+//! 2. Job-local auxiliary randomness derives **solely** from
+//!    `(grid_seed, job_index)` via [`job_seed`] — never from worker
+//!    identity, completion order, or wall clock.
+//! 3. Workload recipes keep the *grid* seed (`SimJob::cfg.seed`), so
+//!    every organization in a grid is measured on an identical request
+//!    stream — the comparisons behind `norm_ipc` stay apples-to-apples.
+//! 4. [`JobRunner::run`] returns results indexed exactly like its input,
+//!    regardless of which worker finished which job first.
+//!
+//! Together these make `--threads N` output byte-identical to
+//! `--threads 1` (pinned by `rust/tests/exec_determinism.rs` and the
+//! golden-equivalence fixture).
+
+pub mod grid;
+pub mod runner;
+
+pub use grid::{ConfigVariant, ScenarioGrid};
+pub use runner::JobRunner;
+
+use crate::config::GpuConfig;
+use crate::engine::{Engine, MultiWorkload, Workload};
+use crate::stats::{MultiResult, SimResult};
+use crate::util::rng::{Pcg32, SplitMix64};
+
+/// Derive a job's seed from the grid seed and its submission index —
+/// the *only* inputs job-local randomness may depend on (worker count
+/// and completion order must never influence results).
+pub fn job_seed(grid_seed: u64, job_index: usize) -> u64 {
+    let salt = (job_index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let mut mix = SplitMix64::new(grid_seed ^ salt);
+    // Two rounds so consecutive indices share no low-bit structure.
+    mix.next_u64();
+    mix.next_u64()
+}
+
+/// The workload a job runs: one application on the whole GPU, or N
+/// co-executing applications on disjoint core partitions.
+#[derive(Debug, Clone)]
+pub enum JobWork {
+    Solo(Workload),
+    Multi(MultiWorkload),
+}
+
+/// One self-contained simulation: everything a worker needs, resolved at
+/// construction time (on the submitting thread) so running the job has
+/// no dependency on shared state.
+#[derive(Debug, Clone)]
+pub struct SimJob {
+    /// Stable display label, conventionally `"variant/arch/app"`.
+    pub label: String,
+    /// Fully-resolved config.  `cfg.seed` is the grid seed (workload
+    /// recipes must be identical across the organizations of one grid).
+    pub cfg: GpuConfig,
+    /// Job-local seed, derived from `(grid_seed, job_index)` only — see
+    /// [`job_seed`] and the module-level determinism contract.
+    pub seed: u64,
+    pub work: JobWork,
+}
+
+impl SimJob {
+    /// A single-application job.
+    pub fn solo(label: impl Into<String>, cfg: GpuConfig, seed: u64, workload: Workload) -> Self {
+        SimJob {
+            label: label.into(),
+            cfg,
+            seed,
+            work: JobWork::Solo(workload),
+        }
+    }
+
+    /// A co-execution job.
+    pub fn multi(
+        label: impl Into<String>,
+        cfg: GpuConfig,
+        seed: u64,
+        workload: MultiWorkload,
+    ) -> Self {
+        SimJob {
+            label: label.into(),
+            cfg,
+            seed,
+            work: JobWork::Multi(workload),
+        }
+    }
+
+    /// Job-local RNG — the only sanctioned source of auxiliary
+    /// randomness inside a job (sampling, jitter studies).  Deriving it
+    /// from the job seed keeps it independent of worker scheduling.
+    pub fn rng(&self) -> Pcg32 {
+        Pcg32::new(self.seed, 0x0B5E_55ED)
+    }
+
+    /// Run the simulation on a fresh engine.  Called on a worker thread;
+    /// everything the run touches is owned by the job.
+    pub fn run(&self) -> JobOutput {
+        match &self.work {
+            JobWork::Solo(wl) => JobOutput::Solo(Engine::new(&self.cfg).run(wl)),
+            JobWork::Multi(m) => JobOutput::Multi(Engine::new(&self.cfg).run_multi(m)),
+        }
+    }
+}
+
+/// A finished job's result, mirroring [`JobWork`].
+#[derive(Debug, Clone)]
+pub enum JobOutput {
+    Solo(SimResult),
+    Multi(MultiResult),
+}
+
+impl JobOutput {
+    /// Unwrap a solo result (panics on a co-execution job — grids are
+    /// homogeneous, so a mismatch is a construction bug).
+    pub fn into_solo(self) -> SimResult {
+        match self {
+            JobOutput::Solo(r) => r,
+            JobOutput::Multi(r) => panic!("expected a solo result, got co-run '{}'", r.name),
+        }
+    }
+
+    /// Unwrap a co-execution result (panics on a solo job).
+    pub fn into_multi(self) -> MultiResult {
+        match self {
+            JobOutput::Multi(r) => r,
+            JobOutput::Solo(r) => panic!("expected a co-run result, got solo '{}'", r.app),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::L1ArchKind;
+    use crate::trace::synth;
+
+    /// Compile-time `Send` audit: jobs and their outputs cross thread
+    /// boundaries whole, and a worker-built engine must itself be `Send`
+    /// (its `Box<dyn L1Arch>` carries the trait's `Send` bound).
+    #[test]
+    fn jobs_outputs_and_engine_are_send() {
+        fn is_send<T: Send>() {}
+        is_send::<SimJob>();
+        is_send::<JobWork>();
+        is_send::<JobOutput>();
+        is_send::<Workload>();
+        is_send::<MultiWorkload>();
+        is_send::<GpuConfig>();
+        is_send::<Engine>();
+    }
+
+    #[test]
+    fn job_seed_depends_on_grid_seed_and_index_only() {
+        // Same inputs → same seed (pure function, no hidden state).
+        assert_eq!(job_seed(42, 7), job_seed(42, 7));
+        // Distinct indices and distinct grid seeds decorrelate.
+        let seeds: Vec<u64> = (0..64).map(|i| job_seed(0xA7A_CACE, i)).collect();
+        let mut dedup = seeds.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), seeds.len(), "job seeds must be distinct");
+        assert_ne!(job_seed(1, 0), job_seed(2, 0));
+    }
+
+    #[test]
+    fn solo_job_runs_and_matches_direct_engine() {
+        let cfg = GpuConfig::tiny(L1ArchKind::Ata);
+        let wl = synth::locality_knob(0.8, 0.25).workload(&cfg);
+        let job = SimJob::solo("base/ata/synth", cfg.clone(), job_seed(cfg.seed, 0), wl.clone());
+        let r = job.run().into_solo();
+        let direct = Engine::new(&cfg).run(&wl);
+        assert_eq!(r.cycles, direct.cycles);
+        assert_eq!(r.insts, direct.insts);
+        assert_eq!(r.l1.local_hits, direct.l1.local_hits);
+    }
+
+    #[test]
+    fn job_rng_is_reproducible() {
+        let cfg = GpuConfig::tiny(L1ArchKind::Private);
+        let wl = synth::pure_streaming().scaled(0.25).workload(&cfg);
+        let job = SimJob::solo("j", cfg, job_seed(7, 3), wl);
+        let a: Vec<u32> = {
+            let mut rng = job.rng();
+            (0..8).map(|_| rng.next_u32()).collect()
+        };
+        let b: Vec<u32> = {
+            let mut rng = job.rng();
+            (0..8).map(|_| rng.next_u32()).collect()
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "expected a solo result")]
+    fn mismatched_unwrap_panics() {
+        let r = MultiResult {
+            name: "a+b".into(),
+            ..Default::default()
+        };
+        let _ = JobOutput::Multi(r).into_solo();
+    }
+}

@@ -19,6 +19,11 @@
 //!   applications can co-execute on disjoint core partitions while
 //!   sharing the L1 organization, NoC, L2 and DRAM, making
 //!   inter-application interference measurable;
+//! * a deterministic parallel experiment-execution layer ([`exec`]):
+//!   every sweep surface materializes self-contained [`exec::SimJob`]s
+//!   and runs them on a work-stealing [`exec::JobRunner`] whose results
+//!   come back in submission order — output is byte-identical for any
+//!   `--threads` value;
 //! * the experiment coordinator regenerating every table and figure
 //!   ([`coordinator`]), the co-scheduling interference sweep
 //!   ([`coordinator::cosched`]), and hardware-overhead modeling
@@ -34,6 +39,7 @@ pub mod coordinator;
 pub mod core;
 pub mod dram;
 pub mod engine;
+pub mod exec;
 pub mod l1arch;
 pub mod l2;
 pub mod mem;

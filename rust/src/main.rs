@@ -14,13 +14,14 @@
 //!   config     — dump the Table II configuration as JSON
 
 use ata_cache::area;
-use ata_cache::bench_harness::sim_throughput;
+use ata_cache::bench_harness::{compare_thread_counts, sim_throughput};
 use ata_cache::config::{GpuConfig, L1ArchKind};
 use ata_cache::coordinator::{landscape, CoSchedSweep, Sweep};
 use ata_cache::core::CorePartition;
 use ata_cache::engine::{Engine, MultiWorkload};
+use ata_cache::exec::{job_seed, JobOutput, JobRunner, ScenarioGrid, SimJob};
 use ata_cache::runtime::LocalityAnalyzer;
-use ata_cache::stats::{MultiResult, ResourceClass, SimResult};
+use ata_cache::stats::{MultiResult, ResourceClass, RunTotals, SimResult};
 use ata_cache::trace::signature::{exact_locality, sample_core_traces};
 use ata_cache::trace::{apps, co_workload, LocalityClass};
 use ata_cache::util::cli::Args;
@@ -63,18 +64,22 @@ fn print_usage() {
             --arch <private|remote|decoupled|ata|ata-bypass>
             [--scale F] [--seed N] [--out FILE]
   multi     --apps a,b[,c..] [--partition n,m,..] [--arch X] [--scale F]
-            [--share-addr] [--seed N] [--out FILE]
+            [--share-addr] [--seed N] [--threads N] [--out FILE]
   contention [--apps x,y,.. | --app <name>] [--archs a,b,..] [--scale F]
             [--seed N] [--out FILE]
-  bench     [--app <name>] [--scale F] [--seed N] [--out FILE=BENCH_pr3.json]
+  bench     [--app <name>] [--scale F] [--seed N] [--threads N]
+            [--out FILE=BENCH_pr4.json]
   export-trace --app <name> [--scale F] --out FILE
   sweep     [--archs a,b,..] [--apps x,y,..] [--scale F] [--threads N] [--out FILE]
   cosched   [--archs a,b,..] [--apps x,y,..] [--scale F] [--threads N]
             [--share-addr] [--out FILE]
   classify  [--apps x,y,..] [--artifacts DIR]
-  landscape [--scale F]
+  landscape [--scale F] [--threads N]
   overhead
-  config    [--out FILE]"
+  config    [--out FILE]
+
+--threads defaults to the host's available parallelism; results are
+byte-identical for any value (deterministic execution layer)."
     );
 }
 
@@ -177,25 +182,29 @@ fn cmd_multi(args: &Args) -> i32 {
     let co = Engine::new(&cfg).run_multi(&multi);
 
     // Solo baselines: each lane alone on exactly its cores and address
-    // space, the rest of the GPU idle.  Run in parallel (deterministic:
-    // each run is independent and collected by lane index).
-    let solos: Vec<MultiResult> = std::thread::scope(|s| {
-        let handles: Vec<_> = multi
-            .lanes
-            .iter()
-            .map(|lane| {
-                let cfg = &cfg;
-                s.spawn(move || {
-                    let solo = MultiWorkload {
-                        name: lane.name.clone(),
-                        lanes: vec![lane.clone()],
-                    };
-                    Engine::new(cfg).run_multi(&solo)
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("solo run")).collect()
-    });
+    // space, the rest of the GPU idle.  One job per lane on the
+    // execution layer; results come back in lane order.
+    let solo_jobs: Vec<SimJob> = multi
+        .lanes
+        .iter()
+        .enumerate()
+        .map(|(i, lane)| {
+            SimJob::multi(
+                format!("solo/{}", lane.name),
+                cfg.clone(),
+                job_seed(cfg.seed, i),
+                MultiWorkload {
+                    name: lane.name.clone(),
+                    lanes: vec![lane.clone()],
+                },
+            )
+        })
+        .collect();
+    let solos: Vec<MultiResult> = JobRunner::new(args.get_threads().unwrap())
+        .run(&solo_jobs)
+        .into_iter()
+        .map(JobOutput::into_multi)
+        .collect();
 
     let mut t = Table::new(&format!("co-execution — {} on {}", multi.name, arch.name()))
         .header(&[
@@ -331,11 +340,13 @@ fn cmd_contention(args: &Args) -> i32 {
     0
 }
 
-/// Perf-trajectory baseline (`BENCH_pr3.json`): run one pinned, seeded
-/// workload on every registered L1 organization and report wall seconds,
-/// simulated cycles per host second, and IPC.  Future PRs compare against
-/// this file to catch host-performance regressions of the simulator
-/// itself.
+/// Perf-trajectory baseline (`BENCH_pr4.json`): run one pinned, seeded
+/// workload on every registered L1 organization (one [`SimJob`] per org
+/// on the execution layer) and report wall seconds, simulated cycles per
+/// host second, and IPC — plus the serial-vs-parallel wall-clock speedup
+/// of a co-scheduling grid, proving the [`JobRunner`] both helps and
+/// stays deterministic.  Future PRs compare against this file to catch
+/// host-performance regressions of the simulator itself.
 fn cmd_bench(args: &Args) -> i32 {
     let scale = args.get_f64("scale", 0.25).unwrap();
     let app_name = args.get_or("app", "b+tree").to_string();
@@ -343,20 +354,35 @@ fn cmd_bench(args: &Args) -> i32 {
         eprintln!("unknown app '{app_name}' (see `ata-sim list`)");
         return 2;
     };
-    let out_path = args.get_or("out", "BENCH_pr3.json").to_string();
+    let out_path = args.get_or("out", "BENCH_pr4.json").to_string();
     let seed = args.get_u64("seed", GpuConfig::default().seed).unwrap();
+    let threads = args.get_threads().unwrap();
+
+    // Per-organization baseline: the registry as a one-app scenario grid.
+    let mut base_cfg = GpuConfig::paper(L1ArchKind::Private);
+    base_cfg.seed = seed;
+    let grid = ScenarioGrid::new(
+        base_cfg.clone(),
+        ata_cache::l1arch::REGISTRY.iter().map(|s| s.kind).collect(),
+        vec![app.clone()],
+        scale,
+    );
+    let jobs = grid.jobs();
+    let results: Vec<SimResult> = JobRunner::new(threads)
+        .run(&jobs)
+        .into_iter()
+        .map(JobOutput::into_solo)
+        .collect();
 
     let mut t = Table::new(&format!(
-        "perf baseline — {app_name} @ scale {scale}, seed {seed:#x}"
+        "perf baseline — {app_name} @ scale {scale}, seed {seed:#x}, {threads} thread(s)"
     ))
     .header(&["arch", "cycles", "insts", "IPC", "host s", "Mcyc/s"]);
     let mut chart = BarChart::new("simulated cycles per host second (higher is faster)");
     let mut rows = Vec::new();
-    for spec in ata_cache::l1arch::REGISTRY {
-        let mut cfg = GpuConfig::paper(spec.kind);
-        cfg.seed = seed;
-        let wl = app.scaled(scale).workload(&cfg);
-        let r = Engine::new(&cfg).run(&wl);
+    let mut totals = RunTotals::default();
+    for (spec, r) in ata_cache::l1arch::REGISTRY.iter().zip(&results) {
+        totals.absorb_sim(r);
         let thru = sim_throughput(r.cycles, r.host_seconds);
         t.row(vec![
             spec.name.to_string(),
@@ -378,15 +404,52 @@ fn cmd_bench(args: &Args) -> i32 {
     }
     println!("{}", t.render());
     println!("{}", chart.render());
+
+    // Serial-vs-parallel wall clock on a co-scheduling grid (the N²
+    // surface the execution layer exists for), with the byte-identity
+    // check the determinism contract demands.
+    let partner_name = if app_name == "streamcluster" { "b+tree" } else { "streamcluster" };
+    let partner = apps::app(partner_name).expect("registered partner app");
+    let mut cs = CoSchedSweep {
+        cfg: base_cfg,
+        archs: vec![L1ArchKind::Private, L1ArchKind::Ata],
+        apps: vec![app.clone(), partner],
+        scale,
+        threads: 1,
+        share_address_space: false,
+    };
+    let cs_jobs = cs.job_count();
+    let speedup = compare_thread_counts(cs_jobs, threads, |n| {
+        cs.threads = n;
+        cs.run().to_json().pretty()
+    });
+    println!(
+        "cosched grid ({} jobs: {app_name}+{partner_name} × private/ata): serial {:.2}s → \
+         {} threads {:.2}s = {:.2}x speedup | outputs byte-identical: {}",
+        speedup.jobs,
+        speedup.serial_seconds,
+        speedup.threads,
+        speedup.parallel_seconds,
+        speedup.speedup(),
+        speedup.identical,
+    );
+
     let json = Json::obj(vec![
-        ("bench", "pr3".into()),
+        ("bench", "pr4".into()),
         ("app", app_name.as_str().into()),
         ("scale", scale.into()),
         ("seed", seed.into()),
+        ("threads", threads.into()),
         ("orgs", Json::arr(rows)),
+        ("totals", totals.to_json()),
+        ("cosched_speedup", speedup.to_json()),
     ]);
     std::fs::write(&out_path, json.pretty()).expect("writing bench output");
     println!("wrote {out_path}");
+    if !speedup.identical {
+        eprintln!("error: parallel cosched output drifted from the serial run");
+        return 1;
+    }
     0
 }
 
@@ -408,15 +471,16 @@ fn cmd_cosched(args: &Args) -> i32 {
             .map(|n| apps::app(n).expect("unknown app in --apps"))
             .collect();
     }
-    sweep.threads = args.get_usize("threads", sweep.threads).unwrap();
+    sweep.threads = args.get_threads().unwrap();
     sweep.share_address_space = args.flag("share-addr");
     let n = sweep.apps.len();
     println!(
-        "co-scheduling sweep: {} apps → {} pairs × {} archs ({} sims)…",
+        "co-scheduling sweep: {} apps → {} pairs × {} archs ({} sims on {} thread(s))…",
         n,
         n * (n + 1) / 2,
         sweep.archs.len(),
-        sweep.archs.len() * (n * (n + 1) / 2 + 2 * n),
+        sweep.job_count(),
+        sweep.threads,
     );
     let results = sweep.run();
     for &arch in &sweep.archs {
@@ -461,7 +525,7 @@ fn sweep_from_args(args: &Args) -> Sweep {
             .map(|n| apps::app(n).expect("unknown app in --apps"))
             .collect();
     }
-    sweep.threads = args.get_usize("threads", sweep.threads).unwrap();
+    sweep.threads = args.get_threads().unwrap();
     sweep
 }
 

@@ -268,6 +268,42 @@ impl L1Stats {
         }
     }
 
+    /// Accumulate another run's counters (aggregating per-job results in
+    /// submission order — see [`RunTotals`]).  Exhaustive destructure so
+    /// a new field without a merge is a compile error.
+    pub fn merge(&mut self, other: &L1Stats) {
+        let L1Stats {
+            accesses,
+            local_hits,
+            remote_hits,
+            sector_misses,
+            misses,
+            writes,
+            rejects,
+            bank_conflict_cycles,
+            sharing_net_cycles,
+            probes_sent,
+            dirty_remote_fallbacks,
+            bypasses,
+            fills,
+            mshr_merges,
+        } = *other;
+        self.accesses += accesses;
+        self.local_hits += local_hits;
+        self.remote_hits += remote_hits;
+        self.sector_misses += sector_misses;
+        self.misses += misses;
+        self.writes += writes;
+        self.rejects += rejects;
+        self.bank_conflict_cycles += bank_conflict_cycles;
+        self.sharing_net_cycles += sharing_net_cycles;
+        self.probes_sent += probes_sent;
+        self.dirty_remote_fallbacks += dirty_remote_fallbacks;
+        self.bypasses += bypasses;
+        self.fills += fills;
+        self.mshr_merges += mshr_merges;
+    }
+
     pub fn hit_rate(&self) -> f64 {
         if self.accesses == 0 {
             return 0.0;
@@ -421,6 +457,25 @@ impl HopStats {
         }
     }
 
+    /// Accumulate another run's hop aggregate (per-job merging in
+    /// submission order).  Exhaustive destructure like [`Self::delta`].
+    pub fn merge(&mut self, other: &HopStats) {
+        let HopStats {
+            txns,
+            tag_wait_cycles,
+            l1_stage_cycles,
+            mem_trips,
+            mem_service_cycles,
+            queued,
+        } = *other;
+        self.txns += txns;
+        self.tag_wait_cycles += tag_wait_cycles;
+        self.l1_stage_cycles += l1_stage_cycles;
+        self.mem_trips += mem_trips;
+        self.mem_service_cycles += mem_service_cycles;
+        self.queued.merge(&queued);
+    }
+
     pub fn mean_l1_stage(&self) -> f64 {
         if self.txns == 0 {
             0.0
@@ -500,7 +555,11 @@ pub struct SimResult {
     /// Per-hop latency decomposition read off the run's transactions.
     pub hops: HopStats,
     pub kernels: Vec<KernelStats>,
-    /// Wall-clock seconds the simulation took (host performance metric).
+    /// Wall-clock seconds the simulation took.  A host-performance
+    /// metric, deliberately **excluded** from [`SimResult::to_json`]:
+    /// result JSON is part of the execution layer's determinism contract
+    /// (byte-identical for any `--threads` value), and wall clock is
+    /// not.  `ata-sim bench` reports it explicitly.
     pub host_seconds: f64,
 }
 
@@ -552,7 +611,6 @@ impl SimResult {
                         .collect(),
                 ),
             ),
-            ("host_seconds", self.host_seconds.into()),
         ])
     }
 }
@@ -665,7 +723,10 @@ pub struct MultiResult {
     /// Per-hop latency decomposition over the whole co-run's transactions.
     pub hops: HopStats,
     pub apps: Vec<AppCoStats>,
-    /// Wall-clock seconds the simulation took (host performance metric).
+    /// Wall-clock seconds the simulation took.  Excluded from
+    /// [`MultiResult::to_json`] for the same reason as
+    /// [`SimResult::host_seconds`]: result JSON must be byte-identical
+    /// across `--threads` values.
     pub host_seconds: f64,
 }
 
@@ -701,6 +762,61 @@ impl MultiResult {
             ("contention", self.contention.to_json()),
             ("hops", self.hops.to_json()),
             ("apps", Json::arr(self.apps.iter().map(AppCoStats::to_json).collect())),
+        ])
+    }
+}
+
+/// Order-preserving aggregate over per-job results.
+///
+/// The execution layer ([`crate::exec`]) returns job results in
+/// submission order; merging them must keep that contract — totals
+/// accumulate in the order given, and nothing is sorted, re-weighted, or
+/// deduplicated on the way through.  Used by `ata-sim bench` and the
+/// figure drivers to report grid-level throughput.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RunTotals {
+    /// Results absorbed.
+    pub runs: u64,
+    /// Σ simulated cycles.
+    pub cycles: u64,
+    /// Σ instructions.
+    pub insts: u64,
+    /// Σ host wall-clock seconds (the *sum* of per-job timings — under a
+    /// parallel runner this exceeds elapsed wall time by the achieved
+    /// speedup).
+    pub host_seconds: f64,
+}
+
+impl RunTotals {
+    pub fn absorb_sim(&mut self, r: &SimResult) {
+        self.runs += 1;
+        self.cycles += r.cycles;
+        self.insts += r.insts;
+        self.host_seconds += r.host_seconds;
+    }
+
+    pub fn absorb_multi(&mut self, r: &MultiResult) {
+        self.runs += 1;
+        self.cycles += r.cycles;
+        self.insts += r.insts;
+        self.host_seconds += r.host_seconds;
+    }
+
+    /// Aggregate IPC over the absorbed runs.
+    pub fn ipc(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.insts as f64 / self.cycles as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("runs", self.runs.into()),
+            ("cycles", self.cycles.into()),
+            ("insts", self.insts.into()),
+            ("ipc", self.ipc().into()),
             ("host_seconds", self.host_seconds.into()),
         ])
     }
@@ -891,6 +1007,90 @@ mod tests {
         let j = Json::parse(&h.to_json().to_string()).unwrap();
         assert_eq!(j.get("txns").unwrap().as_u64(), Some(2));
         assert_eq!(j.get("mem_trips").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn l1_stats_merge_accumulates_every_counter() {
+        let a = L1Stats {
+            accesses: 10,
+            local_hits: 4,
+            misses: 6,
+            fills: 6,
+            ..Default::default()
+        };
+        let b = L1Stats {
+            accesses: 3,
+            local_hits: 3,
+            bypasses: 1,
+            ..Default::default()
+        };
+        let mut m = a;
+        m.merge(&b);
+        assert_eq!(m.accesses, 13);
+        assert_eq!(m.local_hits, 7);
+        assert_eq!(m.misses, 6);
+        assert_eq!(m.bypasses, 1);
+        // merge is delta's inverse: (a + b) - b == a.
+        assert_eq!(m.delta(&b).accesses, a.accesses);
+    }
+
+    #[test]
+    fn run_totals_absorb_in_order_without_reordering() {
+        let mk = |cycles, insts, host| SimResult {
+            cycles,
+            insts,
+            host_seconds: host,
+            ..Default::default()
+        };
+        let results = [mk(100, 50, 0.5), mk(300, 300, 1.5)];
+        let mut t = RunTotals::default();
+        for r in &results {
+            t.absorb_sim(r);
+        }
+        assert_eq!(t.runs, 2);
+        assert_eq!(t.cycles, 400);
+        assert_eq!(t.insts, 350);
+        assert!((t.host_seconds - 2.0).abs() < 1e-12);
+        assert!((t.ipc() - 0.875).abs() < 1e-12);
+        // Absorption order must not matter for the totals (merging never
+        // re-weights), and the multi path agrees with the sim path.
+        let mut rev = RunTotals::default();
+        for r in results.iter().rev() {
+            rev.absorb_sim(r);
+        }
+        assert_eq!(t, rev);
+        let mut multi = RunTotals::default();
+        multi.absorb_multi(&MultiResult {
+            cycles: 400,
+            insts: 350,
+            host_seconds: 2.0,
+            ..Default::default()
+        });
+        assert_eq!(multi.cycles, t.cycles);
+        let j = Json::parse(&t.to_json().to_string()).unwrap();
+        assert_eq!(j.get("runs").unwrap().as_u64(), Some(2));
+    }
+
+    #[test]
+    fn result_json_has_no_wall_clock_fields() {
+        // Result JSON is part of the determinism contract (byte-identical
+        // across --threads values); host wall time must not leak into it.
+        let r = SimResult {
+            host_seconds: 1.23,
+            ..Default::default()
+        };
+        assert!(Json::parse(&r.to_json().to_string())
+            .unwrap()
+            .get("host_seconds")
+            .is_none());
+        let m = MultiResult {
+            host_seconds: 1.23,
+            ..Default::default()
+        };
+        assert!(Json::parse(&m.to_json().to_string())
+            .unwrap()
+            .get("host_seconds")
+            .is_none());
     }
 
     #[test]

@@ -101,6 +101,13 @@ impl Args {
         }
     }
 
+    /// The `--threads N` option every sweep surface shares, defaulting
+    /// to the execution layer's notion of available parallelism (the
+    /// runner clamps zero to one worker).
+    pub fn get_threads(&self) -> Result<usize, CliError> {
+        self.get_usize("threads", crate::exec::JobRunner::available())
+    }
+
     pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, CliError> {
         match self.get(name) {
             None => Ok(default),
@@ -168,6 +175,16 @@ mod tests {
     fn bad_value_errors() {
         let a = parse(&["x", "--n", "abc"]);
         assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn threads_option_defaults_to_host_parallelism() {
+        let a = parse(&["sweep", "--threads", "3"]);
+        assert_eq!(a.get_threads().unwrap(), 3);
+        let b = parse(&["sweep"]);
+        assert!(b.get_threads().unwrap() >= 1);
+        let c = parse(&["sweep", "--threads", "zero"]);
+        assert!(c.get_threads().is_err());
     }
 
     #[test]

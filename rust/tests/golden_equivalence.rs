@@ -21,8 +21,16 @@
 //!
 //! The fifth organization (`ata-bypass`) is deliberately NOT part of the
 //! golden set — `L1ArchKind::PAPER` is the fixture universe.
+//!
+//! Since the execution-layer refactor the fixture also pins the
+//! **parallel runner**: a `"runner"` section records the core metrics of
+//! a multi-threaded sweep.  Parallel results are byte-identical to
+//! serial ones (asserted directly below), so the fixture blesses
+//! identically on any host regardless of core count — and any future
+//! drift between the worker pool and a serial loop fails the gate.
 
 use ata_cache::config::{GpuConfig, L1ArchKind};
+use ata_cache::coordinator::Sweep;
 use ata_cache::engine::Engine;
 use ata_cache::stats::ResourceClass;
 use ata_cache::trace::synth;
@@ -70,6 +78,40 @@ fn run_metrics(arch: L1ArchKind, app: &ata_cache::trace::AppModel) -> Json {
     ])
 }
 
+/// The fixture's sweep: the golden workloads on the paper organizations,
+/// run through the execution layer with `threads` workers.
+fn golden_sweep(threads: usize) -> Sweep {
+    Sweep {
+        cfg: GpuConfig::tiny(L1ArchKind::Private),
+        archs: L1ArchKind::PAPER.to_vec(),
+        apps: workloads(),
+        scale: 1.0,
+        threads,
+    }
+}
+
+/// Core metrics of a *parallel* sweep (threads = 4), in submission
+/// order.  Byte-identical to a serial sweep by the runner's ordering
+/// contract, so this section is host-independent.
+fn runner_metrics() -> Json {
+    let results = golden_sweep(4).run();
+    Json::arr(
+        results
+            .results
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("arch", r.arch.as_str().into()),
+                    ("app", r.app.as_str().into()),
+                    ("cycles", r.cycles.into()),
+                    ("insts", r.insts.into()),
+                    ("contention_total", r.contention.total().into()),
+                ])
+            })
+            .collect(),
+    )
+}
+
 fn golden() -> String {
     let mut runs = Vec::new();
     for arch in L1ArchKind::PAPER {
@@ -81,6 +123,7 @@ fn golden() -> String {
         ("fixture", "golden_pr3".into()),
         ("config", "tiny".into()),
         ("runs", Json::arr(runs)),
+        ("runner", runner_metrics()),
     ])
     .pretty()
 }
@@ -113,6 +156,20 @@ fn golden_metrics_are_deterministic() {
     let a = golden();
     let b = golden();
     assert_eq!(a, b, "golden metrics must be bit-reproducible");
+}
+
+#[test]
+fn parallel_sweep_is_byte_identical_to_serial() {
+    // The runner section of the fixture is only host-independent if the
+    // worker pool's output is byte-identical to a serial run — assert
+    // the full serialized sweep, not just headline counters.
+    let serial = golden_sweep(1).run();
+    let parallel = golden_sweep(4).run();
+    assert_eq!(
+        serial.to_json().pretty(),
+        parallel.to_json().pretty(),
+        "JobRunner output must not depend on worker count"
+    );
 }
 
 #[test]
