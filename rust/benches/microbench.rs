@@ -83,6 +83,60 @@ fn main() {
         record("islip.arbitrate 30x24", iters as u64, timing.mean_s);
     }
 
+    // Aggregated-tag probe at the paper's cluster size (10 caches):
+    // O(1) residency-index lookup vs the O(cluster) brute-force scan —
+    // the per-request work the residency index removes (EXPERIMENTS.md
+    // §Perf, residency-index A/B).
+    {
+        use ata_cache::l1arch::ata_tag::AggregatedTagArray;
+        use ata_cache::l1arch::common::CoreL1;
+        use ata_cache::l1arch::ResidencyIndex;
+        let cfg = GpuConfig::paper(L1ArchKind::Ata);
+        let mut cluster: Vec<CoreL1> = (0..10).map(|_| CoreL1::new(&cfg)).collect();
+        let mut index = ResidencyIndex::new();
+        let mut rng = Pcg32::new(6, 6);
+        for _ in 0..4_000 {
+            let h = rng.next_below(10) as usize;
+            let line = rng.next_below(2048) as u64;
+            let (_, ev) = cluster[h].cache.fill(line, 0b1111);
+            if let Some(ev) = ev {
+                index.record_evict(h, ev.line);
+            }
+            index.record_fill(h, line, 0b1111);
+        }
+        let mut rng2 = Pcg32::new(7, 7);
+        let timing = measure(1, 3, || {
+            let mut acc = 0u64;
+            for _ in 0..n {
+                let line = rng2.next_below(2048) as u64;
+                // Mirror the real fast path (PipelineCtx::ata_probe):
+                // one local peek + one index lookup, so the comparison
+                // against the scan row is apples-to-apples.
+                if matches!(
+                    cluster[0].cache.peek(line, 0b1111),
+                    ata_cache::cache::Probe::Hit { .. }
+                ) {
+                    acc += 1;
+                }
+                acc += index.probe(line, 0b1111, 0).0.count_ones() as u64;
+            }
+            std::hint::black_box(acc);
+        });
+        record("ata probe: residency index (10 caches)", n as u64, timing.mean_s);
+        let mut rng3 = Pcg32::new(7, 7);
+        let scans = (n / 4).max(1);
+        let timing = measure(1, 3, || {
+            let mut acc = 0u64;
+            for _ in 0..scans {
+                let line = rng3.next_below(2048) as u64;
+                acc += AggregatedTagArray::probe(&cluster, 0, line, 0b1111)
+                    .remote_holder_count() as u64;
+            }
+            std::hint::black_box(acc);
+        });
+        record("ata probe: brute-force scan (10 caches)", scans as u64, timing.mean_s);
+    }
+
     // DRAM accesses.
     {
         let cfg = GpuConfig::paper(L1ArchKind::Private);

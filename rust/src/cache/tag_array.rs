@@ -32,11 +32,22 @@ struct TagEntry {
     last_use: u64,
 }
 
-/// Evicted-line information returned by `fill` when a victim was dirty.
+/// Evicted-line information returned by `fill` whenever a resident line
+/// is replaced.  `dirty_sectors == 0` marks a clean victim: callers that
+/// generate write-back traffic must check it (only dirty sectors travel),
+/// while residency bookkeeping needs *every* eviction to stay coherent.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Eviction {
     pub line: LineAddr,
     pub dirty_sectors: SectorMask,
+}
+
+impl Eviction {
+    /// Does this victim carry modified data that must be written back?
+    #[inline]
+    pub fn needs_writeback(&self) -> bool {
+        self.dirty_sectors != 0
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -156,7 +167,10 @@ impl TagArray {
     }
 
     /// Install (or extend) a line with `sectors`.  If the line is absent
-    /// the LRU way is evicted; a dirty victim is reported for write-back.
+    /// and no way is free, the LRU line is evicted and reported — clean
+    /// victims too (`dirty_sectors == 0`), so residency bookkeeping sees
+    /// every departure; write-back paths must check
+    /// [`Eviction::needs_writeback`].
     pub fn fill(&mut self, line: LineAddr, sectors: SectorMask) -> Option<Eviction> {
         let set = decode::set_index(line, self.sets);
         let tag = decode::tag(line, self.sets);
@@ -193,7 +207,7 @@ impl TagArray {
             .map(|(w, _)| w)
             .unwrap();
         let victim = self.row(set)[victim_way];
-        let evicted = (victim.sector_dirty != 0).then(|| Eviction {
+        let evicted = Some(Eviction {
             line: decode::line_from(victim.tag, set, sets),
             dirty_sectors: victim.sector_dirty,
         });
@@ -313,8 +327,21 @@ mod tests {
         let ev = t.fill(11, 0b1111).expect("dirty victim");
         assert_eq!(ev.line, 10);
         assert_eq!(ev.dirty_sectors, 0b0001);
-        // Clean victims are silent.
-        assert!(t.fill(12, 0b1111).is_none());
+        assert!(ev.needs_writeback());
+        // Clean victims are reported too (residency bookkeeping needs
+        // every eviction) but carry no write-back data.
+        let clean = t.fill(12, 0b1111).expect("clean victim still reported");
+        assert_eq!(clean.line, 11);
+        assert_eq!(clean.dirty_sectors, 0);
+        assert!(!clean.needs_writeback());
+    }
+
+    #[test]
+    fn fills_into_free_ways_or_present_lines_report_no_victim() {
+        let mut t = ta(1, 2);
+        assert!(t.fill(0, 0b0011).is_none(), "free way");
+        assert!(t.fill(0, 0b1100).is_none(), "sector extension");
+        assert!(t.fill(1, 0b1111).is_none(), "second free way");
     }
 
     #[test]

@@ -260,6 +260,13 @@ pub struct SharingConfig {
     /// port backlog, in cycles) exceeds this threshold.  CIAO-style
     /// interference-aware bypass; 0 bypasses every contended remote hit.
     pub bypass_backlog_threshold: u64,
+    /// Host-performance knob for the ATA-family organizations: answer
+    /// aggregated-tag probes from the incrementally maintained per-cluster
+    /// residency index (O(1) hash lookup) instead of peeking every peer
+    /// cache (O(cluster) scan).  Simulated metrics are byte-identical
+    /// either way — only wall clock moves (pinned by the differential and
+    /// byte-identity tests in `rust/tests/residency_differential.rs`).
+    pub residency_index: bool,
 }
 
 impl Default for SharingConfig {
@@ -275,6 +282,7 @@ impl Default for SharingConfig {
             ata_comparator_groups: 10,
             fill_local_on_remote_hit: true,
             bypass_backlog_threshold: 8,
+            residency_index: true,
         }
     }
 }
@@ -444,6 +452,13 @@ impl GpuConfig {
         if self.l2.sets_per_slice() == 0 || !self.l2.sets_per_slice().is_power_of_two() {
             return fail("L2 sets/slice must be a power of two".into());
         }
+        if self.cores_per_cluster() > 64 {
+            return fail(format!(
+                "at most 64 cores per cluster ({} requested — residency \
+                 holder masks are u64)",
+                self.cores_per_cluster()
+            ));
+        }
         if self.sharing.ata_comparator_groups < self.cores_per_cluster() {
             return fail(format!(
                 "ATA comparator groups ({}) must cover the cluster ({})",
@@ -558,6 +573,7 @@ impl GpuConfig {
                         "bypass_backlog_threshold",
                         self.sharing.bypass_backlog_threshold.into(),
                     ),
+                    ("residency_index", self.sharing.residency_index.into()),
                 ]),
             ),
         ])
@@ -656,6 +672,8 @@ impl GpuConfig {
                 .get("bypass_backlog_threshold")
                 .and_then(Json::as_u64)
                 .unwrap_or(cfg.sharing.bypass_backlog_threshold);
+            cfg.sharing.residency_index =
+                g_bool(s, "residency_index", cfg.sharing.residency_index);
         }
         Ok(cfg)
     }
@@ -713,6 +731,7 @@ mod tests {
     fn json_roundtrip_preserves_everything() {
         let mut cfg = GpuConfig::paper(L1ArchKind::DecoupledSharing);
         cfg.sharing.probe_predictor = true;
+        cfg.sharing.residency_index = false;
         cfg.l1.write_policy = WritePolicy::WriteThrough;
         cfg.seed = 12345;
         let j = cfg.to_json();

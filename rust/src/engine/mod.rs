@@ -588,6 +588,15 @@ impl Engine {
         *self.l1.stats()
     }
 
+    /// Residency-index telemetry of the underlying L1 organization
+    /// (zeros for organizations without an index, or with
+    /// `sharing.residency_index` off).  Host-performance data only —
+    /// never folded into result JSON (see
+    /// [`crate::stats::ResidencyStats`]).
+    pub fn residency_stats(&self) -> crate::stats::ResidencyStats {
+        self.l1.residency_stats()
+    }
+
     fn run_kernel(&mut self, spec: &KernelSpec) -> KernelStats {
         assert_eq!(
             spec.programs.len(),
@@ -868,6 +877,40 @@ mod tests {
         assert_eq!(r1.contention, b1.contention);
         assert_eq!(r2.contention, b2.contention);
         assert_eq!(r2.l1.local_hits, b2.l1.local_hits);
+    }
+
+    #[test]
+    fn residency_index_answers_probes_without_changing_results() {
+        // The tentpole contract: flipping `sharing.residency_index` moves
+        // only wall clock — the result JSON is byte-identical — while the
+        // telemetry proves the fast path actually engaged.
+        let cfg_on = GpuConfig::tiny(L1ArchKind::Ata);
+        let mut cfg_off = cfg_on.clone();
+        cfg_off.sharing.residency_index = false;
+        let wl = Workload {
+            name: "t".into(),
+            kernels: vec![
+                simple_kernel(&cfg_on, |c| (0..8).map(|k| (c as u64 * 31 + k) % 64).collect()),
+                simple_kernel(&cfg_on, |c| (0..8).map(|k| (c as u64 * 17 + k) % 64).collect()),
+            ],
+        };
+        let mut e_on = Engine::new(&cfg_on);
+        let r_on = e_on.run(&wl);
+        let mut e_off = Engine::new(&cfg_off);
+        let r_off = e_off.run(&wl);
+        assert_eq!(
+            r_on.to_json().pretty(),
+            r_off.to_json().pretty(),
+            "simulated metrics must not depend on the residency index"
+        );
+        let s_on = e_on.residency_stats();
+        assert!(s_on.index_probes > 0, "index path must serve ATA probes");
+        assert_eq!(s_on.scan_probes, 0);
+        assert!(s_on.index_ops > 0 && s_on.peak_lines > 0);
+        let s_off = e_off.residency_stats();
+        assert_eq!(s_off.index_probes, 0);
+        assert!(s_off.scan_probes > 0, "scan path must serve when off");
+        assert_eq!(s_off.index_lines, 0, "no index is maintained when off");
     }
 
     #[test]

@@ -24,40 +24,48 @@ use crate::resource::{Grant, MultiPort};
 use super::common::CoreL1;
 
 /// Result of comparing one request against the aggregated tag array.
-#[derive(Debug, Clone, PartialEq, Eq)]
+///
+/// A plain `Copy` pair of holder bitmasks — the probe path is
+/// allocation-free and every query on it is a handful of word
+/// operations, independent of cluster size.  Bit `h` refers to the
+/// cluster-relative cache index `h` (Fig 6's hit-vector columns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct AggregateProbe {
     /// The requesting core's own cache result (local column of the hit
     /// vector).
     pub local: Probe,
-    /// Cluster-relative indices of *other* caches with a full (all
-    /// requested sectors) hit, paired with their dirty flag.
-    pub remote_holders: Vec<(usize, bool)>,
+    /// *Other* caches holding all requested sectors (the requester's own
+    /// bit is never set).
+    pub holders: u64,
+    /// Subset of `holders` with any requested sector dirty.
+    pub dirty: u64,
 }
 
 impl AggregateProbe {
-    /// Fig 6's bit-vector view (index = cluster-relative cache id).
-    pub fn hit_vector(&self, cluster_size: usize, local_idx: usize) -> Vec<bool> {
-        let mut v = vec![false; cluster_size];
+    /// Fig 6's bit-vector view (bit = cluster-relative cache id).
+    pub fn hit_vector(&self, local_idx: usize) -> u64 {
+        let mut v = self.holders;
         if matches!(self.local, Probe::Hit { .. }) {
-            v[local_idx] = true;
-        }
-        for &(idx, _) in &self.remote_holders {
-            v[idx] = true;
+            v |= 1u64 << local_idx;
         }
         v
     }
 
-    /// First clean remote holder (the distributor's pick in Fig 7a).
+    /// Number of remote caches with a full hit.
+    pub fn remote_holder_count(&self) -> u32 {
+        self.holders.count_ones()
+    }
+
+    /// Lowest-indexed clean remote holder (the distributor's pick in
+    /// Fig 7a — same order the pre-bitmask scan used).
     pub fn clean_remote(&self) -> Option<usize> {
-        self.remote_holders
-            .iter()
-            .find(|(_, dirty)| !dirty)
-            .map(|&(idx, _)| idx)
+        let clean = self.holders & !self.dirty;
+        (clean != 0).then(|| clean.trailing_zeros() as usize)
     }
 
     /// A remote copy exists but every copy is dirty (§III-C fallback).
     pub fn dirty_remote_only(&self) -> bool {
-        !self.remote_holders.is_empty() && self.clean_remote().is_none()
+        self.holders != 0 && self.holders & !self.dirty == 0
     }
 }
 
@@ -88,9 +96,15 @@ impl AggregatedTagArray {
         Grant::new(g.grant + self.tag_latency as u64, g.queued)
     }
 
-    /// Compare `line` against every cluster cache's tags in parallel.
-    /// `caches` is the cluster's contiguous CoreL1 slice; `local_idx` is
-    /// the requester's position within it.
+    /// Compare `line` against every cluster cache's tags by brute-force
+    /// scan: one `peek` per peer.  `caches` is the cluster's contiguous
+    /// CoreL1 slice; `local_idx` is the requester's position within it.
+    ///
+    /// This is the *reference* probe — O(cluster) but stateless.  The
+    /// hot path answers the same question from the O(1)
+    /// [`ResidencyIndex`](super::residency::ResidencyIndex) when
+    /// `sharing.residency_index` is on (the default); the differential
+    /// tests pin the two bit-for-bit against each other.
     pub fn probe(
         caches: &[CoreL1],
         local_idx: usize,
@@ -98,18 +112,23 @@ impl AggregatedTagArray {
         sectors: SectorMask,
     ) -> AggregateProbe {
         let local = caches[local_idx].cache.peek(line, sectors);
-        let mut remote_holders = Vec::new();
+        let mut holders = 0u64;
+        let mut dirty = 0u64;
         for (idx, c) in caches.iter().enumerate() {
             if idx == local_idx {
                 continue;
             }
-            if let Probe::Hit { dirty, .. } = c.cache.peek(line, sectors) {
-                remote_holders.push((idx, dirty));
+            if let Probe::Hit { dirty: d, .. } = c.cache.peek(line, sectors) {
+                holders |= 1u64 << idx;
+                if d {
+                    dirty |= 1u64 << idx;
+                }
             }
         }
         AggregateProbe {
             local,
-            remote_holders,
+            holders,
+            dirty,
         }
     }
 }
@@ -135,11 +154,12 @@ mod tests {
         cl[1].cache.fill(200, 0b1111);
 
         let p1 = AggregatedTagArray::probe(&cl, 0, 100, 0b1111);
-        assert_eq!(p1.hit_vector(2, 0), vec![false, true]);
+        assert_eq!(p1.hit_vector(0), 0b10);
         assert_eq!(p1.clean_remote(), Some(1));
+        assert_eq!(p1.remote_holder_count(), 1);
 
         let p2 = AggregatedTagArray::probe(&cl, 0, 200, 0b1111);
-        assert_eq!(p2.hit_vector(2, 0), vec![true, true]);
+        assert_eq!(p2.hit_vector(0), 0b11);
         assert!(matches!(p2.local, Probe::Hit { .. }), "local priority case");
     }
 
@@ -160,7 +180,7 @@ mod tests {
             let agg = AggregatedTagArray::probe(&cl, 0, line, 0b1111);
             for idx in 1..4 {
                 let individual = matches!(cl[idx].cache.peek(line, 0b1111), Probe::Hit { .. });
-                let in_agg = agg.remote_holders.iter().any(|&(i, _)| i == idx);
+                let in_agg = agg.holders & (1 << idx) != 0;
                 assert_eq!(individual, in_agg, "cache {idx} line {line}");
             }
         }

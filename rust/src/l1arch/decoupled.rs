@@ -73,11 +73,10 @@ impl SharingPolicy for DecoupledPolicy {
             let g = p.cores[home].banks.reserve(bank, t_arrive, 1);
             p.stats.bank_conflict_cycles += g.queued;
             txn.charge(&mut p.con, ResourceClass::L1DataBank, g.queued);
-            let (_, evicted) = p.cores[home].cache.fill(line, txn.req.sectors);
-            p.cores[home].cache.tags.mark_dirty(line, txn.req.sectors);
+            let evicted = p.fill_tags(home, line, txn.req.sectors);
+            p.mark_dirty_tags(home, line, txn.req.sectors);
             if let Some(ev) = evicted {
-                debug_assert!(ev.dirty_sectors != 0, "clean victims are not reported");
-                if ev.dirty_sectors != 0 {
+                if ev.needs_writeback() {
                     // Routed through the home port, charged to the writer.
                     mem.write_for(home, ev.line, ev.dirty_sectors.count_ones(), g.grant, core);
                 }

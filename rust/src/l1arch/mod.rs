@@ -24,13 +24,15 @@ pub mod decoupled;
 pub mod pipeline;
 pub mod private;
 pub mod remote;
+pub mod residency;
 
 pub use pipeline::{FabricNeeds, PipelineCtx, PipelineL1, SharingPolicy};
+pub use residency::ResidencyIndex;
 
 use crate::config::{GpuConfig, L1ArchKind};
 use crate::l2::MemSystem;
 use crate::mem::{LineAddr, MemRequest, MemTxn};
-use crate::stats::{ContentionStats, L1Stats};
+use crate::stats::{ContentionStats, L1Stats, ResidencyStats};
 
 /// A full-GPU L1 organization: receives every core's coalesced requests
 /// as open [`MemTxn`] transactions and completes them.
@@ -85,6 +87,14 @@ pub trait L1Arch: std::fmt::Debug + Send {
     /// engine combines this with the memory system's share
     /// ([`MemSystem::contention`]) into the end-to-end breakdown.
     fn contention(&self) -> &ContentionStats;
+
+    /// Residency-index telemetry (probe fast-path counts, occupancy).
+    /// Host-performance data only — never part of result JSON, which
+    /// must stay byte-identical whether the index is on or off.
+    /// Defaults to zeros for organizations without an index.
+    fn residency_stats(&self) -> ResidencyStats {
+        ResidencyStats::default()
+    }
 
     /// Which organization this is (matches the config that built it).
     fn kind(&self) -> L1ArchKind;

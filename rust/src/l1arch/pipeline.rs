@@ -9,15 +9,16 @@
 //! [`SharingPolicy`].  Adding an organization is now a policy module plus
 //! a registry entry — see `ata_bypass` for the proof.
 
-use crate::cache::Probe;
+use crate::cache::{Eviction, Probe};
 use crate::config::{GpuConfig, L1ArchKind, WritePolicy};
 use crate::l2::MemSystem;
 use crate::mem::{decode, LineAddr, MemTxn, SectorMask};
 use crate::noc::{Ring, XbarReservation};
-use crate::stats::{ContentionStats, L1Stats, ResourceClass};
+use crate::stats::{ContentionStats, L1Stats, ResidencyStats, ResourceClass};
 
 use super::ata_tag::AggregatedTagArray;
 use super::common::{CoreL1, L1Timing};
+use super::residency::ResidencyIndex;
 use super::{ClusterMap, L1Arch};
 
 /// Cluster-level resources a policy needs the pipeline to provision.
@@ -67,6 +68,16 @@ pub struct PipelineCtx {
     pub rings: Vec<Ring>,
     /// One data crossbar per cluster (empty unless requested).
     pub xbars: Vec<XbarReservation>,
+    /// One residency index per cluster (empty unless the policy uses
+    /// aggregated tags AND `sharing.residency_index` is on).  Kept
+    /// coherent by the `*_tags` mutation helpers — see the
+    /// mutation-point invariant in [`super::residency`].
+    pub residency: Vec<ResidencyIndex>,
+    /// Whether `residency` is live (probes take the O(1) fast path).
+    use_residency: bool,
+    /// Index telemetry (never part of result JSON — see
+    /// [`ResidencyStats`]).
+    res_stats: ResidencyStats,
     pub map: ClusterMap,
     pub timing: L1Timing,
     pub xbar_latency: u32,
@@ -77,8 +88,16 @@ pub struct PipelineCtx {
 impl PipelineCtx {
     pub fn new(cfg: &GpuConfig, needs: FabricNeeds) -> Self {
         let cpc = cfg.cores_per_cluster();
+        let use_residency = needs.aggregated_tags && cfg.sharing.residency_index;
         PipelineCtx {
             cores: (0..cfg.cores).map(|_| CoreL1::new(cfg)).collect(),
+            residency: if use_residency {
+                (0..cfg.clusters).map(|_| ResidencyIndex::new()).collect()
+            } else {
+                Vec::new()
+            },
+            use_residency,
+            res_stats: ResidencyStats::default(),
             tags: if needs.aggregated_tags {
                 (0..cfg.clusters)
                     .map(|_| {
@@ -124,6 +143,73 @@ impl PipelineCtx {
             stats: L1Stats::default(),
             con: ContentionStats::new(cfg.cores),
         }
+    }
+
+    // -- tag mutation helpers ------------------------------------------------
+    //
+    // Every change to a cluster cache's tag state MUST go through these
+    // three helpers so the residency index stays coherent (the
+    // mutation-point invariant of `l1arch::residency`).  LRU-only
+    // operations (`lookup`, `touch`) are exempt: they never change
+    // validity or dirtiness.
+
+    /// Install (or extend) `line` at `owner`'s cache and mirror the
+    /// mutation — eviction included, clean victims too — into the
+    /// cluster's residency index.  Returns the eviction, if any; the
+    /// caller decides whether it generates write-back traffic
+    /// ([`Eviction::needs_writeback`]).
+    pub fn fill_tags(
+        &mut self,
+        owner: usize,
+        line: LineAddr,
+        sectors: SectorMask,
+    ) -> Option<Eviction> {
+        let (_, evicted) = self.cores[owner].cache.fill(line, sectors);
+        if self.use_residency {
+            let idx = self.map.index_in_cluster(owner);
+            let r = &mut self.residency[self.map.cluster_of(owner)];
+            if let Some(ev) = evicted {
+                r.record_evict(idx, ev.line);
+                self.res_stats.index_ops += 1;
+            }
+            r.record_fill(idx, line, sectors);
+            self.res_stats.index_ops += 1;
+        }
+        evicted
+    }
+
+    /// Mark `sectors` of `line` dirty at `owner` (and in the residency
+    /// index).  Returns whether the line was present, like
+    /// `TagArray::mark_dirty`.
+    pub fn mark_dirty_tags(&mut self, owner: usize, line: LineAddr, sectors: SectorMask) -> bool {
+        let present = self.cores[owner].cache.tags.mark_dirty(line, sectors);
+        if present && sectors != 0 && self.use_residency {
+            let idx = self.map.index_in_cluster(owner);
+            self.residency[self.map.cluster_of(owner)].record_mark_dirty(idx, line, sectors);
+            self.res_stats.index_ops += 1;
+        }
+        present
+    }
+
+    /// Invalidate `line` at `owner` (coherence probes and tests).
+    pub fn invalidate_tags(&mut self, owner: usize, line: LineAddr) -> bool {
+        let removed = self.cores[owner].cache.tags.invalidate(line);
+        if removed && self.use_residency {
+            let idx = self.map.index_in_cluster(owner);
+            self.residency[self.map.cluster_of(owner)].record_evict(idx, line);
+            self.res_stats.index_ops += 1;
+        }
+        removed
+    }
+
+    /// Index telemetry with the occupancy gauges filled in (the counter
+    /// half accumulates in `res_stats`; occupancy is read off the
+    /// per-cluster indexes on demand).
+    pub fn residency_stats(&self) -> ResidencyStats {
+        let mut s = self.res_stats;
+        s.index_lines = self.residency.iter().map(|r| r.lines() as u64).sum();
+        s.peak_lines = self.residency.iter().map(|r| r.peak_lines() as u64).sum();
+        s
     }
 
     // -- mechanism steps -----------------------------------------------------
@@ -213,18 +299,15 @@ impl PipelineCtx {
         fill_cycle: u64,
         mem: &mut MemSystem,
     ) -> u64 {
-        let l1 = &mut self.cores[owner];
-        let (_, evicted) = l1.cache.fill(txn.req.line, sectors);
+        let evicted = self.fill_tags(owner, txn.req.line, sectors);
         self.stats.fills += 1;
         if let Some(ev) = evicted {
             // Only dirty victims generate L2 write traffic; clean victims
-            // are dropped silently.  `TagArray::fill` reports dirty
-            // victims only — the guard makes the invariant explicit and
-            // local.  (No policy check here: decoupled-sharing's home
-            // slices hold the only copy and mark it dirty regardless of
-            // the configured L1 policy.)
-            debug_assert!(ev.dirty_sectors != 0, "clean victims are not reported");
-            if ev.dirty_sectors != 0 {
+            // are dropped silently (every victim is *reported* so the
+            // residency index stays coherent).  (No policy check here:
+            // decoupled-sharing's home slices hold the only copy and mark
+            // it dirty regardless of the configured L1 policy.)
+            if ev.needs_writeback() {
                 mem.write_for(
                     owner,
                     ev.line,
@@ -234,7 +317,7 @@ impl PipelineCtx {
                 );
             }
         }
-        l1.in_flight.insert(txn.req.line, fill_cycle);
+        self.cores[owner].in_flight.insert(txn.req.line, fill_cycle);
         fill_cycle
     }
 
@@ -303,7 +386,7 @@ impl PipelineCtx {
                 // Update the line if present, and always send the data to
                 // L2.  (mark_dirty(.., 0) only touches LRU — dirty bits
                 // stay clear in WT.)
-                if self.cores[c].cache.tags.mark_dirty(line, 0) {
+                if self.mark_dirty_tags(c, line, 0) {
                     let g = self.cores[c].banks.reserve(bank, t, 1);
                     self.stats.bank_conflict_cycles += g.queued;
                     txn.charge(&mut self.con, ResourceClass::L1DataBank, g.queued);
@@ -316,11 +399,10 @@ impl PipelineCtx {
                 self.stats.bank_conflict_cycles += g.queued;
                 txn.charge(&mut self.con, ResourceClass::L1DataBank, g.queued);
                 // Write-allocate: written sectors become valid + dirty.
-                let (_, evicted) = self.cores[c].cache.fill(line, txn.req.sectors);
-                self.cores[c].cache.tags.mark_dirty(line, txn.req.sectors);
+                let evicted = self.fill_tags(c, line, txn.req.sectors);
+                self.mark_dirty_tags(c, line, txn.req.sectors);
                 if let Some(ev) = evicted {
-                    debug_assert!(ev.dirty_sectors != 0, "clean victims are not reported");
-                    if ev.dirty_sectors != 0 {
+                    if ev.needs_writeback() {
                         mem.write(c, ev.line, ev.dirty_sectors.count_ones(), g.grant);
                     }
                 }
@@ -393,16 +475,36 @@ impl PipelineCtx {
     }
 
     /// Aggregated-tag-array probe for the transaction (functional part).
-    pub fn ata_probe(&self, txn: &MemTxn) -> super::ata_tag::AggregateProbe {
+    ///
+    /// With the residency index on (the default) this is one hash lookup
+    /// plus the local peek — O(1) in cluster size and allocation-free.
+    /// With it off, the O(cluster) brute-force scan answers instead; the
+    /// two are bit-identical (pinned by the differential tests), so only
+    /// wall clock differs.
+    pub fn ata_probe(&mut self, txn: &MemTxn) -> super::ata_tag::AggregateProbe {
         let core = txn.req.core as usize;
         let cluster = self.map.cluster_of(core);
-        let base = cluster * self.map.cores_per_cluster;
-        AggregatedTagArray::probe(
-            &self.cores[base..base + self.map.cores_per_cluster],
-            self.map.index_in_cluster(core),
-            txn.req.line,
-            txn.req.sectors,
-        )
+        let local_idx = self.map.index_in_cluster(core);
+        if self.use_residency {
+            self.res_stats.index_probes += 1;
+            let local = self.cores[core].cache.peek(txn.req.line, txn.req.sectors);
+            let (holders, dirty) =
+                self.residency[cluster].probe(txn.req.line, txn.req.sectors, local_idx);
+            super::ata_tag::AggregateProbe {
+                local,
+                holders,
+                dirty,
+            }
+        } else {
+            self.res_stats.scan_probes += 1;
+            let base = cluster * self.map.cores_per_cluster;
+            AggregatedTagArray::probe(
+                &self.cores[base..base + self.map.cores_per_cluster],
+                local_idx,
+                txn.req.line,
+                txn.req.sectors,
+            )
+        }
     }
 
     /// Fig 7(a): serve a clean remote hit over the cluster crossbar —
@@ -495,6 +597,10 @@ impl L1Arch for PipelineL1 {
 
     fn contention(&self) -> &ContentionStats {
         &self.ctx.con
+    }
+
+    fn residency_stats(&self) -> ResidencyStats {
+        self.ctx.residency_stats()
     }
 
     fn kind(&self) -> L1ArchKind {

@@ -159,9 +159,11 @@ impl SharingPolicy for RemotePolicy {
         // The occupancy is what matters — the probe itself does not wait
         // for the peer banks, so its own grant delay is *not* charged to
         // the breakdown (the delayed peer accesses charge theirs).
+        // `ClusterMap` is `Copy`, so iterating a copy keeps the per-
+        // request path allocation-free (no collected peer list).
         let bank = decode::l1_bank(txn.req.line, p.timing.banks);
-        let peer_ids: Vec<usize> = p.map.peers(core).collect();
-        for peer in peer_ids {
+        let map = p.map;
+        for peer in map.peers(core) {
             p.cores[peer].banks.reserve(bank, probe_done, 1);
         }
 

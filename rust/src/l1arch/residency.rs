@@ -1,0 +1,293 @@
+//! The cluster residency index: "who holds this line?" in O(1).
+//!
+//! The aggregated tag array answers that question in hardware with one
+//! parallel compare (§III-B); the simulator used to answer it in software
+//! with an O(cluster) scan over every peer cache's tag array, heap-
+//! allocating a holder list per request.  This index precomputes presence
+//! once — exactly the aggregated-tag idea applied to the simulator
+//! itself: a per-cluster hash map from [`LineAddr`] to per-sector holder
+//! bitmasks, updated incrementally at the three
+//! [`TagArray`](crate::cache::TagArray) mutation points (fill, eviction
+//! — clean victims included — and dirty marking) and consulted by the
+//! probe path as a single lookup.
+//!
+//! Bit `h` of a mask refers to the cluster-relative cache index `h`, so
+//! a probe is independent of cluster size: a full-hit holder set is the
+//! AND of the requested sectors' `valid` masks and a dirty check is the
+//! OR of their `dirty` masks — at most [`MAX_SECTORS`] word operations.
+//!
+//! # The mutation-point invariant
+//!
+//! The index is only correct if **every** tag-array mutation in a
+//! cluster goes through it.  The shared pipeline therefore routes all
+//! tag mutations through [`PipelineCtx`](super::pipeline::PipelineCtx)
+//! helpers (`fill_tags` / `mark_dirty_tags` / `invalidate_tags`) that
+//! update both structures; policies must never call `cache.fill`,
+//! `tags.mark_dirty`, or `tags.invalidate` directly on a cluster cache.
+//! LRU-only operations (`lookup`, `touch`) never change validity or
+//! dirtiness and stay index-free.  The invariant is enforced by
+//! [`ResidencyIndex::rebuilt_from`] audits and the differential fuzz test in
+//! `rust/tests/residency_differential.rs`, which must agree with the
+//! brute-force union-of-peeks probe on arbitrary mutation sequences.
+
+use crate::cache::Probe;
+use crate::mem::{LineAddr, SectorMask};
+use crate::util::fxhash::FxHashMap;
+
+use super::common::CoreL1;
+
+/// Holder masks are `u64`: at most 64 caches per cluster (validated by
+/// `GpuConfig::validate`; the paper clusters 10).
+pub const MAX_CLUSTER: usize = 64;
+
+/// Sector masks are `u8`: at most 8 sectors per line (Table II uses 4).
+pub const MAX_SECTORS: usize = 8;
+
+/// Per-line residency state: for each sector, which cluster caches hold
+/// it valid and which hold it dirty.  `dirty[s]` is always a subset of
+/// `valid[s]` (mirroring `TagArray`, where only valid sectors can be
+/// dirty).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LineResidency {
+    valid: [u64; MAX_SECTORS],
+    dirty: [u64; MAX_SECTORS],
+}
+
+impl LineResidency {
+    /// No cache holds any sector of the line any more.
+    fn is_empty(&self) -> bool {
+        self.valid.iter().all(|&v| v == 0)
+    }
+}
+
+/// Iterate the set sector indices of a mask.
+#[inline]
+fn sectors_of(mask: SectorMask) -> impl Iterator<Item = usize> {
+    let mut m = mask;
+    std::iter::from_fn(move || {
+        if m == 0 {
+            return None;
+        }
+        let s = m.trailing_zeros() as usize;
+        m &= m - 1;
+        Some(s)
+    })
+}
+
+/// One cluster's residency index.  All `holder` arguments are
+/// cluster-relative cache indices (`< MAX_CLUSTER`).
+#[derive(Debug, Clone, Default)]
+pub struct ResidencyIndex {
+    map: FxHashMap<LineAddr, LineResidency>,
+    /// High-water mark of resident-line entries (occupancy telemetry).
+    peak_lines: usize,
+}
+
+impl ResidencyIndex {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Lines currently tracked (= lines resident in ≥ 1 cluster cache).
+    pub fn lines(&self) -> usize {
+        self.map.len()
+    }
+
+    /// High-water mark of [`Self::lines`] over the index's lifetime.
+    pub fn peak_lines(&self) -> usize {
+        self.peak_lines
+    }
+
+    /// A fill installed or extended `line` at `holder` with `sectors`.
+    /// Dirty bits are untouched: a fresh install starts clean (the holder
+    /// had no bits for the line) and a sector extension preserves the
+    /// existing dirty sectors — exactly `TagArray::fill`.
+    pub fn record_fill(&mut self, holder: usize, line: LineAddr, sectors: SectorMask) {
+        debug_assert!(holder < MAX_CLUSTER);
+        let bit = 1u64 << holder;
+        let e = self.map.entry(line).or_default();
+        for s in sectors_of(sectors) {
+            e.valid[s] |= bit;
+        }
+        self.peak_lines = self.peak_lines.max(self.map.len());
+    }
+
+    /// `holder` no longer holds `line` (eviction or invalidation — clean
+    /// victims included, which is why `TagArray::fill` reports them).
+    pub fn record_evict(&mut self, holder: usize, line: LineAddr) {
+        debug_assert!(holder < MAX_CLUSTER);
+        let bit = 1u64 << holder;
+        if let Some(e) = self.map.get_mut(&line) {
+            for s in 0..MAX_SECTORS {
+                e.valid[s] &= !bit;
+                e.dirty[s] &= !bit;
+            }
+            if e.is_empty() {
+                self.map.remove(&line);
+            }
+        }
+    }
+
+    /// A write hit marked `sectors` of `line` dirty at `holder` — only
+    /// sectors the holder actually has become dirty, mirroring
+    /// `TagArray::mark_dirty`'s `sectors & sector_valid`.
+    pub fn record_mark_dirty(&mut self, holder: usize, line: LineAddr, sectors: SectorMask) {
+        debug_assert!(holder < MAX_CLUSTER);
+        let bit = 1u64 << holder;
+        if let Some(e) = self.map.get_mut(&line) {
+            for s in sectors_of(sectors) {
+                if e.valid[s] & bit != 0 {
+                    e.dirty[s] |= bit;
+                }
+            }
+        }
+    }
+
+    /// Answer the aggregated probe for `(line, sectors)` in O(sectors):
+    /// `(holders, dirty)` where `holders` has a bit per cluster cache
+    /// holding **all** requested sectors (the requester's own bit
+    /// cleared) and `dirty ⊆ holders` marks holders with any requested
+    /// sector dirty — bit-for-bit what the union of `TagArray::peek`
+    /// calls over the cluster reports.
+    #[inline]
+    pub fn probe(&self, line: LineAddr, sectors: SectorMask, local_idx: usize) -> (u64, u64) {
+        let Some(e) = self.map.get(&line) else {
+            return (0, 0);
+        };
+        // Coalesced requests always touch ≥ 1 sector (an empty mask would
+        // make the AND identity below claim every cache holds the line —
+        // the request model excludes it, so assert rather than handle).
+        debug_assert!(sectors != 0, "probe with an empty sector mask");
+        let mut full = u64::MAX;
+        let mut dirty = 0u64;
+        for s in sectors_of(sectors) {
+            full &= e.valid[s];
+            dirty |= e.dirty[s];
+        }
+        let holders = full & !(1u64 << local_idx);
+        (holders, dirty & holders)
+    }
+
+    /// Reconstruct the index a cluster's caches *should* have, by
+    /// exhaustive per-sector peeks (the audit oracle of the differential
+    /// tests — O(lines × sectors), never on a hot path).
+    pub fn rebuilt_from(caches: &[CoreL1], sectors_per_line: usize) -> Self {
+        assert!(caches.len() <= MAX_CLUSTER && sectors_per_line <= MAX_SECTORS);
+        let mut idx = ResidencyIndex::new();
+        for (h, c) in caches.iter().enumerate() {
+            let bit = 1u64 << h;
+            for line in c.cache.tags.resident_lines() {
+                let e = idx.map.entry(line).or_default();
+                for s in 0..sectors_per_line {
+                    match c.cache.peek(line, 1 << s) {
+                        Probe::Hit { dirty, .. } => {
+                            e.valid[s] |= bit;
+                            if dirty {
+                                e.dirty[s] |= bit;
+                            }
+                        }
+                        Probe::SectorMiss { .. } => {}
+                        Probe::Miss => unreachable!("resident line cannot line-miss"),
+                    }
+                }
+            }
+        }
+        idx.peak_lines = idx.map.len();
+        idx
+    }
+
+    /// Structural equality with another index (audit check; ignores the
+    /// peak-occupancy telemetry).
+    pub fn same_residency(&self, other: &ResidencyIndex) -> bool {
+        self.map == other.map
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuConfig, L1ArchKind};
+
+    #[test]
+    fn fill_probe_evict_roundtrip() {
+        let mut idx = ResidencyIndex::new();
+        idx.record_fill(2, 42, 0b1111);
+        assert_eq!(idx.probe(42, 0b1111, 0), (0b100, 0));
+        assert_eq!(idx.probe(42, 0b0011, 0), (0b100, 0));
+        // The requester's own copy is masked out.
+        assert_eq!(idx.probe(42, 0b1111, 2), (0, 0));
+        // An absent line reports nothing.
+        assert_eq!(idx.probe(7, 0b1111, 0), (0, 0));
+        idx.record_evict(2, 42);
+        assert_eq!(idx.probe(42, 0b1111, 0), (0, 0));
+        assert_eq!(idx.lines(), 0, "empty entries are dropped");
+        assert_eq!(idx.peak_lines(), 1);
+    }
+
+    #[test]
+    fn partial_sector_holders_only_match_covered_requests() {
+        let mut idx = ResidencyIndex::new();
+        idx.record_fill(1, 9, 0b0011);
+        idx.record_fill(3, 9, 0b1111);
+        // Holder 1 covers sectors {0,1} only; holder 3 covers all.
+        assert_eq!(idx.probe(9, 0b0011, 0).0, 0b1010);
+        assert_eq!(idx.probe(9, 0b1111, 0).0, 0b1000);
+        assert_eq!(idx.probe(9, 0b0100, 0).0, 0b1000);
+    }
+
+    #[test]
+    fn dirty_tracks_valid_sectors_and_requested_mask() {
+        let mut idx = ResidencyIndex::new();
+        idx.record_fill(1, 5, 0b0011);
+        // Marking sectors the holder lacks is a no-op (mirrors mark_dirty).
+        idx.record_mark_dirty(1, 5, 0b1100);
+        assert_eq!(idx.probe(5, 0b0011, 0), (0b10, 0));
+        idx.record_mark_dirty(1, 5, 0b0001);
+        assert_eq!(idx.probe(5, 0b0011, 0), (0b10, 0b10), "dirty flagged");
+        // A request not touching the dirty sector sees a clean holder.
+        assert_eq!(idx.probe(5, 0b0010, 0), (0b10, 0));
+    }
+
+    #[test]
+    fn sector_extension_preserves_dirty() {
+        let mut idx = ResidencyIndex::new();
+        idx.record_fill(0, 5, 0b0001);
+        idx.record_mark_dirty(0, 5, 0b0001);
+        idx.record_fill(0, 5, 0b0110); // extend with more sectors
+        assert_eq!(idx.probe(5, 0b0111, 1), (0b1, 0b1), "still dirty");
+    }
+
+    #[test]
+    fn rebuild_audit_matches_incremental_updates() {
+        let cfg = GpuConfig::tiny(L1ArchKind::Ata);
+        let mut cluster: Vec<CoreL1> = (0..4).map(|_| CoreL1::new(&cfg)).collect();
+        let mut idx = ResidencyIndex::new();
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::new(7, 7);
+        for _ in 0..500 {
+            let h = rng.next_below(4) as usize;
+            let line = rng.next_below(200) as u64;
+            let sectors = (rng.next_below(15) + 1) as SectorMask;
+            let (_, ev) = cluster[h].cache.fill(line, sectors);
+            if let Some(ev) = ev {
+                idx.record_evict(h, ev.line);
+            }
+            idx.record_fill(h, line, sectors);
+            if rng.chance(0.3) {
+                let d = rng.next_below(200) as u64;
+                let m = (rng.next_below(15) + 1) as SectorMask;
+                if cluster[h].cache.tags.mark_dirty(d, m) {
+                    idx.record_mark_dirty(h, d, m);
+                }
+            }
+            if rng.chance(0.05) {
+                let v = rng.next_below(200) as u64;
+                if cluster[h].cache.tags.invalidate(v) {
+                    idx.record_evict(h, v);
+                }
+            }
+        }
+        let audit = ResidencyIndex::rebuilt_from(&cluster, 4);
+        assert!(idx.same_residency(&audit), "incremental index drifted");
+    }
+}

@@ -177,12 +177,11 @@ impl MemSystem {
                     }
                     txn.charge(&mut self.con, ResourceClass::Dram, dstall + d.queued);
                     let dram_done = d.grant;
-                    // Fill the slice; dirty victim goes back to DRAM
-                    // (clean victims need no writeback — fill only reports
-                    // dirty ones).
+                    // Fill the slice; only a dirty victim goes back to
+                    // DRAM (fill reports clean victims too — they are
+                    // dropped here without write traffic).
                     let (_, evicted) = self.slices[slice].fill(line, 0b1111);
-                    if let Some(ev) = evicted {
-                        debug_assert!(ev.dirty_sectors != 0, "clean victims are not reported");
+                    if let Some(ev) = evicted.filter(|e| e.needs_writeback()) {
                         self.stats.writebacks_to_dram += 1;
                         self.dram
                             .access(ev.line, dram_done, ev.dirty_sectors.count_ones(), true);
@@ -244,8 +243,7 @@ impl MemSystem {
                 let mask = ((1u16 << sectors.min(4)) - 1) as u8;
                 let (_, evicted) = self.slices[slice].fill(line, mask);
                 self.slices[slice].tags.mark_dirty(line, mask);
-                if let Some(ev) = evicted {
-                    debug_assert!(ev.dirty_sectors != 0, "clean victims are not reported");
+                if let Some(ev) = evicted.filter(|e| e.needs_writeback()) {
                     self.stats.writebacks_to_dram += 1;
                     self.dram.access(
                         ev.line,

@@ -19,7 +19,7 @@ use ata_cache::config::{GpuConfig, L1ArchKind};
 use ata_cache::coordinator::{landscape, CoSchedSweep, Sweep};
 use ata_cache::core::CorePartition;
 use ata_cache::engine::{Engine, MultiWorkload};
-use ata_cache::exec::{job_seed, JobOutput, JobRunner, ScenarioGrid, SimJob};
+use ata_cache::exec::{job_seed, ConfigVariant, JobOutput, JobRunner, ScenarioGrid, SimJob};
 use ata_cache::runtime::LocalityAnalyzer;
 use ata_cache::stats::{MultiResult, ResourceClass, RunTotals, SimResult};
 use ata_cache::trace::signature::{exact_locality, sample_core_traces};
@@ -68,7 +68,7 @@ fn print_usage() {
   contention [--apps x,y,.. | --app <name>] [--archs a,b,..] [--scale F]
             [--seed N] [--out FILE]
   bench     [--app <name>] [--scale F] [--seed N] [--threads N]
-            [--out FILE=BENCH_pr4.json]
+            [--out FILE=BENCH_pr5.json]
   export-trace --app <name> [--scale F] --out FILE
   sweep     [--archs a,b,..] [--apps x,y,..] [--scale F] [--threads N] [--out FILE]
   cosched   [--archs a,b,..] [--apps x,y,..] [--scale F] [--threads N]
@@ -79,7 +79,10 @@ fn print_usage() {
   config    [--out FILE]
 
 --threads defaults to the host's available parallelism; results are
-byte-identical for any value (deterministic execution layer)."
+byte-identical for any value (deterministic execution layer).
+--residency <on|off> overrides sharing.residency_index (the O(1) ATA
+probe index); simulated metrics are byte-identical either way.  `bench`
+ignores it: its A/B grid always runs both modes."
     );
 }
 
@@ -91,7 +94,22 @@ fn parse_cfg(args: &Args, arch: L1ArchKind) -> GpuConfig {
     };
     cfg.l1_arch = arch;
     cfg.seed = args.get_u64("seed", cfg.seed).unwrap();
+    residency_override(args, &mut cfg);
     cfg
+}
+
+/// Apply the global `--residency on|off` override to a config.  Called
+/// from every config-construction path (`parse_cfg` and the sweep
+/// builders) so the flag is never silently ignored; `bench` alone skips
+/// it because its A/B grid sets the flag per variant.
+fn residency_override(args: &Args, cfg: &mut GpuConfig) {
+    if let Some(v) = args.get("residency") {
+        cfg.sharing.residency_index = match v {
+            "on" => true,
+            "off" => false,
+            other => panic!("--residency expects on|off, got '{other}'"),
+        };
+    }
 }
 
 fn cmd_run(args: &Args) -> i32 {
@@ -115,8 +133,16 @@ fn cmd_run(args: &Args) -> i32 {
         wl.kernels.len(),
         wl.total_requests()
     );
-    let r = Engine::new(&cfg).run(&wl);
+    let mut eng = Engine::new(&cfg);
+    let r = eng.run(&wl);
     println!("{}", r.to_json().pretty());
+    // Host-performance telemetry of the residency index, on stderr so
+    // stdout stays pipeable result JSON (and the result itself stays
+    // byte-identical whether the index is on or off).
+    let rs = eng.residency_stats();
+    if rs.index_probes + rs.scan_probes > 0 {
+        eprintln!("residency telemetry: {}", rs.to_json());
+    }
     if let Some(path) = args.get("out") {
         std::fs::write(path, r.to_json().pretty()).expect("writing --out");
         println!("wrote {path}");
@@ -340,13 +366,16 @@ fn cmd_contention(args: &Args) -> i32 {
     0
 }
 
-/// Perf-trajectory baseline (`BENCH_pr4.json`): run one pinned, seeded
-/// workload on every registered L1 organization (one [`SimJob`] per org
-/// on the execution layer) and report wall seconds, simulated cycles per
-/// host second, and IPC — plus the serial-vs-parallel wall-clock speedup
-/// of a co-scheduling grid, proving the [`JobRunner`] both helps and
-/// stays deterministic.  Future PRs compare against this file to catch
-/// host-performance regressions of the simulator itself.
+/// Perf-trajectory baseline (`BENCH_pr5.json`): run one pinned, seeded
+/// workload on every registered L1 organization **twice** — residency
+/// index on and off (a [`ConfigVariant`] ablation axis) — and report
+/// wall seconds, simulated cycles per host second, IPC, and the per-org
+/// index speedup, asserting on the way that the two modes produce
+/// byte-identical simulated metrics (the tentpole's contract).  Also
+/// reports the serial-vs-parallel wall-clock speedup of a co-scheduling
+/// grid, proving the [`JobRunner`] both helps and stays deterministic.
+/// Future PRs compare against this file to catch host-performance
+/// regressions of the simulator itself.
 fn cmd_bench(args: &Args) -> i32 {
     let scale = args.get_f64("scale", 0.25).unwrap();
     let app_name = args.get_or("app", "b+tree").to_string();
@@ -354,11 +383,25 @@ fn cmd_bench(args: &Args) -> i32 {
         eprintln!("unknown app '{app_name}' (see `ata-sim list`)");
         return 2;
     };
-    let out_path = args.get_or("out", "BENCH_pr4.json").to_string();
+    let out_path = args.get_or("out", "BENCH_pr5.json").to_string();
     let seed = args.get_u64("seed", GpuConfig::default().seed).unwrap();
     let threads = args.get_threads().unwrap();
+    if args.get("residency").is_some() {
+        eprintln!("note: bench ignores --residency — its A/B grid always runs both modes");
+    }
 
-    // Per-organization baseline: the registry as a one-app scenario grid.
+    // Residency-index A/B: the registry as a one-app scenario grid with
+    // an on/off variant axis.  Jobs materialize variant-major, so the
+    // first half of the results is the index-on pass, the second half
+    // the scan pass, both in registry order.
+    const RES_ON: ConfigVariant = ConfigVariant {
+        name: "residency-on",
+        apply: |c| c.sharing.residency_index = true,
+    };
+    const RES_OFF: ConfigVariant = ConfigVariant {
+        name: "residency-off",
+        apply: |c| c.sharing.residency_index = false,
+    };
     let mut base_cfg = GpuConfig::paper(L1ArchKind::Private);
     base_cfg.seed = seed;
     let grid = ScenarioGrid::new(
@@ -366,44 +409,75 @@ fn cmd_bench(args: &Args) -> i32 {
         ata_cache::l1arch::REGISTRY.iter().map(|s| s.kind).collect(),
         vec![app.clone()],
         scale,
-    );
+    )
+    .with_variants(vec![RES_ON, RES_OFF]);
     let jobs = grid.jobs();
-    let results: Vec<SimResult> = JobRunner::new(threads)
+    // The A/B grid runs on ONE worker: per-job `host_seconds` is the
+    // timing signal here, and concurrent jobs on a shared pool would
+    // contaminate each half with whatever co-runner mix it happened to
+    // get (the index-on half always submits first).  Serial execution
+    // makes `speedup` measure the index, not the scheduler; the cosched
+    // section below still exercises the parallel runner with --threads.
+    let results: Vec<SimResult> = JobRunner::new(1)
         .run(&jobs)
         .into_iter()
         .map(JobOutput::into_solo)
         .collect();
+    let n_orgs = ata_cache::l1arch::REGISTRY.len();
+    let (on_half, off_half) = results.split_at(n_orgs);
 
     let mut t = Table::new(&format!(
-        "perf baseline — {app_name} @ scale {scale}, seed {seed:#x}, {threads} thread(s)"
+        "perf baseline — {app_name} @ scale {scale}, seed {seed:#x} (A/B timed serially)"
     ))
-    .header(&["arch", "cycles", "insts", "IPC", "host s", "Mcyc/s"]);
-    let mut chart = BarChart::new("simulated cycles per host second (higher is faster)");
+    .header(&[
+        "arch", "cycles", "insts", "IPC", "idx s", "scan s", "Mcyc/s", "speedup",
+    ]);
+    let mut chart = BarChart::new("residency-index speedup per organization (scan s / idx s)");
     let mut rows = Vec::new();
     let mut totals = RunTotals::default();
-    for (spec, r) in ata_cache::l1arch::REGISTRY.iter().zip(&results) {
-        totals.absorb_sim(r);
-        let thru = sim_throughput(r.cycles, r.host_seconds);
+    let mut ab_identical = true;
+    for ((spec, on), off) in ata_cache::l1arch::REGISTRY.iter().zip(on_half).zip(off_half) {
+        totals.absorb_sim(on);
+        // The referee: identical simulated metrics with the index on/off
+        // (result JSON excludes wall clock by the determinism contract).
+        let identical = on.to_json().pretty() == off.to_json().pretty();
+        ab_identical &= identical;
+        let thru = sim_throughput(on.cycles, on.host_seconds);
+        let speedup = if on.host_seconds > 0.0 {
+            off.host_seconds / on.host_seconds
+        } else {
+            0.0
+        };
         t.row(vec![
             spec.name.to_string(),
-            r.cycles.to_string(),
-            r.insts.to_string(),
-            format!("{:.3}", r.ipc()),
-            format!("{:.3}", r.host_seconds),
+            on.cycles.to_string(),
+            on.insts.to_string(),
+            format!("{:.3}", on.ipc()),
+            format!("{:.3}", on.host_seconds),
+            format!("{:.3}", off.host_seconds),
             format!("{:.2}", thru / 1e6),
+            format!("{speedup:.2}x"),
         ]);
-        chart.bar(spec.name, thru / 1e6);
+        chart.bar(spec.name, speedup);
         rows.push(Json::obj(vec![
             ("arch", spec.name.into()),
-            ("cycles", r.cycles.into()),
-            ("insts", r.insts.into()),
-            ("ipc", r.ipc().into()),
-            ("host_seconds", r.host_seconds.into()),
+            ("cycles", on.cycles.into()),
+            ("insts", on.insts.into()),
+            ("ipc", on.ipc().into()),
+            ("host_seconds", on.host_seconds.into()),
+            ("host_seconds_scan", off.host_seconds.into()),
             ("cycles_per_sec", thru.into()),
+            (
+                "cycles_per_sec_scan",
+                sim_throughput(off.cycles, off.host_seconds).into(),
+            ),
+            ("speedup", speedup.into()),
+            ("identical", identical.into()),
         ]));
     }
     println!("{}", t.render());
     println!("{}", chart.render());
+    println!("index-on vs scan metrics byte-identical: {ab_identical}");
 
     // Serial-vs-parallel wall clock on a co-scheduling grid (the N²
     // surface the execution layer exists for), with the byte-identity
@@ -435,17 +509,22 @@ fn cmd_bench(args: &Args) -> i32 {
     );
 
     let json = Json::obj(vec![
-        ("bench", "pr4".into()),
+        ("bench", "pr5".into()),
         ("app", app_name.as_str().into()),
         ("scale", scale.into()),
         ("seed", seed.into()),
         ("threads", threads.into()),
         ("orgs", Json::arr(rows)),
+        ("residency_ab_identical", ab_identical.into()),
         ("totals", totals.to_json()),
         ("cosched_speedup", speedup.to_json()),
     ]);
     std::fs::write(&out_path, json.pretty()).expect("writing bench output");
     println!("wrote {out_path}");
+    if !ab_identical {
+        eprintln!("error: residency-index run drifted from the scan run");
+        return 1;
+    }
     if !speedup.identical {
         eprintln!("error: parallel cosched output drifted from the serial run");
         return 1;
@@ -457,6 +536,7 @@ fn cmd_bench(args: &Args) -> i32 {
 fn cmd_cosched(args: &Args) -> i32 {
     let scale = args.get_f64("scale", 0.25).unwrap();
     let mut sweep = CoSchedSweep::paper(scale);
+    residency_override(args, &mut sweep.cfg);
     let arch_list = args.get_list("archs");
     if !arch_list.is_empty() {
         sweep.archs = arch_list
@@ -508,6 +588,7 @@ fn cmd_cosched(args: &Args) -> i32 {
 fn sweep_from_args(args: &Args) -> Sweep {
     let scale = args.get_f64("scale", 0.5).unwrap();
     let mut sweep = Sweep::paper(scale);
+    residency_override(args, &mut sweep.cfg);
     let arch_list = args.get_list("archs");
     if !arch_list.is_empty() {
         sweep.archs = arch_list

@@ -339,6 +339,41 @@ impl L1Stats {
     }
 }
 
+/// Host-performance telemetry of the cluster residency index (the O(1)
+/// replacement for the O(cluster) aggregated-tag probe scan).
+///
+/// Deliberately **not** part of [`SimResult`]/[`MultiResult`] JSON:
+/// result JSON must be byte-identical whether the index is on or off
+/// (`sharing.residency_index` changes only wall clock), and these
+/// counters obviously differ between the two modes.  `ata-sim run`
+/// prints them to stderr, and white-box tests read them, through
+/// [`L1Arch::residency_stats`](crate::l1arch::L1Arch::residency_stats).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ResidencyStats {
+    /// Probes answered by the O(1) index (the fast path).
+    pub index_probes: u64,
+    /// Probes answered by the O(cluster) brute-force scan (index off).
+    pub scan_probes: u64,
+    /// Index mutations applied (fills + evictions + dirty markings).
+    pub index_ops: u64,
+    /// Resident-line entries across all cluster indexes right now.
+    pub index_lines: u64,
+    /// High-water mark of `index_lines` (bounds index memory).
+    pub peak_lines: u64,
+}
+
+impl ResidencyStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("index_probes", self.index_probes.into()),
+            ("scan_probes", self.scan_probes.into()),
+            ("index_ops", self.index_ops.into()),
+            ("index_lines", self.index_lines.into()),
+            ("peak_lines", self.peak_lines.into()),
+        ])
+    }
+}
+
 /// Tracks the paper's L1 latency metric: for each *load instruction*, the
 /// time from issue until **all** of its coalesced requests complete.
 #[derive(Debug, Default)]
@@ -1091,6 +1126,24 @@ mod tests {
             .unwrap()
             .get("host_seconds")
             .is_none());
+    }
+
+    #[test]
+    fn residency_stats_serialize_but_stay_out_of_results() {
+        let s = ResidencyStats {
+            index_probes: 10,
+            scan_probes: 0,
+            index_ops: 7,
+            index_lines: 3,
+            peak_lines: 5,
+        };
+        let j = Json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(j.get("index_probes").unwrap().as_u64(), Some(10));
+        assert_eq!(j.get("peak_lines").unwrap().as_u64(), Some(5));
+        // The determinism contract: result JSON must not carry index
+        // telemetry (it differs between index-on and index-off runs).
+        let r = SimResult::default().to_json().to_string();
+        assert!(!r.contains("index_probes") && !r.contains("residency"));
     }
 
     #[test]

@@ -241,7 +241,7 @@ fn property_aggregated_probe_equals_individual_probes() {
             let agg = AggregatedTagArray::probe(&cluster, 0, line, 0b1111);
             for idx in 1..4 {
                 let hit = matches!(cluster[idx].cache.peek(line, 0b1111), Probe::Hit { .. });
-                let in_agg = agg.remote_holders.iter().any(|&(i, _)| i == idx);
+                let in_agg = agg.holders & (1 << idx) != 0;
                 if hit != in_agg {
                     return Err(format!("cache {idx} line {line}: {hit} vs {in_agg}"));
                 }
