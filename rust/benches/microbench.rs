@@ -4,7 +4,9 @@
 //! * tag array / MSHR / calendar / iSLIP op rates,
 //! * detailed iSLIP crossbar vs reservation twin (model-agreement check),
 //! * DRAM model service rate,
-//! * end-to-end engine throughput (simulated cycles per host second).
+//! * end-to-end engine throughput (simulated cycles per host second),
+//! * engine-clock A/B: event-driven vs cycle-by-cycle reference on the
+//!   testkit stall-heavy scenario (EXPERIMENTS.md §Perf P4).
 //!
 //!     cargo bench --bench microbench [-- --quick]
 
@@ -194,6 +196,37 @@ fn main() {
             "engine throughput (cfd/ata): {:.2}M simulated cycles/s, {:.2}M requests/s",
             sim_throughput(r.cycles, timing.mean_s) / 1e6,
             wl.total_requests() as f64 / timing.mean_s / 1e6,
+        );
+    }
+
+    // Engine-clock A/B on the stall-heavy scenario (EXPERIMENTS.md §Perf
+    // P4): event-driven jumps vs the cycle-by-cycle reference on a
+    // workload that is mostly skippable cycles — the component-level
+    // counterpart of the `ata-sim bench` three-way grid.
+    {
+        let (cfg_on, wl) = ata_cache::testkit::stall_heavy_scenario(L1ArchKind::Ata);
+        let mut cfg_off = cfg_on.clone();
+        cfg_off.engine.event_driven = false;
+        let t_on = measure(1, 3, || {
+            let r = Engine::new(&cfg_on).run(&wl);
+            std::hint::black_box(r.cycles);
+        });
+        let t_off = measure(1, 3, || {
+            let r = Engine::new(&cfg_off).run(&wl);
+            std::hint::black_box(r.cycles);
+        });
+        let mut eng = Engine::new(&cfg_on);
+        let cycles = eng.run(&wl).cycles;
+        let ev = eng.event_stats();
+        println!(
+            "engine clock A/B (stall-heavy/ata): event {:.2}M cyc/s vs reference {:.2}M cyc/s \
+             = {:.2}x; skip ratio {:.1}% ({} ticks for {} cycles)",
+            sim_throughput(cycles, t_on.mean_s) / 1e6,
+            sim_throughput(cycles, t_off.mean_s) / 1e6,
+            if t_on.mean_s > 0.0 { t_off.mean_s / t_on.mean_s } else { 0.0 },
+            100.0 * ev.skipped() as f64 / ev.cycles_simulated.max(1) as f64,
+            ev.cycles_ticked,
+            ev.cycles_simulated,
         );
     }
 }

@@ -58,7 +58,12 @@ pub fn bench_prelude(name: &str) -> bool {
     quick
 }
 
-/// Simulated-cycles-per-host-second throughput metric.
+/// Simulated-cycles-per-host-second throughput metric.  Note that the
+/// event-driven clock makes this a *simulated-time* rate, not a loop
+/// rate: a jump over a stalled interval counts all the skipped cycles
+/// (they were simulated — analytically), which is exactly why the
+/// `ata-sim bench` event A/B shows up in this metric.  Loop-iteration
+/// rates live in `stats::EventStats` (`cycles_ticked`).
 pub fn sim_throughput(cycles: u64, host_seconds: f64) -> f64 {
     if host_seconds <= 0.0 {
         0.0

@@ -287,6 +287,27 @@ impl Default for SharingConfig {
     }
 }
 
+/// Host simulation-strategy knobs.  Nothing in this section may change a
+/// simulated metric — only how fast the host machine reaches it.  That
+/// contract is enforced byte-for-byte by `rust/tests/event_determinism.rs`
+/// and the CI `--event-driven off` cmp smoke.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineConfig {
+    /// Event-driven clock advance: when no core can issue this cycle, jump
+    /// `now` straight to the next-event horizon (earliest core wake or
+    /// pending load completion) instead of ticking through the idle
+    /// stretch cycle by cycle.  `false` selects the cycle-by-cycle
+    /// reference mode the differential tests compare against.  Simulated
+    /// metrics are byte-identical either way — only wall clock moves.
+    pub event_driven: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { event_driven: true }
+    }
+}
+
 /// Top-level simulated GPU (Table II defaults).
 #[derive(Debug, Clone, PartialEq)]
 pub struct GpuConfig {
@@ -302,6 +323,7 @@ pub struct GpuConfig {
     pub dram: DramConfig,
     pub noc: NocConfig,
     pub sharing: SharingConfig,
+    pub engine: EngineConfig,
     pub l1_arch: L1ArchKind,
     pub seed: u64,
 }
@@ -320,6 +342,7 @@ impl Default for GpuConfig {
             dram: DramConfig::default(),
             noc: NocConfig::default(),
             sharing: SharingConfig::default(),
+            engine: EngineConfig::default(),
             l1_arch: L1ArchKind::Private,
             seed: 0xA7A_CACE,
         }
@@ -576,6 +599,10 @@ impl GpuConfig {
                     ("residency_index", self.sharing.residency_index.into()),
                 ]),
             ),
+            (
+                "engine",
+                Json::obj(vec![("event_driven", self.engine.event_driven.into())]),
+            ),
         ])
     }
 
@@ -675,6 +702,9 @@ impl GpuConfig {
             cfg.sharing.residency_index =
                 g_bool(s, "residency_index", cfg.sharing.residency_index);
         }
+        if let Some(e) = j.get("engine") {
+            cfg.engine.event_driven = g_bool(e, "event_driven", cfg.engine.event_driven);
+        }
         Ok(cfg)
     }
 
@@ -732,6 +762,7 @@ mod tests {
         let mut cfg = GpuConfig::paper(L1ArchKind::DecoupledSharing);
         cfg.sharing.probe_predictor = true;
         cfg.sharing.residency_index = false;
+        cfg.engine.event_driven = false;
         cfg.l1.write_policy = WritePolicy::WriteThrough;
         cfg.seed = 12345;
         let j = cfg.to_json();

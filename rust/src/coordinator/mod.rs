@@ -22,6 +22,12 @@ use crate::util::json::Json;
 use crate::util::table::geomean;
 
 /// A sweep specification: which architectures, which apps, at what scale.
+///
+/// The embedded `cfg` carries every host-strategy knob into each job —
+/// `sharing.residency_index` and `engine.event_driven` included — which
+/// is how the differential tests (`residency_differential.rs`,
+/// `event_determinism.rs`) flip a flag on an otherwise identical sweep
+/// and diff the output bytes.
 #[derive(Debug, Clone)]
 pub struct Sweep {
     pub cfg: GpuConfig,

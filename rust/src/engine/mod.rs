@@ -1,10 +1,22 @@
 //! The cycle engine: wires SIMT cores, an L1 organization, and the memory
 //! system together and runs multi-kernel workloads to completion.
 //!
-//! Cores are ticked cycle-by-cycle; memory timing is resolved through the
-//! reservation model, so warp wake-ups arrive through a calendar heap and
-//! idle stretches (every warp blocked on memory) are fast-forwarded —
-//! the common case for memory-bound GPU workloads.
+//! Memory timing is resolved analytically through the reservation model at
+//! the moment a request is issued, so every future completion lands in the
+//! wake calendar up front.  The clock therefore advances **event-driven**
+//! (`engine.event_driven`, default on): when no core can issue this cycle,
+//! `now` jumps straight to the next-event horizon — the min over every
+//! core's issue hint and the earliest pending wake — skipping the idle
+//! stretch entirely.  Contention is charged at reservation time
+//! (`Grant::queued` / `MemTxn::charge`), which makes the stall ledger a
+//! pure function of the request stream, independent of tick cadence: the
+//! skipped interval's charges were already booked in one batch when the
+//! blocking reservations were made.  Flipping the flag off selects the
+//! cycle-by-cycle reference mode (`now + 1` every iteration) that the
+//! differential harness (`rust/tests/event_determinism.rs`, the bench A/B,
+//! and the CI cmp smoke) compares against: all simulated metrics must be
+//! byte-identical, only wall clock may move.  [`Engine::event_stats`]
+//! exposes skip telemetry (never folded into result JSON).
 //!
 //! Two execution modes share the machinery:
 //!
@@ -46,7 +58,8 @@ use crate::l1arch::{self, L1Arch};
 use crate::l2::MemSystem;
 use crate::mem::{LineAddr, MemTxn};
 use crate::stats::{
-    AppCoStats, ContentionStats, HopStats, KernelStats, LoadLatencyTracker, MultiResult, SimResult,
+    AppCoStats, ContentionStats, EventStats, HopStats, KernelStats, LoadLatencyTracker,
+    MultiResult, SimResult,
 };
 
 /// One kernel launch: a set of warp programs per core.
@@ -191,6 +204,9 @@ pub struct Engine {
     /// (wake_cycle, core, warp) calendar.
     wakes: BinaryHeap<Reverse<(u64, u32, u32)>>,
     total_insts: u64,
+    /// Clock-advance telemetry (ticked vs simulated cycles); host data
+    /// only, never part of result JSON.
+    events: EventStats,
 }
 
 impl Engine {
@@ -206,7 +222,28 @@ impl Engine {
             cycle: 0,
             wakes: BinaryHeap::new(),
             total_insts: 0,
+            events: EventStats::default(),
         }
+    }
+
+    /// Compute the next clock value from the next-event horizon.
+    ///
+    /// `horizon` is the min over every core's issue hint and the earliest
+    /// pending wake; `u64::MAX` means no core can ever progress — a
+    /// deadlock, reported by the caller.  With `engine.event_driven` the
+    /// clock jumps straight to the horizon (never less than `now + 1`);
+    /// in reference mode it advances one cycle regardless, ticking
+    /// through stretches the event-driven path proves idle.  Either way
+    /// the advance is recorded in the [`EventStats`] telemetry.
+    #[inline]
+    fn advance(&mut self, now: u64, horizon: u64) {
+        let next = if self.cfg.engine.event_driven {
+            horizon.max(now + 1)
+        } else {
+            now + 1
+        };
+        self.events.record_advance(next - now);
+        self.cycle = next;
     }
 
     /// Run a full workload; caches stay warm across kernels.
@@ -516,11 +553,11 @@ impl Engine {
                 .min()
                 .unwrap_or(u64::MAX);
             let next_wake = self.wakes.peek().map(|Reverse((t, _, _))| *t).unwrap_or(u64::MAX);
-            let next = next_ready.min(next_wake).max(now + 1);
-            if next == u64::MAX {
+            let horizon = next_ready.min(next_wake);
+            if horizon == u64::MAX {
                 panic!("co-execution '{}' deadlocked at cycle {now}", multi.name);
             }
-            self.cycle = next;
+            self.advance(now, horizon);
 
             if self.cycle - last_sweep > 65_536 {
                 self.l1.sweep(self.cycle);
@@ -595,6 +632,17 @@ impl Engine {
     /// [`crate::stats::ResidencyStats`]).
     pub fn residency_stats(&self) -> crate::stats::ResidencyStats {
         self.l1.residency_stats()
+    }
+
+    /// Clock-advance telemetry, cumulative over the engine's lifetime:
+    /// how many cycles were actually ticked vs simulated, and the jump
+    /// profile.  `cycles_simulated > cycles_ticked` proves the
+    /// event-driven path skipped idle cycles; in reference mode
+    /// (`engine.event_driven = false`) the two are equal.
+    /// Host-performance data only — never folded into result JSON (see
+    /// [`crate::stats::EventStats`]).
+    pub fn event_stats(&self) -> EventStats {
+        self.events
     }
 
     fn run_kernel(&mut self, spec: &KernelSpec) -> KernelStats {
@@ -674,22 +722,24 @@ impl Engine {
             if cores.iter().all(SimtCore::all_done) {
                 break;
             }
-            // Fast-forward across globally idle stretches (post-tick
-            // hints are O(1) per core).
+            // Next-event horizon: the earliest core issue hint or pending
+            // wake (post-tick hints are O(1) per core).  The event-driven
+            // clock jumps there; reference mode still computes it so the
+            // deadlock guard is identical in both modes.
             let next_ready = cores
                 .iter()
                 .map(SimtCore::next_event_hint)
                 .min()
                 .unwrap_or(u64::MAX);
             let next_wake = self.wakes.peek().map(|Reverse((t, _, _))| *t).unwrap_or(u64::MAX);
-            let next = next_ready.min(next_wake).max(now + 1);
-            if next == u64::MAX {
+            let horizon = next_ready.min(next_wake);
+            if horizon == u64::MAX {
                 panic!(
                     "kernel '{}' deadlocked at cycle {now}: no ready warps, no wakes",
                     spec.name
                 );
             }
-            self.cycle = next;
+            self.advance(now, horizon);
 
             if self.cycle - last_sweep > 65_536 {
                 self.l1.sweep(self.cycle);
@@ -911,6 +961,47 @@ mod tests {
         assert_eq!(s_off.index_probes, 0);
         assert!(s_off.scan_probes > 0, "scan path must serve when off");
         assert_eq!(s_off.index_lines, 0, "no index is maintained when off");
+    }
+
+    #[test]
+    fn event_driven_jumps_without_changing_results() {
+        // The tentpole contract: flipping `engine.event_driven` moves only
+        // wall clock — the result JSON is byte-identical — while the
+        // telemetry proves the event-driven clock actually jumped and the
+        // reference clock actually ticked every cycle.
+        let cfg_on = GpuConfig::tiny(L1ArchKind::Ata);
+        let mut cfg_off = cfg_on.clone();
+        cfg_off.engine.event_driven = false;
+        let wl = Workload {
+            name: "t".into(),
+            kernels: vec![
+                simple_kernel(&cfg_on, |c| (0..8).map(|k| (c as u64 * 31 + k) % 64).collect()),
+                simple_kernel(&cfg_on, |c| (0..8).map(|k| (c as u64 * 17 + k) % 64).collect()),
+            ],
+        };
+        let mut e_on = Engine::new(&cfg_on);
+        let r_on = e_on.run(&wl);
+        let mut e_off = Engine::new(&cfg_off);
+        let r_off = e_off.run(&wl);
+        assert_eq!(
+            r_on.to_json().pretty(),
+            r_off.to_json().pretty(),
+            "simulated metrics must not depend on engine.event_driven"
+        );
+        let s_on = e_on.event_stats();
+        assert_eq!(s_on.cycles_simulated, r_on.cycles, "telemetry covers the run");
+        assert!(
+            s_on.cycles_ticked < s_on.cycles_simulated,
+            "a cold-miss workload must let the clock jump: {s_on:?}"
+        );
+        assert!(s_on.jumps > 0 && s_on.max_jump > 1);
+        let s_off = e_off.event_stats();
+        assert_eq!(
+            s_off.cycles_ticked, s_off.cycles_simulated,
+            "reference mode ticks every cycle: {s_off:?}"
+        );
+        assert_eq!(s_off.jumps, 0);
+        assert_eq!(s_off.skipped(), 0);
     }
 
     #[test]

@@ -9,6 +9,13 @@ use super::{job_seed, SimJob};
 /// function pointer keeps variants `Copy`/`Send` and forces them to be
 /// pure config edits — no captured state can leak execution-order
 /// dependence into a job.
+///
+/// Host-performance ablations (`ata-sim bench`'s `event-on` /
+/// `event-off` / `residency-off` triple) lean on a second property of
+/// this shape: a variant that only flips `engine.event_driven` or
+/// `sharing.residency_index` must leave the job's simulated metrics
+/// byte-identical, so cross-variant result comparison doubles as a
+/// determinism referee.
 #[derive(Debug, Clone, Copy)]
 pub struct ConfigVariant {
     pub name: &'static str,

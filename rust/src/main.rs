@@ -68,7 +68,7 @@ fn print_usage() {
   contention [--apps x,y,.. | --app <name>] [--archs a,b,..] [--scale F]
             [--seed N] [--out FILE]
   bench     [--app <name>] [--scale F] [--seed N] [--threads N]
-            [--out FILE=BENCH_pr5.json]
+            [--out FILE=BENCH_pr6.json]
   export-trace --app <name> [--scale F] --out FILE
   sweep     [--archs a,b,..] [--apps x,y,..] [--scale F] [--threads N] [--out FILE]
   cosched   [--archs a,b,..] [--apps x,y,..] [--scale F] [--threads N]
@@ -82,7 +82,11 @@ fn print_usage() {
 byte-identical for any value (deterministic execution layer).
 --residency <on|off> overrides sharing.residency_index (the O(1) ATA
 probe index); simulated metrics are byte-identical either way.  `bench`
-ignores it: its A/B grid always runs both modes."
+ignores it: its A/B grid always runs both modes.
+--event-driven <on|off> overrides engine.event_driven (clock jumps to
+the next-event horizon vs the cycle-by-cycle reference); simulated
+metrics are byte-identical either way.  `bench` ignores it too: its
+A/B grid always runs both modes."
     );
 }
 
@@ -95,6 +99,7 @@ fn parse_cfg(args: &Args, arch: L1ArchKind) -> GpuConfig {
     cfg.l1_arch = arch;
     cfg.seed = args.get_u64("seed", cfg.seed).unwrap();
     residency_override(args, &mut cfg);
+    event_driven_override(args, &mut cfg);
     cfg
 }
 
@@ -108,6 +113,20 @@ fn residency_override(args: &Args, cfg: &mut GpuConfig) {
             "on" => true,
             "off" => false,
             other => panic!("--residency expects on|off, got '{other}'"),
+        };
+    }
+}
+
+/// Apply the global `--event-driven on|off` override to a config —
+/// the engine-clock twin of [`residency_override`], with the same
+/// call-site contract (every config-construction path; `bench` sets the
+/// flag per variant instead).
+fn event_driven_override(args: &Args, cfg: &mut GpuConfig) {
+    if let Some(v) = args.get("event-driven") {
+        cfg.engine.event_driven = match v {
+            "on" => true,
+            "off" => false,
+            other => panic!("--event-driven expects on|off, got '{other}'"),
         };
     }
 }
@@ -143,6 +162,9 @@ fn cmd_run(args: &Args) -> i32 {
     if rs.index_probes + rs.scan_probes > 0 {
         eprintln!("residency telemetry: {}", rs.to_json());
     }
+    // Same contract for the engine-clock telemetry: stderr only, never
+    // part of the result JSON.
+    eprintln!("engine telemetry: {}", eng.event_stats().to_json());
     if let Some(path) = args.get("out") {
         std::fs::write(path, r.to_json().pretty()).expect("writing --out");
         println!("wrote {path}");
@@ -366,16 +388,19 @@ fn cmd_contention(args: &Args) -> i32 {
     0
 }
 
-/// Perf-trajectory baseline (`BENCH_pr5.json`): run one pinned, seeded
-/// workload on every registered L1 organization **twice** — residency
-/// index on and off (a [`ConfigVariant`] ablation axis) — and report
-/// wall seconds, simulated cycles per host second, IPC, and the per-org
-/// index speedup, asserting on the way that the two modes produce
-/// byte-identical simulated metrics (the tentpole's contract).  Also
-/// reports the serial-vs-parallel wall-clock speedup of a co-scheduling
-/// grid, proving the [`JobRunner`] both helps and stays deterministic.
-/// Future PRs compare against this file to catch host-performance
-/// regressions of the simulator itself.
+/// Perf-trajectory baseline (`BENCH_pr6.json`): run one pinned, seeded
+/// workload on every registered L1 organization **three times** — the
+/// full-speed engine, the cycle-by-cycle reference (`event_driven`
+/// off), and the residency scan path (`residency_index` off), each a
+/// [`ConfigVariant`] ablation axis — and report wall seconds, simulated
+/// cycles per host second, IPC, and two per-org speedups: the headline
+/// event-driven speedup (reference s / event s) and the carried-forward
+/// residency-index speedup.  Both A/B pairs must produce byte-identical
+/// simulated metrics (the determinism contract); any drift exits 1.
+/// Also reports the serial-vs-parallel wall-clock speedup of a
+/// co-scheduling grid, proving the [`JobRunner`] both helps and stays
+/// deterministic.  Future PRs compare against this file to catch
+/// host-performance regressions of the simulator itself.
 fn cmd_bench(args: &Args) -> i32 {
     let scale = args.get_f64("scale", 0.25).unwrap();
     let app_name = args.get_or("app", "b+tree").to_string();
@@ -383,24 +408,43 @@ fn cmd_bench(args: &Args) -> i32 {
         eprintln!("unknown app '{app_name}' (see `ata-sim list`)");
         return 2;
     };
-    let out_path = args.get_or("out", "BENCH_pr5.json").to_string();
+    let out_path = args.get_or("out", "BENCH_pr6.json").to_string();
     let seed = args.get_u64("seed", GpuConfig::default().seed).unwrap();
     let threads = args.get_threads().unwrap();
     if args.get("residency").is_some() {
         eprintln!("note: bench ignores --residency — its A/B grid always runs both modes");
     }
+    if args.get("event-driven").is_some() {
+        eprintln!("note: bench ignores --event-driven — its A/B grid always runs both modes");
+    }
 
-    // Residency-index A/B: the registry as a one-app scenario grid with
-    // an on/off variant axis.  Jobs materialize variant-major, so the
-    // first half of the results is the index-on pass, the second half
-    // the scan pass, both in registry order.
-    const RES_ON: ConfigVariant = ConfigVariant {
-        name: "residency-on",
-        apply: |c| c.sharing.residency_index = true,
+    // Engine-clock + residency A/B: the registry as a one-app scenario
+    // grid with a three-way variant axis.  EV_ON is the production
+    // configuration and the baseline both speedups are measured against;
+    // EV_OFF ablates only the event-driven clock (cycle-by-cycle
+    // reference), RES_OFF ablates only the residency index.  Jobs
+    // materialize variant-major, so the results come back as three
+    // registry-ordered chunks of `n_orgs`.
+    const EV_ON: ConfigVariant = ConfigVariant {
+        name: "event-on",
+        apply: |c| {
+            c.engine.event_driven = true;
+            c.sharing.residency_index = true;
+        },
+    };
+    const EV_OFF: ConfigVariant = ConfigVariant {
+        name: "event-off",
+        apply: |c| {
+            c.engine.event_driven = false;
+            c.sharing.residency_index = true;
+        },
     };
     const RES_OFF: ConfigVariant = ConfigVariant {
         name: "residency-off",
-        apply: |c| c.sharing.residency_index = false,
+        apply: |c| {
+            c.engine.event_driven = true;
+            c.sharing.residency_index = false;
+        },
     };
     let mut base_cfg = GpuConfig::paper(L1ArchKind::Private);
     base_cfg.seed = seed;
@@ -410,53 +454,67 @@ fn cmd_bench(args: &Args) -> i32 {
         vec![app.clone()],
         scale,
     )
-    .with_variants(vec![RES_ON, RES_OFF]);
+    .with_variants(vec![EV_ON, EV_OFF, RES_OFF]);
     let jobs = grid.jobs();
     // The A/B grid runs on ONE worker: per-job `host_seconds` is the
     // timing signal here, and concurrent jobs on a shared pool would
-    // contaminate each half with whatever co-runner mix it happened to
-    // get (the index-on half always submits first).  Serial execution
-    // makes `speedup` measure the index, not the scheduler; the cosched
-    // section below still exercises the parallel runner with --threads.
+    // contaminate each chunk with whatever co-runner mix it happened to
+    // get (the baseline chunk always submits first).  Serial execution
+    // makes the speedups measure the ablated feature, not the scheduler;
+    // the cosched section below still exercises the parallel runner
+    // with --threads.
     let results: Vec<SimResult> = JobRunner::new(1)
         .run(&jobs)
         .into_iter()
         .map(JobOutput::into_solo)
         .collect();
     let n_orgs = ata_cache::l1arch::REGISTRY.len();
-    let (on_half, off_half) = results.split_at(n_orgs);
+    let (on_chunk, rest) = results.split_at(n_orgs);
+    let (ref_chunk, scan_chunk) = rest.split_at(n_orgs);
 
     let mut t = Table::new(&format!(
         "perf baseline — {app_name} @ scale {scale}, seed {seed:#x} (A/B timed serially)"
     ))
     .header(&[
-        "arch", "cycles", "insts", "IPC", "idx s", "scan s", "Mcyc/s", "speedup",
+        "arch", "cycles", "insts", "IPC", "ev s", "ref s", "scan s", "Mcyc/s", "ev x", "idx x",
     ]);
-    let mut chart = BarChart::new("residency-index speedup per organization (scan s / idx s)");
+    let mut chart = BarChart::new("event-driven speedup per organization (ref s / ev s)");
     let mut rows = Vec::new();
     let mut totals = RunTotals::default();
-    let mut ab_identical = true;
-    for ((spec, on), off) in ata_cache::l1arch::REGISTRY.iter().zip(on_half).zip(off_half) {
+    let mut ev_identical = true;
+    let mut res_identical = true;
+    let registry = ata_cache::l1arch::REGISTRY.iter();
+    for (((spec, on), reference), scan) in registry.zip(on_chunk).zip(ref_chunk).zip(scan_chunk) {
         totals.absorb_sim(on);
-        // The referee: identical simulated metrics with the index on/off
-        // (result JSON excludes wall clock by the determinism contract).
-        let identical = on.to_json().pretty() == off.to_json().pretty();
-        ab_identical &= identical;
+        // The referees: identical simulated metrics against both
+        // ablations (result JSON excludes wall clock by the determinism
+        // contract).
+        let on_json = on.to_json().pretty();
+        let identical = on_json == reference.to_json().pretty();
+        let r_identical = on_json == scan.to_json().pretty();
+        ev_identical &= identical;
+        res_identical &= r_identical;
         let thru = sim_throughput(on.cycles, on.host_seconds);
-        let speedup = if on.host_seconds > 0.0 {
-            off.host_seconds / on.host_seconds
-        } else {
-            0.0
+        let ratio = |ablated: f64| {
+            if on.host_seconds > 0.0 {
+                ablated / on.host_seconds
+            } else {
+                0.0
+            }
         };
+        let speedup = ratio(reference.host_seconds);
+        let res_speedup = ratio(scan.host_seconds);
         t.row(vec![
             spec.name.to_string(),
             on.cycles.to_string(),
             on.insts.to_string(),
             format!("{:.3}", on.ipc()),
             format!("{:.3}", on.host_seconds),
-            format!("{:.3}", off.host_seconds),
+            format!("{:.3}", reference.host_seconds),
+            format!("{:.3}", scan.host_seconds),
             format!("{:.2}", thru / 1e6),
             format!("{speedup:.2}x"),
+            format!("{res_speedup:.2}x"),
         ]);
         chart.bar(spec.name, speedup);
         rows.push(Json::obj(vec![
@@ -465,19 +523,23 @@ fn cmd_bench(args: &Args) -> i32 {
             ("insts", on.insts.into()),
             ("ipc", on.ipc().into()),
             ("host_seconds", on.host_seconds.into()),
-            ("host_seconds_scan", off.host_seconds.into()),
+            ("host_seconds_reference", reference.host_seconds.into()),
+            ("host_seconds_scan", scan.host_seconds.into()),
             ("cycles_per_sec", thru.into()),
             (
-                "cycles_per_sec_scan",
-                sim_throughput(off.cycles, off.host_seconds).into(),
+                "cycles_per_sec_reference",
+                sim_throughput(reference.cycles, reference.host_seconds).into(),
             ),
             ("speedup", speedup.into()),
             ("identical", identical.into()),
+            ("residency_speedup", res_speedup.into()),
+            ("residency_identical", r_identical.into()),
         ]));
     }
     println!("{}", t.render());
     println!("{}", chart.render());
-    println!("index-on vs scan metrics byte-identical: {ab_identical}");
+    println!("event-driven vs reference metrics byte-identical: {ev_identical}");
+    println!("index-on vs scan metrics byte-identical: {res_identical}");
 
     // Serial-vs-parallel wall clock on a co-scheduling grid (the N²
     // surface the execution layer exists for), with the byte-identity
@@ -509,19 +571,24 @@ fn cmd_bench(args: &Args) -> i32 {
     );
 
     let json = Json::obj(vec![
-        ("bench", "pr5".into()),
+        ("bench", "pr6".into()),
         ("app", app_name.as_str().into()),
         ("scale", scale.into()),
         ("seed", seed.into()),
         ("threads", threads.into()),
         ("orgs", Json::arr(rows)),
-        ("residency_ab_identical", ab_identical.into()),
+        ("event_driven_ab_identical", ev_identical.into()),
+        ("residency_ab_identical", res_identical.into()),
         ("totals", totals.to_json()),
         ("cosched_speedup", speedup.to_json()),
     ]);
     std::fs::write(&out_path, json.pretty()).expect("writing bench output");
     println!("wrote {out_path}");
-    if !ab_identical {
+    if !ev_identical {
+        eprintln!("error: event-driven run drifted from the cycle-by-cycle reference");
+        return 1;
+    }
+    if !res_identical {
         eprintln!("error: residency-index run drifted from the scan run");
         return 1;
     }
@@ -537,6 +604,7 @@ fn cmd_cosched(args: &Args) -> i32 {
     let scale = args.get_f64("scale", 0.25).unwrap();
     let mut sweep = CoSchedSweep::paper(scale);
     residency_override(args, &mut sweep.cfg);
+    event_driven_override(args, &mut sweep.cfg);
     let arch_list = args.get_list("archs");
     if !arch_list.is_empty() {
         sweep.archs = arch_list
@@ -589,6 +657,7 @@ fn sweep_from_args(args: &Args) -> Sweep {
     let scale = args.get_f64("scale", 0.5).unwrap();
     let mut sweep = Sweep::paper(scale);
     residency_override(args, &mut sweep.cfg);
+    event_driven_override(args, &mut sweep.cfg);
     let arch_list = args.get_list("archs");
     if !arch_list.is_empty() {
         sweep.archs = arch_list

@@ -78,6 +78,15 @@ impl Server {
     pub fn drain_cycle(&self, now: u64, limit: u64) -> u64 {
         now.max(self.next_free.saturating_sub(limit))
     }
+
+    /// Backlog horizon: the cycle this server fully drains — which is also
+    /// the grant cycle of the next queued arrival (a `reserve` at any
+    /// `t <= next_free` is granted exactly here).  `None` when the server
+    /// is already idle at `now` and would grant immediately.
+    #[inline]
+    pub fn next_event(&self, now: u64) -> Option<u64> {
+        (self.next_free > now).then_some(self.next_free)
+    }
 }
 
 impl Default for Server {
@@ -127,6 +136,22 @@ impl Banked {
     pub fn total_backlog(&self, now: u64) -> u64 {
         self.banks.iter().map(|b| b.backlog(now)).sum()
     }
+
+    /// Pool-wide backlog horizon: the earliest cycle at which *some* bank
+    /// can grant a queued arrival.  `None` when a bank is already idle —
+    /// the pool then imposes no wait on a request routed there, so it
+    /// cannot gate progress.  A reservation on any specific bank is
+    /// granted at-or-after this horizon (per-bank: [`Server::next_event`]).
+    pub fn next_event(&self, now: u64) -> Option<u64> {
+        let mut horizon: Option<u64> = None;
+        for b in &self.banks {
+            match b.next_event(now) {
+                None => return None,
+                Some(t) => horizon = Some(horizon.map_or(t, |h| h.min(t))),
+            }
+        }
+        horizon
+    }
 }
 
 /// `k` identical interchangeable servers (e.g. a multi-ported array or a
@@ -170,6 +195,15 @@ impl MultiPort {
     #[inline]
     pub fn earliest(&self, now: u64) -> u64 {
         self.ports.iter().copied().min().unwrap_or(0).max(now)
+    }
+
+    /// Backlog horizon: the cycle the earliest port frees — the grant
+    /// cycle of the next arrival.  `None` when a port is already free at
+    /// `now` ([`MultiPort::earliest`] as an event rather than a clamp).
+    #[inline]
+    pub fn next_event(&self, now: u64) -> Option<u64> {
+        let t = self.ports.iter().copied().min().unwrap_or(0);
+        (t > now).then_some(t)
     }
 
     /// Occupy the earliest-free port until `until` (dynamic-duration
@@ -310,6 +344,34 @@ impl Calendar {
         }
         now
     }
+
+    /// Grant horizon: the cycle a 1-cycle reservation arriving at `now`
+    /// would be granted — the start of the first usable gap in the busy
+    /// set.  `None` when the calendar can grant at `now` itself.
+    ///
+    /// This is a *grant* horizon, not a standalone jump target: a
+    /// finite-buffer retry ([`Calendar::drain_cycle`] with a nonzero
+    /// `limit`) can land inside the busy window, before this cycle.  Only
+    /// the full drain (`drain_cycle(now, 0)`) is guaranteed to land
+    /// at-or-after it (see the `horizon_tests` properties) — which is why
+    /// the engine resolves retries analytically at reservation time into
+    /// its wake heap instead of polling resource horizons
+    /// (`docs/ARCHITECTURE.md` §Event-driven core).
+    pub fn next_event(&self, now: u64) -> Option<u64> {
+        let mut idx = self.busy.partition_point(|&(_, e)| e <= now);
+        let mut t = now;
+        while idx < self.busy.len() {
+            let (s, e) = self.busy[idx];
+            if t + 1 <= s {
+                break; // a 1-cycle gap before interval idx
+            }
+            if e > t {
+                t = e;
+            }
+            idx += 1;
+        }
+        (t > now).then_some(t)
+    }
 }
 
 /// A bank of independent calendars.
@@ -341,6 +403,20 @@ impl BankedCalendar {
     #[inline]
     pub fn backlog(&self, bank: usize, now: u64) -> u64 {
         self.banks[bank].backlog(now)
+    }
+
+    /// Pool-wide grant horizon: the earliest cycle at which some bank can
+    /// grant (mirrors [`Banked::next_event`]; `None` when a bank can
+    /// already grant at `now`).
+    pub fn next_event(&self, now: u64) -> Option<u64> {
+        let mut horizon: Option<u64> = None;
+        for b in &self.banks {
+            match b.next_event(now) {
+                None => return None,
+                Some(t) => horizon = Some(horizon.map_or(t, |h| h.min(t))),
+            }
+        }
+        horizon
     }
 }
 
@@ -514,5 +590,147 @@ mod calendar_tests {
             "old intervals must be pruned: {}",
             c.busy.len()
         );
+    }
+}
+
+/// Properties of the `next_event()` horizon accessors (the event-driven
+/// engine's resource-side contract — see `docs/ARCHITECTURE.md`
+/// §Event-driven core).
+#[cfg(test)]
+mod horizon_tests {
+    use super::*;
+    use crate::testkit::{check, int_range, vec_of, Gen};
+
+    /// Random monotone (arrival, occupancy) schedules.
+    fn schedule() -> Gen<Vec<(u64, u32)>> {
+        vec_of(int_range(0, 5 * 8 + 3), int_range(4, 40)).map(|raw| {
+            let mut now = 0u64;
+            raw.iter()
+                .map(|&packed| {
+                    now += packed / 8; // gap 0..=5
+                    (now, (packed % 8 + 1) as u32) // occupancy 1..=8
+                })
+                .collect()
+        })
+    }
+
+    #[test]
+    fn property_horizon_is_monotone_under_reservations() {
+        // Fed in time order (the engine's contract), the effective grant
+        // bound `next_event(now).unwrap_or(now)` never moves backwards.
+        check("horizon-monotone", 0xE7E17, 64, &schedule(), |sched| {
+            let mut srv = Server::new();
+            let mut mp = MultiPort::new(2);
+            let mut cal = Calendar::new();
+            let mut last = [0u64; 3];
+            for &(now, occ) in sched {
+                let bounds = [
+                    srv.next_event(now).unwrap_or(now),
+                    mp.next_event(now).unwrap_or(now),
+                    cal.next_event(now).unwrap_or(now),
+                ];
+                for (i, (&b, &l)) in bounds.iter().zip(last.iter()).enumerate() {
+                    if b < l {
+                        return Err(format!(
+                            "resource {i}: horizon regressed {l} -> {b} at now={now}"
+                        ));
+                    }
+                }
+                last = bounds;
+                srv.reserve(now, occ);
+                mp.reserve(now, occ);
+                cal.reserve(now, occ);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_horizon_agrees_with_observed_grants() {
+        // The reported horizon is exactly the next grant time for Server /
+        // MultiPort / a 1-cycle Calendar reservation, the min over banks
+        // for the pooled types, and a lower bound for wider reservations.
+        check("horizon-grants", 0x6A117, 64, &schedule(), |sched| {
+            let mut srv = Server::new();
+            let mut mp = MultiPort::new(3);
+            let mut cal = Calendar::new();
+            let mut bank = Banked::new(2);
+            for (i, &(now, occ)) in sched.iter().enumerate() {
+                let want = srv.next_event(now).unwrap_or(now);
+                let got = srv.reserve(now, occ).grant;
+                if got != want {
+                    return Err(format!("Server: horizon {want} != grant {got}"));
+                }
+                let want = mp.next_event(now).unwrap_or(now);
+                let got = mp.reserve(now, occ).grant;
+                if got != want {
+                    return Err(format!("MultiPort: horizon {want} != grant {got}"));
+                }
+                let want = cal.next_event(now).unwrap_or(now);
+                let got1 = cal.clone().reserve(now, 1).grant;
+                if got1 != want {
+                    return Err(format!("Calendar occ=1: horizon {want} != grant {got1}"));
+                }
+                let got = cal.reserve(now, occ).grant;
+                if got < want {
+                    return Err(format!("Calendar: grant {got} before horizon {want}"));
+                }
+                // Pool horizon = min over banks of the per-bank grant.
+                let pool = bank.next_event(now).unwrap_or(now);
+                let best = (0..bank.len())
+                    .map(|b| bank.clone().reserve(b, now, occ).grant)
+                    .min()
+                    .unwrap();
+                if best != pool {
+                    return Err(format!("Banked: pool horizon {pool} != best grant {best}"));
+                }
+                bank.reserve(i % bank.len(), now, occ);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_drain_cycle_respects_horizon() {
+        // `drain_cycle` events are exact (backlog meets the limit, and at
+        // the earliest such cycle), and a *full* drain never precedes the
+        // grant horizon — the guarantees the eager-retry engine design
+        // rests on.  Schedules mix past and future bookings so gaps exist.
+        let gen = vec_of(int_range(0, 400), int_range(6, 30)).map(|starts| {
+            let mut cal = Calendar::new();
+            for (i, &s) in starts.iter().enumerate() {
+                cal.reserve(s, (i % 7 + 1) as u32);
+            }
+            cal
+        });
+        check("drain-vs-horizon", 0xD7A1A, 96, &gen, |cal| {
+            for now in [0u64, 3, 50, 120, 399] {
+                for limit in [0u64, 1, 4, 13] {
+                    let t = cal.drain_cycle(now, limit);
+                    if t < now {
+                        return Err(format!("drain_cycle({now},{limit}) = {t} < now"));
+                    }
+                    if cal.backlog(t) > limit {
+                        return Err(format!(
+                            "drain_cycle({now},{limit}) = {t} fires early: backlog {}",
+                            cal.backlog(t)
+                        ));
+                    }
+                    if t > now && cal.backlog(t - 1) <= limit {
+                        return Err(format!(
+                            "drain_cycle({now},{limit}) = {t} not the earliest event"
+                        ));
+                    }
+                }
+                let full = cal.drain_cycle(now, 0);
+                let horizon = cal.next_event(now).unwrap_or(now);
+                if full < horizon {
+                    return Err(format!(
+                        "full drain {full} precedes grant horizon {horizon} at now={now}"
+                    ));
+                }
+            }
+            Ok(())
+        });
     }
 }

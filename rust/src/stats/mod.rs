@@ -374,6 +374,57 @@ impl ResidencyStats {
     }
 }
 
+/// Host-performance telemetry of the event-driven engine clock.
+///
+/// Like [`ResidencyStats`], deliberately **not** part of
+/// [`SimResult`]/[`MultiResult`] JSON: result JSON must be byte-identical
+/// whether `engine.event_driven` is on or off (the flag changes only wall
+/// clock), and these counters obviously differ between the two modes.
+/// `ata-sim run` prints them to stderr, and white-box tests read them,
+/// through [`Engine::event_stats`](crate::engine::Engine::event_stats).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EventStats {
+    /// Engine-loop iterations — cycles at which the cores were actually
+    /// ticked.
+    pub cycles_ticked: u64,
+    /// Simulated cycles the clock covered (equals the cycle counts in the
+    /// result JSON).  `cycles_simulated > cycles_ticked` means the
+    /// event-driven path skipped provably idle cycles; with the flag off
+    /// the two are equal.
+    pub cycles_simulated: u64,
+    /// Clock advances that jumped more than one cycle.
+    pub jumps: u64,
+    /// Largest single clock advance observed.
+    pub max_jump: u64,
+}
+
+impl EventStats {
+    /// Record one clock advance of `step >= 1` cycles.
+    #[inline]
+    pub fn record_advance(&mut self, step: u64) {
+        self.cycles_ticked += 1;
+        self.cycles_simulated += step;
+        if step > 1 {
+            self.jumps += 1;
+            self.max_jump = self.max_jump.max(step);
+        }
+    }
+
+    /// Cycles the event-driven path never ticked (0 in reference mode).
+    pub fn skipped(&self) -> u64 {
+        self.cycles_simulated.saturating_sub(self.cycles_ticked)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("cycles_ticked", self.cycles_ticked.into()),
+            ("cycles_simulated", self.cycles_simulated.into()),
+            ("jumps", self.jumps.into()),
+            ("max_jump", self.max_jump.into()),
+        ])
+    }
+}
+
 /// Tracks the paper's L1 latency metric: for each *load instruction*, the
 /// time from issue until **all** of its coalesced requests complete.
 #[derive(Debug, Default)]
@@ -1144,6 +1195,28 @@ mod tests {
         // telemetry (it differs between index-on and index-off runs).
         let r = SimResult::default().to_json().to_string();
         assert!(!r.contains("index_probes") && !r.contains("residency"));
+    }
+
+    #[test]
+    fn event_stats_serialize_but_stay_out_of_results() {
+        let mut s = EventStats::default();
+        s.record_advance(1);
+        s.record_advance(40);
+        s.record_advance(7);
+        assert_eq!(s.cycles_ticked, 3);
+        assert_eq!(s.cycles_simulated, 48);
+        assert_eq!(s.jumps, 2);
+        assert_eq!(s.max_jump, 40);
+        assert_eq!(s.skipped(), 45);
+        let j = Json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(j.get("cycles_ticked").unwrap().as_u64(), Some(3));
+        assert_eq!(j.get("max_jump").unwrap().as_u64(), Some(40));
+        // The determinism contract: result JSON must not carry engine-clock
+        // telemetry (it differs between event-driven and reference runs).
+        let r = SimResult::default().to_json().to_string();
+        assert!(!r.contains("cycles_ticked") && !r.contains("max_jump"));
+        let m = MultiResult::default().to_json().to_string();
+        assert!(!m.contains("cycles_ticked") && !m.contains("max_jump"));
     }
 
     #[test]

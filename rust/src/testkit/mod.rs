@@ -5,8 +5,55 @@
 //! failure, retries with simpler draws (halved sizes) to report a small
 //! counterexample — shrinking-lite.  Used by the `property_*` tests across
 //! the simulator modules.
+//!
+//! Also hosts shared scenario builders — deterministic config/workload
+//! pairs engineered to hit a specific regime (see
+//! [`stall_heavy_scenario`]) — so integration tests across files exercise
+//! the same pathological shapes instead of each inventing a weaker one.
 
+use crate::config::{GpuConfig, L1ArchKind};
+use crate::core::{WarpInst, WarpProgram};
+use crate::engine::{KernelSpec, Workload};
 use crate::util::rng::Pcg32;
+
+/// A deterministic stall-heavy scenario: a [`GpuConfig::tiny`] variant
+/// whose DRAM back end is throttled to one controller with a near-empty
+/// queue, paired with a miss-storm workload in which every load touches a
+/// brand-new line (100% cold misses, no reuse, no sharing).  Misses pile
+/// up behind the single controller, so cores spend long stretches with
+/// nothing to issue — exactly the regime the event-driven clock exists
+/// for.  Used by the `cycles_simulated > cycles_ticked` telemetry
+/// regression below and available to integration tests that need a
+/// backlog-bound workload.
+pub fn stall_heavy_scenario(arch: L1ArchKind) -> (GpuConfig, Workload) {
+    let mut cfg = GpuConfig::tiny(arch);
+    cfg.dram.controllers = 1;
+    cfg.dram.queue_depth = 2;
+    let warps = 4;
+    let loads_per_warp = 24;
+    let mut next_line = 0u64;
+    let programs = (0..cfg.cores)
+        .map(|_| {
+            (0..warps)
+                .map(|_| {
+                    let insts = (0..loads_per_warp)
+                        .map(|_| {
+                            let line = next_line;
+                            next_line += 1;
+                            WarpInst::Load(vec![(line, 0b1111)])
+                        })
+                        .collect();
+                    WarpProgram::new(insts)
+                })
+                .collect()
+        })
+        .collect();
+    let wl = Workload {
+        name: "stall-heavy".into(),
+        kernels: vec![KernelSpec { name: "miss-storm".into(), programs }],
+    };
+    (cfg, wl)
+}
 
 /// A reusable random-value generator.
 pub struct Gen<T> {
@@ -129,5 +176,42 @@ mod tests {
     #[should_panic(expected = "property 'always-fails' failed")]
     fn check_reports_failures() {
         check("always-fails", 1, 10, &int_range(0, 10), |_| Err("nope".into()));
+    }
+
+    /// The stall-heavy scenario must actually starve the cores: the
+    /// event clock skips cycles (`cycles_simulated > cycles_ticked`),
+    /// the cycle-by-cycle reference agrees byte-for-byte, and the
+    /// telemetry stays out of the result JSON (the same exclusion
+    /// contract as `crate::stats::ResidencyStats`).
+    #[test]
+    fn stall_heavy_scenario_exercises_the_event_clock() {
+        use crate::engine::Engine;
+
+        let (cfg, wl) = stall_heavy_scenario(L1ArchKind::Ata);
+        let mut eng = Engine::new(&cfg);
+        let r = eng.run(&wl);
+        let ev = eng.event_stats();
+        assert!(r.loads > 0, "miss storm issued no loads");
+        assert!(
+            ev.cycles_simulated > ev.cycles_ticked,
+            "stall-heavy scenario produced no skippable cycles: {ev:?}"
+        );
+        assert!(ev.jumps > 0 && ev.max_jump > 1, "clock never jumped: {ev:?}");
+        // On a fresh engine the simulated-cycle count telescopes to the
+        // reported cycle total.
+        assert_eq!(ev.cycles_simulated, r.cycles);
+        let js = r.to_json().to_string();
+        assert!(
+            !js.contains("cycles_ticked") && !js.contains("max_jump"),
+            "event telemetry leaked into result JSON"
+        );
+
+        // Reference clock: same scenario, same bytes, nothing skipped.
+        let mut cfg_off = cfg.clone();
+        cfg_off.engine.event_driven = false;
+        let mut eng_off = Engine::new(&cfg_off);
+        let r_off = eng_off.run(&wl);
+        assert_eq!(r.to_json().pretty(), r_off.to_json().pretty());
+        assert_eq!(eng_off.event_stats().skipped(), 0);
     }
 }

@@ -1,0 +1,191 @@
+//! Differential byte-identity tests for the event-driven engine clock.
+//!
+//! `engine.event_driven` is a host-performance knob: with it on the
+//! clock jumps straight to the next-event horizon, with it off the
+//! engine ticks cycle by cycle as a reference.  Nothing simulated may
+//! depend on which mode ran — these tests are the referee:
+//!
+//! 1. a differential fuzz runs seeded synthetic apps over every
+//!    registered L1 organization and asserts the full metrics JSON is
+//!    byte-identical on vs off;
+//! 2. the same identity holds through the parallel execution layer
+//!    (a threaded [`Sweep`]) and the co-execution path
+//!    ([`Engine::run_multi`]);
+//! 3. a reconciliation pin re-runs the latency-sum property of
+//!    `integration_contention.rs` in both modes: the contention ledger
+//!    is charged analytically at reservation time, so skipped intervals
+//!    must neither add nor lose a single queued cycle.
+
+use ata_cache::config::{GpuConfig, L1ArchKind};
+use ata_cache::coordinator::Sweep;
+use ata_cache::core::{WarpInst, WarpProgram};
+use ata_cache::engine::{Engine, KernelSpec, Workload};
+use ata_cache::testkit::{check, int_range, vec_of};
+use ata_cache::trace::{co_workload, synth};
+
+/// Run one workload in both clock modes and return the two result JSONs
+/// plus the on-mode engine telemetry sanity already applied.
+fn run_both(cfg: &GpuConfig, wl: &Workload) -> (String, String) {
+    let mut cfg_on = cfg.clone();
+    cfg_on.engine.event_driven = true;
+    let mut cfg_off = cfg.clone();
+    cfg_off.engine.event_driven = false;
+    let mut eng_on = Engine::new(&cfg_on);
+    let r_on = eng_on.run(wl);
+    let mut eng_off = Engine::new(&cfg_off);
+    let r_off = eng_off.run(wl);
+    // Telemetry invariants that hold for every workload: a fresh
+    // engine's simulated-cycle count telescopes to the reported total,
+    // and the reference clock never skips.
+    assert_eq!(eng_on.event_stats().cycles_simulated, r_on.cycles);
+    assert_eq!(eng_off.event_stats().skipped(), 0);
+    (r_on.to_json().pretty(), r_off.to_json().pretty())
+}
+
+/// Differential fuzz: seeded synthetic apps × every organization, full
+/// metrics JSON byte-identical with the event clock on vs off.
+#[test]
+fn property_metrics_identical_event_driven_on_and_off() {
+    // Each case draws [sharing, intensity, seed] and runs all archs.
+    let gen = vec_of(int_range(0, 99), int_range(3, 3));
+    check("event-clock-identity", 0xE7D1F, 5, &gen, |draw| {
+        let sharing = draw[0] as f64 / 100.0;
+        let intensity = 0.15 + draw[1] as f64 / 400.0;
+        let app = synth::locality_knob(sharing, intensity).scaled(0.3);
+        for arch in L1ArchKind::ALL {
+            let mut cfg = GpuConfig::tiny(arch);
+            cfg.seed = 0xA11CE ^ draw[2];
+            let wl = app.workload(&cfg);
+            let (on, off) = run_both(&cfg, &wl);
+            if on != off {
+                return Err(format!(
+                    "{arch:?}: metrics JSON depends on engine.event_driven \
+                     (sharing={sharing:.2} intensity={intensity:.2})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The acceptance referee through the execution layer: a threaded sweep
+/// over all paper organizations and two seeded workloads must be
+/// byte-identical with the event clock on vs off.
+#[test]
+fn sweep_json_is_byte_identical_event_driven_on_and_off() {
+    let run = |event_driven: bool| {
+        let mut cfg = GpuConfig::tiny(L1ArchKind::Private);
+        cfg.engine.event_driven = event_driven;
+        Sweep {
+            cfg,
+            archs: L1ArchKind::ALL.to_vec(),
+            apps: vec![
+                synth::locality_knob(0.8, 0.4),
+                synth::convergent_hammer().scaled(0.25),
+            ],
+            scale: 1.0,
+            threads: 2,
+        }
+        .run()
+        .to_json()
+        .pretty()
+    };
+    assert_eq!(
+        run(true),
+        run(false),
+        "sweep metrics must not depend on engine.event_driven"
+    );
+}
+
+/// Same referee for the co-execution path (`Engine::run_multi`), whose
+/// shared memory system and per-app accounting must agree in both modes.
+#[test]
+fn multi_json_is_byte_identical_event_driven_on_and_off() {
+    let run = |event_driven: bool| {
+        let mut cfg = GpuConfig::tiny(L1ArchKind::Ata);
+        cfg.engine.event_driven = event_driven;
+        let models = vec![
+            synth::locality_knob(0.7, 0.5),
+            synth::convergent_hammer().scaled(0.25),
+        ];
+        let multi = co_workload(&cfg, &models, &[4, 4], false).expect("co-workload");
+        Engine::new(&cfg).run_multi(&multi).to_json().pretty()
+    };
+    assert_eq!(
+        run(true),
+        run(false),
+        "co-run metrics must not depend on engine.event_driven"
+    );
+}
+
+/// Single-request load-only kernel, the shape under which every queued
+/// cycle lies on exactly one tracked load's sequential path (see
+/// `integration_contention.rs` for the structural argument).
+fn load_only_workload(cfg: &GpuConfig, lines: &[u64]) -> Workload {
+    let kernel = KernelSpec {
+        name: "k".into(),
+        programs: (0..cfg.cores)
+            .map(|c| {
+                (0..4usize)
+                    .map(|w| {
+                        let mut insts = Vec::new();
+                        for r in 0..2usize {
+                            let rot = (c * 4 + w + r) % lines.len().max(1);
+                            let mut order: Vec<u64> = lines.to_vec();
+                            order.rotate_left(rot);
+                            for &line in &order {
+                                insts.push(WarpInst::Load(vec![(line, 0b1111)]));
+                            }
+                            insts.push(WarpInst::Alu(2));
+                        }
+                        WarpProgram::new(insts)
+                    })
+                    .collect()
+            })
+            .collect(),
+    };
+    Workload {
+        name: "contended".into(),
+        kernels: vec![kernel],
+    }
+}
+
+/// The reconciliation pin: skipped intervals are batch-charged into the
+/// same ledger the reference clock fills in cycle by cycle, so the
+/// breakdown must be identical in both modes AND the latency-sum bound
+/// (Σ queued ≤ Σ load latency) must hold in both.
+#[test]
+fn property_batch_charges_reconcile_with_latency_sums_in_both_modes() {
+    let gen = vec_of(int_range(0, 63), int_range(8, 24));
+    check("event-clock-reconciles", 0xBA7C4, 6, &gen, |lines| {
+        for arch in L1ArchKind::ALL {
+            for event_driven in [true, false] {
+                let mut cfg = GpuConfig::tiny(arch);
+                cfg.engine.event_driven = event_driven;
+                let wl = load_only_workload(&cfg, lines);
+                let mut eng = Engine::new(&cfg);
+                let r = eng.run(&wl);
+                if r.loads == 0 {
+                    return Err(format!("{arch:?}: workload issued no loads"));
+                }
+                let latency_sum = r.l1_mean_load_latency * r.loads as f64;
+                if r.contention.total() as f64 > latency_sum + 1.0 {
+                    return Err(format!(
+                        "{arch:?} event_driven={event_driven}: breakdown total {} \
+                         exceeds latency sum {latency_sum}",
+                        r.contention.total()
+                    ));
+                }
+            }
+            // And the two modes must agree byte for byte on this shape
+            // too (the breakdown is part of the result JSON).
+            let cfg = GpuConfig::tiny(arch);
+            let wl = load_only_workload(&cfg, lines);
+            let (on, off) = run_both(&cfg, &wl);
+            if on != off {
+                return Err(format!("{arch:?}: contended metrics depend on the clock mode"));
+            }
+        }
+        Ok(())
+    });
+}
