@@ -148,7 +148,15 @@ pub struct SimtCore {
     warps: Vec<Warp>,
     schedulers: Vec<Scheduler>,
     pub insts: u64,
+    /// Scheduler-slots that found nothing to issue, one per scheduler
+    /// per stalled cycle.  Clock-cadence-independent: cycles the
+    /// event-driven engine skips are batch-charged on the next `tick`
+    /// (see there), so both clock modes agree exactly.  Host telemetry
+    /// only — never part of result JSON.
     pub stall_cycles: u64,
+    /// Cycle of the previous `tick` (`u64::MAX` before the first); the
+    /// anchor for the batch stall charge across clock jumps.
+    last_tick: u64,
     next_req_id: ReqId,
     /// Earliest cycle this core could issue again (perf fast path: lets
     /// `tick` and the engine skip blocked cores in O(1); u64::MAX = never,
@@ -192,6 +200,7 @@ impl SimtCore {
             schedulers,
             insts: 0,
             stall_cycles: 0,
+            last_tick: u64::MAX,
             next_req_id: (id as u64) << 40,
             next_event_hint: 0,
         }
@@ -224,6 +233,17 @@ impl SimtCore {
     /// and the core as a whole issues at most one *memory* instruction
     /// (the shared LDST port, as in GPGPU-Sim's SM model).
     pub fn tick(&mut self, cycle: u64, out: &mut IssueBatch) {
+        // Batch-charge stalls for cycles the event clock skipped: the
+        // engine only jumps over cycles in which every core's hint
+        // exceeds the clock (the horizon is the min over all hints and
+        // no wake lands inside the jump), which are exactly the cycles
+        // where the reference clock's fast path below charges one stall
+        // per scheduler — so `stall_cycles` agrees in both clock modes.
+        if self.last_tick != u64::MAX {
+            debug_assert!(cycle > self.last_tick, "tick must advance the clock");
+            self.stall_cycles += (cycle - self.last_tick - 1) * self.schedulers.len() as u64;
+        }
+        self.last_tick = cycle;
         // Fast path: nothing can issue before the cached hint.
         if self.next_event_hint > cycle {
             self.stall_cycles += self.schedulers.len() as u64;
@@ -464,6 +484,37 @@ mod tests {
         core.tick(101, &mut out3);
         assert_eq!(out3.insts_issued, 1);
         assert!(core.all_done());
+    }
+
+    /// `stall_cycles` must not depend on the clock cadence: driving the
+    /// same core through every cycle (the reference clock) or only
+    /// through the cycles an event-driven engine visits (issue points
+    /// and wakes — the skipped stretch is batch-charged on the next
+    /// tick) yields the same count.
+    #[test]
+    fn stall_cycles_agree_between_clock_cadences() {
+        let drive = |cycles: &[u64]| {
+            let p = WarpProgram::new(vec![
+                WarpInst::Load(vec![(7, 0b1111)]),
+                WarpInst::Alu(1),
+            ]);
+            let mut core = SimtCore::new(0, &cfg(), vec![p]);
+            let mut out = IssueBatch::default();
+            for &c in cycles {
+                if c == 50 {
+                    // The engine delivers due wakes before ticking.
+                    core.load_complete(0, 50);
+                }
+                core.tick(c, &mut out);
+            }
+            assert!(core.all_done(), "drive must retire the warp");
+            core.stall_cycles
+        };
+        let reference: Vec<u64> = (0..=51).collect();
+        // What an event-driven engine visits: the load issue at 0, the
+        // post-issue hint at 1, the wake at 50, the ALU issue at 51.
+        let jumped = [0, 1, 50, 51];
+        assert_eq!(drive(&reference), drive(&jumped));
     }
 
     #[test]

@@ -189,6 +189,17 @@ impl MultiWorkload {
 /// (deadlock guard for tests; real runs never get close).
 const MAX_KERNEL_CYCLES: u64 = 500_000_000;
 
+/// Period of the stale-entry sweep over the L1/L2 in-flight maps.
+///
+/// Sweeps fire at the fixed boundaries `run_start + k * SWEEP_PERIOD`,
+/// never at clock-cadence-dependent cycles: [`MemSystem::fetch`] treats
+/// a stale in-flight entry differently from an absent one (merge-window
+/// hit vs a full DRAM trip with fills and evictions), so *when* a sweep
+/// runs is metric-visible and must be identical with
+/// `engine.event_driven` on and off.  Public so the differential tests
+/// can size workloads that provably cross a boundary.
+pub const SWEEP_PERIOD: u64 = 65_537;
+
 pub struct Engine {
     cfg: GpuConfig,
     l1: Box<dyn L1Arch>,
@@ -559,10 +570,17 @@ impl Engine {
             }
             self.advance(now, horizon);
 
-            if self.cycle - last_sweep > 65_536 {
-                self.l1.sweep(self.cycle);
-                self.mem.sweep_in_flight(self.cycle);
-                last_sweep = self.cycle;
+            // Stale-entry sweep at fixed boundaries: both clock modes
+            // visit the same (boundary, threshold) pairs no matter how
+            // the clock advanced, so the L2 in-flight merge window can
+            // never depend on `engine.event_driven`.  A jump crossing
+            // several boundaries replays each one; earlier sweeps are
+            // subsumed by later ones (pure `ready > t` filters), but
+            // stepping keeps `last_sweep` mode-independent.
+            while self.cycle - last_sweep >= SWEEP_PERIOD {
+                last_sweep += SWEEP_PERIOD;
+                self.l1.sweep(last_sweep);
+                self.mem.sweep_in_flight(last_sweep);
             }
             if self.cycle - start_cycle > max_cycles {
                 panic!("co-execution '{}' exceeded {max_cycles} cycles", multi.name);
@@ -741,17 +759,20 @@ impl Engine {
             }
             self.advance(now, horizon);
 
-            if self.cycle - last_sweep > 65_536 {
-                self.l1.sweep(self.cycle);
-                self.mem.sweep_in_flight(self.cycle);
-                last_sweep = self.cycle;
+            // Fixed-boundary stale-entry sweep — see the run_multi loop
+            // for why the boundaries must be clock-cadence-independent.
+            while self.cycle - last_sweep >= SWEEP_PERIOD {
+                last_sweep += SWEEP_PERIOD;
+                self.l1.sweep(last_sweep);
+                self.mem.sweep_in_flight(last_sweep);
             }
             if self.cycle - start_cycle > MAX_KERNEL_CYCLES {
                 panic!("kernel '{}' exceeded {MAX_KERNEL_CYCLES} cycles", spec.name);
             }
         }
 
-        // Count stall statistics into the result via core drop.
+        // Per-core stall counters die with the cores here: they are
+        // host telemetry (see `SimtCore::stall_cycles`), never results.
         let l1_after = *self.l1.stats();
         let loads = self.tracker.completed_loads - start_loads;
         let lat = self.tracker.total_latency - start_lat;

@@ -55,6 +55,54 @@ pub fn stall_heavy_scenario(arch: L1ArchKind) -> (GpuConfig, Workload) {
     (cfg, wl)
 }
 
+/// A stall-heavy scenario long enough to cross the engine's periodic
+/// stale-entry sweep boundary ([`crate::engine::SWEEP_PERIOD`] cycles),
+/// with the L2-visible reuse pattern that makes sweep *timing*
+/// metric-visible: every warp streams through a private block of unique
+/// lines (first pass: cold misses that leave L2 in-flight entries
+/// behind), then re-reads the whole block (second pass: the lines have
+/// long been evicted from the thrashed L2, so each re-read lands in
+/// [`crate::l2::MemSystem::fetch`]'s in-flight merge window — a stale
+/// entry is a cheap merge-hit, an absent one a full DRAM trip).  A
+/// sweep that fires at clock-cadence-dependent cycles partitions those
+/// re-reads differently between the two clock modes; the differential
+/// referee in `event_determinism.rs` runs this scenario in both modes
+/// and asserts the run really crossed a boundary.
+pub fn sweep_crossing_scenario(arch: L1ArchKind) -> (GpuConfig, Workload) {
+    let mut cfg = GpuConfig::tiny(arch);
+    cfg.dram.controllers = 1;
+    cfg.dram.queue_depth = 2;
+    let warps = 4;
+    // 8 cores x 4 warps x 384 unique lines = 12_288 cold misses, each
+    // re-read once (24_576 DRAM-bound accesses).  Serialized on the
+    // single throttled controller this runs well past SWEEP_PERIOD
+    // (asserted by the consuming test, not assumed here).
+    let lines_per_warp = 384u64;
+    let mut next_block = 0u64;
+    let programs = (0..cfg.cores)
+        .map(|_| {
+            (0..warps)
+                .map(|_| {
+                    let base = next_block * lines_per_warp;
+                    next_block += 1;
+                    let block = base..base + lines_per_warp;
+                    let insts = block
+                        .clone()
+                        .chain(block)
+                        .map(|line| WarpInst::Load(vec![(line, 0b1111)]))
+                        .collect();
+                    WarpProgram::new(insts)
+                })
+                .collect()
+        })
+        .collect();
+    let wl = Workload {
+        name: "sweep-crossing".into(),
+        kernels: vec![KernelSpec { name: "reuse-storm".into(), programs }],
+    };
+    (cfg, wl)
+}
+
 /// A reusable random-value generator.
 pub struct Gen<T> {
     f: Box<dyn Fn(&mut Pcg32) -> T>,

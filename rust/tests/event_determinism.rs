@@ -19,8 +19,8 @@
 use ata_cache::config::{GpuConfig, L1ArchKind};
 use ata_cache::coordinator::Sweep;
 use ata_cache::core::{WarpInst, WarpProgram};
-use ata_cache::engine::{Engine, KernelSpec, Workload};
-use ata_cache::testkit::{check, int_range, vec_of};
+use ata_cache::engine::{Engine, KernelSpec, SWEEP_PERIOD, Workload};
+use ata_cache::testkit::{check, int_range, sweep_crossing_scenario, vec_of};
 use ata_cache::trace::{co_workload, synth};
 
 /// Run one workload in both clock modes and return the two result JSONs
@@ -115,6 +115,54 @@ fn multi_json_is_byte_identical_event_driven_on_and_off() {
         run(true),
         run(false),
         "co-run metrics must not depend on engine.event_driven"
+    );
+}
+
+/// The sweep-timing referee: the engine periodically sweeps the L1/L2
+/// in-flight maps, and L2 treats a *stale* in-flight entry differently
+/// from an *absent* one (merge-window hit vs full DRAM trip), so the
+/// sweep's simulated time is metric-visible.  This run crosses the
+/// [`SWEEP_PERIOD`] boundary (asserted, not assumed) under L2 eviction
+/// pressure with post-boundary re-reads — the exact shape where a
+/// clock-cadence-dependent sweep cycle would make the two modes drift.
+#[test]
+fn sweep_boundary_crossing_run_is_byte_identical() {
+    let (cfg, wl) = sweep_crossing_scenario(L1ArchKind::Ata);
+    let mut cfg_on = cfg.clone();
+    cfg_on.engine.event_driven = true;
+    let mut cfg_off = cfg;
+    cfg_off.engine.event_driven = false;
+    let mut eng_on = Engine::new(&cfg_on);
+    let r_on = eng_on.run(&wl);
+    // The scenario must really cross at least one sweep boundary while
+    // the event clock jumps — otherwise this referee is vacuous.
+    assert!(
+        r_on.cycles > SWEEP_PERIOD,
+        "scenario too short to cross the sweep boundary: {} <= {SWEEP_PERIOD}",
+        r_on.cycles
+    );
+    assert!(
+        eng_on.event_stats().skipped() > 0,
+        "the stall-heavy run must exercise clock jumps"
+    );
+    // Some re-reads must take the absent-entry DRAM path (their
+    // in-flight entries were swept); if every re-read merged into a
+    // stale entry the sweep would be invisible and the run would prove
+    // nothing about its timing.
+    assert!(
+        r_on.dram_reads > r_on.loads / 2,
+        "no post-sweep re-read reached DRAM (reads {}, loads {}): \
+         the sweep was not metric-visible in this run",
+        r_on.dram_reads,
+        r_on.loads
+    );
+    let mut eng_off = Engine::new(&cfg_off);
+    let r_off = eng_off.run(&wl);
+    assert_eq!(eng_off.event_stats().skipped(), 0);
+    assert_eq!(
+        r_on.to_json().pretty(),
+        r_off.to_json().pretty(),
+        "metrics across a sweep boundary must not depend on engine.event_driven"
     );
 }
 
