@@ -18,12 +18,13 @@ use ata_cache::trace::signature::sample_core_traces;
 use ata_cache::trace::{apps, LocalityClass};
 use ata_cache::util::cli::Args;
 use ata_cache::util::table::{pct_delta, BarChart, Table};
+// lint: allow(wall-clock) — demo prints host elapsed time; nothing simulated reads it
 use std::time::Instant;
 
 fn main() {
     let args = Args::from_env().unwrap();
     let scale = args.get_f64("scale", 0.5).unwrap();
-    let t0 = Instant::now();
+    let t0 = Instant::now(); // lint: allow(wall-clock) — host elapsed-time display only
 
     // ---- Stage 1: classify workloads through the PJRT artifact ---------
     println!("== stage 1: locality classification via AOT artifact (PJRT) ==");

@@ -1,0 +1,511 @@
+//! Comment/string-aware source scrubbing for the lint pass.
+//!
+//! The linter never parses Rust for real.  Every rule instead scans a
+//! *scrubbed* copy of the file in which comments and string/char
+//! literals have been blanked to spaces — byte-for-byte the same length
+//! as the raw text, newlines preserved — so offsets and line numbers
+//! stay aligned while doc comments and string contents can never
+//! false-positive an identifier scan.  Alongside the scrub the lexer
+//! collects the inline suppression comments (the `allow(<rule>)` form,
+//! see [`Suppression`]) and the `#[cfg(test)] mod` regions that some
+//! rules skip.
+//!
+//! Handled literal forms: `//`/`///`/`//!` line comments, nested
+//! `/* */` block comments, `"…"` strings with escapes, `b"…"` byte
+//! strings, `r"…"`/`r#"…"#`/`br#"…"#` raw strings, and `'x'`/`'\n'`
+//! char literals (disambiguated from `'lifetime` markers).
+
+/// One inline lint suppression comment.
+///
+/// Syntax: a line comment whose body is
+/// `lint: allow(<rule-slug>) — <justification>` (any of `—`, `-`, `:`
+/// may separate the justification).  An empty justification, or a slug
+/// no registered rule owns, is reported by the `suppression-justification`
+/// rule.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Suppression {
+    /// 1-based line the comment sits on.
+    pub line: u32,
+    /// True when the comment is alone on its line; the suppression then
+    /// also covers the *next* line (the annotated statement).
+    pub standalone: bool,
+    /// Rule slug inside `allow(…)` (empty when the comment is malformed).
+    pub rule: String,
+    /// True when a non-empty justification follows the `allow(…)`.
+    pub justified: bool,
+}
+
+/// Scrub result for one source file.
+#[derive(Debug, Clone)]
+pub struct Scrubbed {
+    /// Same length as the raw text; comments and string/char literals
+    /// replaced by spaces (newlines kept).
+    pub text: String,
+    /// Inline suppressions parsed from the line comments.
+    pub suppressions: Vec<Suppression>,
+    /// Byte ranges of `#[cfg(test)] mod … { … }` blocks.
+    pub test_regions: Vec<(usize, usize)>,
+}
+
+impl Scrubbed {
+    pub fn in_test_region(&self, off: usize) -> bool {
+        self.test_regions.iter().any(|&(a, b)| a <= off && off < b)
+    }
+}
+
+pub fn is_ident_byte(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+fn prev_is_ident(b: &[u8], i: usize) -> bool {
+    i > 0 && is_ident_byte(b[i - 1])
+}
+
+/// Byte length of a raw-string literal starting at `i` (`r"…"`,
+/// `r#"…"#`, `br#"…"#`), or None when `i` does not start one.
+fn raw_str_len(b: &[u8], i: usize) -> Option<usize> {
+    let mut j = i;
+    if j < b.len() && b[j] == b'b' {
+        j += 1;
+    }
+    if j >= b.len() || b[j] != b'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while j < b.len() && b[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= b.len() || b[j] != b'"' {
+        return None;
+    }
+    j += 1;
+    while j < b.len() {
+        if b[j] == b'"' {
+            let mut k = 0;
+            while k < hashes && j + 1 + k < b.len() && b[j + 1 + k] == b'#' {
+                k += 1;
+            }
+            if k == hashes {
+                return Some(j + 1 + hashes - i);
+            }
+        }
+        j += 1;
+    }
+    Some(b.len() - i) // unterminated: blank to EOF
+}
+
+/// End (exclusive) of a char literal opening at `i`, or None when the
+/// quote is a lifetime marker.
+fn char_literal_end(b: &[u8], i: usize) -> Option<usize> {
+    let n = b.len();
+    if i + 1 >= n {
+        return None;
+    }
+    if b[i + 1] == b'\\' {
+        // Escaped char ('\n', '\u{1F600}'): bounded scan to the close.
+        let mut j = i + 2;
+        let limit = (i + 14).min(n);
+        while j < limit {
+            if b[j] == b'\'' {
+                return Some(j + 1);
+            }
+            j += 1;
+        }
+        return None;
+    }
+    // Unescaped: exactly one UTF-8 char then a closing quote; anything
+    // else ('static, <'a>) is a lifetime.
+    let ch_len = match b[i + 1] {
+        c if c < 0x80 => 1,
+        c if c >= 0xF0 => 4,
+        c if c >= 0xE0 => 3,
+        _ => 2,
+    };
+    let j = i + 1 + ch_len;
+    if j < n && b[j] == b'\'' {
+        Some(j + 1)
+    } else {
+        None
+    }
+}
+
+/// Scrub `src`: blank comments and literals, collect suppressions and
+/// `#[cfg(test)] mod` regions.
+pub fn scrub(src: &str) -> Scrubbed {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut out = b.to_vec();
+    let mut line_comments: Vec<(usize, usize)> = Vec::new();
+    let blank = |out: &mut Vec<u8>, from: usize, to: usize| {
+        for slot in &mut out[from..to] {
+            if *slot != b'\n' {
+                *slot = b' ';
+            }
+        }
+    };
+    let mut i = 0;
+    while i < n {
+        match b[i] {
+            b'/' if i + 1 < n && b[i + 1] == b'/' => {
+                let start = i;
+                let mut j = i + 2;
+                while j < n && b[j] != b'\n' {
+                    j += 1;
+                }
+                line_comments.push((start, j));
+                blank(&mut out, start, j);
+                i = j;
+            }
+            b'/' if i + 1 < n && b[i + 1] == b'*' => {
+                let start = i;
+                let mut depth = 1u32;
+                let mut j = i + 2;
+                while j < n && depth > 0 {
+                    if j + 1 < n && b[j] == b'/' && b[j + 1] == b'*' {
+                        depth += 1;
+                        j += 2;
+                    } else if j + 1 < n && b[j] == b'*' && b[j + 1] == b'/' {
+                        depth -= 1;
+                        j += 2;
+                    } else {
+                        j += 1;
+                    }
+                }
+                blank(&mut out, start, j);
+                i = j;
+            }
+            b'r' | b'b' if !prev_is_ident(b, i) && raw_str_len(b, i).is_some() => {
+                let len = raw_str_len(b, i).unwrap();
+                blank(&mut out, i, i + len);
+                i += len;
+            }
+            b'"' => {
+                let start = i;
+                let mut j = i + 1;
+                while j < n {
+                    match b[j] {
+                        b'\\' => j += 2,
+                        b'"' => {
+                            j += 1;
+                            break;
+                        }
+                        _ => j += 1,
+                    }
+                }
+                let j = j.min(n);
+                blank(&mut out, start, j);
+                i = j;
+            }
+            b'\'' => {
+                if let Some(end) = char_literal_end(b, i) {
+                    blank(&mut out, i, end);
+                    i = end;
+                } else {
+                    i += 1;
+                }
+            }
+            _ => i += 1,
+        }
+    }
+    let text = String::from_utf8(out).expect("scrub only writes ASCII spaces");
+    let starts = line_starts(src);
+    let suppressions = parse_suppressions(src, &line_comments, &starts);
+    let test_regions = find_test_regions(&text);
+    Scrubbed {
+        text,
+        suppressions,
+        test_regions,
+    }
+}
+
+fn parse_suppressions(
+    src: &str,
+    comments: &[(usize, usize)],
+    starts: &[usize],
+) -> Vec<Suppression> {
+    let mut out = Vec::new();
+    for &(cstart, cend) in comments {
+        // Strip the `//` plus any doc-comment marker, then require the
+        // body to *begin* with the lint keyword — a comment that merely
+        // mentions the syntax (in backticks, mid-sentence) is prose.
+        let body = src[cstart + 2..cend]
+            .trim_start_matches(['/', '!'])
+            .trim();
+        let Some(rest) = body.strip_prefix("lint:") else {
+            continue;
+        };
+        let line = line_of(starts, cstart);
+        let line_start = starts[(line - 1) as usize];
+        let standalone = src[line_start..cstart].trim().is_empty();
+        let (rule, justified) = match rest.trim().strip_prefix("allow(") {
+            Some(r) => match r.find(')') {
+                Some(p) => {
+                    let rule = r[..p].trim().to_string();
+                    let just = r[p + 1..].trim_start_matches(|c: char| {
+                        c.is_whitespace() || matches!(c, '-' | '—' | ':' | ',')
+                    });
+                    (rule, !just.trim().is_empty())
+                }
+                None => (String::new(), false),
+            },
+            None => (String::new(), false),
+        };
+        out.push(Suppression {
+            line,
+            standalone,
+            rule,
+            justified,
+        });
+    }
+    out
+}
+
+/// Expect `tok` at `*j` after optional whitespace; advance past it.
+fn expect_tok(s: &str, j: &mut usize, tok: &str) -> bool {
+    let b = s.as_bytes();
+    while *j < b.len() && b[*j].is_ascii_whitespace() {
+        *j += 1;
+    }
+    if s[*j..].starts_with(tok) {
+        // Word tokens must end at a word boundary (`cfg` vs `cfg_attr`).
+        let end = *j + tok.len();
+        if tok.bytes().all(is_ident_byte) && end < b.len() && is_ident_byte(b[end]) {
+            return false;
+        }
+        *j = end;
+        true
+    } else {
+        false
+    }
+}
+
+/// Byte ranges of `#[cfg(test)] mod … { … }` blocks in scrubbed text.
+fn find_test_regions(scrubbed: &str) -> Vec<(usize, usize)> {
+    let b = scrubbed.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while let Some(off) = scrubbed[i..].find('#') {
+        let p = i + off;
+        i = p + 1;
+        let mut j = p + 1;
+        if !(expect_tok(scrubbed, &mut j, "[")
+            && expect_tok(scrubbed, &mut j, "cfg")
+            && expect_tok(scrubbed, &mut j, "(")
+            && expect_tok(scrubbed, &mut j, "test")
+            && expect_tok(scrubbed, &mut j, ")")
+            && expect_tok(scrubbed, &mut j, "]")
+            && expect_tok(scrubbed, &mut j, "mod"))
+        {
+            continue;
+        }
+        while j < b.len() && b[j].is_ascii_whitespace() {
+            j += 1;
+        }
+        while j < b.len() && is_ident_byte(b[j]) {
+            j += 1;
+        }
+        while j < b.len() && b[j].is_ascii_whitespace() {
+            j += 1;
+        }
+        if j < b.len() && b[j] == b'{' {
+            if let Some(end) = matching_delim(scrubbed, j) {
+                out.push((p, end + 1));
+                i = end;
+            }
+        }
+    }
+    out
+}
+
+/// Byte offsets where each line begins (index 0 = line 1).
+pub fn line_starts(src: &str) -> Vec<usize> {
+    std::iter::once(0)
+        .chain(
+            src.bytes()
+                .enumerate()
+                .filter(|&(_, c)| c == b'\n')
+                .map(|(i, _)| i + 1),
+        )
+        .collect()
+}
+
+/// 1-based line number of byte offset `off`.
+pub fn line_of(starts: &[usize], off: usize) -> u32 {
+    starts.partition_point(|&s| s <= off) as u32
+}
+
+/// Next whole-word occurrence of `w` at or after `from`.
+pub fn find_word(s: &str, from: usize, w: &str) -> Option<usize> {
+    let b = s.as_bytes();
+    let mut i = from;
+    while let Some(off) = s[i..].find(w) {
+        let p = i + off;
+        let before_ok = p == 0 || !is_ident_byte(b[p - 1]);
+        let after = p + w.len();
+        let after_ok = after >= b.len() || !is_ident_byte(b[after]);
+        if before_ok && after_ok {
+            return Some(p);
+        }
+        i = p + 1;
+    }
+    None
+}
+
+/// All whole-word occurrences of `w` in `s`.
+pub fn words(s: &str, w: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while let Some(p) = find_word(s, i, w) {
+        out.push(p);
+        i = p + w.len();
+    }
+    out
+}
+
+/// First non-whitespace offset at or after `i`.
+pub fn skip_ws(s: &str, mut i: usize) -> usize {
+    let b = s.as_bytes();
+    while i < b.len() && b[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+/// Offset of the last non-whitespace byte strictly before `i`, or None.
+pub fn rskip_ws(s: &str, i: usize) -> Option<usize> {
+    let b = s.as_bytes();
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        if !b[j].is_ascii_whitespace() {
+            return Some(j);
+        }
+    }
+    None
+}
+
+/// Matching close delimiter for the `{`/`(`/`[` at `open` (scrubbed
+/// text only — literals would otherwise unbalance the count).
+pub fn matching_delim(s: &str, open: usize) -> Option<usize> {
+    let b = s.as_bytes();
+    let (o, c) = match b[open] {
+        b'{' => (b'{', b'}'),
+        b'(' => (b'(', b')'),
+        b'[' => (b'[', b']'),
+        _ => return None,
+    };
+    let mut depth = 0i64;
+    for (j, &ch) in b.iter().enumerate().skip(open) {
+        if ch == o {
+            depth += 1;
+        } else if ch == c {
+            depth -= 1;
+            if depth == 0 {
+                return Some(j);
+            }
+        }
+    }
+    None
+}
+
+/// End (exclusive-ish: offset of the closing `}`) of the innermost
+/// block enclosing `pos`, or `s.len()` when `pos` is at top level.
+pub fn enclosing_block_end(s: &str, pos: usize) -> usize {
+    let b = s.as_bytes();
+    let mut depth = 0i64;
+    for (j, &ch) in b.iter().enumerate().skip(pos) {
+        if ch == b'{' {
+            depth += 1;
+        } else if ch == b'}' {
+            if depth == 0 {
+                return j;
+            }
+            depth -= 1;
+        }
+    }
+    s.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scrub_blanks_comments_and_strings_preserving_layout() {
+        let src = "let x = \"Instant\"; // Instant here\nlet y = 1;\n";
+        let s = scrub(src);
+        assert_eq!(s.text.len(), src.len());
+        assert_eq!(s.text.matches('\n').count(), 2);
+        assert!(!s.text.contains("Instant"));
+        assert!(s.text.contains("let x ="));
+        assert!(s.text.contains("let y = 1;"));
+    }
+
+    #[test]
+    fn scrub_handles_raw_strings_and_nesting() {
+        let src = "let a = r#\"has \"quotes\" and .reserve(\"#; /* outer /* inner */ still */ let b = 2;";
+        let s = scrub(src);
+        assert!(!s.text.contains("reserve"));
+        assert!(!s.text.contains("inner"));
+        assert!(s.text.contains("let b = 2;"));
+    }
+
+    #[test]
+    fn char_literals_blank_but_lifetimes_survive() {
+        let src = "fn f<'a>(x: &'a str) { let c = '\"'; let d = 'x'; }";
+        let s = scrub(src);
+        assert!(s.text.contains("<'a>"), "lifetime kept: {}", s.text);
+        assert!(s.text.contains("&'a str"));
+        assert!(!s.text.contains("'x'"));
+        // The '"' char literal must not open a string state.
+        assert!(s.text.contains("let d ="));
+    }
+
+    #[test]
+    fn suppression_parses_rule_and_justification() {
+        let src = "x(); // lint: allow(wall-clock) — host telemetry only\ny();\n// lint: allow(grant-discipline)\nz();\n";
+        let s = scrub(src);
+        assert_eq!(s.suppressions.len(), 2);
+        let a = &s.suppressions[0];
+        assert_eq!((a.line, a.standalone, a.justified), (1, false, true));
+        assert_eq!(a.rule, "wall-clock");
+        let b = &s.suppressions[1];
+        assert_eq!((b.line, b.standalone, b.justified), (3, true, false));
+        assert_eq!(b.rule, "grant-discipline");
+    }
+
+    #[test]
+    fn prose_mentioning_the_syntax_is_not_a_suppression() {
+        let src = "//! Use `lint: allow(rule)` comments to suppress findings.\nfn f() {}\n";
+        assert!(scrub(src).suppressions.is_empty());
+    }
+
+    #[test]
+    fn test_regions_cover_cfg_test_mod() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.reserve(1); }\n}\nfn after() {}\n";
+        let s = scrub(src);
+        assert_eq!(s.test_regions.len(), 1);
+        let p = s.text.find("reserve").unwrap();
+        assert!(s.in_test_region(p));
+        let q = s.text.find("live").unwrap();
+        assert!(!s.in_test_region(q));
+        let r = s.text.find("after").unwrap();
+        assert!(!s.in_test_region(r));
+    }
+
+    #[test]
+    fn cfg_attr_is_not_a_test_region() {
+        let src = "#[cfg_attr(test, derive(Debug))]\nstruct S;\n#[cfg(test)]\nuse foo;\nfn f() {}\n";
+        assert!(scrub(src).test_regions.is_empty());
+    }
+
+    #[test]
+    fn word_search_respects_boundaries() {
+        let s = "reserve reserved my_reserve .reserve(";
+        let hits = words(s, "reserve");
+        assert_eq!(hits.len(), 2);
+        assert_eq!(line_of(&line_starts("a\nb\nc"), 4), 3);
+    }
+}

@@ -1,0 +1,75 @@
+//! Source-level contract lints (`ata-sim lint`).
+//!
+//! Six PRs of prose contracts, machine-checked: determinism (no wall
+//! clock in result paths, no unordered-map iteration during
+//! serialization), contention accounting (every reservation's queued
+//! cycles must be charged), the PR 5 mutation-point invariant (tag
+//! mutations only through the `PipelineCtx` helpers), the
+//! telemetry-exclusion contract (`EventStats`/`ResidencyStats` stay out
+//! of result JSON), and the PR 6 manifest lesson (every harness file
+//! needs its Cargo.toml stanza, or it silently never runs).
+//!
+//! The pass is std-only and host-side: it reads sources, never runs
+//! them, and cannot perturb simulated metrics.  Rules scan a scrubbed
+//! copy of each file ([`lexer`]) so comments and string literals never
+//! false-positive.  Intentional exceptions are annotated in place with
+//! a justified suppression comment (the `allow(<rule>)` form described
+//! in [`lexer::Suppression`]); the suppression itself is linted.
+//!
+//! Entry points: [`run_lint`] walks a repo root; [`Workspace`] lints an
+//! in-memory file set (what the fixture tests use).
+
+pub mod lexer;
+pub mod registry;
+pub mod report;
+pub mod rules;
+
+pub use registry::{applies, spec, RuleId, RuleSpec, Severity, REGISTRY};
+pub use report::{Finding, LintReport};
+pub use rules::{SourceFile, Workspace};
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Directories scanned for `.rs` sources, relative to the repo root.
+pub const SCAN_ROOTS: [&str; 4] = ["rust/src", "rust/tests", "rust/benches", "examples"];
+
+/// Lint the repository rooted at `root`: walk [`SCAN_ROOTS`], read
+/// Cargo.toml, run every registered rule.
+pub fn run_lint(root: &Path) -> io::Result<LintReport> {
+    let mut files = Vec::new();
+    for sub in SCAN_ROOTS {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            collect_rs(&dir, root, &mut files)?;
+        }
+    }
+    // Deterministic order regardless of directory-entry order.
+    files.sort_by(|a, b| a.path.cmp(&b.path));
+    let cargo_toml = fs::read_to_string(root.join("Cargo.toml")).ok();
+    let ws = Workspace { files, cargo_toml };
+    Ok(ws.lint())
+}
+
+fn collect_rs(dir: &Path, root: &Path, out: &mut Vec<SourceFile>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, root, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            let raw = fs::read_to_string(&p)?;
+            let rel = p
+                .strip_prefix(root)
+                .unwrap_or(&p)
+                .to_string_lossy()
+                .replace('\\', "/");
+            out.push(SourceFile::new(rel, raw));
+        }
+    }
+    Ok(())
+}

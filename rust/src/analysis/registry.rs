@@ -1,0 +1,192 @@
+//! Rule registry: identities, severities, and per-rule scope.
+//!
+//! Each rule guards one contract the repo's PR history established the
+//! hard way (see the "Invariants as lints" table in
+//! `docs/ARCHITECTURE.md`).  A rule's scope is declarative: exact files
+//! and directory prefixes it never applies to (`allow_files` /
+//! `allow_dirs`), plus whether `#[cfg(test)] mod` regions are skipped
+//! (`skip_tests`) — test code exercises substrate APIs directly and is
+//! not part of the accounting contracts.
+
+use std::fmt;
+
+/// Stable identifier of one lint rule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum RuleId {
+    /// Every file under `rust/tests/`, `rust/benches/`, `examples/` has
+    /// a matching `[[test]]`/`[[bench]]`/`[[example]]` Cargo.toml stanza.
+    ManifestDecl,
+    /// `std::time::{Instant, SystemTime}` only at host-telemetry sites.
+    WallClock,
+    /// No unordered-map iteration inside a `to_json` body without a sort.
+    UnorderedIterSerialize,
+    /// Every `.reserve(`/`.occupy_until(` Grant must have its `queued`
+    /// cycles read (or the Grant must escape to the caller).
+    GrantDiscipline,
+    /// Tag-array mutations only through the `PipelineCtx` helpers.
+    TagMutationHelper,
+    /// `EventStats`/`ResidencyStats` fields never serialize into results.
+    StatsExclusion,
+    /// Suppression comments must be justified and name a real rule.
+    SuppressionJustification,
+}
+
+impl RuleId {
+    pub const ALL: [RuleId; 7] = [
+        RuleId::ManifestDecl,
+        RuleId::WallClock,
+        RuleId::UnorderedIterSerialize,
+        RuleId::GrantDiscipline,
+        RuleId::TagMutationHelper,
+        RuleId::StatsExclusion,
+        RuleId::SuppressionJustification,
+    ];
+
+    pub fn slug(self) -> &'static str {
+        match self {
+            RuleId::ManifestDecl => "manifest-decl",
+            RuleId::WallClock => "wall-clock",
+            RuleId::UnorderedIterSerialize => "unordered-iter-serialize",
+            RuleId::GrantDiscipline => "grant-discipline",
+            RuleId::TagMutationHelper => "tag-mutation-helper",
+            RuleId::StatsExclusion => "stats-exclusion",
+            RuleId::SuppressionJustification => "suppression-justification",
+        }
+    }
+
+    pub fn from_slug(s: &str) -> Option<RuleId> {
+        RuleId::ALL.into_iter().find(|r| r.slug() == s)
+    }
+}
+
+impl fmt::Display for RuleId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.slug())
+    }
+}
+
+/// Finding severity.  Every shipped rule is an error today (the lint
+/// exits nonzero); the distinction exists so a future advisory rule
+/// does not need a model change.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Error,
+    Warning,
+}
+
+/// Declarative scope + metadata for one rule.
+#[derive(Debug, Clone, Copy)]
+pub struct RuleSpec {
+    pub id: RuleId,
+    pub severity: Severity,
+    pub description: &'static str,
+    /// Exact repo-relative paths the rule never applies to.
+    pub allow_files: &'static [&'static str],
+    /// Repo-relative directory prefixes the rule never applies to.
+    pub allow_dirs: &'static [&'static str],
+    /// Skip `#[cfg(test)] mod` regions inside checked files.
+    pub skip_tests: bool,
+}
+
+pub const REGISTRY: [RuleSpec; 7] = [
+    RuleSpec {
+        id: RuleId::ManifestDecl,
+        severity: Severity::Error,
+        description: "test/bench/example file has no Cargo.toml stanza (its harness silently never runs)",
+        allow_files: &[],
+        allow_dirs: &[],
+        skip_tests: false,
+    },
+    RuleSpec {
+        id: RuleId::WallClock,
+        severity: Severity::Error,
+        description: "std::time::{Instant,SystemTime} outside host-telemetry sites (wall clock in a result path breaks byte-identity)",
+        allow_files: &["rust/src/bench_harness.rs"],
+        allow_dirs: &["rust/benches/"],
+        skip_tests: false,
+    },
+    RuleSpec {
+        id: RuleId::UnorderedIterSerialize,
+        severity: Severity::Error,
+        description: "unordered map/set iterated inside a to_json body without a sort (output order is hash-dependent)",
+        allow_files: &[],
+        allow_dirs: &[],
+        skip_tests: false,
+    },
+    RuleSpec {
+        id: RuleId::GrantDiscipline,
+        severity: Severity::Error,
+        description: "reservation Grant dropped or its .queued never read (queued cycles would go uncharged)",
+        allow_files: &[],
+        allow_dirs: &["rust/tests/", "rust/benches/"],
+        skip_tests: true,
+    },
+    RuleSpec {
+        id: RuleId::TagMutationHelper,
+        severity: Severity::Error,
+        description: "direct tag-array mutation outside the PipelineCtx helpers (residency index would go stale)",
+        allow_files: &[
+            "rust/src/l1arch/pipeline.rs",
+            "rust/src/l1arch/residency.rs",
+            "rust/src/cache/tag_array.rs",
+        ],
+        allow_dirs: &["rust/tests/", "rust/benches/"],
+        skip_tests: true,
+    },
+    RuleSpec {
+        id: RuleId::StatsExclusion,
+        severity: Severity::Error,
+        description: "host-telemetry stats field serialized in a to_json body (telemetry must stay out of result JSON)",
+        allow_files: &[],
+        allow_dirs: &[],
+        skip_tests: false,
+    },
+    RuleSpec {
+        id: RuleId::SuppressionJustification,
+        severity: Severity::Error,
+        description: "lint suppression without a justification, or naming an unknown rule",
+        allow_files: &[],
+        allow_dirs: &[],
+        skip_tests: false,
+    },
+];
+
+/// Spec lookup (every `RuleId` has exactly one registry entry).
+pub fn spec(id: RuleId) -> &'static RuleSpec {
+    REGISTRY
+        .iter()
+        .find(|s| s.id == id)
+        .expect("registry covers every RuleId")
+}
+
+/// Does `rule` apply to the file at repo-relative `path`?
+pub fn applies(rule: RuleId, path: &str) -> bool {
+    let s = spec(rule);
+    !(s.allow_files.contains(&path) || s.allow_dirs.iter().any(|d| path.starts_with(d)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slugs_round_trip_and_registry_is_total() {
+        for id in RuleId::ALL {
+            assert_eq!(RuleId::from_slug(id.slug()), Some(id));
+            assert_eq!(spec(id).id, id);
+            assert_eq!(spec(id).severity, Severity::Error);
+        }
+        assert_eq!(RuleId::from_slug("no-such-rule"), None);
+        assert_eq!(REGISTRY.len(), RuleId::ALL.len());
+    }
+
+    #[test]
+    fn scope_filters_files_and_dirs() {
+        assert!(!applies(RuleId::WallClock, "rust/src/bench_harness.rs"));
+        assert!(!applies(RuleId::WallClock, "rust/benches/fig8_ipc.rs"));
+        assert!(applies(RuleId::WallClock, "rust/src/engine/mod.rs"));
+        assert!(!applies(RuleId::TagMutationHelper, "rust/src/l1arch/pipeline.rs"));
+        assert!(applies(RuleId::TagMutationHelper, "rust/src/l2/mod.rs"));
+        assert!(!applies(RuleId::GrantDiscipline, "rust/tests/lint_rules.rs"));
+    }
+}

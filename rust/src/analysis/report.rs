@@ -1,0 +1,148 @@
+//! Finding model and the two output surfaces of `ata-sim lint`: a
+//! column-aligned human table and a machine-readable JSON object (the
+//! `--json` form CI greps for `"findings"` / `"rules_checked"`).
+
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+use super::registry::{RuleId, REGISTRY};
+
+/// One rule violation at one source location.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: RuleId,
+    /// Repo-relative path with `/` separators.
+    pub file: String,
+    /// 1-based line.
+    pub line: u32,
+    /// The offending source line (trimmed), or a synthesized message
+    /// for repo-level rules like `manifest-decl`.
+    pub excerpt: String,
+}
+
+impl Finding {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("rule", Json::str(self.rule.slug())),
+            ("file", Json::str(self.file.as_str())),
+            ("line", Json::num(self.line as f64)),
+            ("excerpt", Json::str(self.excerpt.as_str())),
+        ])
+    }
+}
+
+/// Result of one full lint pass.
+#[derive(Debug, Clone)]
+pub struct LintReport {
+    /// Unsuppressed findings, sorted by (file, line, rule slug).
+    pub findings: Vec<Finding>,
+    /// Slugs of every rule the pass evaluated.
+    pub rules_checked: Vec<&'static str>,
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    pub fn new(mut findings: Vec<Finding>, files_scanned: usize) -> LintReport {
+        findings.sort_by(|a, b| {
+            (a.file.as_str(), a.line, a.rule.slug()).cmp(&(b.file.as_str(), b.line, b.rule.slug()))
+        });
+        LintReport {
+            findings,
+            rules_checked: REGISTRY.iter().map(|s| s.id.slug()).collect(),
+            files_scanned,
+        }
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "findings",
+                Json::arr(self.findings.iter().map(Finding::to_json).collect()),
+            ),
+            (
+                "rules_checked",
+                Json::arr(self.rules_checked.iter().map(|s| Json::str(*s)).collect()),
+            ),
+            ("files_scanned", Json::num(self.files_scanned as f64)),
+            ("clean", Json::Bool(self.is_clean())),
+        ])
+    }
+
+    /// Human-readable rendering: a table of findings (or a one-line
+    /// all-clear) plus a summary line.
+    pub fn render(&self) -> String {
+        if self.is_clean() {
+            return format!(
+                "lint: clean — {} files scanned, {} rules\n",
+                self.files_scanned,
+                self.rules_checked.len()
+            );
+        }
+        let mut t = Table::new("lint findings").header(&["rule", "location", "excerpt"]);
+        for f in &self.findings {
+            let mut excerpt = f.excerpt.clone();
+            if excerpt.chars().count() > 72 {
+                excerpt = excerpt.chars().take(69).collect::<String>() + "...";
+            }
+            t.row(vec![
+                f.rule.slug().to_string(),
+                format!("{}:{}", f.file, f.line),
+                excerpt,
+            ]);
+        }
+        format!(
+            "{}\n{} finding(s) across {} scanned files\n",
+            t.render(),
+            self.findings.len(),
+            self.files_scanned
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(rule: RuleId, file: &str, line: u32) -> Finding {
+        Finding {
+            rule,
+            file: file.to_string(),
+            line,
+            excerpt: "let t = Instant::now();".to_string(),
+        }
+    }
+
+    #[test]
+    fn report_sorts_and_serializes_required_fields() {
+        let r = LintReport::new(
+            vec![
+                finding(RuleId::WallClock, "b.rs", 9),
+                finding(RuleId::GrantDiscipline, "a.rs", 3),
+            ],
+            5,
+        );
+        assert_eq!(r.findings[0].file, "a.rs");
+        let j = r.to_json();
+        assert_eq!(j.get("findings").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(j.get("rules_checked").unwrap().as_arr().unwrap().len(), 7);
+        assert_eq!(j.get("clean").unwrap().as_bool(), Some(false));
+        let f0 = &j.get("findings").unwrap().as_arr().unwrap()[0];
+        assert_eq!(f0.get("rule").unwrap().as_str(), Some("grant-discipline"));
+        assert_eq!(f0.get("line").unwrap().as_u64(), Some(3));
+        assert!(!r.is_clean());
+        assert!(r.render().contains("b.rs:9"));
+    }
+
+    #[test]
+    fn clean_report_renders_one_line() {
+        let r = LintReport::new(vec![], 42);
+        assert!(r.is_clean());
+        assert_eq!(r.to_json().get("clean").unwrap().as_bool(), Some(true));
+        assert!(r.render().contains("clean"));
+        assert!(r.render().contains("42"));
+    }
+}

@@ -1,0 +1,804 @@
+//! The six contract rules, applied to scrubbed sources.
+//!
+//! Every rule is a token-level scan over [`lexer::Scrubbed`] text — no
+//! type information, no real parse — so each one encodes a deliberately
+//! narrow structural pattern plus escape hatches for the shapes it
+//! cannot analyze (a `Grant` returned as a tail expression, a
+//! destructuring binding).  False negatives are acceptable; false
+//! positives are not, because the repo must stay lint-clean and every
+//! suppression needs a human justification.
+
+use std::collections::BTreeSet;
+
+use super::lexer::{self, Scrubbed};
+use super::registry::{self, RuleId};
+use super::report::{Finding, LintReport};
+
+/// One lexed source file, addressed by its repo-relative path.
+#[derive(Debug, Clone)]
+pub struct SourceFile {
+    /// Repo-relative path with `/` separators (e.g. `rust/src/lib.rs`).
+    pub path: String,
+    pub raw: String,
+    pub lex: Scrubbed,
+    starts: Vec<usize>,
+}
+
+impl SourceFile {
+    pub fn new(path: impl Into<String>, raw: impl Into<String>) -> SourceFile {
+        let raw = raw.into();
+        let lex = lexer::scrub(&raw);
+        let starts = lexer::line_starts(&raw);
+        SourceFile {
+            path: path.into(),
+            raw,
+            lex,
+            starts,
+        }
+    }
+
+    /// (1-based line, trimmed raw source line) at byte offset `off`.
+    fn excerpt_at(&self, off: usize) -> (u32, String) {
+        let line = lexer::line_of(&self.starts, off);
+        let ls = self.starts[(line - 1) as usize];
+        let le = self.raw[ls..]
+            .find('\n')
+            .map_or(self.raw.len(), |p| ls + p);
+        (line, self.raw[ls..le].trim().to_string())
+    }
+
+    fn finding(&self, rule: RuleId, off: usize) -> Finding {
+        let (line, excerpt) = self.excerpt_at(off);
+        Finding {
+            rule,
+            file: self.path.clone(),
+            line,
+            excerpt,
+        }
+    }
+}
+
+/// The lintable universe: lexed sources plus the manifest text.
+#[derive(Debug, Clone, Default)]
+pub struct Workspace {
+    pub files: Vec<SourceFile>,
+    /// Cargo.toml contents; `manifest-decl` is skipped when absent
+    /// (in-memory fixture workspaces without a manifest).
+    pub cargo_toml: Option<String>,
+}
+
+impl Workspace {
+    /// Convenience for tests: a workspace from (path, source) pairs.
+    pub fn from_sources(sources: &[(&str, &str)]) -> Workspace {
+        Workspace {
+            files: sources
+                .iter()
+                .map(|(p, s)| SourceFile::new(*p, *s))
+                .collect(),
+            cargo_toml: None,
+        }
+    }
+
+    fn file(&self, path: &str) -> Option<&SourceFile> {
+        self.files.iter().find(|f| f.path == path)
+    }
+
+    /// Run every rule, apply suppressions, report.
+    pub fn lint(&self) -> LintReport {
+        LintReport::new(self.check(), self.files.len())
+    }
+
+    /// Raw rule pass + suppression filtering (unsorted findings).
+    pub fn check(&self) -> Vec<Finding> {
+        let fields = stats_fields(self);
+        let mut raw: Vec<Finding> = manifest_decl(self);
+        for f in &self.files {
+            if registry::applies(RuleId::WallClock, &f.path) {
+                raw.extend(wall_clock(f));
+            }
+            if registry::applies(RuleId::UnorderedIterSerialize, &f.path) {
+                raw.extend(unordered_iter_serialize(f));
+            }
+            if registry::applies(RuleId::GrantDiscipline, &f.path) {
+                raw.extend(grant_discipline(f));
+            }
+            if registry::applies(RuleId::TagMutationHelper, &f.path) {
+                raw.extend(tag_mutation_helper(f));
+            }
+            if registry::applies(RuleId::StatsExclusion, &f.path) {
+                raw.extend(stats_exclusion(f, &fields));
+            }
+        }
+        let mut out: Vec<Finding> = raw
+            .into_iter()
+            .filter(|fd| !self.suppressed(fd))
+            .collect();
+        // A suppression must name a real rule and carry a justification;
+        // violations are findings of their own (and not suppressible —
+        // that would recurse).
+        for sf in &self.files {
+            for s in &sf.lex.suppressions {
+                let excerpt = match RuleId::from_slug(&s.rule) {
+                    None => format!("unknown rule '{}' in lint suppression", s.rule),
+                    Some(_) if !s.justified => {
+                        format!("suppression of '{}' has no justification", s.rule)
+                    }
+                    Some(_) => continue,
+                };
+                out.push(Finding {
+                    rule: RuleId::SuppressionJustification,
+                    file: sf.path.clone(),
+                    line: s.line,
+                    excerpt,
+                });
+            }
+        }
+        out
+    }
+
+    /// Is `fd` covered by an inline suppression?  A suppression applies
+    /// to its own line, and — when it is alone on its line — to the
+    /// next line as well.
+    fn suppressed(&self, fd: &Finding) -> bool {
+        self.file(&fd.file).is_some_and(|sf| {
+            sf.lex.suppressions.iter().any(|s| {
+                s.rule == fd.rule.slug()
+                    && (s.line == fd.line || (s.standalone && s.line + 1 == fd.line))
+            })
+        })
+    }
+}
+
+/// True when the whole word `w` sits exactly at `pos`.
+fn word_at(s: &str, pos: usize, w: &str) -> bool {
+    let b = s.as_bytes();
+    if !s[pos..].starts_with(w) {
+        return false;
+    }
+    let before_ok = pos == 0 || !lexer::is_ident_byte(b[pos - 1]);
+    let end = pos + w.len();
+    let after_ok = end >= b.len() || !lexer::is_ident_byte(b[end]);
+    before_ok && after_ok
+}
+
+/// Identifier ending at byte `end` (inclusive), walking backwards.
+fn ident_ending_at(s: &str, end: usize) -> Option<&str> {
+    let b = s.as_bytes();
+    if !lexer::is_ident_byte(b[end]) {
+        return None;
+    }
+    let mut start = end;
+    while start > 0 && lexer::is_ident_byte(b[start - 1]) {
+        start -= 1;
+    }
+    Some(&s[start..=end])
+}
+
+// ---------------------------------------------------------------------------
+// Rule 1: manifest-decl
+// ---------------------------------------------------------------------------
+
+/// Parse the `[[test]]`/`[[bench]]`/`[[example]]` stanza paths out of
+/// Cargo.toml (this crate uses explicit non-default target paths, so
+/// every harness file must be declared or it silently never builds).
+fn declared_targets(toml: &str) -> BTreeSet<(String, String)> {
+    let mut out = BTreeSet::new();
+    let mut kind: Option<&str> = None;
+    for line in toml.lines() {
+        let t = line.trim();
+        if t.starts_with("[[") {
+            kind = match t {
+                "[[test]]" => Some("test"),
+                "[[bench]]" => Some("bench"),
+                "[[example]]" => Some("example"),
+                _ => None,
+            };
+        } else if t.starts_with('[') {
+            kind = None;
+        } else if let Some(k) = kind {
+            if let Some(rest) = t.strip_prefix("path") {
+                let v = rest.trim_start().strip_prefix('=').unwrap_or("").trim();
+                let v = v.trim_matches('"');
+                if !v.is_empty() {
+                    out.insert((k.to_string(), v.to_string()));
+                }
+            }
+        }
+    }
+    out
+}
+
+fn manifest_decl(ws: &Workspace) -> Vec<Finding> {
+    let Some(toml) = &ws.cargo_toml else {
+        return Vec::new();
+    };
+    let declared = declared_targets(toml);
+    let mut out = Vec::new();
+    for f in &ws.files {
+        let kind = [
+            ("rust/tests/", "test"),
+            ("rust/benches/", "bench"),
+            ("examples/", "example"),
+        ]
+        .iter()
+        .find_map(|(dir, k)| {
+            f.path
+                .strip_prefix(dir)
+                // Top-level harness files only; subdirectories hold
+                // fixtures and shared modules, not targets.
+                .filter(|rest| !rest.contains('/'))
+                .map(|_| *k)
+        });
+        let Some(kind) = kind else { continue };
+        if !declared.contains(&(kind.to_string(), f.path.clone())) {
+            out.push(Finding {
+                rule: RuleId::ManifestDecl,
+                file: f.path.clone(),
+                line: 1,
+                excerpt: format!("no [[{kind}]] stanza in Cargo.toml declares {}", f.path),
+            });
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 2: wall-clock
+// ---------------------------------------------------------------------------
+
+fn wall_clock(f: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for w in ["Instant", "SystemTime"] {
+        for p in lexer::words(&f.lex.text, w) {
+            out.push(f.finding(RuleId::WallClock, p));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 3: unordered-iter-serialize
+// ---------------------------------------------------------------------------
+
+/// Byte ranges of `fn to_json(…) … { body }` bodies (braces exclusive).
+fn to_json_bodies(t: &str) -> Vec<(usize, usize)> {
+    let b = t.as_bytes();
+    let mut out = Vec::new();
+    for p in lexer::words(t, "to_json") {
+        // Definitions only: the previous token must be `fn`.
+        let Some(k) = lexer::rskip_ws(t, p) else {
+            continue;
+        };
+        if !(t[..=k].ends_with("fn") && (k < 2 || !lexer::is_ident_byte(b[k - 2]))) {
+            continue;
+        }
+        let open = lexer::skip_ws(t, p + "to_json".len());
+        if open >= b.len() || b[open] != b'(' {
+            continue;
+        }
+        let Some(close) = lexer::matching_delim(t, open) else {
+            continue;
+        };
+        let mut j = close + 1;
+        while j < b.len() && b[j] != b'{' && b[j] != b';' {
+            j += 1;
+        }
+        if j >= b.len() || b[j] == b';' {
+            continue;
+        }
+        if let Some(end) = lexer::matching_delim(t, j) {
+            out.push((j + 1, end));
+        }
+    }
+    out
+}
+
+/// Identifiers declared (anywhere in the file) with an unordered
+/// map/set type: `name: FxHashMap<…>` fields/params and
+/// `name = FxHashMap::default()`-style assignments.
+fn map_typed_names(t: &str) -> BTreeSet<String> {
+    let b = t.as_bytes();
+    let mut names = BTreeSet::new();
+    for ty in ["HashMap", "HashSet", "FxHashMap", "FxHashSet"] {
+        for p in lexer::words(t, ty) {
+            let Some(k) = lexer::rskip_ws(t, p) else {
+                continue;
+            };
+            let ident_end = match b[k] {
+                // `name: HashMap<…>` — but not a `::` path segment.
+                b':' if !(k > 0 && b[k - 1] == b':') => lexer::rskip_ws(t, k),
+                // `name = FxHashMap::default()` — not `==`/`!=`/`<=`/`>=`.
+                b'=' if !(k > 0 && matches!(b[k - 1], b'=' | b'!' | b'<' | b'>')) => {
+                    lexer::rskip_ws(t, k)
+                }
+                _ => None,
+            };
+            if let Some(e) = ident_end {
+                if let Some(name) = ident_ending_at(t, e) {
+                    if !matches!(name, "let" | "mut" | "pub") {
+                        names.insert(name.to_string());
+                    }
+                }
+            }
+        }
+    }
+    names
+}
+
+/// Is the iteration at `p` followed by an ordering step?  Looks for a
+/// `sort*` call (or a collect into a BTree container) within the
+/// iteration's own statement or the one after it.
+fn ordered_after(body: &str, p: usize) -> bool {
+    let b = body.as_bytes();
+    let mut semis = 0;
+    let mut end = body.len();
+    for (j, &c) in b.iter().enumerate().skip(p) {
+        if c == b';' {
+            semis += 1;
+            if semis == 2 {
+                end = j;
+                break;
+            }
+        }
+    }
+    let w = &body[p..end];
+    w.contains("sort") || w.contains("BTreeMap") || w.contains("BTreeSet")
+}
+
+/// Is the word at `p` the object of a `for … in` loop?  Walks back
+/// over a `&self.cluster.` style receiver chain to find the `in`.
+fn preceded_by_in(body: &str, p: usize) -> bool {
+    let bb = body.as_bytes();
+    let Some(mut k) = lexer::rskip_ws(body, p) else {
+        return false;
+    };
+    loop {
+        match bb[k] {
+            b'.' => {
+                let Some(e) = lexer::rskip_ws(body, k) else {
+                    return false;
+                };
+                if !lexer::is_ident_byte(bb[e]) {
+                    return false;
+                }
+                let mut s = e;
+                while s > 0 && lexer::is_ident_byte(bb[s - 1]) {
+                    s -= 1;
+                }
+                match lexer::rskip_ws(body, s) {
+                    Some(nk) => k = nk,
+                    None => return false,
+                }
+            }
+            b'&' => match lexer::rskip_ws(body, k) {
+                Some(nk) => k = nk,
+                None => return false,
+            },
+            _ => break,
+        }
+    }
+    lexer::is_ident_byte(bb[k])
+        && body[..=k].ends_with("in")
+        && (k < 2 || !lexer::is_ident_byte(bb[k - 2]))
+}
+
+fn unordered_iter_serialize(f: &SourceFile) -> Vec<Finding> {
+    let t = &f.lex.text;
+    let names = map_typed_names(t);
+    let mut out = Vec::new();
+    for (bs, be) in to_json_bodies(t) {
+        let body = &t[bs..be];
+        let bb = body.as_bytes();
+        for name in &names {
+            let mut i = 0;
+            while let Some(p) = lexer::find_word(body, i, name) {
+                i = p + name.len();
+                let mut iterates = false;
+                let j = lexer::skip_ws(body, p + name.len());
+                if j < bb.len() && bb[j] == b'.' {
+                    let w = lexer::skip_ws(body, j + 1);
+                    iterates = ["iter", "keys", "values", "into_iter", "drain"]
+                        .iter()
+                        .any(|m| word_at(body, w, m));
+                }
+                if !iterates {
+                    iterates = preceded_by_in(body, p);
+                }
+                if iterates && !ordered_after(body, p) {
+                    out.push(f.finding(RuleId::UnorderedIterSerialize, bs + p));
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 4: grant-discipline
+// ---------------------------------------------------------------------------
+
+enum Binding {
+    /// Statement has no `let` at all — the Grant is dropped outright.
+    None,
+    /// `let _ = …` — explicitly discarded.
+    Discard,
+    /// `let name = …` — track the binding's later uses.
+    Name(String),
+    /// Destructuring or otherwise unanalyzable pattern — give up.
+    Opaque,
+}
+
+fn let_binding(stmt: &str) -> Binding {
+    let Some(p) = lexer::find_word(stmt, 0, "let") else {
+        return Binding::None;
+    };
+    let b = stmt.as_bytes();
+    let mut j = lexer::skip_ws(stmt, p + 3);
+    if word_at(stmt, j, "mut") {
+        j = lexer::skip_ws(stmt, j + 3);
+    }
+    if j >= b.len() {
+        return Binding::Opaque;
+    }
+    if b[j] == b'_' && (j + 1 >= b.len() || !lexer::is_ident_byte(b[j + 1])) {
+        return Binding::Discard;
+    }
+    let start = j;
+    while j < b.len() && lexer::is_ident_byte(b[j]) {
+        j += 1;
+    }
+    if j == start {
+        return Binding::Opaque; // tuple / struct pattern
+    }
+    let name = &stmt[start..j];
+    let next = lexer::skip_ws(stmt, j);
+    // Plain `name =` or `name: Type =` bindings only; `Some(g)`-style
+    // patterns fall out here.
+    if next < b.len() && (b[next] == b'=' || b[next] == b':') {
+        Binding::Name(name.to_string())
+    } else {
+        Binding::Opaque
+    }
+}
+
+/// Do the uses of `name` in `region` satisfy the discipline?  True when
+/// `.queued` is read, the binding escapes whole (returned / passed /
+/// repackaged), or any non-`grant` method runs on it; false when the
+/// binding is never used again or only `.grant` is ever read.
+fn queued_is_read(region: &str, name: &str) -> bool {
+    let bb = region.as_bytes();
+    let mut i = 0;
+    while let Some(p) = lexer::find_word(region, i, name) {
+        i = p + name.len();
+        let j = lexer::skip_ws(region, i);
+        if j < bb.len() && bb[j] == b'.' {
+            let w = lexer::skip_ws(region, j + 1);
+            if word_at(region, w, "grant") {
+                continue;
+            }
+            return true; // .queued, or a method that takes the Grant
+        }
+        return true; // bare escape: returned or passed along whole
+    }
+    false
+}
+
+fn grant_discipline(f: &SourceFile) -> Vec<Finding> {
+    let t = &f.lex.text;
+    let b = t.as_bytes();
+    let skip_tests = registry::spec(RuleId::GrantDiscipline).skip_tests;
+    let mut out = Vec::new();
+    for meth in ["reserve", "occupy_until"] {
+        for p in lexer::words(t, meth) {
+            let Some(dot) = lexer::rskip_ws(t, p) else {
+                continue;
+            };
+            if b[dot] != b'.' {
+                continue; // `fn reserve(` definitions, not calls
+            }
+            let open = lexer::skip_ws(t, p + meth.len());
+            if open >= b.len() || b[open] != b'(' {
+                continue;
+            }
+            if skip_tests && f.lex.in_test_region(p) {
+                continue;
+            }
+            let Some(close) = lexer::matching_delim(t, open) else {
+                continue;
+            };
+            let after = lexer::skip_ws(t, close + 1);
+            if after >= b.len() {
+                continue;
+            }
+            match b[after] {
+                b';' => {
+                    let stmt_start = t[..p].rfind([';', '{', '}']).map_or(0, |q| q + 1);
+                    match let_binding(&t[stmt_start..p]) {
+                        Binding::None | Binding::Discard => {
+                            out.push(f.finding(RuleId::GrantDiscipline, p));
+                        }
+                        Binding::Opaque => {}
+                        Binding::Name(name) => {
+                            let end = lexer::enclosing_block_end(t, after);
+                            if !queued_is_read(&t[after..end], &name) {
+                                out.push(f.finding(RuleId::GrantDiscipline, p));
+                            }
+                        }
+                    }
+                }
+                b'.' => {
+                    // Chained: `.queued` (or any consuming method) is
+                    // fine; chaining `.grant` throws the queueing away.
+                    let w = lexer::skip_ws(t, after + 1);
+                    if word_at(t, w, "grant") {
+                        out.push(f.finding(RuleId::GrantDiscipline, p));
+                    }
+                }
+                // Tail expression, argument, operator operand: the
+                // Grant escapes to the caller, whose use is checked at
+                // its own site.
+                _ => {}
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 5: tag-mutation-helper
+// ---------------------------------------------------------------------------
+
+fn tag_mutation_helper(f: &SourceFile) -> Vec<Finding> {
+    let t = &f.lex.text;
+    let b = t.as_bytes();
+    let skip_tests = registry::spec(RuleId::TagMutationHelper).skip_tests;
+    const PATS: [(&str, &str); 4] = [
+        ("tags", "fill"),
+        ("tags", "mark_dirty"),
+        ("tags", "invalidate"),
+        ("cache", "fill"),
+    ];
+    let mut out = Vec::new();
+    for (recv, meth) in PATS {
+        for p in lexer::words(t, meth) {
+            let open = lexer::skip_ws(t, p + meth.len());
+            if open >= b.len() || b[open] != b'(' {
+                continue;
+            }
+            let Some(dot) = lexer::rskip_ws(t, p) else {
+                continue;
+            };
+            if b[dot] != b'.' {
+                continue;
+            }
+            let Some(r_end) = lexer::rskip_ws(t, dot) else {
+                continue;
+            };
+            if ident_ending_at(t, r_end) != Some(recv) {
+                continue;
+            }
+            if skip_tests && f.lex.in_test_region(p) {
+                continue;
+            }
+            out.push(f.finding(RuleId::TagMutationHelper, p));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 6: stats-exclusion
+// ---------------------------------------------------------------------------
+
+/// Canonical host-telemetry field names; unioned with whatever the
+/// workspace's `EventStats`/`ResidencyStats` struct definitions declare
+/// so the rule tracks field renames without an edit here going stale.
+const TELEMETRY_FIELDS: [&str; 9] = [
+    "cycles_ticked",
+    "cycles_simulated",
+    "jumps",
+    "max_jump",
+    "index_probes",
+    "scan_probes",
+    "index_ops",
+    "index_lines",
+    "peak_lines",
+];
+
+const TELEMETRY_STRUCTS: [&str; 2] = ["EventStats", "ResidencyStats"];
+
+fn stats_fields(ws: &Workspace) -> BTreeSet<String> {
+    let mut fields: BTreeSet<String> =
+        TELEMETRY_FIELDS.iter().map(|s| s.to_string()).collect();
+    for f in &ws.files {
+        let t = &f.lex.text;
+        let b = t.as_bytes();
+        for p in lexer::words(t, "struct") {
+            let j = lexer::skip_ws(t, p + "struct".len());
+            if !TELEMETRY_STRUCTS.iter().any(|s| word_at(t, j, s)) {
+                continue;
+            }
+            let Some(off) = t[j..].find('{') else { continue };
+            let open = j + off;
+            let Some(end) = lexer::matching_delim(t, open) else {
+                continue;
+            };
+            let body = &t[open + 1..end];
+            for q in lexer::words(body, "pub") {
+                let s = lexer::skip_ws(body, q + 3);
+                let mut e = s;
+                while e < body.len() && lexer::is_ident_byte(b[open + 1 + e]) {
+                    e += 1;
+                }
+                let k = lexer::skip_ws(body, e);
+                if e > s && k < body.len() && body.as_bytes()[k] == b':' {
+                    fields.insert(body[s..e].to_string());
+                }
+            }
+        }
+    }
+    fields
+}
+
+/// Byte ranges of `impl EventStats { … }` / `impl ResidencyStats { … }`.
+fn telemetry_impl_regions(t: &str) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    for p in lexer::words(t, "impl") {
+        let j = lexer::skip_ws(t, p + 4);
+        if !TELEMETRY_STRUCTS.iter().any(|s| word_at(t, j, s)) {
+            continue;
+        }
+        let Some(off) = t[j..].find('{') else { continue };
+        let open = j + off;
+        if let Some(end) = lexer::matching_delim(t, open) {
+            out.push((p, end + 1));
+        }
+    }
+    out
+}
+
+fn stats_exclusion(f: &SourceFile, fields: &BTreeSet<String>) -> Vec<Finding> {
+    let t = &f.lex.text;
+    let exempt = telemetry_impl_regions(t);
+    let mut out = Vec::new();
+    for (bs, be) in to_json_bodies(t) {
+        if exempt.iter().any(|&(a, b)| a <= bs && be <= b) {
+            continue; // the telemetry types may serialize themselves
+        }
+        let body = &t[bs..be];
+        for field in fields {
+            for p in lexer::words(body, field) {
+                out.push(f.finding(RuleId::StatsExclusion, bs + p));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_one(path: &str, src: &str) -> Vec<Finding> {
+        Workspace::from_sources(&[(path, src)]).check()
+    }
+
+    fn rules_of(findings: &[Finding]) -> Vec<RuleId> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn let_binding_classification() {
+        assert!(matches!(let_binding("  let g "), Binding::Opaque));
+        assert!(matches!(let_binding("let g ="), Binding::Name(n) if n == "g"));
+        assert!(matches!(
+            let_binding("let mut total: Grant ="),
+            Binding::Name(n) if n == "total"
+        ));
+        assert!(matches!(let_binding("let _ ="), Binding::Discard));
+        assert!(matches!(let_binding("let (a, b) ="), Binding::Opaque));
+        assert!(matches!(let_binding("let Some(g) ="), Binding::Opaque));
+        assert!(matches!(let_binding("x += 1"), Binding::None));
+    }
+
+    #[test]
+    fn grant_tail_expression_and_repackaging_pass() {
+        let src = "impl S {\n    fn a(&mut self) -> Grant {\n        self.banks[0].reserve(now, 1)\n    }\n    fn b(&mut self) -> Grant {\n        let g = self.p.reserve(now, 1);\n        Grant::new(g.grant + 2, g.queued)\n    }\n}\n";
+        assert!(check_one("rust/src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn grant_statement_drop_and_grant_chain_flagged() {
+        let src = "fn f(p: &mut P) {\n    p.banks.reserve(bank, now, 1);\n    let t = p.port.reserve(now, 1).grant;\n    let g = p.mshr.occupy_until(s, fill);\n    use_only(g.grant);\n}\n";
+        let found = rules_of(&check_one("rust/src/x.rs", src));
+        assert_eq!(found.len(), 3, "{found:?}");
+        assert!(found.iter().all(|r| *r == RuleId::GrantDiscipline));
+    }
+
+    #[test]
+    fn grant_queued_read_passes_and_tests_are_skipped() {
+        let src = "fn f(p: &mut P) {\n    let g = p.banks.reserve(bank, now, 1);\n    txn.charge(&mut con, Class::X, g.queued);\n    serve(g.grant);\n}\n#[cfg(test)]\nmod tests {\n    fn t(p: &mut P) { p.banks.reserve(0, 0, 1); }\n}\n";
+        assert!(check_one("rust/src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_flagged_outside_allowlist_only() {
+        let src = "use std::time::Instant;\nfn f() { let t = Instant::now(); }\n";
+        assert_eq!(check_one("rust/src/x.rs", src).len(), 2);
+        assert!(check_one("rust/benches/x.rs", src).is_empty());
+        assert!(check_one("rust/src/bench_harness.rs", src).is_empty());
+        // Doc comments and strings never trip it.
+        let doc = "//! Instant is forbidden here.\nfn f() { let s = \"Instant\"; }\n";
+        assert!(check_one("rust/src/x.rs", doc).is_empty());
+    }
+
+    #[test]
+    fn suppression_silences_with_justification() {
+        let src = "use std::time::Instant; // lint: allow(wall-clock) — host span, stderr only\nfn f() {}\n";
+        assert!(check_one("rust/src/x.rs", src).is_empty());
+        let standalone = "// lint: allow(wall-clock) — host span, stderr only\nuse std::time::Instant;\nfn f() {}\n";
+        assert!(check_one("rust/src/x.rs", standalone).is_empty());
+    }
+
+    #[test]
+    fn unjustified_or_unknown_suppressions_are_findings() {
+        let src = "use std::time::Instant; // lint: allow(wall-clock)\nfn f() {}\n";
+        let found = check_one("rust/src/x.rs", src);
+        assert_eq!(rules_of(&found), vec![RuleId::SuppressionJustification]);
+        let unk = "fn f() {} // lint: allow(no-such-rule) — because\n";
+        let found = check_one("rust/src/x.rs", unk);
+        assert_eq!(rules_of(&found), vec![RuleId::SuppressionJustification]);
+        assert!(found[0].excerpt.contains("no-such-rule"));
+    }
+
+    #[test]
+    fn tag_mutation_outside_helpers_flagged() {
+        let src = "fn f(c: &mut C) {\n    c.tags.mark_dirty(line, mask);\n    c.cache.fill(line, sectors);\n    c.mshr.fill(line);\n}\n";
+        let found = check_one("rust/src/l2/x.rs", src);
+        assert_eq!(found.len(), 2, "{found:?}"); // mshr.fill is not a tag mutation
+        assert!(check_one("rust/src/l1arch/pipeline.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unordered_iteration_in_to_json_flagged_sorted_passes() {
+        let src = "struct S { m: FxHashMap<u32, u32> }\nimpl S {\n    fn to_json(&self) -> Json {\n        for (k, v) in &self.m { emit(k, v); }\n        Json::Null\n    }\n}\n";
+        assert_eq!(
+            rules_of(&check_one("rust/src/x.rs", src)),
+            vec![RuleId::UnorderedIterSerialize]
+        );
+        let sorted = "struct S { m: FxHashMap<u32, u32> }\nimpl S {\n    fn to_json(&self) -> Json {\n        let mut v: Vec<_> = self.m.iter().collect();\n        v.sort();\n        Json::Null\n    }\n    fn elsewhere(&self) { for k in self.m.keys() { use_(k); } }\n}\n";
+        assert!(check_one("rust/src/x.rs", sorted).is_empty());
+    }
+
+    #[test]
+    fn stats_fields_in_foreign_to_json_flagged() {
+        let src = "impl SimResult {\n    fn to_json(&self) -> Json {\n        obj(vec![(self.cycles_ticked.into())])\n    }\n}\n";
+        assert_eq!(
+            rules_of(&check_one("rust/src/x.rs", src)),
+            vec![RuleId::StatsExclusion]
+        );
+        let own = "impl EventStats {\n    fn to_json(&self) -> Json {\n        obj(vec![(self.cycles_ticked.into())])\n    }\n}\n";
+        assert!(check_one("rust/src/x.rs", own).is_empty());
+    }
+
+    #[test]
+    fn manifest_decl_requires_matching_stanza() {
+        let toml = "[package]\nname = \"x\"\n\n[[test]]\nname = \"good\"\npath = \"rust/tests/good.rs\"\n";
+        let mut ws = Workspace::from_sources(&[
+            ("rust/tests/good.rs", "fn main() {}"),
+            ("rust/tests/bad.rs", "fn main() {}"),
+            ("rust/tests/fixtures/helper.rs", "fn main() {}"),
+        ]);
+        ws.cargo_toml = Some(toml.to_string());
+        let found = ws.check();
+        assert_eq!(found.len(), 1, "{found:?}");
+        assert_eq!(found[0].rule, RuleId::ManifestDecl);
+        assert_eq!(found[0].file, "rust/tests/bad.rs");
+        // A bench stanza must not satisfy a test file.
+        let cross = "[[bench]]\nname = \"bad\"\npath = \"rust/tests/bad.rs\"\n";
+        let mut ws2 =
+            Workspace::from_sources(&[("rust/tests/bad.rs", "fn main() {}")]);
+        ws2.cargo_toml = Some(cross.to_string());
+        assert_eq!(ws2.check().len(), 1);
+    }
+}

@@ -49,6 +49,7 @@ impl SectoredCache {
         line: LineAddr,
         sectors: SectorMask,
     ) -> (Vec<crate::mem::MemRequest>, Option<Eviction>) {
+        // lint: allow(tag-mutation-helper) — SectoredCache::fill IS the substrate the pipeline helpers call
         let evicted = self.tags.fill(line, sectors);
         let waiters = self.mshr.fill(line);
         (waiters, evicted)

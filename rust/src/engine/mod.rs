@@ -40,6 +40,7 @@
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+// lint: allow(wall-clock) — host-side run-duration telemetry only; printed to stderr, never in result JSON
 use std::time::Instant;
 
 /// Per-run deltas of the shared memory-system counters (see
@@ -265,7 +266,7 @@ impl Engine {
     /// start (no loads can be outstanding between runs), so means and
     /// maxima are per-run too.
     pub fn run(&mut self, workload: &Workload) -> SimResult {
-        let host_start = Instant::now();
+        let host_start = Instant::now(); // lint: allow(wall-clock) — stderr-only host span, excluded from SimResult
         let start_cycle = self.cycle;
         let start_insts = self.total_insts;
         debug_assert_eq!(self.tracker.outstanding(), 0);
@@ -376,7 +377,7 @@ impl Engine {
     /// cores in partition order within each lane, and the wake calendar
     /// orders ties by (cycle, core, warp)).
     pub fn run_multi(&mut self, multi: &MultiWorkload) -> MultiResult {
-        let host_start = Instant::now();
+        let host_start = Instant::now(); // lint: allow(wall-clock) — stderr-only host span, excluded from MultiResult
         if let Err(e) = multi.validate(&self.cfg) {
             panic!("invalid multi-workload: {e}");
         }

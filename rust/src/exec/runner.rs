@@ -132,9 +132,9 @@ mod tests {
         let items: Vec<usize> = (0..8).collect();
         let out = JobRunner::new(4).run_map(&items, |i, &x| {
             if i == 0 {
-                let deadline = std::time::Instant::now() + Duration::from_secs(10);
+                let deadline = std::time::Instant::now() + Duration::from_secs(10); // lint: allow(wall-clock) — bounded test watchdog, no simulated metric depends on it
                 while completion.lock().unwrap().is_empty()
-                    && std::time::Instant::now() < deadline
+                    && std::time::Instant::now() < deadline // lint: allow(wall-clock) — same watchdog poll as above
                 {
                     std::thread::yield_now();
                 }

@@ -337,6 +337,7 @@ impl PipelineCtx {
         txn.endpoint = owner as u32;
         txn.fetch_sectors = sectors;
         let fill = mem.fetch(txn, s);
+        // lint: allow(grant-discipline) — occupancy-only: mshr_dispatch already charged the wait via earliest(), queued is 0 at `s`
         self.cores[owner].mshr.occupy_until(s, fill);
         let usable = self.install_fill(owner, txn, sectors, fill, mem);
         (usable + 1, s + self.timing.latency as u64)

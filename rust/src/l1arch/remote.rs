@@ -164,6 +164,7 @@ impl SharingPolicy for RemotePolicy {
         let bank = decode::l1_bank(txn.req.line, p.timing.banks);
         let map = p.map;
         for peer in map.peers(core) {
+            // lint: allow(grant-discipline) — occupancy-only: the delay is charged by the delayed peer accesses, not the prober (see above)
             p.cores[peer].banks.reserve(bank, probe_done, 1);
         }
 

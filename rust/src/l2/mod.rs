@@ -235,6 +235,7 @@ impl MemSystem {
         match self.slices[slice].tags.lookup(line, 0) {
             Probe::Hit { .. } | Probe::SectorMiss { .. } => {
                 let mask = ((1u16 << sectors.min(4)) - 1) as u8;
+                // lint: allow(tag-mutation-helper) — L2 slice tags sit below L1; the residency index never mirrors them
                 self.slices[slice].tags.mark_dirty(line, mask);
             }
             Probe::Miss => {
@@ -242,6 +243,7 @@ impl MemSystem {
                 // sectors become valid+dirty).
                 let mask = ((1u16 << sectors.min(4)) - 1) as u8;
                 let (_, evicted) = self.slices[slice].fill(line, mask);
+                // lint: allow(tag-mutation-helper) — L2 slice tags sit below L1; the residency index never mirrors them
                 self.slices[slice].tags.mark_dirty(line, mask);
                 if let Some(ev) = evicted.filter(|e| e.needs_writeback()) {
                     self.stats.writebacks_to_dram += 1;

@@ -31,6 +31,7 @@
 //! * the locality-analytics pipeline classifying workloads by
 //!   inter-core data replication ([`runtime`]).
 
+pub mod analysis;
 pub mod area;
 pub mod bench_harness;
 pub mod cache;

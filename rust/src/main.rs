@@ -10,9 +10,11 @@
 //!   classify   — inter-core locality classification pipeline
 //!   landscape  — regenerate Table I from a measured sweep
 //!   overhead   — §IV-D hardware overhead model
+//!   lint       — source-level contract lints (determinism/accounting)
 //!   list       — list application models and registered organizations
 //!   config     — dump the Table II configuration as JSON
 
+use ata_cache::analysis;
 use ata_cache::area;
 use ata_cache::bench_harness::{compare_thread_counts, sim_throughput};
 use ata_cache::config::{GpuConfig, L1ArchKind};
@@ -47,6 +49,7 @@ fn main() {
         Some("classify") => cmd_classify(&args),
         Some("landscape") => cmd_landscape(&args),
         Some("overhead") => cmd_overhead(&args),
+        Some("lint") => cmd_lint(&args),
         Some("list") => cmd_list(),
         Some("config") => cmd_config(&args),
         _ => {
@@ -59,7 +62,7 @@ fn main() {
 
 fn print_usage() {
     eprintln!(
-        "usage: ata-sim <run|multi|contention|bench|sweep|cosched|classify|landscape|overhead|list|config> [options]
+        "usage: ata-sim <run|multi|contention|bench|sweep|cosched|classify|landscape|overhead|lint|list|config> [options]
   run       --app <name> | --trace FILE
             --arch <private|remote|decoupled|ata|ata-bypass>
             [--scale F] [--seed N] [--out FILE]
@@ -76,6 +79,7 @@ fn print_usage() {
   classify  [--apps x,y,..] [--artifacts DIR]
   landscape [--scale F] [--threads N]
   overhead
+  lint      [--json] [--root DIR]
   config    [--out FILE]
 
 --threads defaults to the host's available parallelism; results are
@@ -802,6 +806,30 @@ fn cmd_overhead(_args: &Args) -> i32 {
     t.row(vec!["die fraction (~500mm²)".into(), format!("{:.3}%", r.die_fraction * 100.0)]);
     println!("{}", t.render());
     0
+}
+
+/// `ata-sim lint [--json] [--root DIR]` — run the source-level contract
+/// lints (see `rust/src/analysis/`).  Exit 0 when clean, 1 on any
+/// finding, 2 when the root cannot be read.
+fn cmd_lint(args: &Args) -> i32 {
+    let root = std::path::PathBuf::from(args.get_or("root", "."));
+    let report = match analysis::run_lint(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: lint walk of {} failed: {e}", root.display());
+            return 2;
+        }
+    };
+    if args.flag("json") {
+        println!("{}", report.to_json().pretty());
+    } else {
+        print!("{}", report.render());
+    }
+    if report.is_clean() {
+        0
+    } else {
+        1
+    }
 }
 
 fn cmd_list() -> i32 {

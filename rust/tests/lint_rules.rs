@@ -1,0 +1,236 @@
+//! Referee for the `ata-sim lint` pass (`rust/src/analysis/`).
+//!
+//! Each rule gets a positive fixture (the report must flag it) and a
+//! negative fixture (allowlisted path, compliant shape, or a justified
+//! suppression — the report must stay clean), plus the
+//! suppression-requires-justification case and a meta-test asserting
+//! the live repository itself is lint-clean, which is the contract the
+//! CI gate enforces.
+//!
+//! Fixtures are in-memory [`Workspace`]s: the linter is a pure function
+//! of (paths, sources, manifest), so no tempdirs are needed.
+
+use ata_cache::analysis::{run_lint, LintReport, RuleId, Workspace};
+
+fn lint_one(path: &str, src: &str) -> LintReport {
+    Workspace::from_sources(&[(path, src)]).lint()
+}
+
+fn slugs(r: &LintReport) -> Vec<&str> {
+    r.findings.iter().map(|f| f.rule.slug()).collect()
+}
+
+// -- manifest-decl ----------------------------------------------------------
+
+#[test]
+fn manifest_decl_flags_undeclared_harness_files() {
+    let toml = "[[test]]\nname = \"a\"\npath = \"rust/tests/a.rs\"\n\n[[bench]]\nname = \"b\"\npath = \"rust/benches/b.rs\"\n";
+    let mut ws = Workspace::from_sources(&[
+        ("rust/tests/a.rs", "fn x() {}"),
+        ("rust/benches/b.rs", "fn x() {}"),
+        ("examples/c.rs", "fn main() {}"),
+    ]);
+    ws.cargo_toml = Some(toml.to_string());
+    let r = ws.lint();
+    assert!(!r.is_clean());
+    assert_eq!(slugs(&r), vec!["manifest-decl"]);
+    assert_eq!(r.findings[0].file, "examples/c.rs");
+    assert!(r.findings[0].excerpt.contains("[[example]]"));
+}
+
+#[test]
+fn manifest_decl_passes_fully_declared_workspace() {
+    let toml = "[[test]]\nname = \"a\"\npath = \"rust/tests/a.rs\"\n\n[[example]]\nname = \"c\"\npath = \"examples/c.rs\"\n";
+    let mut ws = Workspace::from_sources(&[
+        ("rust/tests/a.rs", "fn x() {}"),
+        ("rust/tests/fixtures/data.rs", "fn not_a_target() {}"),
+        ("examples/c.rs", "fn main() {}"),
+    ]);
+    ws.cargo_toml = Some(toml.to_string());
+    assert!(ws.lint().is_clean(), "{:?}", ws.lint().findings);
+}
+
+// -- wall-clock -------------------------------------------------------------
+
+#[test]
+fn wall_clock_flags_instant_in_simulation_code() {
+    let src = "use std::time::Instant;\nfn f() -> u64 { Instant::now().elapsed().as_nanos() as u64 }\n";
+    let r = lint_one("rust/src/engine/clock.rs", src);
+    assert_eq!(slugs(&r), vec!["wall-clock", "wall-clock"]);
+    assert_eq!(r.findings[0].line, 1);
+}
+
+#[test]
+fn wall_clock_allows_bench_dirs_and_harness() {
+    let src = "use std::time::Instant;\nfn f() { let _t = Instant::now(); }\n";
+    assert!(lint_one("rust/benches/fig8_ipc.rs", src).is_clean());
+    assert!(lint_one("rust/src/bench_harness.rs", src).is_clean());
+    // Mentions in docs and strings are not wall-clock reads.
+    let prose = "//! Instant would break determinism.\nfn f() { log(\"SystemTime\"); }\n";
+    assert!(lint_one("rust/src/engine/clock.rs", prose).is_clean());
+}
+
+// -- unordered-iter-serialize ----------------------------------------------
+
+#[test]
+fn unordered_iteration_in_to_json_flagged() {
+    let src = "struct S { lanes: FxHashMap<u32, u64> }\nimpl S {\n    pub fn to_json(&self) -> Json {\n        let mut v = Vec::new();\n        for (k, c) in &self.lanes {\n            v.push((k, c));\n        }\n        Json::arr(v)\n    }\n}\n";
+    let r = lint_one("rust/src/stats/lanes.rs", src);
+    assert_eq!(slugs(&r), vec!["unordered-iter-serialize"]);
+    assert_eq!(r.findings[0].line, 5);
+}
+
+#[test]
+fn sorted_iteration_and_non_serialize_paths_pass() {
+    let sorted = "struct S { lanes: FxHashMap<u32, u64> }\nimpl S {\n    pub fn to_json(&self) -> Json {\n        let mut v: Vec<_> = self.lanes.iter().collect();\n        v.sort();\n        Json::arr(v)\n    }\n}\n";
+    assert!(lint_one("rust/src/stats/lanes.rs", sorted).is_clean());
+    // Iterating outside a to_json body is not this rule's business.
+    let elsewhere = "struct S { lanes: FxHashMap<u32, u64> }\nimpl S {\n    fn total(&self) -> u64 { self.lanes.values().sum() }\n}\n";
+    assert!(lint_one("rust/src/stats/lanes.rs", elsewhere).is_clean());
+}
+
+// -- grant-discipline -------------------------------------------------------
+
+#[test]
+fn dropped_and_grant_only_reservations_flagged() {
+    let src = "fn access(p: &mut P) {\n    p.banks.reserve(bank, now, 1);\n    let done = p.port.reserve(now, flits).grant;\n    let g = p.mshr.occupy_until(start, fill);\n    schedule(g.grant);\n    let _ = p.bus.reserve(now, 2);\n    finish(done);\n}\n";
+    let r = lint_one("rust/src/l1arch/x.rs", src);
+    assert_eq!(
+        slugs(&r),
+        vec![
+            "grant-discipline",
+            "grant-discipline",
+            "grant-discipline",
+            "grant-discipline"
+        ],
+        "{:?}",
+        r.findings
+    );
+}
+
+#[test]
+fn charged_tail_and_test_reservations_pass() {
+    let src = "impl Banked {\n    fn reserve(&mut self, bank: usize, now: u64, occ: u32) -> Grant {\n        self.banks[bank].reserve(now, occ)\n    }\n    fn access(&mut self, txn: &mut Txn, con: &mut Ledger) {\n        let g = self.reserve(0, txn.now(), 1);\n        txn.charge(con, ResourceClass::L1DataBank, g.queued);\n        txn.serve(g.grant + 1);\n    }\n}\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn raw() { let mut c = Calendar::new(); c.reserve(0, 5); }\n}\n";
+    assert!(lint_one("rust/src/resource/x.rs", src).is_clean());
+}
+
+#[test]
+fn justified_suppression_silences_grant_finding() {
+    let src = "fn probe(p: &mut P) {\n    // lint: allow(grant-discipline) — occupancy-only reservation; the stall is charged at dispatch\n    p.cores[peer].banks.reserve(bank, probe_done, 1);\n}\n";
+    assert!(lint_one("rust/src/l1arch/x.rs", src).is_clean());
+}
+
+// -- tag-mutation-helper ----------------------------------------------------
+
+#[test]
+fn direct_tag_mutation_flagged_outside_helper_files() {
+    let src = "fn evict(c: &mut CoreL1) {\n    c.cache.tags.invalidate(line);\n    c.cache.fill(line, sectors);\n}\n";
+    let r = lint_one("rust/src/l1arch/helper.rs", src);
+    assert_eq!(slugs(&r), vec!["tag-mutation-helper", "tag-mutation-helper"]);
+}
+
+#[test]
+fn tag_mutation_allowed_in_pipeline_and_tests() {
+    let src = "fn fill_tags(&mut self, owner: usize) {\n    self.cores[owner].cache.fill(line, sectors);\n}\n";
+    assert!(lint_one("rust/src/l1arch/pipeline.rs", src).is_clean());
+    let test_src = "#[cfg(test)]\nmod tests {\n    fn seed(c: &mut CoreL1) { c.cache.fill(7, 0b1111); }\n}\n";
+    assert!(lint_one("rust/src/l1arch/other.rs", test_src).is_clean());
+    // An unrelated .fill() (MSHR bookkeeping) is not a tag mutation.
+    let mshr = "fn land(m: &mut M) { m.mshr.fill(line); }\n";
+    assert!(lint_one("rust/src/l1arch/other.rs", mshr).is_clean());
+}
+
+// -- stats-exclusion --------------------------------------------------------
+
+#[test]
+fn telemetry_fields_in_result_json_flagged() {
+    let src = "impl SimResult {\n    pub fn to_json(&self) -> Json {\n        Json::obj(vec![(\"jumps\", self.events.jumps.into())])\n    }\n}\n";
+    let r = lint_one("rust/src/stats/x.rs", src);
+    assert_eq!(slugs(&r), vec!["stats-exclusion"]);
+}
+
+#[test]
+fn telemetry_types_may_serialize_themselves() {
+    let src = "impl EventStats {\n    pub fn to_json(&self) -> Json {\n        Json::obj(vec![(\"jumps\", self.jumps.into())])\n    }\n}\nimpl ResidencyStats {\n    pub fn to_json(&self) -> Json {\n        Json::obj(vec![(\"index_probes\", self.index_probes.into())])\n    }\n}\n";
+    assert!(lint_one("rust/src/stats/x.rs", src).is_clean());
+}
+
+#[test]
+fn renamed_telemetry_fields_are_tracked_from_struct_defs() {
+    // A field the canonical list does not know about, declared on
+    // EventStats in the same workspace, must still be flagged elsewhere.
+    let stats = "pub struct EventStats {\n    pub wakeups_coalesced: u64,\n}\n";
+    let sink = "impl SimResult {\n    pub fn to_json(&self) -> Json {\n        Json::obj(vec![(\"w\", self.events.wakeups_coalesced.into())])\n    }\n}\n";
+    let ws = Workspace::from_sources(&[
+        ("rust/src/stats/mod.rs", stats),
+        ("rust/src/stats/sink.rs", sink),
+    ]);
+    let r = ws.lint();
+    assert_eq!(slugs(&r), vec!["stats-exclusion"]);
+}
+
+// -- suppression-justification ----------------------------------------------
+
+#[test]
+fn suppression_without_justification_is_itself_a_finding() {
+    let src = "use std::time::Instant; // lint: allow(wall-clock)\n";
+    let r = lint_one("rust/src/engine/clock.rs", src);
+    assert_eq!(slugs(&r), vec!["suppression-justification"]);
+    assert!(r.findings[0].excerpt.contains("no justification"));
+}
+
+#[test]
+fn suppression_naming_unknown_rule_is_a_finding() {
+    let src = "fn f() {} // lint: allow(wallclock) — typo in the slug\n";
+    let r = lint_one("rust/src/engine/clock.rs", src);
+    assert_eq!(slugs(&r), vec!["suppression-justification"]);
+    assert!(r.findings[0].excerpt.contains("wallclock"));
+}
+
+#[test]
+fn suppression_only_covers_its_own_rule_and_line() {
+    // A wall-clock suppression must not silence a grant finding, and a
+    // trailing suppression must not leak to the next line.
+    let src = "fn f(p: &mut P) {\n    p.banks.reserve(0, 0, 1); // lint: allow(wall-clock) — wrong rule\n    p.banks.reserve(0, 0, 1); // lint: allow(grant-discipline) — right rule, right line\n}\nuse std::time::Instant;\n";
+    let r = lint_one("rust/src/l1arch/x.rs", src);
+    assert_eq!(slugs(&r), vec!["grant-discipline", "wall-clock"]);
+    assert_eq!(r.findings[0].line, 2);
+    assert_eq!(r.findings[1].line, 5);
+}
+
+// -- report surfaces --------------------------------------------------------
+
+#[test]
+fn report_json_carries_the_ci_grepped_fields() {
+    let r = lint_one("rust/src/engine/clock.rs", "use std::time::Instant;\n");
+    let text = r.to_json().pretty();
+    assert!(text.contains("\"findings\""));
+    assert!(text.contains("\"rules_checked\""));
+    assert!(text.contains("\"wall-clock\""));
+    assert_eq!(r.rules_checked.len(), RuleId::ALL.len());
+    for id in RuleId::ALL {
+        assert!(
+            r.rules_checked.contains(&id.slug()),
+            "missing {} in rules_checked",
+            id.slug()
+        );
+    }
+}
+
+// -- the repo itself --------------------------------------------------------
+
+#[test]
+fn live_repository_is_lint_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let r = run_lint(root).expect("walking the repo");
+    assert!(
+        r.files_scanned > 40,
+        "suspiciously few files scanned: {}",
+        r.files_scanned
+    );
+    assert!(
+        r.is_clean(),
+        "live repo has lint findings:\n{}",
+        r.render()
+    );
+}
