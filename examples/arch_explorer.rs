@@ -26,6 +26,7 @@ fn main() {
         archs: L1ArchKind::ALL.to_vec(),
         apps: knobs.iter().map(|&s| synth::locality_knob(s, intensity)).collect(),
         scale: 1.0,
+        // lint: allow(shard-confinement) — CLI example sizing its worker pool; no simulation state crosses threads
         threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
     };
     let results = sweep.run();

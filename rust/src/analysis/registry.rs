@@ -27,18 +27,22 @@ pub enum RuleId {
     TagMutationHelper,
     /// `EventStats`/`ResidencyStats` fields never serialize into results.
     StatsExclusion,
+    /// `std::thread` only in the execution layer and the engine's shard
+    /// module — simulation code must stay single-threaded-deterministic.
+    ShardConfinement,
     /// Suppression comments must be justified and name a real rule.
     SuppressionJustification,
 }
 
 impl RuleId {
-    pub const ALL: [RuleId; 7] = [
+    pub const ALL: [RuleId; 8] = [
         RuleId::ManifestDecl,
         RuleId::WallClock,
         RuleId::UnorderedIterSerialize,
         RuleId::GrantDiscipline,
         RuleId::TagMutationHelper,
         RuleId::StatsExclusion,
+        RuleId::ShardConfinement,
         RuleId::SuppressionJustification,
     ];
 
@@ -50,6 +54,7 @@ impl RuleId {
             RuleId::GrantDiscipline => "grant-discipline",
             RuleId::TagMutationHelper => "tag-mutation-helper",
             RuleId::StatsExclusion => "stats-exclusion",
+            RuleId::ShardConfinement => "shard-confinement",
             RuleId::SuppressionJustification => "suppression-justification",
         }
     }
@@ -88,7 +93,7 @@ pub struct RuleSpec {
     pub skip_tests: bool,
 }
 
-pub const REGISTRY: [RuleSpec; 7] = [
+pub const REGISTRY: [RuleSpec; 8] = [
     RuleSpec {
         id: RuleId::ManifestDecl,
         severity: Severity::Error,
@@ -142,6 +147,14 @@ pub const REGISTRY: [RuleSpec; 7] = [
         skip_tests: false,
     },
     RuleSpec {
+        id: RuleId::ShardConfinement,
+        severity: Severity::Error,
+        description: "std::thread outside the execution layer or the shard module (ad-hoc threading breaks the determinism contract)",
+        allow_files: &["rust/src/engine/shard.rs"],
+        allow_dirs: &["rust/src/exec/", "rust/tests/", "rust/benches/"],
+        skip_tests: true,
+    },
+    RuleSpec {
         id: RuleId::SuppressionJustification,
         severity: Severity::Error,
         description: "lint suppression without a justification, or naming an unknown rule",
@@ -188,5 +201,9 @@ mod tests {
         assert!(!applies(RuleId::TagMutationHelper, "rust/src/l1arch/pipeline.rs"));
         assert!(applies(RuleId::TagMutationHelper, "rust/src/l2/mod.rs"));
         assert!(!applies(RuleId::GrantDiscipline, "rust/tests/lint_rules.rs"));
+        assert!(!applies(RuleId::ShardConfinement, "rust/src/exec/runner.rs"));
+        assert!(!applies(RuleId::ShardConfinement, "rust/src/engine/shard.rs"));
+        assert!(applies(RuleId::ShardConfinement, "rust/src/engine/mod.rs"));
+        assert!(applies(RuleId::ShardConfinement, "examples/arch_explorer.rs"));
     }
 }

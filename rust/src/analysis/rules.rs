@@ -1,4 +1,4 @@
-//! The six contract rules, applied to scrubbed sources.
+//! The seven contract rules, applied to scrubbed sources.
 //!
 //! Every rule is a token-level scan over [`lexer::Scrubbed`] text — no
 //! type information, no real parse — so each one encodes a deliberately
@@ -107,6 +107,9 @@ impl Workspace {
             }
             if registry::applies(RuleId::StatsExclusion, &f.path) {
                 raw.extend(stats_exclusion(f, &fields));
+            }
+            if registry::applies(RuleId::ShardConfinement, &f.path) {
+                raw.extend(shard_confinement(f));
             }
         }
         let mut out: Vec<Finding> = raw
@@ -591,9 +594,10 @@ fn tag_mutation_helper(f: &SourceFile) -> Vec<Finding> {
 // ---------------------------------------------------------------------------
 
 /// Canonical host-telemetry field names; unioned with whatever the
-/// workspace's `EventStats`/`ResidencyStats` struct definitions declare
-/// so the rule tracks field renames without an edit here going stale.
-const TELEMETRY_FIELDS: [&str; 9] = [
+/// workspace's `EventStats`/`ResidencyStats`/`ShardStats` struct
+/// definitions declare so the rule tracks field renames without an edit
+/// here going stale.
+const TELEMETRY_FIELDS: [&str; 13] = [
     "cycles_ticked",
     "cycles_simulated",
     "jumps",
@@ -603,9 +607,13 @@ const TELEMETRY_FIELDS: [&str; 9] = [
     "index_ops",
     "index_lines",
     "peak_lines",
+    "shard_count",
+    "epochs",
+    "egress_txns",
+    "ingress_wakes",
 ];
 
-const TELEMETRY_STRUCTS: [&str; 2] = ["EventStats", "ResidencyStats"];
+const TELEMETRY_STRUCTS: [&str; 3] = ["EventStats", "ResidencyStats", "ShardStats"];
 
 fn stats_fields(ws: &Workspace) -> BTreeSet<String> {
     let mut fields: BTreeSet<String> =
@@ -671,6 +679,37 @@ fn stats_exclusion(f: &SourceFile, fields: &BTreeSet<String>) -> Vec<Finding> {
                 out.push(f.finding(RuleId::StatsExclusion, bs + p));
             }
         }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 7: shard-confinement
+// ---------------------------------------------------------------------------
+
+/// Flag `thread` used as a path segment (`std::thread`, `thread::scope`,
+/// `thread::spawn`, …) outside the execution layer and the engine's
+/// shard module.  Everything else in the simulator must stay
+/// single-threaded: determinism comes from the simulation being a pure
+/// function of (config, workload), never from synchronization, so an
+/// ad-hoc thread anywhere in model code is a byte-identity hazard even
+/// when it "only" reads.  Scope is declarative ([`registry`]); genuine
+/// host-side exceptions take the usual justified suppression.
+fn shard_confinement(f: &SourceFile) -> Vec<Finding> {
+    let t = &f.lex.text;
+    let skip_tests = registry::spec(RuleId::ShardConfinement).skip_tests;
+    let mut out = Vec::new();
+    for p in lexer::words(t, "thread") {
+        // Path segments only: `threads` counts and prose identifiers
+        // (`thread_pool_size`) are not thread spawns.
+        let pathlike = t[..p].ends_with("::") || t[p + "thread".len()..].starts_with("::");
+        if !pathlike {
+            continue;
+        }
+        if skip_tests && f.lex.in_test_region(p) {
+            continue;
+        }
+        out.push(f.finding(RuleId::ShardConfinement, p));
     }
     out
 }
@@ -778,6 +817,38 @@ mod tests {
             vec![RuleId::StatsExclusion]
         );
         let own = "impl EventStats {\n    fn to_json(&self) -> Json {\n        obj(vec![(self.cycles_ticked.into())])\n    }\n}\n";
+        assert!(check_one("rust/src/x.rs", own).is_empty());
+    }
+
+    #[test]
+    fn thread_paths_flagged_outside_exec_and_shard_module() {
+        let src = "fn f() {\n    std::thread::scope(|s| { s.spawn(|| {}); });\n    let n = thread::available_parallelism();\n}\n";
+        let found = rules_of(&check_one("rust/src/l1arch/mod.rs", src));
+        assert_eq!(found.len(), 2, "{found:?}");
+        assert!(found.iter().all(|r| *r == RuleId::ShardConfinement));
+        // The execution layer and the shard module are the allowed zones.
+        assert!(check_one("rust/src/exec/runner.rs", src).is_empty());
+        assert!(check_one("rust/src/engine/shard.rs", src).is_empty());
+        // `threads` counts, prose identifiers, comments and strings are
+        // not thread spawns.
+        let benign = "//! Uses std::thread::scope internally.\nfn f(threads: usize) -> usize {\n    let thread_pool_size = threads;\n    thread_pool_size\n}\n";
+        assert!(check_one("rust/src/l1arch/mod.rs", benign).is_empty());
+        // Test regions may exercise harnesses directly.
+        let in_test = "fn f() {}\n#[cfg(test)]\nmod tests {\n    fn t() { std::thread::yield_now(); }\n}\n";
+        assert!(check_one("rust/src/l1arch/mod.rs", in_test).is_empty());
+        // The escape hatch: a justified suppression on the line.
+        let sup = "fn f() {\n    std::thread::yield_now(); // lint: allow(shard-confinement) — host-only nicety\n}\n";
+        assert!(check_one("rust/src/l1arch/mod.rs", sup).is_empty());
+    }
+
+    #[test]
+    fn shard_stats_fields_in_foreign_to_json_flagged() {
+        let src = "impl SimResult {\n    fn to_json(&self) -> Json {\n        obj(vec![(self.ingress_wakes.into())])\n    }\n}\n";
+        assert_eq!(
+            rules_of(&check_one("rust/src/x.rs", src)),
+            vec![RuleId::StatsExclusion]
+        );
+        let own = "impl ShardStats {\n    fn to_json(&self) -> Json {\n        obj(vec![(self.epochs.into())])\n    }\n}\n";
         assert!(check_one("rust/src/x.rs", own).is_empty());
     }
 

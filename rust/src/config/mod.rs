@@ -300,11 +300,26 @@ pub struct EngineConfig {
     /// reference mode the differential tests compare against.  Simulated
     /// metrics are byte-identical either way — only wall clock moves.
     pub event_driven: bool,
+    /// Cluster shards the cycle loop runs across (`--shards`).  Each shard
+    /// owns a contiguous cluster range — its cores, SIMT issue, and wake
+    /// calendar — and ticks them on its own host thread between the
+    /// deterministic epoch barriers of `engine::shard`; the shared
+    /// L1/NoC/L2/DRAM walk stays serialized in canonical request order at
+    /// the barrier.  `1` (the default) selects the unsharded loop;
+    /// values above the cluster count clamp to it.  Simulated metrics are
+    /// byte-identical at any shard count — only wall clock moves (pinned
+    /// by `rust/tests/shard_determinism.rs` and the CI cmp smoke).
+    /// Sharding stays opt-in until a toolchain-equipped session measures
+    /// the crossover against the per-epoch barrier cost.
+    pub shards: usize,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { event_driven: true }
+        EngineConfig {
+            event_driven: true,
+            shards: 1,
+        }
     }
 }
 
@@ -492,6 +507,9 @@ impl GpuConfig {
         if self.l1.mshr_entries == 0 || self.l2.mshr_entries == 0 {
             return fail("MSHR entries must be > 0".into());
         }
+        if self.engine.shards == 0 {
+            return fail("engine.shards must be > 0 (1 = unsharded loop)".into());
+        }
         Ok(())
     }
 
@@ -601,7 +619,10 @@ impl GpuConfig {
             ),
             (
                 "engine",
-                Json::obj(vec![("event_driven", self.engine.event_driven.into())]),
+                Json::obj(vec![
+                    ("event_driven", self.engine.event_driven.into()),
+                    ("shards", self.engine.shards.into()),
+                ]),
             ),
         ])
     }
@@ -704,6 +725,7 @@ impl GpuConfig {
         }
         if let Some(e) = j.get("engine") {
             cfg.engine.event_driven = g_bool(e, "event_driven", cfg.engine.event_driven);
+            cfg.engine.shards = g_usize(e, "shards", cfg.engine.shards);
         }
         Ok(cfg)
     }
@@ -763,6 +785,7 @@ mod tests {
         cfg.sharing.probe_predictor = true;
         cfg.sharing.residency_index = false;
         cfg.engine.event_driven = false;
+        cfg.engine.shards = 3;
         cfg.l1.write_policy = WritePolicy::WriteThrough;
         cfg.seed = 12345;
         let j = cfg.to_json();
@@ -783,6 +806,15 @@ mod tests {
         let mut cfg = GpuConfig::default();
         cfg.sharing.ata_comparator_groups = 2; // cluster needs 10
         assert!(cfg.validate().is_err());
+
+        let mut cfg = GpuConfig::default();
+        cfg.engine.shards = 0; // 1 is the unsharded minimum
+        assert!(cfg.validate().is_err());
+
+        // Over-sharding is legal (the engine clamps to the cluster count).
+        let mut cfg = GpuConfig::default();
+        cfg.engine.shards = 64;
+        cfg.validate().unwrap();
     }
 
     #[test]

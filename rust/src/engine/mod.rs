@@ -37,6 +37,14 @@
 //! An engine is *not* `Sync`: it is owned and driven by exactly one
 //! worker; determinism comes from the simulation being a pure function
 //! of (config, workload), never from synchronization.
+//!
+//! **Sharding.**  `engine.shards > 1` splits one run's clusters across
+//! host threads between deterministic epoch barriers (the `shard`
+//! module), with the shared memory walk kept in canonical order on the
+//! coordinator.  The sequential loops below remain the reference:
+//! `--shards N` output is byte-identical to `--shards 1` (pinned by
+//! `rust/tests/shard_determinism.rs` and the CI cmp smoke), and
+//! [`Engine::shard_stats`] exposes the sharded loop's host telemetry.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -60,8 +68,10 @@ use crate::l2::MemSystem;
 use crate::mem::{LineAddr, MemTxn};
 use crate::stats::{
     AppCoStats, ContentionStats, EventStats, HopStats, KernelStats, LoadLatencyTracker,
-    MultiResult, SimResult,
+    MultiResult, ShardStats, SimResult,
 };
+
+mod shard;
 
 /// One kernel launch: a set of warp programs per core.
 #[derive(Debug, Clone, Default)]
@@ -201,6 +211,97 @@ const MAX_KERNEL_CYCLES: u64 = 500_000_000;
 /// can size workloads that provably cross a boundary.
 pub const SWEEP_PERIOD: u64 = 65_537;
 
+/// Mutable per-lane execution state of one co-executing application,
+/// shared by the sequential [`Engine::run_multi`] loop and the sharded
+/// `shard::multi_loop`.
+struct LaneRun {
+    kernel_idx: usize,
+    /// Cores of the currently active kernel (empty once done — and empty
+    /// for the whole run under the sharded loop, which owns the cores in
+    /// per-shard slots instead).
+    cores: Vec<SimtCore>,
+    done: bool,
+    finish_cycle: u64,
+    insts: u64,
+    requests: u64,
+    tracker: LoadLatencyTracker,
+    stage_tracker: LoadLatencyTracker,
+    kernels_out: Vec<KernelStats>,
+    k_start_cycle: u64,
+    k_start_insts: u64,
+    k_start_loads: u64,
+    k_start_lat: u64,
+    k_start_stage_loads: u64,
+    k_start_stage_lat: u64,
+}
+
+impl LaneRun {
+    /// Fresh lane state with kernel 0 launched.
+    fn start(lane: &AppLane, cfg: &GpuConfig, start_cycle: u64) -> LaneRun {
+        LaneRun {
+            kernel_idx: 0,
+            cores: launch_lane(lane, 0, cfg),
+            done: false,
+            finish_cycle: 0,
+            insts: 0,
+            requests: 0,
+            tracker: LoadLatencyTracker::default(),
+            stage_tracker: LoadLatencyTracker::default(),
+            kernels_out: Vec::new(),
+            k_start_cycle: start_cycle,
+            k_start_insts: 0,
+            k_start_loads: 0,
+            k_start_lat: 0,
+            k_start_stage_loads: 0,
+            k_start_stage_lat: 0,
+        }
+    }
+
+    /// Close the books on the lane's current kernel at cycle `now`.
+    /// Hit classes are counted in the shared L1 and cannot be attributed
+    /// to one lane, so `l1_hit_rate` is reported as 0 here.
+    fn finish_kernel(&mut self, spec: &KernelSpec, now: u64) {
+        let loads = self.tracker.completed_loads - self.k_start_loads;
+        let lat = self.tracker.total_latency - self.k_start_lat;
+        let stage_loads = self.stage_tracker.completed_loads - self.k_start_stage_loads;
+        let stage_lat = self.stage_tracker.total_latency - self.k_start_stage_lat;
+        self.kernels_out.push(KernelStats {
+            name: spec.name.clone(),
+            cycles: now - self.k_start_cycle,
+            insts: self.insts - self.k_start_insts,
+            l1_mean_latency: if loads == 0 { 0.0 } else { lat as f64 / loads as f64 },
+            l1_stage_latency: if stage_loads == 0 {
+                0.0
+            } else {
+                stage_lat as f64 / stage_loads as f64
+            },
+            l1_hit_rate: 0.0,
+        });
+    }
+
+    /// Re-baseline the per-kernel counters for the next kernel, which
+    /// starts issuing at `now + 1` (the one-cycle launch boundary).
+    fn begin_kernel(&mut self, now: u64) {
+        self.k_start_cycle = now;
+        self.k_start_insts = self.insts;
+        self.k_start_loads = self.tracker.completed_loads;
+        self.k_start_lat = self.tracker.total_latency;
+        self.k_start_stage_loads = self.stage_tracker.completed_loads;
+        self.k_start_stage_lat = self.stage_tracker.total_latency;
+    }
+}
+
+/// Launch a lane's kernel `kernel_idx`: one fresh core per partition
+/// slot, addressed by its global core id.
+fn launch_lane(lane: &AppLane, kernel_idx: usize, cfg: &GpuConfig) -> Vec<SimtCore> {
+    lane.kernels[kernel_idx]
+        .programs
+        .iter()
+        .enumerate()
+        .map(|(j, progs)| SimtCore::new(lane.partition.global(j) as u32, cfg, progs.clone()))
+        .collect()
+}
+
 pub struct Engine {
     cfg: GpuConfig,
     l1: Box<dyn L1Arch>,
@@ -219,6 +320,9 @@ pub struct Engine {
     /// Clock-advance telemetry (ticked vs simulated cycles); host data
     /// only, never part of result JSON.
     events: EventStats,
+    /// Sharded-loop telemetry (epochs, cross-shard traffic); host data
+    /// only, never part of result JSON.
+    shard_stats: ShardStats,
 }
 
 impl Engine {
@@ -235,7 +339,17 @@ impl Engine {
             wakes: BinaryHeap::new(),
             total_insts: 0,
             events: EventStats::default(),
+            shard_stats: ShardStats::default(),
         }
+    }
+
+    /// Effective shard count for this engine's config: `engine.shards`
+    /// clamped to `[1, clusters]`.  Shards own whole clusters, so more
+    /// shards than clusters cannot exist — over-sharding is legal in the
+    /// config and simply clamps.  `1` selects the sequential reference
+    /// loops below.
+    fn effective_shards(&self) -> usize {
+        self.cfg.engine.shards.clamp(1, self.cfg.clusters)
     }
 
     /// Compute the next clock value from the next-event horizon.
@@ -384,66 +498,11 @@ impl Engine {
         debug_assert!(self.wakes.is_empty());
         let start_cycle = self.cycle;
 
-        /// Mutable per-lane execution state.
-        struct LaneRun {
-            kernel_idx: usize,
-            /// Cores of the currently active kernel (empty once done).
-            cores: Vec<SimtCore>,
-            done: bool,
-            finish_cycle: u64,
-            insts: u64,
-            requests: u64,
-            tracker: LoadLatencyTracker,
-            stage_tracker: LoadLatencyTracker,
-            kernels_out: Vec<KernelStats>,
-            k_start_cycle: u64,
-            k_start_insts: u64,
-            k_start_loads: u64,
-            k_start_lat: u64,
-            k_start_stage_loads: u64,
-            k_start_stage_lat: u64,
-        }
-
-        let launch = |lane: &AppLane, kernel_idx: usize, cfg: &GpuConfig| -> Vec<SimtCore> {
-            lane.kernels[kernel_idx]
-                .programs
-                .iter()
-                .enumerate()
-                .map(|(j, progs)| {
-                    SimtCore::new(lane.partition.global(j) as u32, cfg, progs.clone())
-                })
-                .collect()
-        };
-
         let mut lanes: Vec<LaneRun> = multi
             .lanes
             .iter()
-            .map(|lane| LaneRun {
-                kernel_idx: 0,
-                cores: launch(lane, 0, &self.cfg),
-                done: false,
-                finish_cycle: 0,
-                insts: 0,
-                requests: 0,
-                tracker: LoadLatencyTracker::default(),
-                stage_tracker: LoadLatencyTracker::default(),
-                kernels_out: Vec::new(),
-                k_start_cycle: start_cycle,
-                k_start_insts: 0,
-                k_start_loads: 0,
-                k_start_lat: 0,
-                k_start_stage_loads: 0,
-                k_start_stage_lat: 0,
-            })
+            .map(|lane| LaneRun::start(lane, &self.cfg, start_cycle))
             .collect();
-
-        // Global core id → lane index (usize::MAX for idle cores).
-        let mut owner = vec![usize::MAX; self.cfg.cores];
-        for (li, lane) in multi.lanes.iter().enumerate() {
-            for c in lane.partition.first..lane.partition.end() {
-                owner[c] = li;
-            }
-        }
 
         let l1_before = *self.l1.stats();
         let l2_before = self.mem.stats;
@@ -455,136 +514,128 @@ impl Engine {
         // per lane, so scale the solo path's per-kernel budget.
         let total_kernels: u64 = multi.lanes.iter().map(|l| l.kernels.len() as u64).sum();
         let max_cycles = MAX_KERNEL_CYCLES.saturating_mul(total_kernels.max(1));
-        let mut batch = IssueBatch::default();
-        let mut last_sweep = self.cycle;
-        loop {
-            let now = self.cycle;
+        let n_shards = self.effective_shards();
+        if n_shards > 1 {
+            shard::multi_loop(self, multi, &mut lanes, start_cycle, max_cycles, n_shards);
+        } else {
+            // Global core id → lane index (usize::MAX for idle cores).
+            let mut owner = vec![usize::MAX; self.cfg.cores];
+            for (li, lane) in multi.lanes.iter().enumerate() {
+                for c in lane.partition.first..lane.partition.end() {
+                    owner[c] = li;
+                }
+            }
+            let mut batch = IssueBatch::default();
+            let mut last_sweep = self.cycle;
+            loop {
+                let now = self.cycle;
 
-            // 1. Deliver due wake-ups to the owning lane's core.
-            while let Some(&Reverse((t, core, warp))) = self.wakes.peek() {
-                if t > now {
+                // 1. Deliver due wake-ups to the owning lane's core.
+                while let Some(&Reverse((t, core, warp))) = self.wakes.peek() {
+                    if t > now {
+                        break;
+                    }
+                    self.wakes.pop();
+                    let li = owner[core as usize];
+                    let local = multi.lanes[li].partition.local(core as usize);
+                    lanes[li].cores[local].load_complete(warp, t);
+                }
+
+                // 2. Tick every active lane's cores; attribute issued insts.
+                batch.requests.clear();
+                batch.insts_issued = 0;
+                for lane in lanes.iter_mut() {
+                    if lane.done {
+                        continue;
+                    }
+                    let before = batch.insts_issued;
+                    for core in lane.cores.iter_mut() {
+                        core.tick(now, &mut batch);
+                    }
+                    lane.insts += batch.insts_issued - before;
+                }
+                self.total_insts += batch.insts_issued;
+
+                // 3. Feed requests through the shared L1 organization,
+                //    tracking load latencies per lane.
+                let mut prev_group: Option<(u32, u32, u64)> = None;
+                for (req, group_n) in batch.requests.iter() {
+                    let lane = &mut lanes[owner[req.core as usize]];
+                    lane.requests += 1;
+                    if *group_n > 0 {
+                        let key = (req.core, req.warp, req.inst);
+                        if prev_group != Some(key) {
+                            lane.tracker.issue(req.core, req.warp, req.inst, *group_n, now);
+                            lane.stage_tracker.issue(req.core, req.warp, req.inst, *group_n, now);
+                            prev_group = Some(key);
+                        }
+                    }
+                    let mut txn = MemTxn::new(*req, now);
+                    self.l1.access(&mut txn, &mut self.mem);
+                    self.hops.record(&txn.hops, &txn.queued);
+                    if *group_n > 0 {
+                        lane.stage_tracker
+                            .complete_one(req.core, req.warp, req.inst, txn.l1_stage_done());
+                        if let Some(load_done) =
+                            lane.tracker.complete_one(req.core, req.warp, req.inst, txn.done())
+                        {
+                            self.wakes
+                                .push(Reverse((load_done.max(now + 1), req.core, req.warp)));
+                        }
+                    }
+                }
+
+                // 4. Kernel completion: advance finished lanes independently.
+                for (li, lane) in lanes.iter_mut().enumerate() {
+                    if lane.done || !lane.cores.iter().all(SimtCore::all_done) {
+                        continue;
+                    }
+                    let spec = &multi.lanes[li].kernels[lane.kernel_idx];
+                    lane.finish_kernel(spec, now);
+                    lane.kernel_idx += 1;
+                    if lane.kernel_idx < multi.lanes[li].kernels.len() {
+                        lane.cores = launch_lane(&multi.lanes[li], lane.kernel_idx, &self.cfg);
+                        lane.begin_kernel(now);
+                    } else {
+                        lane.done = true;
+                        lane.finish_cycle = now - start_cycle;
+                        lane.cores.clear();
+                    }
+                }
+
+                // 5. Termination / advance.
+                if lanes.iter().all(|l| l.done) {
                     break;
                 }
-                self.wakes.pop();
-                let li = owner[core as usize];
-                let local = multi.lanes[li].partition.local(core as usize);
-                lanes[li].cores[local].load_complete(warp, t);
-            }
+                let next_ready = lanes
+                    .iter()
+                    .filter(|l| !l.done)
+                    .flat_map(|l| l.cores.iter().map(SimtCore::next_event_hint))
+                    .min()
+                    .unwrap_or(u64::MAX);
+                let next_wake =
+                    self.wakes.peek().map(|Reverse((t, _, _))| *t).unwrap_or(u64::MAX);
+                let horizon = next_ready.min(next_wake);
+                if horizon == u64::MAX {
+                    panic!("co-execution '{}' deadlocked at cycle {now}", multi.name);
+                }
+                self.advance(now, horizon);
 
-            // 2. Tick every active lane's cores; attribute issued insts.
-            batch.requests.clear();
-            batch.insts_issued = 0;
-            for lane in lanes.iter_mut() {
-                if lane.done {
-                    continue;
+                // Stale-entry sweep at fixed boundaries: both clock modes
+                // visit the same (boundary, threshold) pairs no matter how
+                // the clock advanced, so the L2 in-flight merge window can
+                // never depend on `engine.event_driven`.  A jump crossing
+                // several boundaries replays each one; earlier sweeps are
+                // subsumed by later ones (pure `ready > t` filters), but
+                // stepping keeps `last_sweep` mode-independent.
+                while self.cycle - last_sweep >= SWEEP_PERIOD {
+                    last_sweep += SWEEP_PERIOD;
+                    self.l1.sweep(last_sweep);
+                    self.mem.sweep_in_flight(last_sweep);
                 }
-                let before = batch.insts_issued;
-                for core in lane.cores.iter_mut() {
-                    core.tick(now, &mut batch);
+                if self.cycle - start_cycle > max_cycles {
+                    panic!("co-execution '{}' exceeded {max_cycles} cycles", multi.name);
                 }
-                lane.insts += batch.insts_issued - before;
-            }
-            self.total_insts += batch.insts_issued;
-
-            // 3. Feed requests through the shared L1 organization,
-            //    tracking load latencies per lane.
-            let mut prev_group: Option<(u32, u32, u64)> = None;
-            for (req, group_n) in batch.requests.iter() {
-                let lane = &mut lanes[owner[req.core as usize]];
-                lane.requests += 1;
-                if *group_n > 0 {
-                    let key = (req.core, req.warp, req.inst);
-                    if prev_group != Some(key) {
-                        lane.tracker.issue(req.core, req.warp, req.inst, *group_n, now);
-                        lane.stage_tracker.issue(req.core, req.warp, req.inst, *group_n, now);
-                        prev_group = Some(key);
-                    }
-                }
-                let mut txn = MemTxn::new(*req, now);
-                self.l1.access(&mut txn, &mut self.mem);
-                self.hops.record(&txn.hops, &txn.queued);
-                if *group_n > 0 {
-                    lane.stage_tracker
-                        .complete_one(req.core, req.warp, req.inst, txn.l1_stage_done());
-                    if let Some(load_done) =
-                        lane.tracker.complete_one(req.core, req.warp, req.inst, txn.done())
-                    {
-                        self.wakes.push(Reverse((load_done.max(now + 1), req.core, req.warp)));
-                    }
-                }
-            }
-
-            // 4. Kernel completion: advance finished lanes independently.
-            for (li, lane) in lanes.iter_mut().enumerate() {
-                if lane.done || !lane.cores.iter().all(SimtCore::all_done) {
-                    continue;
-                }
-                let spec = &multi.lanes[li].kernels[lane.kernel_idx];
-                let loads = lane.tracker.completed_loads - lane.k_start_loads;
-                let lat = lane.tracker.total_latency - lane.k_start_lat;
-                let stage_loads = lane.stage_tracker.completed_loads - lane.k_start_stage_loads;
-                let stage_lat = lane.stage_tracker.total_latency - lane.k_start_stage_lat;
-                lane.kernels_out.push(KernelStats {
-                    name: spec.name.clone(),
-                    cycles: now - lane.k_start_cycle,
-                    insts: lane.insts - lane.k_start_insts,
-                    l1_mean_latency: if loads == 0 { 0.0 } else { lat as f64 / loads as f64 },
-                    l1_stage_latency: if stage_loads == 0 {
-                        0.0
-                    } else {
-                        stage_lat as f64 / stage_loads as f64
-                    },
-                    // Hit classes are counted in the shared L1 and cannot
-                    // be attributed to one lane; reported as 0 here.
-                    l1_hit_rate: 0.0,
-                });
-                lane.kernel_idx += 1;
-                if lane.kernel_idx < multi.lanes[li].kernels.len() {
-                    lane.cores = launch(&multi.lanes[li], lane.kernel_idx, &self.cfg);
-                    lane.k_start_cycle = now;
-                    lane.k_start_insts = lane.insts;
-                    lane.k_start_loads = lane.tracker.completed_loads;
-                    lane.k_start_lat = lane.tracker.total_latency;
-                    lane.k_start_stage_loads = lane.stage_tracker.completed_loads;
-                    lane.k_start_stage_lat = lane.stage_tracker.total_latency;
-                } else {
-                    lane.done = true;
-                    lane.finish_cycle = now - start_cycle;
-                    lane.cores.clear();
-                }
-            }
-
-            // 5. Termination / advance.
-            if lanes.iter().all(|l| l.done) {
-                break;
-            }
-            let next_ready = lanes
-                .iter()
-                .filter(|l| !l.done)
-                .flat_map(|l| l.cores.iter().map(SimtCore::next_event_hint))
-                .min()
-                .unwrap_or(u64::MAX);
-            let next_wake = self.wakes.peek().map(|Reverse((t, _, _))| *t).unwrap_or(u64::MAX);
-            let horizon = next_ready.min(next_wake);
-            if horizon == u64::MAX {
-                panic!("co-execution '{}' deadlocked at cycle {now}", multi.name);
-            }
-            self.advance(now, horizon);
-
-            // Stale-entry sweep at fixed boundaries: both clock modes
-            // visit the same (boundary, threshold) pairs no matter how
-            // the clock advanced, so the L2 in-flight merge window can
-            // never depend on `engine.event_driven`.  A jump crossing
-            // several boundaries replays each one; earlier sweeps are
-            // subsumed by later ones (pure `ready > t` filters), but
-            // stepping keeps `last_sweep` mode-independent.
-            while self.cycle - last_sweep >= SWEEP_PERIOD {
-                last_sweep += SWEEP_PERIOD;
-                self.l1.sweep(last_sweep);
-                self.mem.sweep_in_flight(last_sweep);
-            }
-            if self.cycle - start_cycle > max_cycles {
-                panic!("co-execution '{}' exceeded {max_cycles} cycles", multi.name);
             }
         }
 
@@ -664,6 +715,17 @@ impl Engine {
         self.events
     }
 
+    /// Sharded-loop telemetry, cumulative over the engine's lifetime:
+    /// effective shard count of the last sharded run, synchronization
+    /// epochs executed, and cross-shard traffic (egress transactions
+    /// into the shared memory walk, completion wakes routed through the
+    /// per-shard ingress FIFOs).  All zeros when every run used the
+    /// sequential loop.  Host-performance data only — never folded into
+    /// result JSON (see [`crate::stats::ShardStats`]).
+    pub fn shard_stats(&self) -> ShardStats {
+        self.shard_stats
+    }
+
     fn run_kernel(&mut self, spec: &KernelSpec) -> KernelStats {
         assert_eq!(
             spec.programs.len(),
@@ -689,86 +751,93 @@ impl Engine {
         // to completion.
         debug_assert!(self.wakes.is_empty());
 
-        let mut batch = IssueBatch::default();
-        let mut last_sweep = self.cycle;
-        loop {
-            let now = self.cycle;
+        let n_shards = self.effective_shards();
+        if n_shards > 1 {
+            shard::kernel_loop(self, spec, cores, n_shards);
+        } else {
+            let mut batch = IssueBatch::default();
+            let mut last_sweep = self.cycle;
+            loop {
+                let now = self.cycle;
 
-            // 1. Deliver due wake-ups.
-            while let Some(&Reverse((t, core, warp))) = self.wakes.peek() {
-                if t > now {
+                // 1. Deliver due wake-ups.
+                while let Some(&Reverse((t, core, warp))) = self.wakes.peek() {
+                    if t > now {
+                        break;
+                    }
+                    self.wakes.pop();
+                    cores[core as usize].load_complete(warp, t);
+                }
+
+                // 2. Tick every core; collect issued requests.
+                batch.requests.clear();
+                batch.insts_issued = 0;
+                for core in cores.iter_mut() {
+                    core.tick(now, &mut batch);
+                }
+                self.total_insts += batch.insts_issued;
+
+                // 3. Feed requests through the L1 organization.
+                let mut prev_group: Option<(u32, u32, u64)> = None;
+                for (req, group_n) in batch.requests.iter() {
+                    if *group_n > 0 {
+                        // A load: register its instruction group on first sight.
+                        let key = (req.core, req.warp, req.inst);
+                        if prev_group != Some(key) {
+                            self.tracker.issue(req.core, req.warp, req.inst, *group_n, now);
+                            self.stage_tracker.issue(req.core, req.warp, req.inst, *group_n, now);
+                            prev_group = Some(key);
+                        }
+                    }
+                    let mut txn = MemTxn::new(*req, now);
+                    self.l1.access(&mut txn, &mut self.mem);
+                    self.hops.record(&txn.hops, &txn.queued);
+                    if *group_n > 0 {
+                        self.stage_tracker
+                            .complete_one(req.core, req.warp, req.inst, txn.l1_stage_done());
+                        if let Some(load_done) =
+                            self.tracker.complete_one(req.core, req.warp, req.inst, txn.done())
+                        {
+                            self.wakes
+                                .push(Reverse((load_done.max(now + 1), req.core, req.warp)));
+                        }
+                    }
+                }
+
+                // 4. Termination / advance.
+                if cores.iter().all(SimtCore::all_done) {
                     break;
                 }
-                self.wakes.pop();
-                cores[core as usize].load_complete(warp, t);
-            }
-
-            // 2. Tick every core; collect issued requests.
-            batch.requests.clear();
-            batch.insts_issued = 0;
-            for core in cores.iter_mut() {
-                core.tick(now, &mut batch);
-            }
-            self.total_insts += batch.insts_issued;
-
-            // 3. Feed requests through the L1 organization.
-            let mut prev_group: Option<(u32, u32, u64)> = None;
-            for (req, group_n) in batch.requests.iter() {
-                if *group_n > 0 {
-                    // A load: register its instruction group on first sight.
-                    let key = (req.core, req.warp, req.inst);
-                    if prev_group != Some(key) {
-                        self.tracker.issue(req.core, req.warp, req.inst, *group_n, now);
-                        self.stage_tracker.issue(req.core, req.warp, req.inst, *group_n, now);
-                        prev_group = Some(key);
-                    }
+                // Next-event horizon: the earliest core issue hint or pending
+                // wake (post-tick hints are O(1) per core).  The event-driven
+                // clock jumps there; reference mode still computes it so the
+                // deadlock guard is identical in both modes.
+                let next_ready = cores
+                    .iter()
+                    .map(SimtCore::next_event_hint)
+                    .min()
+                    .unwrap_or(u64::MAX);
+                let next_wake =
+                    self.wakes.peek().map(|Reverse((t, _, _))| *t).unwrap_or(u64::MAX);
+                let horizon = next_ready.min(next_wake);
+                if horizon == u64::MAX {
+                    panic!(
+                        "kernel '{}' deadlocked at cycle {now}: no ready warps, no wakes",
+                        spec.name
+                    );
                 }
-                let mut txn = MemTxn::new(*req, now);
-                self.l1.access(&mut txn, &mut self.mem);
-                self.hops.record(&txn.hops, &txn.queued);
-                if *group_n > 0 {
-                    self.stage_tracker
-                        .complete_one(req.core, req.warp, req.inst, txn.l1_stage_done());
-                    if let Some(load_done) =
-                        self.tracker.complete_one(req.core, req.warp, req.inst, txn.done())
-                    {
-                        self.wakes.push(Reverse((load_done.max(now + 1), req.core, req.warp)));
-                    }
+                self.advance(now, horizon);
+
+                // Fixed-boundary stale-entry sweep — see the run_multi loop
+                // for why the boundaries must be clock-cadence-independent.
+                while self.cycle - last_sweep >= SWEEP_PERIOD {
+                    last_sweep += SWEEP_PERIOD;
+                    self.l1.sweep(last_sweep);
+                    self.mem.sweep_in_flight(last_sweep);
                 }
-            }
-
-            // 4. Termination / advance.
-            if cores.iter().all(SimtCore::all_done) {
-                break;
-            }
-            // Next-event horizon: the earliest core issue hint or pending
-            // wake (post-tick hints are O(1) per core).  The event-driven
-            // clock jumps there; reference mode still computes it so the
-            // deadlock guard is identical in both modes.
-            let next_ready = cores
-                .iter()
-                .map(SimtCore::next_event_hint)
-                .min()
-                .unwrap_or(u64::MAX);
-            let next_wake = self.wakes.peek().map(|Reverse((t, _, _))| *t).unwrap_or(u64::MAX);
-            let horizon = next_ready.min(next_wake);
-            if horizon == u64::MAX {
-                panic!(
-                    "kernel '{}' deadlocked at cycle {now}: no ready warps, no wakes",
-                    spec.name
-                );
-            }
-            self.advance(now, horizon);
-
-            // Fixed-boundary stale-entry sweep — see the run_multi loop
-            // for why the boundaries must be clock-cadence-independent.
-            while self.cycle - last_sweep >= SWEEP_PERIOD {
-                last_sweep += SWEEP_PERIOD;
-                self.l1.sweep(last_sweep);
-                self.mem.sweep_in_flight(last_sweep);
-            }
-            if self.cycle - start_cycle > MAX_KERNEL_CYCLES {
-                panic!("kernel '{}' exceeded {MAX_KERNEL_CYCLES} cycles", spec.name);
+                if self.cycle - start_cycle > MAX_KERNEL_CYCLES {
+                    panic!("kernel '{}' exceeded {MAX_KERNEL_CYCLES} cycles", spec.name);
+                }
             }
         }
 
@@ -1024,6 +1093,78 @@ mod tests {
         );
         assert_eq!(s_off.jumps, 0);
         assert_eq!(s_off.skipped(), 0);
+    }
+
+    #[test]
+    fn sharded_engine_matches_sequential() {
+        // The tentpole contract: `engine.shards` moves only wall clock —
+        // the result JSON is byte-identical at any shard count — while
+        // the telemetry proves the sharded loop actually ran.
+        let cfg = GpuConfig::tiny(L1ArchKind::Ata);
+        let mut cfg_sh = cfg.clone();
+        cfg_sh.engine.shards = 4; // tiny has 2 clusters: clamps to 2
+        let wl = Workload {
+            name: "t".into(),
+            kernels: vec![
+                simple_kernel(&cfg, |c| (0..8).map(|k| (c as u64 * 31 + k) % 64).collect()),
+                simple_kernel(&cfg, |c| (0..8).map(|k| (c as u64 * 17 + k) % 64).collect()),
+            ],
+        };
+        let mut e_seq = Engine::new(&cfg);
+        let r_seq = e_seq.run(&wl);
+        let mut e_sh = Engine::new(&cfg_sh);
+        let r_sh = e_sh.run(&wl);
+        assert_eq!(
+            r_sh.to_json().pretty(),
+            r_seq.to_json().pretty(),
+            "simulated metrics must not depend on engine.shards"
+        );
+        assert_eq!(e_seq.shard_stats(), ShardStats::default());
+        let s = e_sh.shard_stats();
+        assert_eq!(s.shard_count, 2, "tiny GPU clamps 4 shards to its 2 clusters");
+        assert!(s.epochs > 0);
+        assert!(s.ingress_wakes > 0, "loads must complete through the ingress FIFOs");
+        assert!(s.egress_txns > 0, "cold misses must cross into the shared L2 walk");
+    }
+
+    #[test]
+    fn sharded_multi_matches_sequential() {
+        // Co-execution under the sharded loop: lanes keep their own
+        // trackers and kernel progression on the coordinator while the
+        // shards own the cores — the multi result JSON must stay
+        // byte-identical, including per-kernel and per-app attribution.
+        let cfg = GpuConfig::tiny(L1ArchKind::Ata);
+        let mut cfg_sh = cfg.clone();
+        cfg_sh.engine.shards = 2;
+        let mk = |salt: u64| {
+            lane_kernel(4, move |c| (0..8).map(|k| (salt + c as u64 * 31 + k) % 64).collect())
+        };
+        let multi = MultiWorkload {
+            name: "a+b".into(),
+            lanes: vec![
+                AppLane {
+                    name: "a".into(),
+                    kernels: vec![mk(0), mk(5)],
+                    partition: CorePartition { first: 0, count: 4 },
+                },
+                AppLane {
+                    name: "b".into(),
+                    kernels: vec![mk(17)],
+                    partition: CorePartition { first: 4, count: 4 },
+                },
+            ],
+        };
+        let r_seq = Engine::new(&cfg).run_multi(&multi);
+        let mut e_sh = Engine::new(&cfg_sh);
+        let r_sh = e_sh.run_multi(&multi);
+        assert_eq!(
+            r_sh.to_json().pretty(),
+            r_seq.to_json().pretty(),
+            "co-execution must not depend on engine.shards"
+        );
+        let s = e_sh.shard_stats();
+        assert_eq!(s.shard_count, 2);
+        assert!(s.epochs > 0 && s.ingress_wakes > 0);
     }
 
     #[test]

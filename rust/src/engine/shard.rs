@@ -1,0 +1,540 @@
+//! The sharded cycle loop: one big simulation fanned out across host
+//! cores, byte-identical at any shard count.
+//!
+//! `engine.shards > 1` splits the GPU's clusters into contiguous shards.
+//! Each shard owns its clusters' cores outright — SIMT issue state, the
+//! per-shard wake calendar, and (through cluster alignment) the residency
+//! index and remote/ATA probe domain of those clusters — and ticks them
+//! on its own host thread.  The shared walk below L1 (NoC → L2 → DRAM and
+//! the L1 organization's tag/data state) stays on the coordinator,
+//! serialized in the *canonical request order* of the unsharded loop.
+//! That split is the `MemTxn` serialization cut: everything up to request
+//! creation is core-local and parallel; everything from `l1.access` on is
+//! shared and sequential.
+//!
+//! # Epoch structure
+//!
+//! One engine-loop iteration (one *epoch*, covering exactly the simulated
+//! cycles the unsharded loop would cover in one iteration) runs three
+//! phases separated by barriers:
+//!
+//! 1. **Tick (parallel).**  Every shard delivers its due wakes and ticks
+//!    its own cores into per-core issue batches.  `SimtCore::tick` and
+//!    `load_complete` touch only core-local state, so shards share
+//!    nothing in this phase.
+//! 2. **Memory walk (serial).**  The coordinator locks every shard and
+//!    replays the per-core batches through the shared L1 organization and
+//!    memory system in exactly the order the unsharded loop would have:
+//!    shard-major == ascending global core id for solo runs, lane-major
+//!    (declaration order, then partition order) for co-execution.
+//!    Completion wake-ups are routed into the *owning* shard's ingress
+//!    FIFO instead of a global calendar.
+//! 3. **Drain + horizon (parallel).**  Every shard drains its ingress
+//!    FIFO into its local wake heap and computes its next-event horizon —
+//!    the min over its own cores' issue hints and its wake calendar, the
+//!    per-shard form of the event-driven horizon of PR 6.  The
+//!    coordinator reduces the shard horizons to the global one and
+//!    advances the clock exactly as [`Engine::advance`] always has.
+//!
+//! # The three determinism rules
+//!
+//! Byte-identity of the result JSON at any `--shards` value (the
+//! non-negotiable referee, pinned by `rust/tests/shard_determinism.rs`)
+//! follows from three rules the implementation never bends:
+//!
+//! 1. **Shared state mutates in canonical order only.**  `l1.access`,
+//!    the trackers, and the Grant/contention ledger run on the
+//!    coordinator in the unsharded loop's request order, so request *k*
+//!    sees exactly the MSHR/fill/reservation state it would have seen
+//!    unsharded, and queued cycles keep attributing to the requesting
+//!    core no matter which shard ticked it.
+//! 2. **Wakes stay with their owner.**  A completion wake targets the
+//!    issuing core, whose shard owns it end to end; per-shard heaps order
+//!    ties by the same `(cycle, core, warp)` key as the global calendar,
+//!    so delivery order to any single core is unchanged.
+//! 3. **Time is reduced, never raced.**  `min` over per-shard horizons
+//!    equals the global horizon (every pending wake lives in exactly one
+//!    shard), the coordinator alone advances the clock, and the
+//!    fixed-boundary sweeps replay on the coordinator at the same
+//!    cycles as the unsharded loop.
+//!
+//! Within one epoch no shard reads another shard's state at all, so the
+//! phase-1/phase-3 thread schedule cannot influence any simulated metric
+//! — only wall clock.  The serial memory walk bounds the speedup
+//! (Amdahl on the request stream); the win comes from ticking wide
+//! configurations' SIMT front-ends in parallel.  Sharding therefore
+//! stays opt-in (`--shards` defaults to 1) until a toolchain-equipped
+//! session measures the crossover against the barrier cost.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Barrier, Mutex, MutexGuard};
+
+use crate::config::GpuConfig;
+use crate::core::{IssueBatch, SimtCore};
+use crate::mem::MemTxn;
+
+use super::{
+    launch_lane, Engine, KernelSpec, LaneRun, MultiWorkload, MAX_KERNEL_CYCLES, SWEEP_PERIOD,
+};
+
+/// Everything one shard owns: a contiguous range of the GPU's cores (on
+/// cluster boundaries), their wake calendar, the ingress FIFO cross-epoch
+/// traffic arrives through, and the per-core issue batches the serial
+/// memory walk consumes.
+struct ShardState {
+    /// Global core id of the first owned core.
+    first_core: usize,
+    /// Owned cores, indexed by `global - first_core`.  `None` = the core
+    /// is idle this run (unassigned, or its lane finished) — exactly the
+    /// cores the unsharded loop would not tick.
+    cores: Vec<Option<SimtCore>>,
+    /// Per-shard wake calendar, ordered by the same `(cycle, core, warp)`
+    /// key as the unsharded engine's global calendar.
+    wakes: BinaryHeap<Reverse<(u64, u32, u32)>>,
+    /// Completion wakes routed here by the serial memory walk; drained
+    /// into `wakes` at the epoch barrier (phase 3).
+    ingress: Vec<(u64, u32, u32)>,
+    /// One issue batch per owned core slot, refilled every epoch.
+    batches: Vec<IssueBatch>,
+    /// Per-shard next-event horizon computed in phase 3: min over the
+    /// owned cores' issue hints and the local wake calendar.
+    horizon: u64,
+}
+
+impl ShardState {
+    /// Phase 1: deliver due wakes to the owning cores, then tick every
+    /// owned core into its per-core batch.  Touches only shard-local
+    /// state (rule 2: wakes stay with their owner).
+    fn tick_epoch(&mut self, now: u64) {
+        while let Some(&Reverse((t, core, warp))) = self.wakes.peek() {
+            if t > now {
+                break;
+            }
+            self.wakes.pop();
+            self.cores[core as usize - self.first_core]
+                .as_mut()
+                .expect("wake delivered to a vacant core slot")
+                .load_complete(warp, t);
+        }
+        for (slot, batch) in self.cores.iter_mut().zip(self.batches.iter_mut()) {
+            batch.requests.clear();
+            batch.insts_issued = 0;
+            if let Some(core) = slot.as_mut() {
+                core.tick(now, batch);
+            }
+        }
+    }
+
+    /// Phase 3: absorb the ingress FIFO into the wake calendar and
+    /// compute this shard's next-event horizon.
+    fn drain_and_horizon(&mut self) {
+        for wake in self.ingress.drain(..) {
+            self.wakes.push(Reverse(wake));
+        }
+        let next_ready = self
+            .cores
+            .iter()
+            .flatten()
+            .map(SimtCore::next_event_hint)
+            .min()
+            .unwrap_or(u64::MAX);
+        let next_wake = self.wakes.peek().map(|Reverse((t, _, _))| *t).unwrap_or(u64::MAX);
+        self.horizon = next_ready.min(next_wake);
+    }
+
+    /// All owned cores finished (vacant slots count as done, mirroring
+    /// the unsharded loop, which simply has no such core to tick).
+    fn all_done(&self) -> bool {
+        self.cores.iter().flatten().all(SimtCore::all_done)
+    }
+}
+
+/// Split `cfg.cores` (as `slots`, indexed by global core id) into
+/// `n_shards` cluster-aligned shards: shard `i` owns a contiguous run of
+/// `clusters / n_shards` clusters, the remainder going one each to the
+/// leading shards.  Shard-major core order therefore equals ascending
+/// global core order — the canonical solo order for free.
+fn build_shards(
+    slots: Vec<Option<SimtCore>>,
+    cfg: &GpuConfig,
+    n_shards: usize,
+) -> Vec<Mutex<ShardState>> {
+    debug_assert!((2..=cfg.clusters).contains(&n_shards));
+    debug_assert_eq!(slots.len(), cfg.cores);
+    let cpc = cfg.cores_per_cluster();
+    let base = cfg.clusters / n_shards;
+    let rem = cfg.clusters % n_shards;
+    let mut slots = slots.into_iter();
+    let mut first_cluster = 0;
+    (0..n_shards)
+        .map(|i| {
+            let n_clusters = base + usize::from(i < rem);
+            let n_cores = n_clusters * cpc;
+            let first_core = first_cluster * cpc;
+            first_cluster += n_clusters;
+            ShardState {
+                first_core,
+                cores: slots.by_ref().take(n_cores).collect(),
+                wakes: BinaryHeap::new(),
+                ingress: Vec::new(),
+                batches: (0..n_cores).map(|_| IssueBatch::default()).collect(),
+                horizon: u64::MAX,
+            }
+        })
+        .map(Mutex::new)
+        .collect()
+}
+
+/// Global core id → `(shard index, shard-local slot)` for every core,
+/// derived from the same split as [`build_shards`].
+fn core_locations(shards: &[Mutex<ShardState>], cores: usize) -> Vec<(usize, usize)> {
+    let mut loc = vec![(usize::MAX, usize::MAX); cores];
+    for (si, sh) in shards.iter().enumerate() {
+        let sh = sh.lock().unwrap();
+        for local in 0..sh.cores.len() {
+            loc[sh.first_core + local] = (si, local);
+        }
+    }
+    loc
+}
+
+/// The worker side of the barrier choreography.  Four waits per epoch:
+/// tick-go (shutdown checked), tick-done, drain-go (shutdown checked),
+/// drain-done.  The coordinator owns shard 0 and participates in every
+/// wait, so the barrier counts `n_shards` threads total.
+fn worker(shard: &Mutex<ShardState>, barrier: &Barrier, stop: &AtomicBool, clock: &AtomicU64) {
+    loop {
+        barrier.wait(); // tick-go
+        if stop.load(Ordering::Acquire) {
+            return;
+        }
+        let now = clock.load(Ordering::Acquire);
+        shard.lock().unwrap().tick_epoch(now);
+        barrier.wait(); // tick-done; the coordinator runs the serial walk
+        barrier.wait(); // drain-go
+        if stop.load(Ordering::Acquire) {
+            return;
+        }
+        shard.lock().unwrap().drain_and_horizon();
+        barrier.wait(); // drain-done
+    }
+}
+
+/// Lock every shard in shard-major order for the serial phase.  The
+/// workers are parked on the drain-go barrier, so the locks are
+/// uncontended; they exist to satisfy the borrow checker across the
+/// scoped-thread boundary, not to arbitrate.
+fn lock_all<'a>(shards: &'a [Mutex<ShardState>]) -> Vec<MutexGuard<'a, ShardState>> {
+    shards.iter().map(|m| m.lock().unwrap()).collect()
+}
+
+/// Release the workers into shutdown: they re-check `stop` right after
+/// the next barrier they are parked on.
+fn release_and_stop(barrier: &Barrier, stop: &AtomicBool) {
+    stop.store(true, Ordering::Release);
+    barrier.wait();
+}
+
+/// The sharded replacement for [`Engine::run_kernel`]'s cycle loop
+/// (solo mode).  Entered with freshly launched `cores` for every global
+/// core; leaves the engine in exactly the state the unsharded loop would:
+/// clock at the kernel's finish cycle, trackers/L1/memory/hops advanced
+/// by the same request stream in the same order.
+pub(super) fn kernel_loop(
+    eng: &mut Engine,
+    spec: &KernelSpec,
+    cores: Vec<SimtCore>,
+    n_shards: usize,
+) {
+    let start_cycle = eng.cycle;
+    let shards = build_shards(cores.into_iter().map(Some).collect(), &eng.cfg, n_shards);
+    eng.shard_stats.shard_count = n_shards as u64;
+    let barrier = Barrier::new(n_shards);
+    let stop = AtomicBool::new(false);
+    let clock = AtomicU64::new(eng.cycle);
+    let mut last_sweep = eng.cycle;
+
+    std::thread::scope(|s| { // lint: allow(shard-confinement) — the shard module's own worker fan-out
+        for sh in shards.iter().skip(1) {
+            let (barrier, stop, clock) = (&barrier, &stop, &clock);
+            s.spawn(move || worker(sh, barrier, stop, clock));
+        }
+        loop {
+            let now = eng.cycle;
+            clock.store(now, Ordering::Release);
+            barrier.wait(); // tick-go
+            shards[0].lock().unwrap().tick_epoch(now);
+            barrier.wait(); // tick-done
+
+            // Serial memory walk in canonical (ascending global core)
+            // order — rule 1: shared state mutates in canonical order.
+            let mut guards = lock_all(&shards);
+            let mut prev_group: Option<(u32, u32, u64)> = None;
+            for g in guards.iter_mut() {
+                // Reborrow through the guard once so `batches` and
+                // `ingress` can be borrowed disjointly below.
+                let sh = &mut **g;
+                for batch in sh.batches.iter_mut() {
+                    eng.total_insts += batch.insts_issued;
+                    let reqs = std::mem::take(&mut batch.requests);
+                    for (req, group_n) in reqs.iter() {
+                        if *group_n > 0 {
+                            let key = (req.core, req.warp, req.inst);
+                            if prev_group != Some(key) {
+                                eng.tracker.issue(req.core, req.warp, req.inst, *group_n, now);
+                                eng.stage_tracker
+                                    .issue(req.core, req.warp, req.inst, *group_n, now);
+                                prev_group = Some(key);
+                            }
+                        }
+                        let mut txn = MemTxn::new(*req, now);
+                        eng.l1.access(&mut txn, &mut eng.mem);
+                        eng.hops.record(&txn.hops, &txn.queued);
+                        if txn.hops.l2_dispatch > 0 {
+                            eng.shard_stats.egress_txns += 1;
+                        }
+                        if *group_n > 0 {
+                            eng.stage_tracker
+                                .complete_one(req.core, req.warp, req.inst, txn.l1_stage_done());
+                            if let Some(load_done) =
+                                eng.tracker.complete_one(req.core, req.warp, req.inst, txn.done())
+                            {
+                                // Rule 2: the wake returns to the issuing
+                                // core's own shard, through its ingress FIFO.
+                                sh.ingress.push((load_done.max(now + 1), req.core, req.warp));
+                                eng.shard_stats.ingress_wakes += 1;
+                            }
+                        }
+                    }
+                    batch.requests = reqs;
+                }
+            }
+            eng.shard_stats.epochs += 1;
+            let finished = guards.iter().all(|g| g.all_done());
+            drop(guards);
+
+            if finished {
+                release_and_stop(&barrier, &stop); // drain-go doubles as shutdown
+                break;
+            }
+            barrier.wait(); // drain-go
+            shards[0].lock().unwrap().drain_and_horizon();
+            barrier.wait(); // drain-done
+
+            // Rule 3: time is reduced, never raced — min over per-shard
+            // horizons equals the unsharded global horizon.
+            let horizon = shards
+                .iter()
+                .map(|m| m.lock().unwrap().horizon)
+                .min()
+                .unwrap_or(u64::MAX);
+            if horizon == u64::MAX {
+                release_and_stop(&barrier, &stop); // park point is tick-go
+                panic!(
+                    "kernel '{}' deadlocked at cycle {now}: no ready warps, no wakes",
+                    spec.name
+                );
+            }
+            eng.advance(now, horizon);
+            while eng.cycle - last_sweep >= SWEEP_PERIOD {
+                last_sweep += SWEEP_PERIOD;
+                eng.l1.sweep(last_sweep);
+                eng.mem.sweep_in_flight(last_sweep);
+            }
+            if eng.cycle - start_cycle > MAX_KERNEL_CYCLES {
+                release_and_stop(&barrier, &stop);
+                panic!("kernel '{}' exceeded {MAX_KERNEL_CYCLES} cycles", spec.name);
+            }
+        }
+    });
+    debug_assert!(shards.iter().all(|m| {
+        let g = m.lock().unwrap();
+        g.wakes.is_empty() && g.ingress.is_empty()
+    }));
+}
+
+/// The sharded replacement for [`Engine::run_multi`]'s cycle loop.  Lane
+/// bookkeeping (trackers, kernel progression, per-lane attribution) stays
+/// on the coordinator; only core ownership moves into the shards.  Cores
+/// are stored in global slots so lanes may span shard boundaries freely —
+/// the serial walk reconstructs the unsharded loop's lane-major request
+/// order from the per-core batches.
+pub(super) fn multi_loop(
+    eng: &mut Engine,
+    multi: &MultiWorkload,
+    lanes: &mut [LaneRun],
+    start_cycle: u64,
+    max_cycles: u64,
+    n_shards: usize,
+) {
+    // Move every lane's cores into global slots (lane.cores stays empty
+    // for the rest of the run, exactly like a finished lane's would).
+    let mut slots: Vec<Option<SimtCore>> = (0..eng.cfg.cores).map(|_| None).collect();
+    for (li, lane) in lanes.iter_mut().enumerate() {
+        let partition = multi.lanes[li].partition;
+        for (j, core) in lane.cores.drain(..).enumerate() {
+            slots[partition.global(j)] = Some(core);
+        }
+    }
+    let shards = build_shards(slots, &eng.cfg, n_shards);
+    let loc = core_locations(&shards, eng.cfg.cores);
+    eng.shard_stats.shard_count = n_shards as u64;
+    let barrier = Barrier::new(n_shards);
+    let stop = AtomicBool::new(false);
+    let clock = AtomicU64::new(eng.cycle);
+    let mut last_sweep = eng.cycle;
+
+    std::thread::scope(|s| { // lint: allow(shard-confinement) — the shard module's own worker fan-out
+        for sh in shards.iter().skip(1) {
+            let (barrier, stop, clock) = (&barrier, &stop, &clock);
+            s.spawn(move || worker(sh, barrier, stop, clock));
+        }
+        loop {
+            let now = eng.cycle;
+            clock.store(now, Ordering::Release);
+            barrier.wait(); // tick-go
+            shards[0].lock().unwrap().tick_epoch(now);
+            barrier.wait(); // tick-done
+
+            let mut guards = lock_all(&shards);
+
+            // Attribute issued instructions per lane (the unsharded loop
+            // tallies them during the tick; the totals are identical).
+            for (li, lane) in lanes.iter_mut().enumerate() {
+                if lane.done {
+                    continue;
+                }
+                let partition = multi.lanes[li].partition;
+                for j in 0..partition.count {
+                    let (si, local) = loc[partition.global(j)];
+                    let issued = guards[si].batches[local].insts_issued;
+                    lane.insts += issued;
+                    eng.total_insts += issued;
+                }
+            }
+
+            // Serial memory walk in canonical lane-major order: lanes in
+            // declaration order, cores in partition order, requests in
+            // issue order — byte-for-byte the unsharded request stream.
+            let mut prev_group: Option<(u32, u32, u64)> = None;
+            for (li, lane) in lanes.iter_mut().enumerate() {
+                if lane.done {
+                    continue;
+                }
+                let partition = multi.lanes[li].partition;
+                for j in 0..partition.count {
+                    let (si, local) = loc[partition.global(j)];
+                    let reqs = std::mem::take(&mut guards[si].batches[local].requests);
+                    for (req, group_n) in reqs.iter() {
+                        lane.requests += 1;
+                        if *group_n > 0 {
+                            let key = (req.core, req.warp, req.inst);
+                            if prev_group != Some(key) {
+                                lane.tracker.issue(req.core, req.warp, req.inst, *group_n, now);
+                                lane.stage_tracker
+                                    .issue(req.core, req.warp, req.inst, *group_n, now);
+                                prev_group = Some(key);
+                            }
+                        }
+                        let mut txn = MemTxn::new(*req, now);
+                        eng.l1.access(&mut txn, &mut eng.mem);
+                        eng.hops.record(&txn.hops, &txn.queued);
+                        if txn.hops.l2_dispatch > 0 {
+                            eng.shard_stats.egress_txns += 1;
+                        }
+                        if *group_n > 0 {
+                            lane.stage_tracker
+                                .complete_one(req.core, req.warp, req.inst, txn.l1_stage_done());
+                            if let Some(load_done) =
+                                lane.tracker.complete_one(req.core, req.warp, req.inst, txn.done())
+                            {
+                                guards[si].ingress.push((
+                                    load_done.max(now + 1),
+                                    req.core,
+                                    req.warp,
+                                ));
+                                eng.shard_stats.ingress_wakes += 1;
+                            }
+                        }
+                    }
+                    guards[si].batches[local].requests = reqs;
+                }
+            }
+            eng.shard_stats.epochs += 1;
+
+            // Kernel completion per lane, in declaration order — the
+            // coordinator owns relaunch, so new cores appear in their
+            // shard's slots before the horizon phase reads them.
+            for (li, lane) in lanes.iter_mut().enumerate() {
+                let partition = multi.lanes[li].partition;
+                let lane_done = |guards: &[MutexGuard<ShardState>]| {
+                    (0..partition.count).all(|j| {
+                        let (si, local) = loc[partition.global(j)];
+                        guards[si].cores[local]
+                            .as_ref()
+                            .expect("active lane core slot vacated")
+                            .all_done()
+                    })
+                };
+                if lane.done || !lane_done(&guards) {
+                    continue;
+                }
+                let spec = &multi.lanes[li].kernels[lane.kernel_idx];
+                lane.finish_kernel(spec, now);
+                lane.kernel_idx += 1;
+                if lane.kernel_idx < multi.lanes[li].kernels.len() {
+                    let fresh = launch_lane(&multi.lanes[li], lane.kernel_idx, &eng.cfg);
+                    for (j, core) in fresh.into_iter().enumerate() {
+                        let (si, local) = loc[partition.global(j)];
+                        guards[si].cores[local] = Some(core);
+                    }
+                    lane.begin_kernel(now);
+                } else {
+                    lane.done = true;
+                    lane.finish_cycle = now - start_cycle;
+                    for j in 0..partition.count {
+                        let (si, local) = loc[partition.global(j)];
+                        guards[si].cores[local] = None;
+                    }
+                }
+            }
+
+            let finished = lanes.iter().all(|l| l.done);
+            drop(guards);
+
+            if finished {
+                release_and_stop(&barrier, &stop); // drain-go doubles as shutdown
+                break;
+            }
+            barrier.wait(); // drain-go
+            shards[0].lock().unwrap().drain_and_horizon();
+            barrier.wait(); // drain-done
+
+            let horizon = shards
+                .iter()
+                .map(|m| m.lock().unwrap().horizon)
+                .min()
+                .unwrap_or(u64::MAX);
+            if horizon == u64::MAX {
+                release_and_stop(&barrier, &stop); // park point is tick-go
+                panic!("co-execution '{}' deadlocked at cycle {now}", multi.name);
+            }
+            eng.advance(now, horizon);
+            while eng.cycle - last_sweep >= SWEEP_PERIOD {
+                last_sweep += SWEEP_PERIOD;
+                eng.l1.sweep(last_sweep);
+                eng.mem.sweep_in_flight(last_sweep);
+            }
+            if eng.cycle - start_cycle > max_cycles {
+                release_and_stop(&barrier, &stop);
+                panic!("co-execution '{}' exceeded {max_cycles} cycles", multi.name);
+            }
+        }
+    });
+    debug_assert!(shards.iter().all(|m| {
+        let g = m.lock().unwrap();
+        g.wakes.is_empty() && g.ingress.is_empty()
+    }));
+}

@@ -70,8 +70,8 @@ fn print_usage() {
             [--share-addr] [--seed N] [--threads N] [--out FILE]
   contention [--apps x,y,.. | --app <name>] [--archs a,b,..] [--scale F]
             [--seed N] [--out FILE]
-  bench     [--app <name>] [--scale F] [--seed N] [--threads N]
-            [--out FILE=BENCH_pr6.json]
+  bench     [--app <name>] [--scale F] [--seed N] [--threads N] [--shards N]
+            [--out FILE=BENCH_pr8.json]
   export-trace --app <name> [--scale F] --out FILE
   sweep     [--archs a,b,..] [--apps x,y,..] [--scale F] [--threads N] [--out FILE]
   cosched   [--archs a,b,..] [--apps x,y,..] [--scale F] [--threads N]
@@ -90,7 +90,12 @@ ignores it: its A/B grid always runs both modes.
 --event-driven <on|off> overrides engine.event_driven (clock jumps to
 the next-event horizon vs the cycle-by-cycle reference); simulated
 metrics are byte-identical either way.  `bench` ignores it too: its
-A/B grid always runs both modes."
+A/B grid always runs both modes.
+--shards N overrides engine.shards (cluster-sharded engine loop across
+host cores; clamped to the cluster count).  Defaults to 1, the
+sequential loop — sharding is opt-in until its barrier cost is
+measured.  Results are byte-identical at any shard count.  `bench`
+uses it as the shard count of its shards-{1,N} A/B pair."
     );
 }
 
@@ -104,6 +109,7 @@ fn parse_cfg(args: &Args, arch: L1ArchKind) -> GpuConfig {
     cfg.seed = args.get_u64("seed", cfg.seed).unwrap();
     residency_override(args, &mut cfg);
     event_driven_override(args, &mut cfg);
+    shards_override(args, &mut cfg);
     cfg
 }
 
@@ -132,6 +138,18 @@ fn event_driven_override(args: &Args, cfg: &mut GpuConfig) {
             "off" => false,
             other => panic!("--event-driven expects on|off, got '{other}'"),
         };
+    }
+}
+
+/// Apply the global `--shards N` override to a config — the third knob
+/// in the host-strategy family after [`residency_override`] and
+/// [`event_driven_override`], with the same call-site contract.  Only
+/// set when the option is present so a `--config` file's
+/// `engine.shards` survives an override-free invocation; `bench` skips
+/// it for the base grid but honours it for the shard variant's N.
+fn shards_override(args: &Args, cfg: &mut GpuConfig) {
+    if args.get("shards").is_some() {
+        cfg.engine.shards = args.get_shards().unwrap();
     }
 }
 
@@ -169,6 +187,11 @@ fn cmd_run(args: &Args) -> i32 {
     // Same contract for the engine-clock telemetry: stderr only, never
     // part of the result JSON.
     eprintln!("engine telemetry: {}", eng.event_stats().to_json());
+    // And for the shard counters, when the sharded loop actually ran.
+    let ss = eng.shard_stats();
+    if ss.shard_count > 1 {
+        eprintln!("shard telemetry: {}", ss.to_json());
+    }
     if let Some(path) = args.get("out") {
         std::fs::write(path, r.to_json().pretty()).expect("writing --out");
         println!("wrote {path}");
@@ -392,14 +415,16 @@ fn cmd_contention(args: &Args) -> i32 {
     0
 }
 
-/// Perf-trajectory baseline (`BENCH_pr6.json`): run one pinned, seeded
-/// workload on every registered L1 organization **three times** — the
+/// Perf-trajectory baseline (`BENCH_pr8.json`): run one pinned, seeded
+/// workload on every registered L1 organization **four times** — the
 /// full-speed engine, the cycle-by-cycle reference (`event_driven`
-/// off), and the residency scan path (`residency_index` off), each a
+/// off), the residency scan path (`residency_index` off), and the
+/// cluster-sharded loop (`engine.shards` = N, default 2), each a
 /// [`ConfigVariant`] ablation axis — and report wall seconds, simulated
-/// cycles per host second, IPC, and two per-org speedups: the headline
-/// event-driven speedup (reference s / event s) and the carried-forward
-/// residency-index speedup.  Both A/B pairs must produce byte-identical
+/// cycles per host second, IPC, and three per-org speedups: the
+/// event-driven speedup (reference s / event s), the carried-forward
+/// residency-index speedup, and the new shard speedup (unsharded s /
+/// sharded s).  All three A/B pairs must produce byte-identical
 /// simulated metrics (the determinism contract); any drift exits 1.
 /// Also reports the serial-vs-parallel wall-clock speedup of a
 /// co-scheduling grid, proving the [`JobRunner`] both helps and stays
@@ -412,9 +437,12 @@ fn cmd_bench(args: &Args) -> i32 {
         eprintln!("unknown app '{app_name}' (see `ata-sim list`)");
         return 2;
     };
-    let out_path = args.get_or("out", "BENCH_pr6.json").to_string();
+    let out_path = args.get_or("out", "BENCH_pr8.json").to_string();
     let seed = args.get_u64("seed", GpuConfig::default().seed).unwrap();
     let threads = args.get_threads().unwrap();
+    // The B side of the shards-{1,N} pair; `--shards 1` (or absent)
+    // still benches against 2 so the pair is never degenerate.
+    let shards = args.get_shards().unwrap().max(2);
     if args.get("residency").is_some() {
         eprintln!("note: bench ignores --residency — its A/B grid always runs both modes");
     }
@@ -422,12 +450,13 @@ fn cmd_bench(args: &Args) -> i32 {
         eprintln!("note: bench ignores --event-driven — its A/B grid always runs both modes");
     }
 
-    // Engine-clock + residency A/B: the registry as a one-app scenario
-    // grid with a three-way variant axis.  EV_ON is the production
-    // configuration and the baseline both speedups are measured against;
-    // EV_OFF ablates only the event-driven clock (cycle-by-cycle
-    // reference), RES_OFF ablates only the residency index.  Jobs
-    // materialize variant-major, so the results come back as three
+    // Engine-clock + residency + sharding A/B: the registry as a
+    // one-app scenario grid with a four-way variant axis.  EV_ON is the
+    // production configuration and the baseline every speedup is
+    // measured against; EV_OFF ablates only the event-driven clock
+    // (cycle-by-cycle reference), RES_OFF ablates only the residency
+    // index, and SHARD turns only the cluster-sharded loop on.  Jobs
+    // materialize variant-major, so the results come back as four
     // registry-ordered chunks of `n_orgs`.
     const EV_ON: ConfigVariant = ConfigVariant {
         name: "event-on",
@@ -450,6 +479,14 @@ fn cmd_bench(args: &Args) -> i32 {
             c.sharing.residency_index = false;
         },
     };
+    const SHARD: ConfigVariant = ConfigVariant {
+        name: "sharded",
+        apply: |c| {
+            c.engine.event_driven = true;
+            c.sharing.residency_index = true;
+            c.engine.shards = 2;
+        },
+    };
     let mut base_cfg = GpuConfig::paper(L1ArchKind::Private);
     base_cfg.seed = seed;
     let grid = ScenarioGrid::new(
@@ -458,8 +495,15 @@ fn cmd_bench(args: &Args) -> i32 {
         vec![app.clone()],
         scale,
     )
-    .with_variants(vec![EV_ON, EV_OFF, RES_OFF]);
-    let jobs = grid.jobs();
+    .with_variants(vec![EV_ON, EV_OFF, RES_OFF, SHARD]);
+    let n_orgs = ata_cache::l1arch::REGISTRY.len();
+    let mut jobs = grid.jobs();
+    // `apply` is a plain fn pointer, so the user's `--shards N` cannot
+    // be captured in the SHARD variant; patch the materialized chunk
+    // (the last `n_orgs` jobs, variant-major order) instead.
+    for job in jobs.iter_mut().skip(3 * n_orgs) {
+        job.cfg.engine.shards = shards;
+    }
     // The A/B grid runs on ONE worker: per-job `host_seconds` is the
     // timing signal here, and concurrent jobs on a shared pool would
     // contaminate each chunk with whatever co-runner mix it happened to
@@ -472,32 +516,39 @@ fn cmd_bench(args: &Args) -> i32 {
         .into_iter()
         .map(JobOutput::into_solo)
         .collect();
-    let n_orgs = ata_cache::l1arch::REGISTRY.len();
     let (on_chunk, rest) = results.split_at(n_orgs);
-    let (ref_chunk, scan_chunk) = rest.split_at(n_orgs);
+    let (ref_chunk, rest) = rest.split_at(n_orgs);
+    let (scan_chunk, shard_chunk) = rest.split_at(n_orgs);
 
     let mut t = Table::new(&format!(
-        "perf baseline — {app_name} @ scale {scale}, seed {seed:#x} (A/B timed serially)"
+        "perf baseline — {app_name} @ scale {scale}, seed {seed:#x}, {shards} shards \
+         (A/B timed serially)"
     ))
     .header(&[
-        "arch", "cycles", "insts", "IPC", "ev s", "ref s", "scan s", "Mcyc/s", "ev x", "idx x",
+        "arch", "cycles", "insts", "IPC", "ev s", "ref s", "scan s", "shrd s", "Mcyc/s", "ev x",
+        "idx x", "sh x",
     ]);
     let mut chart = BarChart::new("event-driven speedup per organization (ref s / ev s)");
     let mut rows = Vec::new();
     let mut totals = RunTotals::default();
     let mut ev_identical = true;
     let mut res_identical = true;
+    let mut sh_identical = true;
     let registry = ata_cache::l1arch::REGISTRY.iter();
-    for (((spec, on), reference), scan) in registry.zip(on_chunk).zip(ref_chunk).zip(scan_chunk) {
+    for ((((spec, on), reference), scan), sharded) in
+        registry.zip(on_chunk).zip(ref_chunk).zip(scan_chunk).zip(shard_chunk)
+    {
         totals.absorb_sim(on);
-        // The referees: identical simulated metrics against both
-        // ablations (result JSON excludes wall clock by the determinism
+        // The referees: identical simulated metrics against every
+        // ablation (result JSON excludes wall clock by the determinism
         // contract).
         let on_json = on.to_json().pretty();
         let identical = on_json == reference.to_json().pretty();
         let r_identical = on_json == scan.to_json().pretty();
+        let s_identical = on_json == sharded.to_json().pretty();
         ev_identical &= identical;
         res_identical &= r_identical;
+        sh_identical &= s_identical;
         let thru = sim_throughput(on.cycles, on.host_seconds);
         let ratio = |ablated: f64| {
             if on.host_seconds > 0.0 {
@@ -508,6 +559,14 @@ fn cmd_bench(args: &Args) -> i32 {
         };
         let speedup = ratio(reference.host_seconds);
         let res_speedup = ratio(scan.host_seconds);
+        // The sharded run is the candidate, not the ablation: its
+        // speedup is baseline-over-sharded (> 1 means sharding paid
+        // for its barriers on this host and workload).
+        let shard_speedup = if sharded.host_seconds > 0.0 {
+            on.host_seconds / sharded.host_seconds
+        } else {
+            0.0
+        };
         t.row(vec![
             spec.name.to_string(),
             on.cycles.to_string(),
@@ -516,9 +575,11 @@ fn cmd_bench(args: &Args) -> i32 {
             format!("{:.3}", on.host_seconds),
             format!("{:.3}", reference.host_seconds),
             format!("{:.3}", scan.host_seconds),
+            format!("{:.3}", sharded.host_seconds),
             format!("{:.2}", thru / 1e6),
             format!("{speedup:.2}x"),
             format!("{res_speedup:.2}x"),
+            format!("{shard_speedup:.2}x"),
         ]);
         chart.bar(spec.name, speedup);
         rows.push(Json::obj(vec![
@@ -529,6 +590,7 @@ fn cmd_bench(args: &Args) -> i32 {
             ("host_seconds", on.host_seconds.into()),
             ("host_seconds_reference", reference.host_seconds.into()),
             ("host_seconds_scan", scan.host_seconds.into()),
+            ("host_seconds_sharded", sharded.host_seconds.into()),
             ("cycles_per_sec", thru.into()),
             (
                 "cycles_per_sec_reference",
@@ -538,12 +600,15 @@ fn cmd_bench(args: &Args) -> i32 {
             ("identical", identical.into()),
             ("residency_speedup", res_speedup.into()),
             ("residency_identical", r_identical.into()),
+            ("shard_speedup", shard_speedup.into()),
+            ("shard_identical", s_identical.into()),
         ]));
     }
     println!("{}", t.render());
     println!("{}", chart.render());
     println!("event-driven vs reference metrics byte-identical: {ev_identical}");
     println!("index-on vs scan metrics byte-identical: {res_identical}");
+    println!("{shards}-shard vs unsharded metrics byte-identical: {sh_identical}");
 
     // Serial-vs-parallel wall clock on a co-scheduling grid (the N²
     // surface the execution layer exists for), with the byte-identity
@@ -575,14 +640,16 @@ fn cmd_bench(args: &Args) -> i32 {
     );
 
     let json = Json::obj(vec![
-        ("bench", "pr6".into()),
+        ("bench", "pr8".into()),
         ("app", app_name.as_str().into()),
         ("scale", scale.into()),
         ("seed", seed.into()),
         ("threads", threads.into()),
+        ("shards", shards.into()),
         ("orgs", Json::arr(rows)),
         ("event_driven_ab_identical", ev_identical.into()),
         ("residency_ab_identical", res_identical.into()),
+        ("shard_ab_identical", sh_identical.into()),
         ("totals", totals.to_json()),
         ("cosched_speedup", speedup.to_json()),
     ]);
@@ -594,6 +661,10 @@ fn cmd_bench(args: &Args) -> i32 {
     }
     if !res_identical {
         eprintln!("error: residency-index run drifted from the scan run");
+        return 1;
+    }
+    if !sh_identical {
+        eprintln!("error: sharded run drifted from the unsharded engine");
         return 1;
     }
     if !speedup.identical {
@@ -609,6 +680,7 @@ fn cmd_cosched(args: &Args) -> i32 {
     let mut sweep = CoSchedSweep::paper(scale);
     residency_override(args, &mut sweep.cfg);
     event_driven_override(args, &mut sweep.cfg);
+    shards_override(args, &mut sweep.cfg);
     let arch_list = args.get_list("archs");
     if !arch_list.is_empty() {
         sweep.archs = arch_list
@@ -662,6 +734,7 @@ fn sweep_from_args(args: &Args) -> Sweep {
     let mut sweep = Sweep::paper(scale);
     residency_override(args, &mut sweep.cfg);
     event_driven_override(args, &mut sweep.cfg);
+    shards_override(args, &mut sweep.cfg);
     let arch_list = args.get_list("archs");
     if !arch_list.is_empty() {
         sweep.archs = arch_list

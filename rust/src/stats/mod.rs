@@ -425,6 +425,43 @@ impl EventStats {
     }
 }
 
+/// Host-performance telemetry of the sharded cycle loop
+/// (`engine.shards > 1`).
+///
+/// Like [`ResidencyStats`] and [`EventStats`], deliberately **not** part
+/// of [`SimResult`]/[`MultiResult`] JSON: result JSON must be
+/// byte-identical at any shard count (`engine.shards` changes only wall
+/// clock), and these counters are zero whenever the unsharded loop runs.
+/// `ata-sim run` prints them to stderr, and white-box tests read them,
+/// through [`Engine::shard_stats`](crate::engine::Engine::shard_stats).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShardStats {
+    /// Effective shard count of the last sharded run (requested shards
+    /// clamped to the cluster count); 0 if no sharded loop ever ran.
+    pub shard_count: u64,
+    /// Synchronization epochs executed (one per engine-loop iteration:
+    /// parallel tick → serial memory walk → parallel drain).
+    pub epochs: u64,
+    /// Memory transactions that crossed a shard boundary at the epoch
+    /// barrier: requests leaving a shard's private L1 state for the
+    /// shared NoC→L2→DRAM walk (the `MemTxn` serialization cut).
+    pub egress_txns: u64,
+    /// Completion wake-ups routed back through per-shard ingress FIFOs
+    /// and drained in shard-major order at the barrier.
+    pub ingress_wakes: u64,
+}
+
+impl ShardStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shard_count", self.shard_count.into()),
+            ("epochs", self.epochs.into()),
+            ("egress_txns", self.egress_txns.into()),
+            ("ingress_wakes", self.ingress_wakes.into()),
+        ])
+    }
+}
+
 /// Tracks the paper's L1 latency metric: for each *load instruction*, the
 /// time from issue until **all** of its coalesced requests complete.
 #[derive(Debug, Default)]
@@ -1217,6 +1254,25 @@ mod tests {
         assert!(!r.contains("cycles_ticked") && !r.contains("max_jump"));
         let m = MultiResult::default().to_json().to_string();
         assert!(!m.contains("cycles_ticked") && !m.contains("max_jump"));
+    }
+
+    #[test]
+    fn shard_stats_serialize_but_stay_out_of_results() {
+        let s = ShardStats {
+            shard_count: 3,
+            epochs: 1000,
+            egress_txns: 42,
+            ingress_wakes: 17,
+        };
+        let j = Json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(j.get("shard_count").unwrap().as_u64(), Some(3));
+        assert_eq!(j.get("ingress_wakes").unwrap().as_u64(), Some(17));
+        // The determinism contract: result JSON must not carry shard
+        // telemetry (it is zero for unsharded runs and nonzero otherwise).
+        let r = SimResult::default().to_json().to_string();
+        assert!(!r.contains("shard_count") && !r.contains("ingress_wakes"));
+        let m = MultiResult::default().to_json().to_string();
+        assert!(!m.contains("shard_count") && !m.contains("egress_txns"));
     }
 
     #[test]

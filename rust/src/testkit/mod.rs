@@ -103,6 +103,55 @@ pub fn sweep_crossing_scenario(arch: L1ArchKind) -> (GpuConfig, Workload) {
     (cfg, wl)
 }
 
+/// A deterministic sharing-plus-streaming scenario for the sharded
+/// engine's differential referee (`rust/tests/shard_determinism.rs`):
+/// every warp interleaves loads to a block of lines shared by its whole
+/// cluster with a stream of brand-new lines that miss to a throttled
+/// DRAM back end.  The shared block produces remote/ATA hits — which,
+/// because sharding is cluster-aligned, never cross a shard boundary by
+/// construction — while the cold misses are the real cross-shard
+/// traffic: every shard's transactions funnel through the shared
+/// L2/DRAM walk (egress) and their long-latency fills come back as
+/// per-shard ingress wakes, often epochs later.  Those two flows are
+/// exactly what [`crate::stats::ShardStats`] counts and the consuming
+/// test asserts on.
+pub fn cross_shard_scenario(arch: L1ArchKind) -> (GpuConfig, Workload) {
+    let mut cfg = GpuConfig::tiny(arch);
+    cfg.dram.controllers = 1;
+    cfg.dram.queue_depth = 4;
+    let warps = 4usize;
+    let shared_lines = 16u64;
+    let loads_per_warp = 32u64;
+    let cpc = cfg.cores_per_cluster();
+    let mut next_stream = 1u64 << 20;
+    let programs = (0..cfg.cores)
+        .map(|c| {
+            let cluster = (c / cpc) as u64;
+            (0..warps)
+                .map(|w| {
+                    let mut insts = Vec::new();
+                    for i in 0..loads_per_warp {
+                        // Rotate the cluster-shared block per warp so
+                        // accesses spread across banks but still
+                        // collide across cluster-mates.
+                        let shared = cluster * shared_lines + ((i + w as u64) % shared_lines);
+                        insts.push(WarpInst::Load(vec![(shared, 0b1111)]));
+                        let line = next_stream;
+                        next_stream += 1;
+                        insts.push(WarpInst::Load(vec![(line, 0b1111)]));
+                    }
+                    WarpProgram::new(insts)
+                })
+                .collect()
+        })
+        .collect();
+    let wl = Workload {
+        name: "cross-shard".into(),
+        kernels: vec![KernelSpec { name: "share+stream".into(), programs }],
+    };
+    (cfg, wl)
+}
+
 /// A reusable random-value generator.
 pub struct Gen<T> {
     f: Box<dyn Fn(&mut Pcg32) -> T>,

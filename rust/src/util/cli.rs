@@ -101,11 +101,27 @@ impl Args {
         }
     }
 
+    /// Shared parser for the host-parallelism knobs (`--threads`,
+    /// `--shards`): one code path so the two can never diverge in
+    /// parsing or error handling, only in their defaults.
+    fn pool_size(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        self.get_usize(name, default)
+    }
+
     /// The `--threads N` option every sweep surface shares, defaulting
     /// to the execution layer's notion of available parallelism (the
     /// runner clamps zero to one worker).
     pub fn get_threads(&self) -> Result<usize, CliError> {
-        self.get_usize("threads", crate::exec::JobRunner::available())
+        self.pool_size("threads", crate::exec::JobRunner::available())
+    }
+
+    /// The `--shards N` option (intra-job cluster sharding).  Defaults
+    /// to 1 — the sequential engine loop — because sharding is opt-in
+    /// until its barrier cost has been measured against real workloads;
+    /// the engine clamps over-sharding to the cluster count and `0` is
+    /// rejected by `GpuConfig::validate`.
+    pub fn get_shards(&self) -> Result<usize, CliError> {
+        self.pool_size("shards", 1)
     }
 
     pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, CliError> {
@@ -185,6 +201,17 @@ mod tests {
         assert!(b.get_threads().unwrap() >= 1);
         let c = parse(&["sweep", "--threads", "zero"]);
         assert!(c.get_threads().is_err());
+    }
+
+    #[test]
+    fn shards_option_defaults_to_sequential() {
+        let a = parse(&["run", "--shards", "4"]);
+        assert_eq!(a.get_shards().unwrap(), 4);
+        let b = parse(&["run"]);
+        assert_eq!(b.get_shards().unwrap(), 1, "sharding is opt-in");
+        assert!(b.get("shards").is_none(), "absence is distinguishable");
+        let c = parse(&["run", "--shards", "two"]);
+        assert!(c.get_shards().is_err(), "same error path as --threads");
     }
 
     #[test]

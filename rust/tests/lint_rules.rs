@@ -169,6 +169,41 @@ fn renamed_telemetry_fields_are_tracked_from_struct_defs() {
     assert_eq!(slugs(&r), vec!["stats-exclusion"]);
 }
 
+// -- shard-confinement ------------------------------------------------------
+
+#[test]
+fn thread_use_outside_exec_and_shard_module_flagged() {
+    let src = "use std::thread;\nfn f() { thread::spawn(|| {}); }\n";
+    let r = lint_one("rust/src/engine/mod.rs", src);
+    assert_eq!(slugs(&r), vec!["shard-confinement", "shard-confinement"]);
+    assert_eq!(r.findings[0].line, 1);
+    assert_eq!(r.findings[1].line, 2);
+    // The NoC is simulation code too — same verdict.
+    assert_eq!(
+        slugs(&lint_one("rust/src/noc/mod.rs", "fn f() { std::thread::yield_now(); }\n")),
+        vec!["shard-confinement"]
+    );
+}
+
+#[test]
+fn thread_use_allowed_in_execution_layer_and_shard_module() {
+    let src = "use std::thread;\nfn pool() { thread::scope(|s| { s.spawn(|| {}); }); }\n";
+    assert!(lint_one("rust/src/exec/runner.rs", src).is_clean());
+    assert!(lint_one("rust/src/engine/shard.rs", src).is_clean());
+    // Prose, strings, and thread-ish identifiers are not threading.
+    let benign = "//! One thread per shard.\nfn f(threads: usize) { log(\"std::thread\"); let thread_pool_size = threads; }\n";
+    assert!(lint_one("rust/src/engine/mod.rs", benign).is_clean());
+    // Test modules may thread (skip_tests), e.g. to race an invariant.
+    let test_src = "#[cfg(test)]\nmod tests {\n    fn f() { std::thread::yield_now(); }\n}\n";
+    assert!(lint_one("rust/src/engine/mod.rs", test_src).is_clean());
+}
+
+#[test]
+fn justified_suppression_silences_shard_confinement() {
+    let src = "fn f() {\n    // lint: allow(shard-confinement) — sizing a worker pool; no simulation state crosses threads\n    let n = std::thread::available_parallelism();\n}\n";
+    assert!(lint_one("rust/src/engine/mod.rs", src).is_clean());
+}
+
 // -- suppression-justification ----------------------------------------------
 
 #[test]
