@@ -27,8 +27,9 @@ pub enum RuleId {
     TagMutationHelper,
     /// `EventStats`/`ResidencyStats` fields never serialize into results.
     StatsExclusion,
-    /// `std::thread` only in the execution layer and the engine's shard
-    /// module — simulation code must stay single-threaded-deterministic.
+    /// `std::thread` only in the execution layer, the engine's shard
+    /// module, and the L2 walk pool — simulation code must stay
+    /// single-threaded-deterministic.
     ShardConfinement,
     /// Suppression comments must be justified and name a real rule.
     SuppressionJustification,
@@ -149,8 +150,8 @@ pub const REGISTRY: [RuleSpec; 8] = [
     RuleSpec {
         id: RuleId::ShardConfinement,
         severity: Severity::Error,
-        description: "std::thread outside the execution layer or the shard module (ad-hoc threading breaks the determinism contract)",
-        allow_files: &["rust/src/engine/shard.rs"],
+        description: "std::thread outside the execution layer or the shard/walk modules (ad-hoc threading breaks the determinism contract)",
+        allow_files: &["rust/src/engine/shard.rs", "rust/src/l2/walk.rs"],
         allow_dirs: &["rust/src/exec/", "rust/tests/", "rust/benches/"],
         skip_tests: true,
     },
@@ -203,7 +204,9 @@ mod tests {
         assert!(!applies(RuleId::GrantDiscipline, "rust/tests/lint_rules.rs"));
         assert!(!applies(RuleId::ShardConfinement, "rust/src/exec/runner.rs"));
         assert!(!applies(RuleId::ShardConfinement, "rust/src/engine/shard.rs"));
+        assert!(!applies(RuleId::ShardConfinement, "rust/src/l2/walk.rs"));
         assert!(applies(RuleId::ShardConfinement, "rust/src/engine/mod.rs"));
+        assert!(applies(RuleId::ShardConfinement, "rust/src/l2/mod.rs"));
         assert!(applies(RuleId::ShardConfinement, "examples/arch_explorer.rs"));
     }
 }

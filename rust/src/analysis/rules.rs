@@ -597,7 +597,7 @@ fn tag_mutation_helper(f: &SourceFile) -> Vec<Finding> {
 /// workspace's `EventStats`/`ResidencyStats`/`ShardStats` struct
 /// definitions declare so the rule tracks field renames without an edit
 /// here going stale.
-const TELEMETRY_FIELDS: [&str; 13] = [
+const TELEMETRY_FIELDS: [&str; 15] = [
     "cycles_ticked",
     "cycles_simulated",
     "jumps",
@@ -611,6 +611,8 @@ const TELEMETRY_FIELDS: [&str; 13] = [
     "epochs",
     "egress_txns",
     "ingress_wakes",
+    "tick_ns",
+    "walk_ns",
 ];
 
 const TELEMETRY_STRUCTS: [&str; 3] = ["EventStats", "ResidencyStats", "ShardStats"];
@@ -688,8 +690,8 @@ fn stats_exclusion(f: &SourceFile, fields: &BTreeSet<String>) -> Vec<Finding> {
 // ---------------------------------------------------------------------------
 
 /// Flag `thread` used as a path segment (`std::thread`, `thread::scope`,
-/// `thread::spawn`, …) outside the execution layer and the engine's
-/// shard module.  Everything else in the simulator must stay
+/// `thread::spawn`, …) outside the execution layer, the engine's shard
+/// module, and the L2 walk pool.  Everything else in the simulator must stay
 /// single-threaded: determinism comes from the simulation being a pure
 /// function of (config, workload), never from synchronization, so an
 /// ad-hoc thread anywhere in model code is a byte-identity hazard even
@@ -826,9 +828,11 @@ mod tests {
         let found = rules_of(&check_one("rust/src/l1arch/mod.rs", src));
         assert_eq!(found.len(), 2, "{found:?}");
         assert!(found.iter().all(|r| *r == RuleId::ShardConfinement));
-        // The execution layer and the shard module are the allowed zones.
+        // The execution layer, the shard module, and the L2 walk pool are
+        // the allowed zones.
         assert!(check_one("rust/src/exec/runner.rs", src).is_empty());
         assert!(check_one("rust/src/engine/shard.rs", src).is_empty());
+        assert!(check_one("rust/src/l2/walk.rs", src).is_empty());
         // `threads` counts, prose identifiers, comments and strings are
         // not thread spawns.
         let benign = "//! Uses std::thread::scope internally.\nfn f(threads: usize) -> usize {\n    let thread_pool_size = threads;\n    thread_pool_size\n}\n";
@@ -850,6 +854,12 @@ mod tests {
         );
         let own = "impl ShardStats {\n    fn to_json(&self) -> Json {\n        obj(vec![(self.epochs.into())])\n    }\n}\n";
         assert!(check_one("rust/src/x.rs", own).is_empty());
+        // The PR 9 phase-time counters are telemetry too.
+        let ns = "impl SimResult {\n    fn to_json(&self) -> Json {\n        obj(vec![(self.walk_ns.into())])\n    }\n}\n";
+        assert_eq!(
+            rules_of(&check_one("rust/src/x.rs", ns)),
+            vec![RuleId::StatsExclusion]
+        );
     }
 
     #[test]

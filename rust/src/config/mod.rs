@@ -312,6 +312,17 @@ pub struct EngineConfig {
     /// Sharding stays opt-in until a toolchain-equipped session measures
     /// the crossover against the per-epoch barrier cost.
     pub shards: usize,
+    /// Persistent walk workers for phase B2 of the phased memory walk
+    /// (`--mem-workers`).  Each worker exclusively owns a contiguous run
+    /// of L2 slices during the per-slice half of the walk
+    /// (`l2::walk::WalkPool`); the cross-slice front end (B1), DRAM
+    /// admission, and the merge pass (B3) stay serialized in canonical
+    /// request order on the coordinator.  `1` (the default) walks
+    /// serially with no threads spawned; values above the slice count
+    /// clamp to it.  Composes with `shards`.  Simulated metrics are
+    /// byte-identical at any worker count — only wall clock moves (pinned
+    /// by `rust/tests/memwalk_determinism.rs` and the CI cmp smoke).
+    pub mem_workers: usize,
 }
 
 impl Default for EngineConfig {
@@ -319,6 +330,7 @@ impl Default for EngineConfig {
         EngineConfig {
             event_driven: true,
             shards: 1,
+            mem_workers: 1,
         }
     }
 }
@@ -510,6 +522,9 @@ impl GpuConfig {
         if self.engine.shards == 0 {
             return fail("engine.shards must be > 0 (1 = unsharded loop)".into());
         }
+        if self.engine.mem_workers == 0 {
+            return fail("engine.mem_workers must be > 0 (1 = serial walk)".into());
+        }
         Ok(())
     }
 
@@ -622,6 +637,7 @@ impl GpuConfig {
                 Json::obj(vec![
                     ("event_driven", self.engine.event_driven.into()),
                     ("shards", self.engine.shards.into()),
+                    ("mem_workers", self.engine.mem_workers.into()),
                 ]),
             ),
         ])
@@ -726,6 +742,7 @@ impl GpuConfig {
         if let Some(e) = j.get("engine") {
             cfg.engine.event_driven = g_bool(e, "event_driven", cfg.engine.event_driven);
             cfg.engine.shards = g_usize(e, "shards", cfg.engine.shards);
+            cfg.engine.mem_workers = g_usize(e, "mem_workers", cfg.engine.mem_workers);
         }
         Ok(cfg)
     }
@@ -786,6 +803,7 @@ mod tests {
         cfg.sharing.residency_index = false;
         cfg.engine.event_driven = false;
         cfg.engine.shards = 3;
+        cfg.engine.mem_workers = 5;
         cfg.l1.write_policy = WritePolicy::WriteThrough;
         cfg.seed = 12345;
         let j = cfg.to_json();
@@ -814,6 +832,15 @@ mod tests {
         // Over-sharding is legal (the engine clamps to the cluster count).
         let mut cfg = GpuConfig::default();
         cfg.engine.shards = 64;
+        cfg.validate().unwrap();
+
+        let mut cfg = GpuConfig::default();
+        cfg.engine.mem_workers = 0; // 1 is the serial-walk minimum
+        assert!(cfg.validate().is_err());
+
+        // Over-provisioning is legal (the pool clamps to the slice count).
+        let mut cfg = GpuConfig::default();
+        cfg.engine.mem_workers = 64;
         cfg.validate().unwrap();
     }
 

@@ -45,6 +45,17 @@
 //! `--shards N` output is byte-identical to `--shards 1` (pinned by
 //! `rust/tests/shard_determinism.rs` and the CI cmp smoke), and
 //! [`Engine::shard_stats`] exposes the sharded loop's host telemetry.
+//!
+//! **Slice-parallel memory walk.**  Every loop processes each cycle's
+//! request batch as one phased epoch: a B1 front-end pass on the
+//! coordinator in canonical request order ([`MemSystem::begin_epoch`] /
+//! `L1Arch::access`, which defers misses into per-slice fetch
+//! descriptors), the walk ([`MemSystem::run_walk`] — fanned out across
+//! `engine.mem_workers` persistent threads when > 1, each owning a
+//! contiguous run of L2 slices), then a B3 finish pass (`L1Arch::finish`)
+//! in the same canonical order.  `--mem-workers N` output is
+//! byte-identical to `--mem-workers 1` at any `--shards` setting (pinned
+//! by `rust/tests/memwalk_determinism.rs` and the CI cmp smoke).
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -526,6 +537,7 @@ impl Engine {
                 }
             }
             let mut batch = IssueBatch::default();
+            let mut open = Vec::new();
             let mut last_sweep = self.cycle;
             loop {
                 let now = self.cycle;
@@ -556,8 +568,12 @@ impl Engine {
                 }
                 self.total_insts += batch.insts_issued;
 
-                // 3. Feed requests through the shared L1 organization,
-                //    tracking load latencies per lane.
+                // 3. Feed requests through the shared L1 organization as
+                //    one phased memory-walk epoch (B1 front end in
+                //    canonical order, per-slice walk, B3 finish in the
+                //    same order), tracking load latencies per lane.
+                self.mem.begin_epoch();
+                open.clear();
                 let mut prev_group: Option<(u32, u32, u64)> = None;
                 for (req, group_n) in batch.requests.iter() {
                     let lane = &mut lanes[owner[req.core as usize]];
@@ -572,18 +588,25 @@ impl Engine {
                     }
                     let mut txn = MemTxn::new(*req, now);
                     self.l1.access(&mut txn, &mut self.mem);
+                    open.push((txn, *group_n));
+                }
+                self.mem.run_walk();
+                for (mut txn, group_n) in open.drain(..) {
+                    self.l1.finish(&mut txn, &mut self.mem);
                     self.hops.record(&txn.hops, &txn.queued);
-                    if *group_n > 0 {
+                    if group_n > 0 {
+                        let (core, warp, inst) = (txn.req.core, txn.req.warp, txn.req.inst);
+                        let lane = &mut lanes[owner[core as usize]];
                         lane.stage_tracker
-                            .complete_one(req.core, req.warp, req.inst, txn.l1_stage_done());
+                            .complete_one(core, warp, inst, txn.l1_stage_done());
                         if let Some(load_done) =
-                            lane.tracker.complete_one(req.core, req.warp, req.inst, txn.done())
+                            lane.tracker.complete_one(core, warp, inst, txn.done())
                         {
-                            self.wakes
-                                .push(Reverse((load_done.max(now + 1), req.core, req.warp)));
+                            self.wakes.push(Reverse((load_done.max(now + 1), core, warp)));
                         }
                     }
                 }
+                self.mem.end_epoch();
 
                 // 4. Kernel completion: advance finished lanes independently.
                 for (li, lane) in lanes.iter_mut().enumerate() {
@@ -756,6 +779,7 @@ impl Engine {
             shard::kernel_loop(self, spec, cores, n_shards);
         } else {
             let mut batch = IssueBatch::default();
+            let mut open = Vec::new();
             let mut last_sweep = self.cycle;
             loop {
                 let now = self.cycle;
@@ -777,7 +801,13 @@ impl Engine {
                 }
                 self.total_insts += batch.insts_issued;
 
-                // 3. Feed requests through the L1 organization.
+                // 3. Feed requests through the L1 organization as one
+                //    phased memory-walk epoch: the B1 front-end pass in
+                //    canonical request order, the (possibly fanned-out)
+                //    per-slice walk, then the B3 finish pass in the same
+                //    order.
+                self.mem.begin_epoch();
+                open.clear();
                 let mut prev_group: Option<(u32, u32, u64)> = None;
                 for (req, group_n) in batch.requests.iter() {
                     if *group_n > 0 {
@@ -791,18 +821,24 @@ impl Engine {
                     }
                     let mut txn = MemTxn::new(*req, now);
                     self.l1.access(&mut txn, &mut self.mem);
+                    open.push((txn, *group_n));
+                }
+                self.mem.run_walk();
+                for (mut txn, group_n) in open.drain(..) {
+                    self.l1.finish(&mut txn, &mut self.mem);
                     self.hops.record(&txn.hops, &txn.queued);
-                    if *group_n > 0 {
+                    if group_n > 0 {
+                        let (core, warp, inst) = (txn.req.core, txn.req.warp, txn.req.inst);
                         self.stage_tracker
-                            .complete_one(req.core, req.warp, req.inst, txn.l1_stage_done());
+                            .complete_one(core, warp, inst, txn.l1_stage_done());
                         if let Some(load_done) =
-                            self.tracker.complete_one(req.core, req.warp, req.inst, txn.done())
+                            self.tracker.complete_one(core, warp, inst, txn.done())
                         {
-                            self.wakes
-                                .push(Reverse((load_done.max(now + 1), req.core, req.warp)));
+                            self.wakes.push(Reverse((load_done.max(now + 1), core, warp)));
                         }
                     }
                 }
+                self.mem.end_epoch();
 
                 // 4. Termination / advance.
                 if cores.iter().all(SimtCore::all_done) {
@@ -1165,6 +1201,73 @@ mod tests {
         let s = e_sh.shard_stats();
         assert_eq!(s.shard_count, 2);
         assert!(s.epochs > 0 && s.ingress_wakes > 0);
+    }
+
+    #[test]
+    fn memwalk_engine_matches_serial() {
+        // The tentpole contract: `engine.mem_workers` moves only wall
+        // clock — the result JSON is byte-identical at any worker count
+        // (the pool clamps over-provisioning to the L2 slice count).
+        let cfg = GpuConfig::tiny(L1ArchKind::Ata);
+        let mut cfg_w = cfg.clone();
+        cfg_w.engine.mem_workers = 8; // tiny has 4 L2 slices: clamps to 4
+        let wl = Workload {
+            name: "t".into(),
+            kernels: vec![
+                simple_kernel(&cfg, |c| (0..8).map(|k| (c as u64 * 31 + k) % 64).collect()),
+                simple_kernel(&cfg, |c| (0..8).map(|k| (c as u64 * 17 + k) % 64).collect()),
+            ],
+        };
+        let mut e_seq = Engine::new(&cfg);
+        let r_seq = e_seq.run(&wl);
+        let r_w = Engine::new(&cfg_w).run(&wl);
+        assert_eq!(
+            r_w.to_json().pretty(),
+            r_seq.to_json().pretty(),
+            "simulated metrics must not depend on engine.mem_workers"
+        );
+        // The serial engine keeps the phased epochs but spawns no pool and
+        // touches no shard telemetry.
+        assert_eq!(e_seq.shard_stats(), ShardStats::default());
+    }
+
+    #[test]
+    fn memwalk_composes_with_shards() {
+        // The two host-parallelism axes stack: sharded clusters feeding a
+        // fanned-out slice walk must still match the doubly-serial run.
+        let cfg = GpuConfig::tiny(L1ArchKind::Ata);
+        let mut cfg_both = cfg.clone();
+        cfg_both.engine.shards = 2;
+        cfg_both.engine.mem_workers = 3; // uneven split of tiny's 4 slices
+        let mk = |salt: u64| {
+            lane_kernel(4, move |c| (0..8).map(|k| (salt + c as u64 * 31 + k) % 64).collect())
+        };
+        let multi = MultiWorkload {
+            name: "a+b".into(),
+            lanes: vec![
+                AppLane {
+                    name: "a".into(),
+                    kernels: vec![mk(0), mk(5)],
+                    partition: CorePartition { first: 0, count: 4 },
+                },
+                AppLane {
+                    name: "b".into(),
+                    kernels: vec![mk(17)],
+                    partition: CorePartition { first: 4, count: 4 },
+                },
+            ],
+        };
+        let r_seq = Engine::new(&cfg).run_multi(&multi);
+        let mut e_both = Engine::new(&cfg_both);
+        let r_both = e_both.run_multi(&multi);
+        assert_eq!(
+            r_both.to_json().pretty(),
+            r_seq.to_json().pretty(),
+            "shards x mem_workers must not change co-execution metrics"
+        );
+        let s = e_both.shard_stats();
+        assert_eq!(s.shard_count, 2);
+        assert!(s.walk_ns > 0, "the sharded loop must time the walk phase");
     }
 
     #[test]

@@ -22,11 +22,14 @@
 //!    its own cores into per-core issue batches.  `SimtCore::tick` and
 //!    `load_complete` touch only core-local state, so shards share
 //!    nothing in this phase.
-//! 2. **Memory walk (serial).**  The coordinator locks every shard and
+//! 2. **Memory walk (phased).**  The coordinator locks every shard and
 //!    replays the per-core batches through the shared L1 organization and
-//!    memory system in exactly the order the unsharded loop would have:
-//!    shard-major == ascending global core id for solo runs, lane-major
-//!    (declaration order, then partition order) for co-execution.
+//!    memory system as one phased epoch: the B1 front-end pass and the B3
+//!    finish pass run serially in exactly the order the unsharded loop
+//!    would have — shard-major == ascending global core id for solo runs,
+//!    lane-major (declaration order, then partition order) for
+//!    co-execution — while the per-slice walk between them may fan out
+//!    across `engine.mem_workers` threads ([`MemSystem::run_walk`]).
 //!    Completion wake-ups are routed into the *owning* shard's ingress
 //!    FIFO instead of a global calendar.
 //! 3. **Drain + horizon (parallel).**  Every shard drains its ingress
@@ -60,16 +63,20 @@
 //!
 //! Within one epoch no shard reads another shard's state at all, so the
 //! phase-1/phase-3 thread schedule cannot influence any simulated metric
-//! — only wall clock.  The serial memory walk bounds the speedup
-//! (Amdahl on the request stream); the win comes from ticking wide
-//! configurations' SIMT front-ends in parallel.  Sharding therefore
-//! stays opt-in (`--shards` defaults to 1) until a toolchain-equipped
-//! session measures the crossover against the barrier cost.
+//! — only wall clock.  The serial B1/B3 passes bound the speedup (Amdahl
+//! on the request stream); `--mem-workers` attacks exactly that wall by
+//! fanning the per-slice walk out of the serial section, and
+//! [`Engine::shard_stats`]'s `tick_ns`/`walk_ns` split measures how much
+//! of each epoch the wall still eats.  Both knobs stay opt-in (`--shards`
+//! and `--mem-workers` default to 1) until a toolchain-equipped session
+//! measures the crossover against the barrier cost.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Barrier, Mutex, MutexGuard};
+// lint: allow(wall-clock) — per-epoch phase telemetry (ShardStats.tick_ns/walk_ns), stderr-only
+use std::time::Instant;
 
 use crate::config::GpuConfig;
 use crate::core::{IssueBatch, SimtCore};
@@ -255,6 +262,7 @@ pub(super) fn kernel_loop(
     let stop = AtomicBool::new(false);
     let clock = AtomicU64::new(eng.cycle);
     let mut last_sweep = eng.cycle;
+    let mut open: Vec<(usize, MemTxn, u32)> = Vec::new();
 
     std::thread::scope(|s| { // lint: allow(shard-confinement) — the shard module's own worker fan-out
         for sh in shards.iter().skip(1) {
@@ -264,22 +272,25 @@ pub(super) fn kernel_loop(
         loop {
             let now = eng.cycle;
             clock.store(now, Ordering::Release);
+            let t_tick = Instant::now(); // lint: allow(wall-clock) — stderr-only phase telemetry (ShardStats)
             barrier.wait(); // tick-go
             shards[0].lock().unwrap().tick_epoch(now);
             barrier.wait(); // tick-done
+            eng.shard_stats.tick_ns += t_tick.elapsed().as_nanos() as u64;
 
-            // Serial memory walk in canonical (ascending global core)
-            // order — rule 1: shared state mutates in canonical order.
+            // Memory walk as one phased epoch — rule 1: shared state
+            // mutates in canonical (ascending global core) order.  The B1
+            // front end and B3 finish run here on the coordinator; only
+            // the per-slice walk between them fans out (`mem_workers`).
+            let t_walk = Instant::now(); // lint: allow(wall-clock) — stderr-only phase telemetry (ShardStats)
             let mut guards = lock_all(&shards);
+            eng.mem.begin_epoch();
+            open.clear();
             let mut prev_group: Option<(u32, u32, u64)> = None;
-            for g in guards.iter_mut() {
-                // Reborrow through the guard once so `batches` and
-                // `ingress` can be borrowed disjointly below.
-                let sh = &mut **g;
-                for batch in sh.batches.iter_mut() {
+            for (si, g) in guards.iter().enumerate() {
+                for batch in g.batches.iter() {
                     eng.total_insts += batch.insts_issued;
-                    let reqs = std::mem::take(&mut batch.requests);
-                    for (req, group_n) in reqs.iter() {
+                    for (req, group_n) in batch.requests.iter() {
                         if *group_n > 0 {
                             let key = (req.core, req.warp, req.inst);
                             if prev_group != Some(key) {
@@ -291,27 +302,32 @@ pub(super) fn kernel_loop(
                         }
                         let mut txn = MemTxn::new(*req, now);
                         eng.l1.access(&mut txn, &mut eng.mem);
-                        eng.hops.record(&txn.hops, &txn.queued);
-                        if txn.hops.l2_dispatch > 0 {
-                            eng.shard_stats.egress_txns += 1;
-                        }
-                        if *group_n > 0 {
-                            eng.stage_tracker
-                                .complete_one(req.core, req.warp, req.inst, txn.l1_stage_done());
-                            if let Some(load_done) =
-                                eng.tracker.complete_one(req.core, req.warp, req.inst, txn.done())
-                            {
-                                // Rule 2: the wake returns to the issuing
-                                // core's own shard, through its ingress FIFO.
-                                sh.ingress.push((load_done.max(now + 1), req.core, req.warp));
-                                eng.shard_stats.ingress_wakes += 1;
-                            }
-                        }
+                        open.push((si, txn, *group_n));
                     }
-                    batch.requests = reqs;
                 }
             }
+            eng.mem.run_walk();
+            for (si, mut txn, group_n) in open.drain(..) {
+                eng.l1.finish(&mut txn, &mut eng.mem);
+                eng.hops.record(&txn.hops, &txn.queued);
+                if txn.hops.l2_dispatch > 0 {
+                    eng.shard_stats.egress_txns += 1;
+                }
+                if group_n > 0 {
+                    let (core, warp, inst) = (txn.req.core, txn.req.warp, txn.req.inst);
+                    eng.stage_tracker.complete_one(core, warp, inst, txn.l1_stage_done());
+                    if let Some(load_done) = eng.tracker.complete_one(core, warp, inst, txn.done())
+                    {
+                        // Rule 2: the wake returns to the issuing core's
+                        // own shard, through its ingress FIFO.
+                        guards[si].ingress.push((load_done.max(now + 1), core, warp));
+                        eng.shard_stats.ingress_wakes += 1;
+                    }
+                }
+            }
+            eng.mem.end_epoch();
             eng.shard_stats.epochs += 1;
+            eng.shard_stats.walk_ns += t_walk.elapsed().as_nanos() as u64;
             let finished = guards.iter().all(|g| g.all_done());
             drop(guards);
 
@@ -385,6 +401,7 @@ pub(super) fn multi_loop(
     let stop = AtomicBool::new(false);
     let clock = AtomicU64::new(eng.cycle);
     let mut last_sweep = eng.cycle;
+    let mut open: Vec<(usize, usize, MemTxn, u32)> = Vec::new();
 
     std::thread::scope(|s| { // lint: allow(shard-confinement) — the shard module's own worker fan-out
         for sh in shards.iter().skip(1) {
@@ -394,10 +411,13 @@ pub(super) fn multi_loop(
         loop {
             let now = eng.cycle;
             clock.store(now, Ordering::Release);
+            let t_tick = Instant::now(); // lint: allow(wall-clock) — stderr-only phase telemetry (ShardStats)
             barrier.wait(); // tick-go
             shards[0].lock().unwrap().tick_epoch(now);
             barrier.wait(); // tick-done
+            eng.shard_stats.tick_ns += t_tick.elapsed().as_nanos() as u64;
 
+            let t_walk = Instant::now(); // lint: allow(wall-clock) — stderr-only phase telemetry (ShardStats)
             let mut guards = lock_all(&shards);
 
             // Attribute issued instructions per lane (the unsharded loop
@@ -415,9 +435,13 @@ pub(super) fn multi_loop(
                 }
             }
 
-            // Serial memory walk in canonical lane-major order: lanes in
-            // declaration order, cores in partition order, requests in
-            // issue order — byte-for-byte the unsharded request stream.
+            // Memory walk as one phased epoch, in canonical lane-major
+            // order: lanes in declaration order, cores in partition
+            // order, requests in issue order — byte-for-byte the
+            // unsharded request stream through both the B1 front end and
+            // the B3 finish pass.
+            eng.mem.begin_epoch();
+            open.clear();
             let mut prev_group: Option<(u32, u32, u64)> = None;
             for (li, lane) in lanes.iter_mut().enumerate() {
                 if lane.done {
@@ -426,8 +450,7 @@ pub(super) fn multi_loop(
                 let partition = multi.lanes[li].partition;
                 for j in 0..partition.count {
                     let (si, local) = loc[partition.global(j)];
-                    let reqs = std::mem::take(&mut guards[si].batches[local].requests);
-                    for (req, group_n) in reqs.iter() {
+                    for (req, group_n) in guards[si].batches[local].requests.iter() {
                         lane.requests += 1;
                         if *group_n > 0 {
                             let key = (req.core, req.warp, req.inst);
@@ -440,29 +463,31 @@ pub(super) fn multi_loop(
                         }
                         let mut txn = MemTxn::new(*req, now);
                         eng.l1.access(&mut txn, &mut eng.mem);
-                        eng.hops.record(&txn.hops, &txn.queued);
-                        if txn.hops.l2_dispatch > 0 {
-                            eng.shard_stats.egress_txns += 1;
-                        }
-                        if *group_n > 0 {
-                            lane.stage_tracker
-                                .complete_one(req.core, req.warp, req.inst, txn.l1_stage_done());
-                            if let Some(load_done) =
-                                lane.tracker.complete_one(req.core, req.warp, req.inst, txn.done())
-                            {
-                                guards[si].ingress.push((
-                                    load_done.max(now + 1),
-                                    req.core,
-                                    req.warp,
-                                ));
-                                eng.shard_stats.ingress_wakes += 1;
-                            }
-                        }
+                        open.push((li, si, txn, *group_n));
                     }
-                    guards[si].batches[local].requests = reqs;
                 }
             }
+            eng.mem.run_walk();
+            for (li, si, mut txn, group_n) in open.drain(..) {
+                eng.l1.finish(&mut txn, &mut eng.mem);
+                eng.hops.record(&txn.hops, &txn.queued);
+                if txn.hops.l2_dispatch > 0 {
+                    eng.shard_stats.egress_txns += 1;
+                }
+                if group_n > 0 {
+                    let lane = &mut lanes[li];
+                    let (core, warp, inst) = (txn.req.core, txn.req.warp, txn.req.inst);
+                    lane.stage_tracker.complete_one(core, warp, inst, txn.l1_stage_done());
+                    if let Some(load_done) = lane.tracker.complete_one(core, warp, inst, txn.done())
+                    {
+                        guards[si].ingress.push((load_done.max(now + 1), core, warp));
+                        eng.shard_stats.ingress_wakes += 1;
+                    }
+                }
+            }
+            eng.mem.end_epoch();
             eng.shard_stats.epochs += 1;
+            eng.shard_stats.walk_ns += t_walk.elapsed().as_nanos() as u64;
 
             // Kernel completion per lane, in declaration order — the
             // coordinator owns relaunch, so new cores appear in their

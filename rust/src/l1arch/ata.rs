@@ -23,7 +23,7 @@
 use crate::cache::Probe;
 use crate::config::{GpuConfig, L1ArchKind};
 use crate::l2::MemSystem;
-use crate::mem::MemTxn;
+use crate::mem::{MemTxn, RetPath};
 
 use super::pipeline::{FabricNeeds, PipelineCtx, SharingPolicy};
 
@@ -68,8 +68,7 @@ pub fn distribute(
     // Fig 7(b): local hit has priority — never diverted.
     if matches!(agg.local, Probe::Hit { .. }) {
         // Tags present but fill still in flight → merge, not hit.
-        if let Some((d, s)) = p.try_merge(core, txn.req.line, t_tag) {
-            txn.complete(d, s);
+        if p.merge_or_defer(core, txn, t_tag, RetPath::Local) {
             return;
         }
         p.stats.local_hits += 1;

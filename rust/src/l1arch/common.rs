@@ -28,6 +28,12 @@ pub struct CoreL1 {
     pub mshr: MultiPort,
     /// Line → fill-ready cycle for in-flight misses (merge target).
     pub in_flight: FxHashMap<LineAddr, u64>,
+    /// Line → MSHR-dispatch cycle for misses deferred into the phased
+    /// memory walk *this epoch* (B1 installed the tags but the fill
+    /// cycle isn't known until B3).  Kept separate from `in_flight` so
+    /// merge timing is unchanged in the synchronous path; provably empty
+    /// between epochs.
+    pub pending: FxHashMap<LineAddr, u64>,
 }
 
 impl CoreL1 {
@@ -37,6 +43,7 @@ impl CoreL1 {
             banks: BankedCalendar::new(cfg.l1.banks),
             mshr: MultiPort::new(cfg.l1.mshr_entries),
             in_flight: FxHashMap::default(),
+            pending: FxHashMap::default(),
         }
     }
 

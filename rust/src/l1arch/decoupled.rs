@@ -16,7 +16,7 @@
 use crate::cache::Probe;
 use crate::config::{GpuConfig, L1ArchKind};
 use crate::l2::MemSystem;
-use crate::mem::{decode, LineAddr, MemTxn};
+use crate::mem::{decode, LineAddr, MemTxn, RetPath};
 use crate::stats::ResourceClass;
 
 use super::pipeline::{FabricNeeds, PipelineCtx, SharingPolicy};
@@ -92,49 +92,49 @@ impl SharingPolicy for DecoupledPolicy {
             p.xbar_route(cluster, my_idx, home_idx, now, 1, txn)
         };
 
-        // (data_ready, l1_stage_done at the slice)
-        let (data_ready, stage) = match p.cores[home].cache.tags.lookup(line, txn.req.sectors) {
-            Probe::Hit { .. } if p.cores[home].in_flight_ready(line, t_arrive).is_some() => {
-                // Tags installed at miss-schedule time; fill not landed yet.
-                p.try_merge(home, line, t_arrive).unwrap()
+        // How the data gets back to the requesting core once ready: for a
+        // slice hit the return crossing is part of the L1 access (the
+        // paper's decoupled latency includes it); for a miss the stage
+        // already ended at L2 dispatch — `complete_ret` encodes both.
+        let ret = if is_local_slice {
+            RetPath::Local
+        } else {
+            RetPath::Xbar {
+                cluster,
+                from_idx: home_idx,
+                to_idx: my_idx,
             }
+        };
+
+        match p.cores[home].cache.tags.lookup(line, txn.req.sectors) {
             Probe::Hit { .. } => {
+                // Tags install at miss-schedule time, so a probe hit may be
+                // an in-flight (or same-epoch deferred) fill — merge first.
+                if p.merge_or_defer(home, txn, t_arrive, ret) {
+                    return;
+                }
                 if is_local_slice {
                     p.stats.local_hits += 1;
                 } else {
                     p.stats.remote_hits += 1;
                 }
                 let d = p.hit_data_access(home, txn, t_arrive);
-                (d, d)
+                p.complete_ret(txn, d, d, ret);
             }
             probe => {
-                if let Some(merged) = p.try_merge(home, line, t_arrive) {
-                    merged
-                } else {
-                    // Tag probe costs one bank cycle on a miss too.
-                    let t_tag = p.miss_tag_probe(home, txn, t_arrive);
-                    let fetch_sectors = p.classify_miss(probe, txn.req.sectors);
-                    // The home slice owns the miss: its NoC port issues
-                    // the L2 fetch and the fill lands in the home cache.
-                    // All stalls (MSHR-full and the memory side) are still
-                    // charged to the *requesting* core — it is the one
-                    // whose access waits (`txn.attr_core`).
-                    p.miss_to_l2(home, txn, fetch_sectors, t_tag, mem)
+                if p.merge_or_defer(home, txn, t_arrive, ret) {
+                    return;
                 }
+                // Tag probe costs one bank cycle on a miss too.
+                let t_tag = p.miss_tag_probe(home, txn, t_arrive);
+                let fetch_sectors = p.classify_miss(probe, txn.req.sectors);
+                // The home slice owns the miss: its NoC port issues the L2
+                // fetch and the fill lands in the home cache.  All stalls
+                // (MSHR-full and the memory side) are still charged to the
+                // *requesting* core — it is the one whose access waits
+                // (`txn.attr_core`).
+                p.miss_to_l2(home, txn, fetch_sectors, t_tag, mem, ret);
             }
-        };
-
-        if is_local_slice {
-            txn.complete(data_ready, stage);
-        } else {
-            // Data crosses back to the requesting core.  For a slice hit
-            // the return crossing is part of the L1 access (the paper's
-            // decoupled latency includes it); for a miss the stage already
-            // ended at L2 dispatch.
-            let flits = p.timing.data_flits(txn.req.sector_count());
-            let back = p.xbar_route(cluster, home_idx, my_idx, data_ready, flits, txn);
-            let stage_back = if stage == data_ready { back } else { stage };
-            txn.complete(back, stage_back);
         }
     }
 }

@@ -50,9 +50,13 @@ use crate::stats::{ContentionStats, L1Stats, ResidencyStats};
 /// owns its organization exclusively — `Send` but not `Sync`).
 ///
 /// **Completion.**  Every access completes its transaction
-/// (`txn.done() >= txn.now()`); the engine never re-submits a request.
-/// Structural hazards (MSHR full, bank queue full) are modeled as added
-/// latency and counted in [`L1Stats::rejects`], not surfaced as failures.
+/// (`txn.done() >= txn.now()`) — or, inside a phased memory-walk epoch
+/// ([`MemSystem::phased`]), defers it by setting `txn.deferred`, in
+/// which case the engine calls [`finish`](L1Arch::finish) on the same
+/// transaction after the walk and *that* completes it.  The engine never
+/// re-submits a request.  Structural hazards (MSHR full, bank queue
+/// full) are modeled as added latency and counted in
+/// [`L1Stats::rejects`], not surfaced as failures.
 ///
 /// **Sweep semantics.**  [`sweep`](L1Arch::sweep) is pure housekeeping:
 /// the engine calls it at coarse intervals (≈ every 64 k cycles) with the
@@ -76,6 +80,14 @@ pub trait L1Arch: std::fmt::Debug + Send {
     /// it).  The organization stamps the transaction's hop timestamps and
     /// charges its queueing as it goes.
     fn access(&mut self, txn: &mut MemTxn, mem: &mut MemSystem);
+
+    /// Phase B3 of a phased memory-walk epoch: finalize a transaction
+    /// that [`access`](L1Arch::access) deferred.  Called in canonical
+    /// request order after [`MemSystem::run_walk`]; a no-op for
+    /// transactions that completed inline.
+    fn finish(&mut self, txn: &mut MemTxn, mem: &mut MemSystem) {
+        let _ = (txn, mem);
+    }
 
     /// Aggregated counters (see the trait-level stats invariants).
     fn stats(&self) -> &L1Stats;

@@ -12,7 +12,7 @@
 use crate::cache::{Eviction, Probe};
 use crate::config::{GpuConfig, L1ArchKind, WritePolicy};
 use crate::l2::MemSystem;
-use crate::mem::{decode, LineAddr, MemTxn, SectorMask};
+use crate::mem::{decode, Deferred, LineAddr, MemTxn, RetPath, SectorMask};
 use crate::noc::{Ring, XbarReservation};
 use crate::stats::{ContentionStats, L1Stats, ResidencyStats, ResourceClass};
 
@@ -40,7 +40,9 @@ pub struct FabricNeeds {
 /// mechanism steps and, where an organization is genuinely idiosyncratic,
 /// touch the resources directly.  They must uphold the [`L1Arch`]
 /// contract (determinism, monotone counters, one outcome class per
-/// access) and must [`complete`](MemTxn::complete) every transaction.
+/// access) and must [`complete`](MemTxn::complete) every transaction —
+/// or, inside a phased epoch, defer it (`txn.deferred`) for the B3
+/// finish pass.
 pub trait SharingPolicy: std::fmt::Debug + Send {
     /// Which organization this policy implements (matches the registry).
     fn kind(&self) -> L1ArchKind;
@@ -321,10 +323,57 @@ impl PipelineCtx {
         fill_cycle
     }
 
+    /// Close a transaction whose data is ready at `data_ready` with L1
+    /// stage `stage`, routing the data home per `ret`: directly
+    /// ([`RetPath::Local`]) or back across the cluster crossbar first
+    /// (decoupled-sharing home-slice accesses).
+    pub fn complete_ret(&mut self, txn: &mut MemTxn, data_ready: u64, stage: u64, ret: RetPath) {
+        match ret {
+            RetPath::Local => txn.complete(data_ready, stage),
+            RetPath::Xbar {
+                cluster,
+                from_idx,
+                to_idx,
+            } => {
+                let flits = self.timing.data_flits(txn.req.sector_count());
+                let back = self.xbar_route(cluster, from_idx, to_idx, data_ready, flits, txn);
+                // A stage equal to the data-ready cycle means the access
+                // was served entirely by the L1 stage — the back-crossing
+                // is still part of it.
+                let stage_back = if stage == data_ready { back } else { stage };
+                txn.complete(back, stage_back);
+            }
+        }
+    }
+
+    /// Merge onto an in-flight *or same-epoch deferred* fetch of the
+    /// transaction's line at cache `c`.  Returns whether the access was
+    /// disposed of: completed via `ret` for a concrete in-flight fill, or
+    /// parked as [`Deferred::Merge`] when the fill cycle is only known
+    /// after the phased walk (B3 resolves it in canonical order).
+    pub fn merge_or_defer(&mut self, c: usize, txn: &mut MemTxn, t: u64, ret: RetPath) -> bool {
+        if let Some((d, s)) = self.try_merge(c, txn.req.line, t) {
+            self.complete_ret(txn, d, s, ret);
+            return true;
+        }
+        if self.cores[c].pending.contains_key(&txn.req.line) {
+            self.stats.mshr_merges += 1;
+            txn.deferred = Some(Deferred::Merge { owner: c, t, ret });
+            return true;
+        }
+        false
+    }
+
     /// The classic miss walk: MSHR gate at `owner` → fetch below L1
-    /// (`owner` is the NoC endpoint) → fill installed at `owner`.
-    /// Returns `(data_ready, l1_stage)` — the stage ends one pipeline
-    /// depth past the dispatch point so hit and miss stages compare.
+    /// (`owner` is the NoC endpoint) → fill installed at `owner` → data
+    /// routed home per `ret`.  The stage ends one pipeline depth past the
+    /// dispatch point so hit and miss stages compare.
+    ///
+    /// Inside a phased epoch this is the B1 half only: the fetch
+    /// descriptor is dispatched and the tags installed now, and the
+    /// fill-timing half (MSHR occupancy, victim writeback, in-flight
+    /// entry, completion) runs in [`finish_deferred`](Self::finish_deferred)
+    /// once the walk has produced the fill cycle.
     pub fn miss_to_l2(
         &mut self,
         owner: usize,
@@ -332,15 +381,75 @@ impl PipelineCtx {
         sectors: SectorMask,
         start: u64,
         mem: &mut MemSystem,
-    ) -> (u64, u64) {
+        ret: RetPath,
+    ) {
         let s = self.mshr_dispatch(owner, txn, start);
         txn.endpoint = owner as u32;
         txn.fetch_sectors = sectors;
+        if mem.phased() {
+            let desc = mem.begin_fetch(txn, s);
+            let evicted = self.fill_tags(owner, txn.req.line, sectors);
+            self.stats.fills += 1;
+            let victim = evicted.filter(Eviction::needs_writeback);
+            self.cores[owner].pending.insert(txn.req.line, s);
+            txn.deferred = Some(Deferred::Fetch {
+                owner,
+                desc,
+                dispatch: s,
+                victim,
+                ret,
+            });
+            return;
+        }
         let fill = mem.fetch(txn, s);
         // lint: allow(grant-discipline) — occupancy-only: mshr_dispatch already charged the wait via earliest(), queued is 0 at `s`
         self.cores[owner].mshr.occupy_until(s, fill);
         let usable = self.install_fill(owner, txn, sectors, fill, mem);
-        (usable + 1, s + self.timing.latency as u64)
+        self.complete_ret(txn, usable + 1, s + self.timing.latency as u64, ret);
+    }
+
+    /// Phase B3 of the phased walk: consume the transaction's deferred
+    /// completion in canonical order.  For a fetch, finalize it through
+    /// [`MemSystem::finish_fetch`], hold the MSHR entry to the fill,
+    /// write back the B1 victim, record the in-flight entry and complete;
+    /// for a same-epoch merge, the owner's fetch finished earlier in this
+    /// pass, so its in-flight entry carries the ready cycle.
+    pub fn finish_deferred(&mut self, txn: &mut MemTxn, mem: &mut MemSystem) {
+        let Some(deferred) = txn.deferred.take() else {
+            return;
+        };
+        match deferred {
+            Deferred::Fetch {
+                owner,
+                desc,
+                dispatch,
+                victim,
+                ret,
+            } => {
+                let fill = mem.finish_fetch(desc, txn);
+                // lint: allow(grant-discipline) — occupancy-only: mshr_dispatch already charged the wait via earliest(), queued is 0 at dispatch
+                self.cores[owner].mshr.occupy_until(dispatch, fill);
+                if let Some(ev) = victim {
+                    mem.write_for(
+                        owner,
+                        ev.line,
+                        ev.dirty_sectors.count_ones(),
+                        fill,
+                        txn.attr_core as usize,
+                    );
+                }
+                self.cores[owner].in_flight.insert(txn.req.line, fill);
+                self.cores[owner].pending.remove(&txn.req.line);
+                self.complete_ret(txn, fill + 1, dispatch + self.timing.latency as u64, ret);
+            }
+            Deferred::Merge { owner, t, ret } => {
+                let ready = *self.cores[owner]
+                    .in_flight
+                    .get(&txn.req.line)
+                    .expect("merge owner's fetch finishes earlier in canonical order");
+                self.complete_ret(txn, ready.max(t) + 1, t + 1 + self.timing.latency as u64, ret);
+            }
+        }
     }
 
     /// The private-cache load path: tag lookup, bank access on a hit,
@@ -351,8 +460,7 @@ impl PipelineCtx {
         let now = txn.now();
         match self.cores[c].cache.tags.lookup(txn.req.line, txn.req.sectors) {
             Probe::Hit { .. } => {
-                if let Some((d, s)) = self.try_merge(c, txn.req.line, now) {
-                    txn.complete(d, s);
+                if self.merge_or_defer(c, txn, now, RetPath::Local) {
                     return;
                 }
                 self.stats.local_hits += 1;
@@ -360,14 +468,12 @@ impl PipelineCtx {
                 txn.serve(done);
             }
             probe => {
-                if let Some((d, s)) = self.try_merge(c, txn.req.line, now) {
-                    txn.complete(d, s);
+                if self.merge_or_defer(c, txn, now, RetPath::Local) {
                     return;
                 }
                 let t_tag = self.miss_tag_probe(c, txn, now);
                 let sectors = self.classify_miss(probe, txn.req.sectors);
-                let (d, s) = self.miss_to_l2(c, txn, sectors, t_tag, mem);
-                txn.complete(d, s);
+                self.miss_to_l2(c, txn, sectors, t_tag, mem, RetPath::Local);
             }
         }
     }
@@ -551,12 +657,10 @@ impl PipelineCtx {
         mem: &mut MemSystem,
     ) {
         let c = txn.req.core as usize;
-        if let Some((d, s)) = self.try_merge(c, txn.req.line, start) {
-            txn.complete(d, s);
+        if self.merge_or_defer(c, txn, start, RetPath::Local) {
             return;
         }
-        let (d, s) = self.miss_to_l2(c, txn, sectors, start, mem);
-        txn.complete(d, s);
+        self.miss_to_l2(c, txn, sectors, start, mem, RetPath::Local);
     }
 }
 
@@ -587,9 +691,13 @@ impl L1Arch for PipelineL1 {
         self.ctx.stats.accesses += 1;
         self.policy.access(&mut self.ctx, txn, mem);
         debug_assert!(
-            txn.hops.done >= txn.now(),
-            "policy must complete the transaction"
+            txn.hops.done >= txn.now() || txn.deferred.is_some(),
+            "policy must complete or defer the transaction"
         );
+    }
+
+    fn finish(&mut self, txn: &mut MemTxn, mem: &mut MemSystem) {
+        self.ctx.finish_deferred(txn, mem);
     }
 
     fn stats(&self) -> &L1Stats {

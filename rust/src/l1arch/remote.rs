@@ -19,7 +19,7 @@
 use crate::cache::Probe;
 use crate::config::{GpuConfig, L1ArchKind};
 use crate::l2::MemSystem;
-use crate::mem::{decode, MemTxn};
+use crate::mem::{decode, MemTxn, RetPath};
 use crate::stats::ResourceClass;
 use crate::util::rng::Pcg32;
 
@@ -78,8 +78,7 @@ impl RemotePolicy {
         p.stats.misses += 1;
         let core = txn.req.core as usize;
         let sectors = txn.req.sectors;
-        let (d, s) = p.miss_to_l2(core, txn, sectors, start, mem);
-        txn.complete(d, s);
+        p.miss_to_l2(core, txn, sectors, start, mem, RetPath::Local);
     }
 }
 
@@ -110,8 +109,7 @@ impl SharingPolicy for RemotePolicy {
         let t_tag;
         match p.cores[core].cache.tags.lookup(txn.req.line, txn.req.sectors) {
             Probe::Hit { .. } => {
-                if let Some((d, s)) = p.try_merge(core, txn.req.line, now) {
-                    txn.complete(d, s);
+                if p.merge_or_defer(core, txn, now, RetPath::Local) {
                     return;
                 }
                 p.stats.local_hits += 1;
@@ -121,8 +119,7 @@ impl SharingPolicy for RemotePolicy {
             }
             _ => {
                 // In-flight merge check before probing.
-                if let Some((d, s)) = p.try_merge(core, txn.req.line, now) {
-                    txn.complete(d, s);
+                if p.merge_or_defer(core, txn, now, RetPath::Local) {
                     return;
                 }
                 // The local tag probe costs one bank cycle.

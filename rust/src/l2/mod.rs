@@ -2,20 +2,49 @@
 //! banked sectored L2 slices (memory-side, 24 × 128 KiB), and the DRAM
 //! timing model.
 //!
-//! Every L1 organization funnels its misses through [`MemSystem::fetch`],
-//! which accounts the full round trip: request serialization into the
-//! 30×24 crossbar, slice bank access, L2 hit or DRAM service, and the
-//! data's return trip.  In-flight line merging (L2 MSHR behaviour) is
-//! modeled so duplicate misses to one line don't multiply DRAM traffic.
+//! Every L1 organization funnels its misses through here.  The walk is
+//! *phased* so the per-slice half can fan out across host threads
+//! (`--mem-workers`, [`walk::WalkPool`]) without changing a single
+//! simulated metric:
+//!
+//! * **B1 — front end (canonical order).**  [`MemSystem::begin_fetch`]
+//!   retires everything cross-slice: the injection-port admission check
+//!   (backpressure is per source core), the cores→slices crossbar
+//!   crossing, and the hop stamp.  It resolves the miss into a
+//!   slice-bound [`FetchDesc`].
+//! * **B2 — slice walk (parallel).**  [`MemSystem::run_walk`] hands each
+//!   slice's descriptor batch, in ascending descriptor order, to the
+//!   slice's exclusive owner: [`SliceWalk::walk_one`] reserves the slice
+//!   port, probes the slice tags, merges onto in-flight fills and
+//!   installs misses.  A slice touches only its own state, so any
+//!   worker partition produces byte-identical outcomes.
+//! * **DRAM sub-phase (canonical order).**  DRAM controllers
+//!   (`decode::dram_bank`) interleave at row granularity and therefore
+//!   cannot align with slice partitions; DRAM admission stays a serial
+//!   canonical sub-phase on the coordinator, finalizing every miss's
+//!   fill cycle (and every same-epoch merge onto it).
+//! * **B3 — merge (canonical order).**  [`MemSystem::finish_fetch`]
+//!   charges the recorded queueing, crosses the response back over the
+//!   slices→cores crossbar and stamps the transaction — all statistics
+//!   counters move here, in the canonical transaction order.
+//!
+//! [`MemSystem::fetch`] wraps the three phases into one synchronous call
+//! (a single-request epoch) for direct callers and tests.  In-flight
+//! line merging (L2 MSHR behaviour) is modeled so duplicate misses to
+//! one line don't multiply DRAM traffic.
 
-use crate::cache::{Probe, SectoredCache};
+pub mod walk;
+
+use crate::cache::{Eviction, Probe, SectoredCache};
 use crate::config::GpuConfig;
 use crate::dram::Dram;
-use crate::mem::{decode, LineAddr, MemTxn};
+use crate::mem::{decode, LineAddr, MemTxn, SectorMask};
 use crate::noc::XbarReservation;
-use crate::resource::BankedCalendar;
+use crate::resource::Calendar;
 use crate::stats::{ContentionStats, ResourceClass};
 use crate::util::fxhash::FxHashMap;
+
+use walk::WalkPool;
 
 #[derive(Debug, Clone, Copy, Default)]
 pub struct L2Stats {
@@ -36,10 +65,122 @@ pub struct L2Stats {
     pub backpressure_stalls: u64,
 }
 
-/// In-flight fill tracking for MSHR-style merging at L2.
+/// In-flight fill tracking for MSHR-style merging at a slice.  `Pending`
+/// exists only *within* an epoch (between B2 and the DRAM sub-phase,
+/// which finalizes every entry to `Ready`); it indexes the descriptor
+/// that owns the fetch.
 #[derive(Debug, Clone, Copy)]
-struct InFlight {
-    ready: u64,
+enum Flight {
+    Ready(u64),
+    Pending(u32),
+}
+
+/// What the slice walk concluded about one descriptor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Outcome {
+    /// B2 has not run yet.
+    Unwalked,
+    /// Line (and sectors) present in the slice.
+    Hit,
+    /// Merged onto a fill from an earlier epoch (ready cycle known).
+    Merged,
+    /// Stale in-flight entry (fill landed); served like a hit.
+    Stale,
+    /// Full/sector miss — the DRAM sub-phase owns the fill timing.
+    Miss,
+    /// Merged onto a miss scheduled earlier in this epoch; resolves to
+    /// the owning descriptor's fill cycle in the DRAM sub-phase.
+    MergedPending(u32),
+}
+
+/// A slice-bound fetch in flight through the phased walk: B1 fills the
+/// routing half, B2 the slice half, the DRAM sub-phase the timing, and
+/// B3 consumes it.
+#[derive(Debug, Clone, Copy)]
+pub struct FetchDesc {
+    line: LineAddr,
+    slice: usize,
+    /// NoC endpoint the response returns to.
+    endpoint: usize,
+    fetch_sectors: SectorMask,
+    /// Sectors the response carries (for flit accounting).
+    resp_sectors: u32,
+    /// Cycle the request reached the slice (B1's crossbar grant).
+    at_slice: u64,
+    outcome: Outcome,
+    port_queued: u64,
+    port_grant: u64,
+    /// Sectors a DRAM read must bring in (miss only).
+    fetch_count: u32,
+    /// Dirty slice victim of the B2 fill (miss only).
+    victim: Option<Eviction>,
+    dram_queued: u64,
+    /// Cycle the data is ready at the slice (set by B2 for hits/merges,
+    /// by the DRAM sub-phase for misses).
+    data_ready: u64,
+}
+
+/// One L2 slice's exclusively-owned state: its sectored cache, its
+/// access port and its share of the in-flight merge table.  During B2 a
+/// walk worker owns a contiguous run of these outright; nothing in here
+/// is shared across slices.
+#[derive(Debug)]
+pub struct SliceWalk {
+    cache: SectoredCache,
+    /// The slice's access port (tag + data pipeline occupancy).
+    port: Calendar,
+    in_flight: FxHashMap<LineAddr, Flight>,
+}
+
+impl SliceWalk {
+    /// B2 for one descriptor: reserve the slice port, probe the tags,
+    /// classify.  Touches only this slice's state and records every
+    /// outcome on the descriptor — statistics and contention stay with
+    /// the coordinator (B3).
+    fn walk_one(&mut self, idx: u32, d: &mut FetchDesc, l2_latency: u64) {
+        let port = self.port.reserve(d.at_slice, 1);
+        d.port_queued = port.queued;
+        d.port_grant = port.grant;
+        match self.cache.tags.lookup(d.line, d.fetch_sectors) {
+            Probe::Hit { .. } => {
+                d.outcome = Outcome::Hit;
+                d.data_ready = port.grant + l2_latency;
+            }
+            probe => match self.in_flight.get(&d.line).copied() {
+                Some(Flight::Ready(r)) if r > d.at_slice => {
+                    // Merged: no extra DRAM trip.
+                    d.outcome = Outcome::Merged;
+                    d.data_ready = r;
+                }
+                Some(Flight::Ready(_)) => {
+                    // Stale entry: the fill landed; treat as hit.
+                    self.in_flight.remove(&d.line);
+                    d.outcome = Outcome::Stale;
+                    d.data_ready = port.grant + l2_latency;
+                }
+                Some(Flight::Pending(owner)) => {
+                    // A miss scheduled earlier in this epoch owns the
+                    // line — merge unconditionally.  (This is the rule
+                    // that keeps B2 independent of DRAM timing and
+                    // therefore parallel.)
+                    d.outcome = Outcome::MergedPending(owner);
+                }
+                None => {
+                    d.outcome = Outcome::Miss;
+                    d.fetch_count = match probe {
+                        Probe::SectorMiss { missing, .. } => missing.count_ones(),
+                        _ => 4, // fetch the whole line on a line miss
+                    };
+                    // Fill the slice; only a dirty victim goes back to
+                    // DRAM (fill reports clean victims too — they are
+                    // dropped here without write traffic).
+                    let (_, evicted) = self.cache.fill(d.line, 0b1111);
+                    d.victim = evicted.filter(Eviction::needs_writeback);
+                    self.in_flight.insert(d.line, Flight::Pending(idx));
+                }
+            },
+        }
+    }
 }
 
 #[derive(Debug)]
@@ -48,11 +189,16 @@ pub struct MemSystem {
     /// reservation-mode 30×24 / 24×30 crossbars.
     req_net: XbarReservation,
     resp_net: XbarReservation,
-    slices: Vec<SectoredCache>,
-    /// One access port per slice (the L2 bank).
-    slice_ports: BankedCalendar,
+    /// Per-slice state, exclusively owned by one walk worker during B2.
+    walks: Vec<SliceWalk>,
     dram: Dram,
-    in_flight: FxHashMap<LineAddr, InFlight>,
+    /// The epoch's fetch descriptors in canonical request order.
+    descs: Vec<FetchDesc>,
+    /// Persistent walk workers (`engine.mem_workers`; 1 = serial walk).
+    pool: WalkPool,
+    /// Inside a `begin_epoch`/`end_epoch` window: `fetch` is replaced by
+    /// the begin/walk/finish split.
+    phased: bool,
     pub stats: L2Stats,
     /// Per-core contention attribution for the memory side (NoC links, L2
     /// slice ports, DRAM) — charged to the *requesting* core.
@@ -71,19 +217,22 @@ impl MemSystem {
         MemSystem {
             req_net: XbarReservation::new(cfg.cores, cfg.l2.slices, cfg.noc.latency, buffer_limit),
             resp_net: XbarReservation::new(cfg.l2.slices, cfg.cores, cfg.noc.latency, buffer_limit),
-            slices: (0..cfg.l2.slices)
-                .map(|_| {
-                    SectoredCache::new(
+            walks: (0..cfg.l2.slices)
+                .map(|_| SliceWalk {
+                    cache: SectoredCache::new(
                         cfg.l2.sets_per_slice(),
                         cfg.l2.assoc,
                         cfg.l2.mshr_entries,
                         cfg.l2.mshr_merges,
-                    )
+                    ),
+                    port: Calendar::new(),
+                    in_flight: FxHashMap::default(),
                 })
                 .collect(),
-            slice_ports: BankedCalendar::new(cfg.l2.slices),
             dram: Dram::new(&cfg.dram, cfg.core_clock_ghz),
-            in_flight: FxHashMap::default(),
+            descs: Vec::new(),
+            pool: WalkPool::new(cfg.engine.mem_workers, cfg.l2.slices),
+            phased: false,
             stats: L2Stats::default(),
             con: ContentionStats::new(cfg.cores),
             n_slices: cfg.l2.slices,
@@ -104,23 +253,35 @@ impl MemSystem {
         self.req_net.would_accept(core, now)
     }
 
-    /// Full miss round trip for a read transaction: returns the cycle the
-    /// fill data arrives back at the requesting L1, stamping the
-    /// transaction's `l2_dispatch`/`mem_done` hops along the way.
-    ///
-    /// The transaction carries the routing split: `txn.endpoint` is the
-    /// physical NoC port (where the request enters and the data returns —
-    /// the home slice for decoupled-sharing misses), while every queued
-    /// cycle — NoC injection backpressure, crossbar ports, the slice
-    /// access port, the DRAM controller queue, bank and bus waits, and
-    /// the response crossing — is charged to `txn.attr_core` (the
-    /// suffering core) via [`MemTxn::charge`], landing in both the
-    /// per-core [`ContentionStats`] and the transaction's own breakdown.
-    pub fn fetch(&mut self, txn: &mut MemTxn, now: u64) -> u64 {
+    /// Enter a phased epoch: L1 organizations defer their misses through
+    /// [`begin_fetch`](Self::begin_fetch) until
+    /// [`run_walk`](Self::run_walk) and the B3 finish pass run.
+    pub fn begin_epoch(&mut self) {
+        debug_assert!(!self.phased && self.descs.is_empty());
+        self.phased = true;
+    }
+
+    /// Close the epoch after every deferred transaction was finished.
+    pub fn end_epoch(&mut self) {
+        debug_assert!(self.phased);
+        self.descs.clear();
+        self.phased = false;
+    }
+
+    /// Inside a `begin_epoch`/`end_epoch` window?
+    pub fn phased(&self) -> bool {
+        self.phased
+    }
+
+    /// B1: the cross-slice front half of a miss — injection-port
+    /// admission (backpressure is per source core), the request
+    /// crossing, and the hop stamp.  Returns the descriptor index the
+    /// B3 finish pass consumes.
+    pub fn begin_fetch(&mut self, txn: &mut MemTxn, now: u64) -> usize {
         let core = txn.endpoint as usize;
         let line = txn.req.line;
         let slice = decode::l2_slice(line, self.n_slices);
-        let sectors = txn.fetch_sectors.count_ones().max(1);
+        let resp_sectors = txn.fetch_sectors.count_ones().max(1);
         txn.hops.l2_dispatch = now;
 
         // Finite input buffer: when the core's injection port backlog
@@ -138,70 +299,133 @@ impl MemSystem {
         self.stats.request_flits += self.header_flits as u64;
         let req_hop = self.req_net.transfer(core, slice, start, self.header_flits);
         txn.charge(&mut self.con, ResourceClass::NocLink, req_hop.queued);
-        let at_slice = req_hop.grant;
 
-        // Slice bank port (tag + data pipeline occupancy).
-        let port = self.slice_ports.reserve(slice, at_slice, 1);
-        txn.charge(&mut self.con, ResourceClass::L2Slice, port.queued);
-        let grant = port.grant;
+        self.descs.push(FetchDesc {
+            line,
+            slice,
+            endpoint: core,
+            fetch_sectors: txn.fetch_sectors,
+            resp_sectors,
+            at_slice: req_hop.grant,
+            outcome: Outcome::Unwalked,
+            port_queued: 0,
+            port_grant: 0,
+            fetch_count: 0,
+            victim: None,
+            dram_queued: 0,
+            data_ready: 0,
+        });
+        self.descs.len() - 1
+    }
 
-        self.stats.accesses += 1;
-        let data_ready = match self.slices[slice].tags.lookup(line, txn.fetch_sectors) {
-            Probe::Hit { .. } => {
-                self.stats.hits += 1;
-                grant + self.l2_latency as u64
+    /// B2 + the DRAM sub-phase: walk every descriptor at its slice (fanned
+    /// out across the worker pool when `mem_workers > 1`), then finalize
+    /// miss timing through the DRAM controllers in canonical order.
+    pub fn run_walk(&mut self) {
+        if self.descs.is_empty() {
+            return;
+        }
+        let l2l = self.l2_latency as u64;
+        if self.pool.workers() <= 1 {
+            let (walks, descs) = (&mut self.walks, &mut self.descs);
+            for (i, d) in descs.iter_mut().enumerate() {
+                walks[d.slice].walk_one(i as u32, d, l2l);
             }
-            probe => {
-                // Sector miss or full miss — check in-flight merge first.
-                if let Some(f) = self.in_flight.get(&line) {
-                    if f.ready > at_slice {
-                        self.stats.hits += 1; // merged: no extra DRAM trip
-                        f.ready
-                    } else {
-                        // Stale entry: the fill landed; treat as hit.
-                        self.stats.hits += 1;
-                        self.in_flight.remove(&line);
-                        grant + self.l2_latency as u64
-                    }
-                } else {
-                    self.stats.misses += 1;
-                    let fetch_sectors = match probe {
-                        Probe::SectorMiss { missing, .. } => missing.count_ones(),
-                        _ => 4, // fetch the whole line on a line miss
-                    };
-                    // DRAM controller queue backpressure, then the access.
-                    let dram_at = grant + self.l2_latency as u64;
-                    let (d, dstall) = self.dram.read_gated(line, dram_at, fetch_sectors);
+        } else {
+            self.pool.run(&mut self.walks, &mut self.descs, l2l);
+        }
+        self.dram_subphase();
+    }
+
+    /// The canonical DRAM sub-phase: every miss pays controller-queue
+    /// backpressure and the banked access in ascending descriptor order,
+    /// and every same-epoch merge resolves to its owner's fill cycle.
+    /// Serial because DRAM banks interleave at row granularity
+    /// (`decode::dram_bank`) and cannot align with slice partitions.
+    fn dram_subphase(&mut self) {
+        for i in 0..self.descs.len() {
+            match self.descs[i].outcome {
+                Outcome::Miss => {
+                    let d = self.descs[i];
+                    let dram_at = d.port_grant + self.l2_latency as u64;
+                    let (g, dstall) = self.dram.read_gated(d.line, dram_at, d.fetch_count);
                     if dstall > 0 {
                         self.stats.backpressure_stalls += 1;
                     }
-                    txn.charge(&mut self.con, ResourceClass::Dram, dstall + d.queued);
-                    let dram_done = d.grant;
-                    // Fill the slice; only a dirty victim goes back to
-                    // DRAM (fill reports clean victims too — they are
-                    // dropped here without write traffic).
-                    let (_, evicted) = self.slices[slice].fill(line, 0b1111);
-                    if let Some(ev) = evicted.filter(|e| e.needs_writeback()) {
+                    if let Some(ev) = d.victim {
                         self.stats.writebacks_to_dram += 1;
                         self.dram
-                            .access(ev.line, dram_done, ev.dirty_sectors.count_ones(), true);
+                            .access(ev.line, g.grant, ev.dirty_sectors.count_ones(), true);
                     }
-                    self.in_flight.insert(line, InFlight { ready: dram_done });
-                    dram_done
+                    self.walks[d.slice].in_flight.insert(d.line, Flight::Ready(g.grant));
+                    let d = &mut self.descs[i];
+                    d.dram_queued = dstall + g.queued;
+                    d.data_ready = g.grant;
                 }
+                Outcome::MergedPending(owner) => {
+                    // The owner is always an earlier descriptor, already
+                    // finalized by this loop.
+                    self.descs[i].data_ready = self.descs[owner as usize].data_ready;
+                }
+                _ => {}
             }
-        };
+        }
+    }
+
+    /// B3: close one descriptor in canonical transaction order — count
+    /// the outcome, charge the recorded queueing, cross the response
+    /// back to the endpoint and stamp the transaction.  Returns the
+    /// cycle the fill data arrives back at the requesting L1.
+    pub fn finish_fetch(&mut self, idx: usize, txn: &mut MemTxn) -> u64 {
+        let d = self.descs[idx];
+        self.stats.accesses += 1;
+        match d.outcome {
+            Outcome::Miss => self.stats.misses += 1,
+            Outcome::Hit | Outcome::Merged | Outcome::Stale | Outcome::MergedPending(_) => {
+                self.stats.hits += 1
+            }
+            Outcome::Unwalked => unreachable!("finish_fetch before run_walk"),
+        }
+        txn.charge(&mut self.con, ResourceClass::L2Slice, d.port_queued);
+        txn.charge(&mut self.con, ResourceClass::Dram, d.dram_queued);
 
         // Response crossing back to the core with the data sectors.
-        let flits = self.data_flits(sectors);
+        let flits = self.data_flits(d.resp_sectors);
         self.stats.response_flits += flits as u64;
-        let resp_hop = self.resp_net.transfer(slice, core, data_ready, flits);
+        let resp_hop = self.resp_net.transfer(d.slice, d.endpoint, d.data_ready, flits);
         txn.charge(&mut self.con, ResourceClass::NocLink, resp_hop.queued);
         let at_core = resp_hop.grant;
         txn.hops.mem_done = at_core;
 
-        self.stats.total_fetch_latency += at_core - now;
+        self.stats.total_fetch_latency += at_core - txn.hops.l2_dispatch;
         self.stats.fetches += 1;
+        at_core
+    }
+
+    /// Full miss round trip for a read transaction as one synchronous
+    /// call — a single-request epoch through the phased walk.  Returns
+    /// the cycle the fill data arrives back at the requesting L1,
+    /// stamping the transaction's `l2_dispatch`/`mem_done` hops along
+    /// the way.
+    ///
+    /// The transaction carries the routing split: `txn.endpoint` is the
+    /// physical NoC port (where the request enters and the data returns —
+    /// the home slice for decoupled-sharing misses), while every queued
+    /// cycle — NoC injection backpressure, crossbar ports, the slice
+    /// access port, the DRAM controller queue, bank and bus waits, and
+    /// the response crossing — is charged to `txn.attr_core` (the
+    /// suffering core) via [`MemTxn::charge`], landing in both the
+    /// per-core [`ContentionStats`] and the transaction's own breakdown.
+    pub fn fetch(&mut self, txn: &mut MemTxn, now: u64) -> u64 {
+        debug_assert!(
+            !self.phased,
+            "inside an epoch use begin_fetch/run_walk/finish_fetch"
+        );
+        debug_assert!(self.descs.is_empty());
+        let idx = self.begin_fetch(txn, now);
+        self.run_walk();
+        let at_core = self.finish_fetch(idx, txn);
+        self.descs.clear();
         at_core
     }
 
@@ -229,22 +453,22 @@ impl MemSystem {
         self.stats.writes += 1;
         let hop = self.req_net.transfer(core, slice, now + stall, flits);
         self.con.add(attr_core, ResourceClass::NocLink, hop.queued);
-        let port = self.slice_ports.reserve(slice, hop.grant, 1);
+        let port = self.walks[slice].port.reserve(hop.grant, 1);
         self.con.add(attr_core, ResourceClass::L2Slice, port.queued);
         let grant = port.grant;
-        match self.slices[slice].tags.lookup(line, 0) {
+        match self.walks[slice].cache.tags.lookup(line, 0) {
             Probe::Hit { .. } | Probe::SectorMiss { .. } => {
                 let mask = ((1u16 << sectors.min(4)) - 1) as u8;
                 // lint: allow(tag-mutation-helper) — L2 slice tags sit below L1; the residency index never mirrors them
-                self.slices[slice].tags.mark_dirty(line, mask);
+                self.walks[slice].cache.tags.mark_dirty(line, mask);
             }
             Probe::Miss => {
                 // Write-allocate without a DRAM read (sectored: the written
                 // sectors become valid+dirty).
                 let mask = ((1u16 << sectors.min(4)) - 1) as u8;
-                let (_, evicted) = self.slices[slice].fill(line, mask);
+                let (_, evicted) = self.walks[slice].cache.fill(line, mask);
                 // lint: allow(tag-mutation-helper) — L2 slice tags sit below L1; the residency index never mirrors them
-                self.slices[slice].tags.mark_dirty(line, mask);
+                self.walks[slice].cache.tags.mark_dirty(line, mask);
                 if let Some(ev) = evicted.filter(|e| e.needs_writeback()) {
                     self.stats.writebacks_to_dram += 1;
                     self.dram.access(
@@ -289,9 +513,24 @@ impl MemSystem {
         self.dram.stats
     }
 
-    /// Drop stale in-flight entries (bounded memory on long runs).
+    /// In-flight entries across every slice (tests and audits).
+    pub fn in_flight_len(&self) -> usize {
+        self.walks.iter().map(|w| w.in_flight.len()).sum()
+    }
+
+    /// Drop stale in-flight entries (bounded memory on long runs).  Runs
+    /// at fixed cycle boundaries on the coordinator, outside any epoch,
+    /// so the sweep cadence can never depend on the walk partition.
     pub fn sweep_in_flight(&mut self, now: u64) {
-        self.in_flight.retain(|_, f| f.ready > now);
+        debug_assert!(!self.phased, "sweep must stay outside the epoch window");
+        for w in &mut self.walks {
+            w.in_flight.retain(|_, f| match *f {
+                Flight::Ready(r) => r > now,
+                // Pending never survives past run_walk's DRAM sub-phase;
+                // retain defensively rather than hide a logic error.
+                Flight::Pending(_) => true,
+            });
+        }
     }
 }
 
@@ -423,8 +662,53 @@ mod tests {
     fn sweep_drops_stale_entries() {
         let mut m = sys();
         fetch(&mut m, req(1, 0, 500), 0);
-        assert_eq!(m.in_flight.len(), 1);
+        assert_eq!(m.in_flight_len(), 1);
         m.sweep_in_flight(u64::MAX);
-        assert!(m.in_flight.is_empty());
+        assert_eq!(m.in_flight_len(), 0);
+    }
+
+    /// One mixed epoch (misses, same-epoch merges, cross-slice spread)
+    /// replayed at several worker counts: every simulated observable —
+    /// fill cycles, statistics, contention — must be byte-identical to
+    /// the serial walk.  The engine-level twin lives in
+    /// `rust/tests/memwalk_determinism.rs`.
+    #[test]
+    fn phased_epoch_identical_at_any_worker_count() {
+        let run = |workers: usize| {
+            let mut cfg = GpuConfig::tiny(L1ArchKind::Private);
+            cfg.engine.mem_workers = workers;
+            let mut m = MemSystem::new(&cfg);
+            let mut dones = Vec::new();
+            for epoch in 0..3u64 {
+                let now = epoch * 50;
+                m.begin_epoch();
+                let mut open: Vec<(usize, MemTxn)> = Vec::new();
+                for i in 0..24u64 {
+                    // Lines spread over slices, with repeats for merges.
+                    let mut txn = MemTxn::new(req(i, (i % 4) as u32, 100 + i % 9), now);
+                    let idx = m.begin_fetch(&mut txn, now);
+                    open.push((idx, txn));
+                }
+                m.run_walk();
+                for (idx, txn) in open.iter_mut() {
+                    dones.push(m.finish_fetch(*idx, txn));
+                    dones.push(txn.queued.total());
+                }
+                m.end_epoch();
+            }
+            let s = m.stats;
+            (
+                dones,
+                (s.accesses, s.hits, s.misses, s.fetches, s.backpressure_stalls),
+                (s.request_flits, s.response_flits, s.total_fetch_latency),
+                m.contention().total().total(),
+                m.dram_stats().reads,
+                m.in_flight_len(),
+            )
+        };
+        let serial = run(1);
+        for workers in [2, 3, 4] {
+            assert_eq!(run(workers), serial, "mem-workers {workers} drifted");
+        }
     }
 }

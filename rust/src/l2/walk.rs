@@ -1,0 +1,206 @@
+//! Persistent walk workers for phase B2 of the phased memory walk
+//! (`--mem-workers`).
+//!
+//! Each worker exclusively owns a contiguous run of L2 slices for the
+//! duration of one [`run`](WalkPool::run) call: the pool *moves* the
+//! [`SliceWalk`] units into the worker's job and moves them back when the
+//! job returns, so the type system enforces the ownership map — no locks,
+//! no shared mutable state.  Descriptors are walked in ascending global
+//! index within each worker, and results are scattered back by index, so
+//! the outcome is byte-identical to the serial walk regardless of thread
+//! scheduling.
+//!
+//! With `mem_workers <= 1` (the default) no threads are spawned and
+//! [`MemSystem::run_walk`](super::MemSystem::run_walk) walks serially on
+//! the coordinator.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use super::{FetchDesc, SliceWalk};
+
+/// One B2 work packet: the worker's slice units (moved in and back out),
+/// its share of the epoch's descriptors, and their global indices.
+#[derive(Debug)]
+struct Job {
+    units: Vec<SliceWalk>,
+    /// Global slice id of `units[0]` (the worker's partition start).
+    first_slice: usize,
+    descs: Vec<FetchDesc>,
+    /// Global descriptor index of each entry in `descs` (ascending).
+    idxs: Vec<u32>,
+    l2_latency: u64,
+}
+
+fn run_job(job: &mut Job) {
+    for k in 0..job.descs.len() {
+        let d = &mut job.descs[k];
+        job.units[d.slice - job.first_slice].walk_one(job.idxs[k], d, job.l2_latency);
+    }
+}
+
+/// A persistent worker and its two channels (jobs in, results out).
+#[derive(Debug)]
+struct Lane {
+    tx: Sender<Job>,
+    rx: Receiver<Job>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// The persistent B2 worker pool.  `workers == 1` means no pool: the
+/// lanes stay empty and the caller walks serially.
+#[derive(Debug)]
+pub struct WalkPool {
+    workers: usize,
+    /// First slice of each worker's contiguous partition
+    /// (`starts[0] == 0`); near-equal split, remainder to the leading
+    /// workers, mirroring the shard partition.
+    starts: Vec<usize>,
+    lanes: Vec<Lane>,
+}
+
+impl WalkPool {
+    pub fn new(requested: usize, n_slices: usize) -> Self {
+        let workers = requested.max(1).min(n_slices.max(1));
+        let base = n_slices / workers;
+        let rem = n_slices % workers;
+        let mut starts = Vec::with_capacity(workers);
+        let mut at = 0;
+        for w in 0..workers {
+            starts.push(at);
+            at += base + usize::from(w < rem);
+        }
+        let lanes = if workers <= 1 {
+            Vec::new()
+        } else {
+            (0..workers)
+                .map(|w| {
+                    let (job_tx, job_rx) = channel::<Job>();
+                    let (done_tx, done_rx) = channel::<Job>();
+                    let handle = std::thread::Builder::new()
+                        .name(format!("ata-memwalk-{w}"))
+                        .spawn(move || {
+                            while let Ok(mut job) = job_rx.recv() {
+                                run_job(&mut job);
+                                if done_tx.send(job).is_err() {
+                                    break;
+                                }
+                            }
+                        })
+                        .expect("spawn memwalk worker");
+                    Lane {
+                        tx: job_tx,
+                        rx: done_rx,
+                        handle: Some(handle),
+                    }
+                })
+                .collect()
+        };
+        WalkPool {
+            workers,
+            starts,
+            lanes,
+        }
+    }
+
+    /// Effective worker count (requested, clamped to the slice count).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    fn worker_of(&self, slice: usize) -> usize {
+        self.starts.partition_point(|&s| s <= slice) - 1
+    }
+
+    /// Fan the epoch's descriptors out to the workers and merge the
+    /// results back in place.  `walks` is temporarily carved into the
+    /// per-worker partitions and is fully restored (same order, same
+    /// length) on return; `descs` entries are updated by global index.
+    pub(super) fn run(&mut self, walks: &mut Vec<SliceWalk>, descs: &mut [FetchDesc], l2_latency: u64) {
+        debug_assert_eq!(self.lanes.len(), self.workers);
+
+        // Partition the descriptors, preserving ascending global index
+        // within each worker.
+        let mut batches: Vec<(Vec<FetchDesc>, Vec<u32>)> = (0..self.workers)
+            .map(|_| (Vec::new(), Vec::new()))
+            .collect();
+        for (i, d) in descs.iter().enumerate() {
+            let w = self.worker_of(d.slice);
+            batches[w].0.push(*d);
+            batches[w].1.push(i as u32);
+        }
+
+        // Carve the slice units into contiguous per-worker segments
+        // (moved out — exclusive ownership, enforced by the move).
+        let mut segs: Vec<Vec<SliceWalk>> = Vec::with_capacity(self.workers);
+        for w in (1..self.workers).rev() {
+            segs.push(walks.split_off(self.starts[w]));
+        }
+        segs.push(std::mem::take(walks));
+        segs.reverse();
+
+        for (w, (units, (batch, idxs))) in segs.drain(..).zip(batches.drain(..)).enumerate() {
+            self.lanes[w]
+                .tx
+                .send(Job {
+                    units,
+                    first_slice: self.starts[w],
+                    descs: batch,
+                    idxs,
+                    l2_latency,
+                })
+                .expect("memwalk worker alive");
+        }
+
+        // Collect in worker order: slice units reassemble contiguously,
+        // descriptors scatter back by global index — deterministic
+        // regardless of which worker finished first.
+        for lane in &self.lanes {
+            let mut job = lane.rx.recv().expect("memwalk worker alive");
+            walks.append(&mut job.units);
+            for (d, i) in job.descs.iter().zip(&job.idxs) {
+                descs[*i as usize] = *d;
+            }
+        }
+    }
+}
+
+impl Drop for WalkPool {
+    fn drop(&mut self) {
+        for lane in self.lanes.drain(..) {
+            drop(lane.tx); // worker's recv() errors → clean exit
+            while lane.rx.recv().is_ok() {}
+            if let Some(h) = lane.handle {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partitions_are_contiguous_and_cover_all_slices() {
+        let p = WalkPool::new(1, 24);
+        assert_eq!(p.workers(), 1);
+        assert!(p.lanes.is_empty(), "serial pool spawns no threads");
+
+        let p = WalkPool::new(5, 24);
+        assert_eq!(p.workers(), 5);
+        assert_eq!(p.starts, vec![0, 5, 10, 15, 20]);
+        assert_eq!(p.lanes.len(), 5);
+        for s in 0..24 {
+            let w = p.worker_of(s);
+            assert!(p.starts[w] <= s);
+            assert!(w + 1 >= p.starts.len() || s < p.starts[w + 1]);
+        }
+    }
+
+    #[test]
+    fn worker_count_clamps_to_slice_count() {
+        assert_eq!(WalkPool::new(64, 4).workers(), 4);
+        assert_eq!(WalkPool::new(0, 4).workers(), 1);
+    }
+}

@@ -71,7 +71,7 @@ fn print_usage() {
   contention [--apps x,y,.. | --app <name>] [--archs a,b,..] [--scale F]
             [--seed N] [--out FILE]
   bench     [--app <name>] [--scale F] [--seed N] [--threads N] [--shards N]
-            [--out FILE=BENCH_pr8.json]
+            [--mem-workers N] [--out FILE=BENCH_pr9.json]
   export-trace --app <name> [--scale F] --out FILE
   sweep     [--archs a,b,..] [--apps x,y,..] [--scale F] [--threads N] [--out FILE]
   cosched   [--archs a,b,..] [--apps x,y,..] [--scale F] [--threads N]
@@ -95,7 +95,13 @@ A/B grid always runs both modes.
 host cores; clamped to the cluster count).  Defaults to 1, the
 sequential loop — sharding is opt-in until its barrier cost is
 measured.  Results are byte-identical at any shard count.  `bench`
-uses it as the shard count of its shards-{1,N} A/B pair."
+uses it as the shard count of its shards-{1,N} A/B pair.
+--mem-workers N overrides engine.mem_workers (slice-parallel memory
+walk: per-L2-slice fetch resolution fans out across N persistent
+worker threads; clamped to the slice count).  Defaults to 1, the
+serial walk — like --shards it is opt-in.  Results are byte-identical
+at any worker count and compose with --shards.  `bench` uses it as
+the worker count of its mem-workers-{1,N} A/B pair."
     );
 }
 
@@ -110,6 +116,7 @@ fn parse_cfg(args: &Args, arch: L1ArchKind) -> GpuConfig {
     residency_override(args, &mut cfg);
     event_driven_override(args, &mut cfg);
     shards_override(args, &mut cfg);
+    mem_workers_override(args, &mut cfg);
     cfg
 }
 
@@ -150,6 +157,18 @@ fn event_driven_override(args: &Args, cfg: &mut GpuConfig) {
 fn shards_override(args: &Args, cfg: &mut GpuConfig) {
     if args.get("shards").is_some() {
         cfg.engine.shards = args.get_shards().unwrap();
+    }
+}
+
+/// Apply the global `--mem-workers N` override to a config — the
+/// fourth knob in the host-strategy family, with the same call-site
+/// contract as [`shards_override`]: only set when the option is
+/// present so a `--config` file's `engine.mem_workers` survives an
+/// override-free invocation; `bench` skips it for the base grid but
+/// honours it for the mem-workers variant's N.
+fn mem_workers_override(args: &Args, cfg: &mut GpuConfig) {
+    if args.get("mem-workers").is_some() {
+        cfg.engine.mem_workers = args.get_mem_workers().unwrap();
     }
 }
 
@@ -415,17 +434,20 @@ fn cmd_contention(args: &Args) -> i32 {
     0
 }
 
-/// Perf-trajectory baseline (`BENCH_pr8.json`): run one pinned, seeded
-/// workload on every registered L1 organization **four times** — the
+/// Perf-trajectory baseline (`BENCH_pr9.json`): run one pinned, seeded
+/// workload on every registered L1 organization **five times** — the
 /// full-speed engine, the cycle-by-cycle reference (`event_driven`
-/// off), the residency scan path (`residency_index` off), and the
-/// cluster-sharded loop (`engine.shards` = N, default 2), each a
-/// [`ConfigVariant`] ablation axis — and report wall seconds, simulated
-/// cycles per host second, IPC, and three per-org speedups: the
-/// event-driven speedup (reference s / event s), the carried-forward
-/// residency-index speedup, and the new shard speedup (unsharded s /
-/// sharded s).  All three A/B pairs must produce byte-identical
-/// simulated metrics (the determinism contract); any drift exits 1.
+/// off), the residency scan path (`residency_index` off), the
+/// cluster-sharded loop (`engine.shards` = N, default 2), and the
+/// slice-parallel memory walk (`engine.mem_workers` = N, default 2),
+/// each a [`ConfigVariant`] ablation axis — and report wall seconds,
+/// simulated cycles per host second, IPC, and four per-org speedups:
+/// the event-driven speedup (reference s / event s), the
+/// carried-forward residency-index speedup, the shard speedup
+/// (unsharded s / sharded s), and the new memory-walk speedup
+/// (serial-walk s / fanned-out s).  All four A/B pairs must produce
+/// byte-identical simulated metrics (the determinism contract); any
+/// drift exits 1.
 /// Also reports the serial-vs-parallel wall-clock speedup of a
 /// co-scheduling grid, proving the [`JobRunner`] both helps and stays
 /// deterministic.  Future PRs compare against this file to catch
@@ -437,12 +459,14 @@ fn cmd_bench(args: &Args) -> i32 {
         eprintln!("unknown app '{app_name}' (see `ata-sim list`)");
         return 2;
     };
-    let out_path = args.get_or("out", "BENCH_pr8.json").to_string();
+    let out_path = args.get_or("out", "BENCH_pr9.json").to_string();
     let seed = args.get_u64("seed", GpuConfig::default().seed).unwrap();
     let threads = args.get_threads().unwrap();
     // The B side of the shards-{1,N} pair; `--shards 1` (or absent)
     // still benches against 2 so the pair is never degenerate.
     let shards = args.get_shards().unwrap().max(2);
+    // Same rule for the mem-workers-{1,N} pair.
+    let mem_workers = args.get_mem_workers().unwrap().max(2);
     if args.get("residency").is_some() {
         eprintln!("note: bench ignores --residency — its A/B grid always runs both modes");
     }
@@ -450,13 +474,14 @@ fn cmd_bench(args: &Args) -> i32 {
         eprintln!("note: bench ignores --event-driven — its A/B grid always runs both modes");
     }
 
-    // Engine-clock + residency + sharding A/B: the registry as a
-    // one-app scenario grid with a four-way variant axis.  EV_ON is the
-    // production configuration and the baseline every speedup is
-    // measured against; EV_OFF ablates only the event-driven clock
-    // (cycle-by-cycle reference), RES_OFF ablates only the residency
-    // index, and SHARD turns only the cluster-sharded loop on.  Jobs
-    // materialize variant-major, so the results come back as four
+    // Engine-clock + residency + sharding + memory-walk A/B: the
+    // registry as a one-app scenario grid with a five-way variant axis.
+    // EV_ON is the production configuration and the baseline every
+    // speedup is measured against; EV_OFF ablates only the
+    // event-driven clock (cycle-by-cycle reference), RES_OFF ablates
+    // only the residency index, SHARD turns only the cluster-sharded
+    // loop on, and MEMW turns only the slice-parallel memory walk on.
+    // Jobs materialize variant-major, so the results come back as five
     // registry-ordered chunks of `n_orgs`.
     const EV_ON: ConfigVariant = ConfigVariant {
         name: "event-on",
@@ -487,6 +512,14 @@ fn cmd_bench(args: &Args) -> i32 {
             c.engine.shards = 2;
         },
     };
+    const MEMW: ConfigVariant = ConfigVariant {
+        name: "mem-workers",
+        apply: |c| {
+            c.engine.event_driven = true;
+            c.sharing.residency_index = true;
+            c.engine.mem_workers = 2;
+        },
+    };
     let mut base_cfg = GpuConfig::paper(L1ArchKind::Private);
     base_cfg.seed = seed;
     let grid = ScenarioGrid::new(
@@ -495,14 +528,18 @@ fn cmd_bench(args: &Args) -> i32 {
         vec![app.clone()],
         scale,
     )
-    .with_variants(vec![EV_ON, EV_OFF, RES_OFF, SHARD]);
+    .with_variants(vec![EV_ON, EV_OFF, RES_OFF, SHARD, MEMW]);
     let n_orgs = ata_cache::l1arch::REGISTRY.len();
     let mut jobs = grid.jobs();
-    // `apply` is a plain fn pointer, so the user's `--shards N` cannot
-    // be captured in the SHARD variant; patch the materialized chunk
-    // (the last `n_orgs` jobs, variant-major order) instead.
-    for job in jobs.iter_mut().skip(3 * n_orgs) {
+    // `apply` is a plain fn pointer, so the user's `--shards N` /
+    // `--mem-workers N` cannot be captured in the SHARD / MEMW
+    // variants; patch the materialized chunks (variant-major order:
+    // chunk 3 is SHARD, chunk 4 is MEMW) instead.
+    for job in jobs.iter_mut().skip(3 * n_orgs).take(n_orgs) {
         job.cfg.engine.shards = shards;
+    }
+    for job in jobs.iter_mut().skip(4 * n_orgs) {
+        job.cfg.engine.mem_workers = mem_workers;
     }
     // The A/B grid runs on ONE worker: per-job `host_seconds` is the
     // timing signal here, and concurrent jobs on a shared pool would
@@ -518,15 +555,16 @@ fn cmd_bench(args: &Args) -> i32 {
         .collect();
     let (on_chunk, rest) = results.split_at(n_orgs);
     let (ref_chunk, rest) = rest.split_at(n_orgs);
-    let (scan_chunk, shard_chunk) = rest.split_at(n_orgs);
+    let (scan_chunk, rest) = rest.split_at(n_orgs);
+    let (shard_chunk, memw_chunk) = rest.split_at(n_orgs);
 
     let mut t = Table::new(&format!(
-        "perf baseline — {app_name} @ scale {scale}, seed {seed:#x}, {shards} shards \
-         (A/B timed serially)"
+        "perf baseline — {app_name} @ scale {scale}, seed {seed:#x}, {shards} shards, \
+         {mem_workers} mem workers (A/B timed serially)"
     ))
     .header(&[
-        "arch", "cycles", "insts", "IPC", "ev s", "ref s", "scan s", "shrd s", "Mcyc/s", "ev x",
-        "idx x", "sh x",
+        "arch", "cycles", "insts", "IPC", "ev s", "ref s", "scan s", "shrd s", "memw s",
+        "Mcyc/s", "ev x", "idx x", "sh x", "mw x",
     ]);
     let mut chart = BarChart::new("event-driven speedup per organization (ref s / ev s)");
     let mut rows = Vec::new();
@@ -534,9 +572,14 @@ fn cmd_bench(args: &Args) -> i32 {
     let mut ev_identical = true;
     let mut res_identical = true;
     let mut sh_identical = true;
+    let mut mw_identical = true;
     let registry = ata_cache::l1arch::REGISTRY.iter();
-    for ((((spec, on), reference), scan), sharded) in
-        registry.zip(on_chunk).zip(ref_chunk).zip(scan_chunk).zip(shard_chunk)
+    for (((((spec, on), reference), scan), sharded), memwalk) in registry
+        .zip(on_chunk)
+        .zip(ref_chunk)
+        .zip(scan_chunk)
+        .zip(shard_chunk)
+        .zip(memw_chunk)
     {
         totals.absorb_sim(on);
         // The referees: identical simulated metrics against every
@@ -546,9 +589,11 @@ fn cmd_bench(args: &Args) -> i32 {
         let identical = on_json == reference.to_json().pretty();
         let r_identical = on_json == scan.to_json().pretty();
         let s_identical = on_json == sharded.to_json().pretty();
+        let m_identical = on_json == memwalk.to_json().pretty();
         ev_identical &= identical;
         res_identical &= r_identical;
         sh_identical &= s_identical;
+        mw_identical &= m_identical;
         let thru = sim_throughput(on.cycles, on.host_seconds);
         let ratio = |ablated: f64| {
             if on.host_seconds > 0.0 {
@@ -559,11 +604,17 @@ fn cmd_bench(args: &Args) -> i32 {
         };
         let speedup = ratio(reference.host_seconds);
         let res_speedup = ratio(scan.host_seconds);
-        // The sharded run is the candidate, not the ablation: its
-        // speedup is baseline-over-sharded (> 1 means sharding paid
-        // for its barriers on this host and workload).
+        // The sharded and memory-walk runs are candidates, not
+        // ablations: their speedups are baseline-over-candidate (> 1
+        // means the knob paid for its synchronization on this host and
+        // workload).
         let shard_speedup = if sharded.host_seconds > 0.0 {
             on.host_seconds / sharded.host_seconds
+        } else {
+            0.0
+        };
+        let memwalk_speedup = if memwalk.host_seconds > 0.0 {
+            on.host_seconds / memwalk.host_seconds
         } else {
             0.0
         };
@@ -576,10 +627,12 @@ fn cmd_bench(args: &Args) -> i32 {
             format!("{:.3}", reference.host_seconds),
             format!("{:.3}", scan.host_seconds),
             format!("{:.3}", sharded.host_seconds),
+            format!("{:.3}", memwalk.host_seconds),
             format!("{:.2}", thru / 1e6),
             format!("{speedup:.2}x"),
             format!("{res_speedup:.2}x"),
             format!("{shard_speedup:.2}x"),
+            format!("{memwalk_speedup:.2}x"),
         ]);
         chart.bar(spec.name, speedup);
         rows.push(Json::obj(vec![
@@ -602,6 +655,9 @@ fn cmd_bench(args: &Args) -> i32 {
             ("residency_identical", r_identical.into()),
             ("shard_speedup", shard_speedup.into()),
             ("shard_identical", s_identical.into()),
+            ("host_seconds_memwalk", memwalk.host_seconds.into()),
+            ("memwalk_speedup", memwalk_speedup.into()),
+            ("memwalk_identical", m_identical.into()),
         ]));
     }
     println!("{}", t.render());
@@ -609,6 +665,7 @@ fn cmd_bench(args: &Args) -> i32 {
     println!("event-driven vs reference metrics byte-identical: {ev_identical}");
     println!("index-on vs scan metrics byte-identical: {res_identical}");
     println!("{shards}-shard vs unsharded metrics byte-identical: {sh_identical}");
+    println!("{mem_workers}-worker walk vs serial walk metrics byte-identical: {mw_identical}");
 
     // Serial-vs-parallel wall clock on a co-scheduling grid (the N²
     // surface the execution layer exists for), with the byte-identity
@@ -640,16 +697,18 @@ fn cmd_bench(args: &Args) -> i32 {
     );
 
     let json = Json::obj(vec![
-        ("bench", "pr8".into()),
+        ("bench", "pr9".into()),
         ("app", app_name.as_str().into()),
         ("scale", scale.into()),
         ("seed", seed.into()),
         ("threads", threads.into()),
         ("shards", shards.into()),
+        ("mem_workers", mem_workers.into()),
         ("orgs", Json::arr(rows)),
         ("event_driven_ab_identical", ev_identical.into()),
         ("residency_ab_identical", res_identical.into()),
         ("shard_ab_identical", sh_identical.into()),
+        ("memwalk_ab_identical", mw_identical.into()),
         ("totals", totals.to_json()),
         ("cosched_speedup", speedup.to_json()),
     ]);
@@ -667,6 +726,10 @@ fn cmd_bench(args: &Args) -> i32 {
         eprintln!("error: sharded run drifted from the unsharded engine");
         return 1;
     }
+    if !mw_identical {
+        eprintln!("error: slice-parallel walk drifted from the serial walk");
+        return 1;
+    }
     if !speedup.identical {
         eprintln!("error: parallel cosched output drifted from the serial run");
         return 1;
@@ -681,6 +744,7 @@ fn cmd_cosched(args: &Args) -> i32 {
     residency_override(args, &mut sweep.cfg);
     event_driven_override(args, &mut sweep.cfg);
     shards_override(args, &mut sweep.cfg);
+    mem_workers_override(args, &mut sweep.cfg);
     let arch_list = args.get_list("archs");
     if !arch_list.is_empty() {
         sweep.archs = arch_list
@@ -735,6 +799,7 @@ fn sweep_from_args(args: &Args) -> Sweep {
     residency_override(args, &mut sweep.cfg);
     event_driven_override(args, &mut sweep.cfg);
     shards_override(args, &mut sweep.cfg);
+    mem_workers_override(args, &mut sweep.cfg);
     let arch_list = args.get_list("archs");
     if !arch_list.is_empty() {
         sweep.archs = arch_list

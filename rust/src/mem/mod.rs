@@ -78,6 +78,43 @@ pub struct HopTimes {
     pub done: u64,
 }
 
+/// How a deferred completion returns the data to the requesting core
+/// once the phased memory walk finalizes it (phase B3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RetPath {
+    /// Complete directly at the owning core.
+    Local,
+    /// Data crosses back over the cluster crossbar first
+    /// (decoupled-sharing home-slice accesses).
+    Xbar {
+        cluster: usize,
+        from_idx: usize,
+        to_idx: usize,
+    },
+}
+
+/// A completion the L1 organization postponed into the phased memory
+/// walk: the front-end pass (B1) resolved everything cross-slice and
+/// recorded what phase B3 needs to close the transaction once the
+/// per-slice walk has produced the fill timing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Deferred {
+    /// A miss dispatched to L2: `desc` indexes the fetch descriptor in
+    /// [`crate::l2::MemSystem`], `owner` is the L1 cache the fill lands
+    /// in, `dispatch` the MSHR-dispatch cycle, `victim` the dirty line
+    /// the B1 tag install evicted (written back at fill time).
+    Fetch {
+        owner: usize,
+        desc: usize,
+        dispatch: u64,
+        victim: Option<crate::cache::Eviction>,
+        ret: RetPath,
+    },
+    /// A merge onto a fetch scheduled earlier in the same epoch: the
+    /// ready cycle is only known after the owner's fetch finalizes.
+    Merge { owner: usize, t: u64, ret: RetPath },
+}
+
 /// One memory request's transaction through the hierarchy.
 ///
 /// Constructed once by the engine (or a test harness) and carried by
@@ -104,6 +141,9 @@ pub struct MemTxn {
     pub hops: HopTimes,
     /// Grant queueing accumulated along the walk, per resource class.
     pub queued: ContentionBreakdown,
+    /// Set when the L1 organization deferred completion into the phased
+    /// memory walk; consumed by [`crate::l1arch::L1Arch::finish`].
+    pub deferred: Option<Deferred>,
 }
 
 impl MemTxn {
@@ -122,6 +162,7 @@ impl MemTxn {
                 ..HopTimes::default()
             },
             queued: ContentionBreakdown::default(),
+            deferred: None,
         }
     }
 

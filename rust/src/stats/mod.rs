@@ -449,6 +449,15 @@ pub struct ShardStats {
     /// Completion wake-ups routed back through per-shard ingress FIFOs
     /// and drained in shard-major order at the barrier.
     pub ingress_wakes: u64,
+    /// Host nanoseconds the coordinator spent in the parallel tick phase
+    /// (phase 1, barrier to barrier) across all epochs.  Together with
+    /// `walk_ns` this splits each epoch's wall time into the part
+    /// `--shards` parallelizes and the part `--mem-workers` attacks.
+    pub tick_ns: u64,
+    /// Host nanoseconds the coordinator spent in the memory-walk phase
+    /// (phase 2: B1 front end, per-slice walk, B3 finish) across all
+    /// epochs — the Amdahl term the slice-parallel walk shrinks.
+    pub walk_ns: u64,
 }
 
 impl ShardStats {
@@ -458,6 +467,8 @@ impl ShardStats {
             ("epochs", self.epochs.into()),
             ("egress_txns", self.egress_txns.into()),
             ("ingress_wakes", self.ingress_wakes.into()),
+            ("tick_ns", self.tick_ns.into()),
+            ("walk_ns", self.walk_ns.into()),
         ])
     }
 }
@@ -1263,10 +1274,14 @@ mod tests {
             epochs: 1000,
             egress_txns: 42,
             ingress_wakes: 17,
+            tick_ns: 5_000,
+            walk_ns: 12_000,
         };
         let j = Json::parse(&s.to_json().to_string()).unwrap();
         assert_eq!(j.get("shard_count").unwrap().as_u64(), Some(3));
         assert_eq!(j.get("ingress_wakes").unwrap().as_u64(), Some(17));
+        assert_eq!(j.get("tick_ns").unwrap().as_u64(), Some(5_000));
+        assert_eq!(j.get("walk_ns").unwrap().as_u64(), Some(12_000));
         // The determinism contract: result JSON must not carry shard
         // telemetry (it is zero for unsharded runs and nonzero otherwise).
         let r = SimResult::default().to_json().to_string();

@@ -152,6 +152,52 @@ pub fn cross_shard_scenario(arch: L1ArchKind) -> (GpuConfig, Workload) {
     (cfg, wl)
 }
 
+/// A deterministic slice-skew scenario for the slice-parallel memory
+/// walk's differential referee (`rust/tests/memwalk_determinism.rs`):
+/// every load in the workload is chosen (by sieving the hashed slice
+/// decode) to land on L2 slice 0, and every block is streamed twice.
+/// With `engine.mem_workers > 1` this is the worst partition the walk
+/// pool can face — one worker owns the hammered slice and every fetch
+/// descriptor while its siblings idle — and the second pass piles
+/// same-epoch re-reads on top (L2 in-flight merges and L1 deferred
+/// merges against fetches resolved earlier in the same canonical
+/// order).  If descriptor scatter, canonical-order merge, or the DRAM
+/// sub-phase ever depended on which worker walked a slice, this shape
+/// breaks first.  The consuming test asserts byte-identity against the
+/// serial walk; the self-test below pins the skew property itself.
+pub fn slice_skew_scenario(arch: L1ArchKind) -> (GpuConfig, Workload) {
+    let mut cfg = GpuConfig::tiny(arch);
+    cfg.dram.controllers = 1;
+    cfg.dram.queue_depth = 4;
+    let slices = cfg.l2.slices;
+    let warps = 4usize;
+    let lines_per_warp = 24usize;
+    // Sieve the line space for addresses hashing to slice 0; each warp
+    // takes the next run of them, so no two warps share a line but all
+    // funnel into the same slice's tag array, port, and walk worker.
+    let mut skewed = (0u64..).filter(|&l| crate::mem::decode::l2_slice(l, slices) == 0);
+    let programs = (0..cfg.cores)
+        .map(|_| {
+            (0..warps)
+                .map(|_| {
+                    let block: Vec<u64> = skewed.by_ref().take(lines_per_warp).collect();
+                    let insts = block
+                        .iter()
+                        .chain(block.iter())
+                        .map(|&line| WarpInst::Load(vec![(line, 0b1111)]))
+                        .collect();
+                    WarpProgram::new(insts)
+                })
+                .collect()
+        })
+        .collect();
+    let wl = Workload {
+        name: "slice-skew".into(),
+        kernels: vec![KernelSpec { name: "one-slice-storm".into(), programs }],
+    };
+    (cfg, wl)
+}
+
 /// A reusable random-value generator.
 pub struct Gen<T> {
     f: Box<dyn Fn(&mut Pcg32) -> T>,
@@ -310,5 +356,40 @@ mod tests {
         let r_off = eng_off.run(&wl);
         assert_eq!(r.to_json().pretty(), r_off.to_json().pretty());
         assert_eq!(eng_off.event_stats().skipped(), 0);
+    }
+
+    /// The skew property the memory-walk referee relies on: every load
+    /// in the scenario really decodes to L2 slice 0, no two warps share
+    /// a line (the second pass re-reads are intra-warp only), and the
+    /// workload is non-trivial.
+    #[test]
+    fn slice_skew_scenario_hammers_exactly_one_slice() {
+        let (cfg, wl) = slice_skew_scenario(L1ArchKind::Ata);
+        let mut lines = Vec::new();
+        for kernel in &wl.kernels {
+            for programs in &kernel.programs {
+                for prog in programs {
+                    let mut own = std::collections::BTreeSet::new();
+                    for inst in prog.insts() {
+                        if let WarpInst::Load(reqs) = inst {
+                            for &(line, _) in reqs {
+                                assert_eq!(
+                                    crate::mem::decode::l2_slice(line, cfg.l2.slices),
+                                    0,
+                                    "line {line} escaped the hammered slice"
+                                );
+                                own.insert(line);
+                            }
+                        }
+                    }
+                    lines.push(own);
+                }
+            }
+        }
+        let total: usize = lines.iter().map(|s| s.len()).sum();
+        let distinct: std::collections::BTreeSet<u64> =
+            lines.iter().flatten().copied().collect();
+        assert_eq!(distinct.len(), total, "warps must not share lines");
+        assert!(total >= 256, "scenario too small to stress the walk: {total}");
     }
 }

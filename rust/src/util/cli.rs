@@ -124,6 +124,14 @@ impl Args {
         self.pool_size("shards", 1)
     }
 
+    /// The `--mem-workers N` option (phase-B2 slice-walk workers).
+    /// Defaults to 1 — the serial walk — mirroring `--shards`; the walk
+    /// pool clamps over-provisioning to the L2 slice count and `0` is
+    /// rejected by `GpuConfig::validate`.
+    pub fn get_mem_workers(&self) -> Result<usize, CliError> {
+        self.pool_size("mem-workers", 1)
+    }
+
     pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, CliError> {
         match self.get(name) {
             None => Ok(default),
@@ -212,6 +220,17 @@ mod tests {
         assert!(b.get("shards").is_none(), "absence is distinguishable");
         let c = parse(&["run", "--shards", "two"]);
         assert!(c.get_shards().is_err(), "same error path as --threads");
+    }
+
+    #[test]
+    fn mem_workers_option_defaults_to_serial() {
+        let a = parse(&["run", "--mem-workers", "4"]);
+        assert_eq!(a.get_mem_workers().unwrap(), 4);
+        let b = parse(&["run"]);
+        assert_eq!(b.get_mem_workers().unwrap(), 1, "parallel walk is opt-in");
+        assert!(b.get("mem-workers").is_none(), "absence is distinguishable");
+        let c = parse(&["run", "--mem-workers", "two"]);
+        assert!(c.get_mem_workers().is_err(), "same error path as --threads");
     }
 
     #[test]

@@ -190,6 +190,13 @@ fn thread_use_allowed_in_execution_layer_and_shard_module() {
     let src = "use std::thread;\nfn pool() { thread::scope(|s| { s.spawn(|| {}); }); }\n";
     assert!(lint_one("rust/src/exec/runner.rs", src).is_clean());
     assert!(lint_one("rust/src/engine/shard.rs", src).is_clean());
+    // The L2 walk pool (PR 9's slice-parallel B2 fan-out) is the third
+    // allowed zone — but only that exact file, not the rest of l2/.
+    assert!(lint_one("rust/src/l2/walk.rs", src).is_clean());
+    assert_eq!(
+        slugs(&lint_one("rust/src/l2/mod.rs", "fn f() { std::thread::yield_now(); }\n")),
+        vec!["shard-confinement"]
+    );
     // Prose, strings, and thread-ish identifiers are not threading.
     let benign = "//! One thread per shard.\nfn f(threads: usize) { log(\"std::thread\"); let thread_pool_size = threads; }\n";
     assert!(lint_one("rust/src/engine/mod.rs", benign).is_clean());
