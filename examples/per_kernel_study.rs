@@ -19,7 +19,7 @@ use ata_cache::util::table::Table;
 fn run(app: &str, arch: L1ArchKind, scale: f64) -> SimResult {
     let cfg = GpuConfig::paper(arch);
     let wl = apps::app(app).unwrap().scaled(scale).workload(&cfg);
-    Engine::new(&cfg).run(&wl)
+    Engine::new(&cfg).run(&wl).unwrap()
 }
 
 fn main() {

@@ -18,11 +18,11 @@ fn main() {
     // 2. Simulate under the conventional private L1 (Table II GPU).
     let cfg_private = GpuConfig::paper(L1ArchKind::Private);
     let wl = app.scaled(0.5).workload(&cfg_private);
-    let base = Engine::new(&cfg_private).run(&wl);
+    let base = Engine::new(&cfg_private).run(&wl).unwrap();
 
     // 3. Same workload on ATA-Cache.
     let cfg_ata = GpuConfig::paper(L1ArchKind::Ata);
-    let ata = Engine::new(&cfg_ata).run(&wl);
+    let ata = Engine::new(&cfg_ata).run(&wl).unwrap();
 
     // 4. Compare.
     println!("\n{:<26} {:>12} {:>12}", "", "private", "ata-cache");

@@ -17,7 +17,7 @@ use ata_cache::util::table::Table;
 
 fn run(cfg: &GpuConfig, app: &str, scale: f64) -> ata_cache::stats::SimResult {
     let wl = apps::app(app).unwrap().scaled(scale).workload(cfg);
-    Engine::new(cfg).run(&wl)
+    Engine::new(cfg).run(&wl).unwrap()
 }
 
 fn main() {

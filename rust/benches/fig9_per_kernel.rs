@@ -45,6 +45,7 @@ fn main() {
             .into_iter()
             .map(JobOutput::into_solo)
             .collect(),
+        ..Default::default()
     };
 
     for (app, note) in cases {

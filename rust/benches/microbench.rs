@@ -188,10 +188,10 @@ fn main() {
         let app = apps::app("cfd").unwrap().scaled(if quick { 0.25 } else { 0.5 });
         let wl = app.workload(&cfg);
         let timing = measure(1, 3, || {
-            let r = Engine::new(&cfg).run(&wl);
+            let r = Engine::new(&cfg).run(&wl).unwrap();
             std::hint::black_box(r.cycles);
         });
-        let r = Engine::new(&cfg).run(&wl);
+        let r = Engine::new(&cfg).run(&wl).unwrap();
         println!(
             "engine throughput (cfd/ata): {:.2}M simulated cycles/s, {:.2}M requests/s",
             sim_throughput(r.cycles, timing.mean_s) / 1e6,
@@ -208,15 +208,15 @@ fn main() {
         let mut cfg_off = cfg_on.clone();
         cfg_off.engine.event_driven = false;
         let t_on = measure(1, 3, || {
-            let r = Engine::new(&cfg_on).run(&wl);
+            let r = Engine::new(&cfg_on).run(&wl).unwrap();
             std::hint::black_box(r.cycles);
         });
         let t_off = measure(1, 3, || {
-            let r = Engine::new(&cfg_off).run(&wl);
+            let r = Engine::new(&cfg_off).run(&wl).unwrap();
             std::hint::black_box(r.cycles);
         });
         let mut eng = Engine::new(&cfg_on);
-        let cycles = eng.run(&wl).cycles;
+        let cycles = eng.run(&wl).unwrap().cycles;
         let ev = eng.event_stats();
         println!(
             "engine clock A/B (stall-heavy/ata): event {:.2}M cyc/s vs reference {:.2}M cyc/s \

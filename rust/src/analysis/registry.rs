@@ -31,12 +31,17 @@ pub enum RuleId {
     /// module, and the L2 walk pool — simulation code must stay
     /// single-threaded-deterministic.
     ShardConfinement,
+    /// No `panic!`/`.unwrap()`/`.expect(` in simulation-core non-test
+    /// code: a poisoned job must surface as a typed `SimError`, never
+    /// an unwind (`catch_unwind` is the containment backstop, not the
+    /// failure path).
+    SimPanic,
     /// Suppression comments must be justified and name a real rule.
     SuppressionJustification,
 }
 
 impl RuleId {
-    pub const ALL: [RuleId; 8] = [
+    pub const ALL: [RuleId; 9] = [
         RuleId::ManifestDecl,
         RuleId::WallClock,
         RuleId::UnorderedIterSerialize,
@@ -44,6 +49,7 @@ impl RuleId {
         RuleId::TagMutationHelper,
         RuleId::StatsExclusion,
         RuleId::ShardConfinement,
+        RuleId::SimPanic,
         RuleId::SuppressionJustification,
     ];
 
@@ -56,6 +62,7 @@ impl RuleId {
             RuleId::TagMutationHelper => "tag-mutation-helper",
             RuleId::StatsExclusion => "stats-exclusion",
             RuleId::ShardConfinement => "shard-confinement",
+            RuleId::SimPanic => "sim-panic",
             RuleId::SuppressionJustification => "suppression-justification",
         }
     }
@@ -90,17 +97,22 @@ pub struct RuleSpec {
     pub allow_files: &'static [&'static str],
     /// Repo-relative directory prefixes the rule never applies to.
     pub allow_dirs: &'static [&'static str],
+    /// Positive scope: when non-empty, the rule applies *only* under
+    /// these directory prefixes (then the allow-lists carve exemptions
+    /// out of that).  Empty means repo-wide.
+    pub only_dirs: &'static [&'static str],
     /// Skip `#[cfg(test)] mod` regions inside checked files.
     pub skip_tests: bool,
 }
 
-pub const REGISTRY: [RuleSpec; 8] = [
+pub const REGISTRY: [RuleSpec; 9] = [
     RuleSpec {
         id: RuleId::ManifestDecl,
         severity: Severity::Error,
         description: "test/bench/example file has no Cargo.toml stanza (its harness silently never runs)",
         allow_files: &[],
         allow_dirs: &[],
+        only_dirs: &[],
         skip_tests: false,
     },
     RuleSpec {
@@ -109,6 +121,7 @@ pub const REGISTRY: [RuleSpec; 8] = [
         description: "std::time::{Instant,SystemTime} outside host-telemetry sites (wall clock in a result path breaks byte-identity)",
         allow_files: &["rust/src/bench_harness.rs"],
         allow_dirs: &["rust/benches/"],
+        only_dirs: &[],
         skip_tests: false,
     },
     RuleSpec {
@@ -117,6 +130,7 @@ pub const REGISTRY: [RuleSpec; 8] = [
         description: "unordered map/set iterated inside a to_json body without a sort (output order is hash-dependent)",
         allow_files: &[],
         allow_dirs: &[],
+        only_dirs: &[],
         skip_tests: false,
     },
     RuleSpec {
@@ -125,6 +139,7 @@ pub const REGISTRY: [RuleSpec; 8] = [
         description: "reservation Grant dropped or its .queued never read (queued cycles would go uncharged)",
         allow_files: &[],
         allow_dirs: &["rust/tests/", "rust/benches/"],
+        only_dirs: &[],
         skip_tests: true,
     },
     RuleSpec {
@@ -137,6 +152,7 @@ pub const REGISTRY: [RuleSpec; 8] = [
             "rust/src/cache/tag_array.rs",
         ],
         allow_dirs: &["rust/tests/", "rust/benches/"],
+        only_dirs: &[],
         skip_tests: true,
     },
     RuleSpec {
@@ -145,6 +161,7 @@ pub const REGISTRY: [RuleSpec; 8] = [
         description: "host-telemetry stats field serialized in a to_json body (telemetry must stay out of result JSON)",
         allow_files: &[],
         allow_dirs: &[],
+        only_dirs: &[],
         skip_tests: false,
     },
     RuleSpec {
@@ -153,6 +170,21 @@ pub const REGISTRY: [RuleSpec; 8] = [
         description: "std::thread outside the execution layer or the shard/walk modules (ad-hoc threading breaks the determinism contract)",
         allow_files: &["rust/src/engine/shard.rs", "rust/src/l2/walk.rs"],
         allow_dirs: &["rust/src/exec/", "rust/tests/", "rust/benches/"],
+        only_dirs: &[],
+        skip_tests: true,
+    },
+    RuleSpec {
+        id: RuleId::SimPanic,
+        severity: Severity::Error,
+        description: "panic!/.unwrap()/.expect( in simulation-core non-test code (faults must surface as typed SimError, not an unwind)",
+        allow_files: &[],
+        allow_dirs: &["rust/tests/", "rust/benches/"],
+        only_dirs: &[
+            "rust/src/engine/",
+            "rust/src/l2/",
+            "rust/src/l1arch/",
+            "rust/src/dram/",
+        ],
         skip_tests: true,
     },
     RuleSpec {
@@ -161,6 +193,7 @@ pub const REGISTRY: [RuleSpec; 8] = [
         description: "lint suppression without a justification, or naming an unknown rule",
         allow_files: &[],
         allow_dirs: &[],
+        only_dirs: &[],
         skip_tests: false,
     },
 ];
@@ -176,6 +209,9 @@ pub fn spec(id: RuleId) -> &'static RuleSpec {
 /// Does `rule` apply to the file at repo-relative `path`?
 pub fn applies(rule: RuleId, path: &str) -> bool {
     let s = spec(rule);
+    if !s.only_dirs.is_empty() && !s.only_dirs.iter().any(|d| path.starts_with(d)) {
+        return false;
+    }
     !(s.allow_files.contains(&path) || s.allow_dirs.iter().any(|d| path.starts_with(d)))
 }
 
@@ -208,5 +244,14 @@ mod tests {
         assert!(applies(RuleId::ShardConfinement, "rust/src/engine/mod.rs"));
         assert!(applies(RuleId::ShardConfinement, "rust/src/l2/mod.rs"));
         assert!(applies(RuleId::ShardConfinement, "examples/arch_explorer.rs"));
+        // sim-panic is positively scoped to the simulation core.
+        assert!(applies(RuleId::SimPanic, "rust/src/engine/mod.rs"));
+        assert!(applies(RuleId::SimPanic, "rust/src/l2/walk.rs"));
+        assert!(applies(RuleId::SimPanic, "rust/src/l1arch/pipeline.rs"));
+        assert!(applies(RuleId::SimPanic, "rust/src/dram/mod.rs"));
+        assert!(!applies(RuleId::SimPanic, "rust/src/exec/runner.rs"));
+        assert!(!applies(RuleId::SimPanic, "rust/src/main.rs"));
+        assert!(!applies(RuleId::SimPanic, "rust/tests/failure_determinism.rs"));
+        assert!(!applies(RuleId::SimPanic, "examples/quickstart.rs"));
     }
 }

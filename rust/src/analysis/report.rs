@@ -128,7 +128,7 @@ mod tests {
         assert_eq!(r.findings[0].file, "a.rs");
         let j = r.to_json();
         assert_eq!(j.get("findings").unwrap().as_arr().unwrap().len(), 2);
-        assert_eq!(j.get("rules_checked").unwrap().as_arr().unwrap().len(), 7);
+        assert_eq!(j.get("rules_checked").unwrap().as_arr().unwrap().len(), RuleId::ALL.len());
         assert_eq!(j.get("clean").unwrap().as_bool(), Some(false));
         let f0 = &j.get("findings").unwrap().as_arr().unwrap()[0];
         assert_eq!(f0.get("rule").unwrap().as_str(), Some("grant-discipline"));

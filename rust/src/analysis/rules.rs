@@ -1,4 +1,4 @@
-//! The seven contract rules, applied to scrubbed sources.
+//! The contract rules, applied to scrubbed sources.
 //!
 //! Every rule is a token-level scan over [`lexer::Scrubbed`] text — no
 //! type information, no real parse — so each one encodes a deliberately
@@ -110,6 +110,9 @@ impl Workspace {
             }
             if registry::applies(RuleId::ShardConfinement, &f.path) {
                 raw.extend(shard_confinement(f));
+            }
+            if registry::applies(RuleId::SimPanic, &f.path) {
+                raw.extend(sim_panic(f));
             }
         }
         let mut out: Vec<Finding> = raw
@@ -716,6 +719,55 @@ fn shard_confinement(f: &SourceFile) -> Vec<Finding> {
     out
 }
 
+// ---------------------------------------------------------------------------
+// Rule 8: sim-panic
+// ---------------------------------------------------------------------------
+
+/// Flag `panic!`, `.unwrap()` and `.expect(` in simulation-core code
+/// (the engine, L2, L1 architectures, and DRAM — scope is declarative
+/// in [`registry`]).  A fault inside a job must surface as a typed
+/// `SimError` so the runner can serialize it as data; an unwind is only
+/// survivable because `catch_unwind` backstops it, and it throws the
+/// diagnostic snapshot away.  Structurally-infallible sites (a slot
+/// filled by construction) take the usual justified suppression.
+fn sim_panic(f: &SourceFile) -> Vec<Finding> {
+    let t = &f.lex.text;
+    let b = t.as_bytes();
+    let skip_tests = registry::spec(RuleId::SimPanic).skip_tests;
+    let mut out = Vec::new();
+    for p in lexer::words(t, "panic") {
+        // The macro only: `panic_message`, `catch_unwind` prose and
+        // doc-comment mentions are scrubbed or fail the word/`!` tests.
+        let j = lexer::skip_ws(t, p + "panic".len());
+        if j >= b.len() || b[j] != b'!' {
+            continue;
+        }
+        if skip_tests && f.lex.in_test_region(p) {
+            continue;
+        }
+        out.push(f.finding(RuleId::SimPanic, p));
+    }
+    for meth in ["unwrap", "expect"] {
+        for p in lexer::words(t, meth) {
+            let Some(dot) = lexer::rskip_ws(t, p) else {
+                continue;
+            };
+            if b[dot] != b'.' {
+                continue; // `fn unwrap(` definitions, not call sites
+            }
+            let open = lexer::skip_ws(t, p + meth.len());
+            if open >= b.len() || b[open] != b'(' {
+                continue;
+            }
+            if skip_tests && f.lex.in_test_region(p) {
+                continue;
+            }
+            out.push(f.finding(RuleId::SimPanic, p));
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -860,6 +912,30 @@ mod tests {
             rules_of(&check_one("rust/src/x.rs", ns)),
             vec![RuleId::StatsExclusion]
         );
+    }
+
+    #[test]
+    fn sim_panic_flagged_in_core_non_test_code_only() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    let v = x.unwrap();\n    let w = x.expect(\"present\");\n    if v == 0 { panic!(\"zero\"); }\n    v + w\n}\n#[cfg(test)]\nmod tests {\n    fn t(x: Option<u32>) { x.unwrap(); }\n}\n";
+        let found = rules_of(&check_one("rust/src/engine/mod.rs", src));
+        assert_eq!(found.len(), 3, "{found:?}");
+        assert!(found.iter().all(|r| *r == RuleId::SimPanic));
+        // Outside the positive scope (the exec layer owns catch_unwind,
+        // the CLI owns usage errors) the rule stays silent.
+        assert!(check_one("rust/src/exec/runner.rs", src).is_empty());
+        assert!(check_one("rust/src/util/json.rs", src).is_empty());
+    }
+
+    #[test]
+    fn sim_panic_skips_fallible_free_shapes_and_suppressions() {
+        // unwrap_or / unwrap_or_else / expect_err never unwind; the
+        // `panic` word without `!` is panic_message-style prose.
+        let benign = "fn f(x: Option<u32>, e: &str) -> u32 {\n    let m = panic_message(e);\n    x.unwrap_or(0) + x.unwrap_or_else(|| m.len() as u32)\n}\n";
+        assert!(check_one("rust/src/engine/mod.rs", benign).is_empty());
+        // The escape hatch: a justified suppression on its own line
+        // covers the next line.
+        let sup = "fn f(x: Option<u32>) -> u32 {\n    // lint: allow(sim-panic) — slot filled by construction one phase earlier\n    x.unwrap()\n}\n";
+        assert!(check_one("rust/src/engine/mod.rs", sup).is_empty());
     }
 
     #[test]

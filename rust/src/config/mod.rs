@@ -287,10 +287,56 @@ impl Default for SharingConfig {
     }
 }
 
+/// Deterministic fault injection for exercising the failure path
+/// (`--inject`).  `None` (the default) is a no-op; the other kinds make
+/// the run fail with the matching typed `SimError` at a point that is a
+/// pure function of the simulated request stream, so the *failure* obeys
+/// the same byte-identity contract as results do.  Exists for the
+/// failure-determinism tests and the CI poisoned-grid smoke; never set
+/// by a real experiment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// No injection (the only value real experiments use).
+    None,
+    /// Swallow the first load-completion wake: the issuing warp blocks
+    /// forever and the run ends in `SimError::Deadlock`.
+    Deadlock,
+    /// Re-schedule every delivered wake instead of completing the load:
+    /// the clock keeps advancing but nothing retires, so the
+    /// forward-progress watchdog ends the run in `SimError::Livelock`.
+    Livelock,
+    /// `panic!` at run start — exercises `catch_unwind` containment in
+    /// the job runner (`SimError` never sees this one).
+    Panic,
+}
+
+impl FaultKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::None => "none",
+            FaultKind::Deadlock => "deadlock",
+            FaultKind::Livelock => "livelock",
+            FaultKind::Panic => "panic",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "none" => Some(FaultKind::None),
+            "deadlock" => Some(FaultKind::Deadlock),
+            "livelock" => Some(FaultKind::Livelock),
+            "panic" => Some(FaultKind::Panic),
+            _ => None,
+        }
+    }
+}
+
 /// Host simulation-strategy knobs.  Nothing in this section may change a
 /// simulated metric — only how fast the host machine reaches it.  That
 /// contract is enforced byte-for-byte by `rust/tests/event_determinism.rs`
-/// and the CI `--event-driven off` cmp smoke.
+/// and the CI `--event-driven off` cmp smoke.  (The two failure knobs —
+/// `fault` and `job_timeout_s` — can *abort* a run with a typed error,
+/// but can never change the metrics of a run that completes.)
 #[derive(Debug, Clone, PartialEq)]
 pub struct EngineConfig {
     /// Event-driven clock advance: when no core can issue this cycle, jump
@@ -323,6 +369,16 @@ pub struct EngineConfig {
     /// byte-identical at any worker count — only wall clock moves (pinned
     /// by `rust/tests/memwalk_determinism.rs` and the CI cmp smoke).
     pub mem_workers: usize,
+    /// Deterministic fault injection (`--inject`, testing only).  See
+    /// [`FaultKind`]; `None` is the default and the only value real
+    /// experiments use.
+    pub fault: FaultKind,
+    /// Opt-in host wall-clock budget per `Engine::run`/`run_multi` call
+    /// (`--job-timeout-s`).  `0` (the default) disables the watchdog;
+    /// a nonzero value aborts the run with `SimError::HostTimeout` once
+    /// the budget expires.  Inherently host-dependent — the one failure
+    /// kind outside the byte-identity contract.
+    pub job_timeout_s: u64,
 }
 
 impl Default for EngineConfig {
@@ -331,6 +387,8 @@ impl Default for EngineConfig {
             event_driven: true,
             shards: 1,
             mem_workers: 1,
+            fault: FaultKind::None,
+            job_timeout_s: 0,
         }
     }
 }
@@ -638,6 +696,8 @@ impl GpuConfig {
                     ("event_driven", self.engine.event_driven.into()),
                     ("shards", self.engine.shards.into()),
                     ("mem_workers", self.engine.mem_workers.into()),
+                    ("fault", self.engine.fault.name().into()),
+                    ("job_timeout_s", self.engine.job_timeout_s.into()),
                 ]),
             ),
         ])
@@ -743,6 +803,12 @@ impl GpuConfig {
             cfg.engine.event_driven = g_bool(e, "event_driven", cfg.engine.event_driven);
             cfg.engine.shards = g_usize(e, "shards", cfg.engine.shards);
             cfg.engine.mem_workers = g_usize(e, "mem_workers", cfg.engine.mem_workers);
+            if let Some(name) = e.get("fault").and_then(Json::as_str) {
+                cfg.engine.fault = FaultKind::from_name(name)
+                    .ok_or_else(|| ConfigError::Invalid(format!("unknown fault '{name}'")))?;
+            }
+            cfg.engine.job_timeout_s =
+                e.get("job_timeout_s").and_then(Json::as_u64).unwrap_or(cfg.engine.job_timeout_s);
         }
         Ok(cfg)
     }
@@ -804,6 +870,8 @@ mod tests {
         cfg.engine.event_driven = false;
         cfg.engine.shards = 3;
         cfg.engine.mem_workers = 5;
+        cfg.engine.fault = FaultKind::Livelock;
+        cfg.engine.job_timeout_s = 30;
         cfg.l1.write_policy = WritePolicy::WriteThrough;
         cfg.seed = 12345;
         let j = cfg.to_json();
@@ -842,6 +910,18 @@ mod tests {
         let mut cfg = GpuConfig::default();
         cfg.engine.mem_workers = 64;
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn fault_kind_names_roundtrip() {
+        for k in [FaultKind::None, FaultKind::Deadlock, FaultKind::Livelock, FaultKind::Panic] {
+            assert_eq!(FaultKind::from_name(k.name()), Some(k));
+        }
+        assert!(FaultKind::from_name("bogus").is_none());
+        // An unknown fault in a config file is a hard parse error, not a
+        // silent default — injection typos must not run clean.
+        let j = Json::parse(r#"{"engine": {"fault": "bogus"}}"#).unwrap();
+        assert!(GpuConfig::from_json(&j).is_err());
     }
 
     #[test]

@@ -15,7 +15,7 @@
 use crate::config::{GpuConfig, L1ArchKind};
 use crate::core::CorePartition;
 use crate::engine::MultiWorkload;
-use crate::exec::{job_seed, JobOutput, JobRunner, SimJob};
+use crate::exec::{job_seed, JobError, JobOutput, JobRunner, ResumeCache, SimJob};
 use crate::stats::{ContentionBreakdown, MultiResult, ResourceClass};
 use crate::trace::{apps, co_workload_placed, AppModel};
 use crate::util::json::Json;
@@ -153,11 +153,30 @@ impl CoSchedSweep {
     /// vectors — no post-hoc sorting, so the serialized output is
     /// byte-identical for any `threads` value.
     pub fn run(&self) -> CoSchedResults {
+        self.run_isolated(None, None)
+    }
+
+    /// [`run`](Self::run) with the fault-isolation surface exposed
+    /// (resume cache + manifest observer — see
+    /// [`JobRunner::run_grid`]).  A failed job leaves a hole in the
+    /// lookup tables (its `norm_ipc`/`slowdown` read as `None`) and a
+    /// typed record in [`CoSchedResults::failures`]; the rest of the
+    /// sweep completes.
+    pub fn run_isolated(
+        &self,
+        resume: Option<&ResumeCache>,
+        observer: Option<&(dyn Fn(&SimJob, &JobOutput) + Sync)>,
+    ) -> CoSchedResults {
         let (jobs, slots) = self.jobs();
-        let outputs = JobRunner::new(self.threads).run(&jobs);
+        let outcome = JobRunner::new(self.threads).run_grid(&jobs, resume, observer);
         let mut pairs = Vec::new();
         let mut solos = Vec::new();
-        for (slot, output) in slots.into_iter().zip(outputs) {
+        let mut failures = Vec::new();
+        for (slot, output) in slots.into_iter().zip(outcome.outputs) {
+            if let JobOutput::Failed(e) = output {
+                failures.push(e);
+                continue;
+            }
             let result = output.into_multi();
             match slot {
                 CoSlot::Solo { arch, app, pos } => {
@@ -170,6 +189,8 @@ impl CoSchedSweep {
             app_names: self.apps.iter().map(|a| a.name.to_string()).collect(),
             pairs,
             solos,
+            failures,
+            degraded: outcome.degraded,
         }
     }
 }
@@ -187,6 +208,11 @@ pub struct CoSchedResults {
     pub app_names: Vec<String>,
     pub pairs: Vec<PairResult>,
     pub solos: Vec<SoloResult>,
+    /// Jobs that could not complete (typed, with diagnostic snapshots).
+    pub failures: Vec<JobError>,
+    /// Jobs that recovered on the serial degradation retry (host-flake
+    /// indicator; empty in deterministic runs).
+    pub degraded: Vec<String>,
 }
 
 impl CoSchedResults {
@@ -295,11 +321,25 @@ impl CoSchedResults {
         t.render()
     }
 
+    /// Any job failed?  (The CLI maps this to its "completed with
+    /// failures" exit code.)
+    pub fn has_failures(&self) -> bool {
+        !self.failures.is_empty()
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             (
                 "apps",
                 Json::arr(self.app_names.iter().map(|n| n.as_str().into()).collect()),
+            ),
+            (
+                "degraded",
+                Json::arr(self.degraded.iter().map(|d| d.as_str().into()).collect()),
+            ),
+            (
+                "failures",
+                Json::arr(self.failures.iter().map(JobError::to_json).collect()),
             ),
             (
                 "solos",

@@ -15,7 +15,7 @@ pub mod landscape;
 pub use cosched::{CoSchedResults, CoSchedSweep};
 
 use crate::config::{GpuConfig, L1ArchKind};
-use crate::exec::{JobOutput, JobRunner, ScenarioGrid};
+use crate::exec::{JobError, JobOutput, JobRunner, ResumeCache, ScenarioGrid, SimJob};
 use crate::stats::SimResult;
 use crate::trace::{apps, AppModel, LocalityClass};
 use crate::util::json::Json;
@@ -79,13 +79,45 @@ impl Sweep {
     /// `threads` value (no post-hoc sorting; the runner's ordering
     /// guarantee is the determinism mechanism).
     pub fn run(&self) -> SweepResults {
-        let jobs = self.grid().jobs();
-        let results = JobRunner::new(self.threads)
-            .run(&jobs)
-            .into_iter()
-            .map(JobOutput::into_solo)
-            .collect();
-        SweepResults { results }
+        self.run_isolated(None, None)
+    }
+
+    /// [`run`](Self::run) with the fault-isolation surface exposed: a
+    /// resume cache short-circuits jobs already present in a manifest,
+    /// and `observer` sees every freshly completed job (the manifest
+    /// writer).  Failed jobs land in [`SweepResults::failures`] instead
+    /// of aborting the sweep — see [`JobRunner::run_grid`].
+    pub fn run_isolated(
+        &self,
+        resume: Option<&ResumeCache>,
+        observer: Option<&(dyn Fn(&SimJob, &JobOutput) + Sync)>,
+    ) -> SweepResults {
+        self.run_jobs(&self.grid().jobs(), resume, observer)
+    }
+
+    /// [`run_isolated`](Self::run_isolated) over explicitly materialized
+    /// jobs — the entry point for callers that patch jobs before running
+    /// (the CLI's `--inject` fault arming, the poisoned-grid smoke).
+    pub fn run_jobs(
+        &self,
+        jobs: &[SimJob],
+        resume: Option<&ResumeCache>,
+        observer: Option<&(dyn Fn(&SimJob, &JobOutput) + Sync)>,
+    ) -> SweepResults {
+        let outcome = JobRunner::new(self.threads).run_grid(jobs, resume, observer);
+        let mut results = Vec::new();
+        let mut failures = Vec::new();
+        for output in outcome.outputs {
+            match output {
+                JobOutput::Failed(e) => failures.push(e),
+                other => results.push(other.into_solo()),
+            }
+        }
+        SweepResults {
+            results,
+            failures,
+            degraded: outcome.degraded,
+        }
     }
 }
 
@@ -93,6 +125,14 @@ impl Sweep {
 #[derive(Debug, Clone, Default)]
 pub struct SweepResults {
     pub results: Vec<SimResult>,
+    /// Jobs that could not complete (typed, with diagnostic snapshots).
+    /// Deterministic: the same grid fails the same way at any
+    /// `--threads`/`--shards`/`--mem-workers`.
+    pub failures: Vec<JobError>,
+    /// Jobs that recovered on the serial degradation retry (host-flake
+    /// indicator; empty in deterministic runs — see
+    /// [`crate::exec::GridOutcome`]).
+    pub degraded: Vec<String>,
 }
 
 impl SweepResults {
@@ -139,8 +179,27 @@ impl SweepResults {
         geomean(&xs)
     }
 
+    /// Any job failed?  (The CLI maps this to its "completed with
+    /// failures" exit code.)
+    pub fn has_failures(&self) -> bool {
+        !self.failures.is_empty()
+    }
+
     pub fn to_json(&self) -> Json {
-        Json::arr(self.results.iter().map(SimResult::to_json).collect())
+        Json::obj(vec![
+            (
+                "degraded",
+                Json::arr(self.degraded.iter().map(|d| d.as_str().into()).collect()),
+            ),
+            (
+                "failures",
+                Json::arr(self.failures.iter().map(JobError::to_json).collect()),
+            ),
+            (
+                "results",
+                Json::arr(self.results.iter().map(SimResult::to_json).collect()),
+            ),
+        ])
     }
 
     pub fn save(&self, path: &str) -> std::io::Result<()> {

@@ -203,6 +203,14 @@ impl Dram {
         (g, stall)
     }
 
+    /// Diagnostic horizon: the earliest cycle at-or-after `now` at which
+    /// any controller's data bus still has booked transfers — `None` when
+    /// all controllers are idle.  Used by the failure snapshot
+    /// (`engine::FailSnapshot::mem_horizon`), not by scheduling.
+    pub fn next_event(&self, now: u64) -> Option<u64> {
+        self.bus.iter().filter_map(|c| c.next_event(now)).min()
+    }
+
     /// Mean service latency in core cycles.
     pub fn mean_latency(&self) -> f64 {
         let n = self.stats.reads + self.stats.writes;

@@ -1,0 +1,260 @@
+//! Typed simulation failures and their deterministic diagnostic snapshot.
+//!
+//! A pathological configuration must surface as **data**, not kill the
+//! process: `Engine::run`/`run_multi` return `Result<_, SimError>` and the
+//! execution layer ([`crate::exec`]) converts an `Err` into a
+//! `JobOutput::Failed` slot that serializes into the result JSON's
+//! `failures` array.  The snapshot is a pure function of the simulated
+//! state at the moment the failure was detected, so the failure path
+//! inherits the repo's byte-identity contract: the same error for the
+//! same job serializes identically at any `--threads`/`--shards`/
+//! `--mem-workers` (deterministic failures under parallel execution are
+//! re-derived by the serial degradation retry — see
+//! `exec::JobRunner::run_grid`).
+//!
+//! The one deliberately non-deterministic variant is
+//! [`SimError::HostTimeout`]: it fires on the host wall clock
+//! (`--job-timeout-s`, opt-in, default off), so its presence depends on
+//! the machine.  Everything else is simulated-state-only.
+
+use crate::util::json::Json;
+
+/// A deterministic picture of the simulation at the moment a failure was
+/// detected.  Every field is derived from simulated state (never host
+/// state), so two runs of the same job produce byte-identical snapshots.
+///
+/// The horizon fields answer "what was the engine waiting for": the
+/// earliest core issue hint, the earliest pending wake, and the earliest
+/// busy interval anywhere in the memory system (via the `next_event(now)`
+/// accessors every resource grew in PR 6).  `None` serializes as `null`
+/// and means "no such event exists" (e.g. at a true deadlock every
+/// horizon is `null` — that absence *is* the diagnosis).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FailSnapshot {
+    /// What was running: `"kernel 'k'"` or `"co-execution 'a+b'"`.
+    pub what: String,
+    /// Simulated cycle at detection.
+    pub cycle: u64,
+    /// Cores participating in the run (active lanes only, co-execution).
+    pub cores_total: u64,
+    /// Cores that still have unfinished warps — the blocked set.
+    pub cores_blocked: u64,
+    /// Instructions retired by the engine up to detection.
+    pub insts_retired: u64,
+    /// Pending entries across the wake calendar(s).
+    pub wake_depth: u64,
+    /// Earliest core issue hint, if any core can ever issue again.
+    pub next_core_event: Option<u64>,
+    /// Earliest pending wake, if the calendar is non-empty.
+    pub next_wake: Option<u64>,
+    /// Earliest busy interval in the memory system (NoC/L2/DRAM), if any.
+    pub mem_horizon: Option<u64>,
+}
+
+fn opt_u64_json(v: Option<u64>) -> Json {
+    match v {
+        Some(x) => x.into(),
+        None => Json::Null,
+    }
+}
+
+fn opt_u64_from(j: &Json, key: &str) -> Option<u64> {
+    j.get(key).and_then(Json::as_u64)
+}
+
+impl FailSnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("what", self.what.as_str().into()),
+            ("cycle", self.cycle.into()),
+            ("cores_total", self.cores_total.into()),
+            ("cores_blocked", self.cores_blocked.into()),
+            ("insts_retired", self.insts_retired.into()),
+            ("wake_depth", self.wake_depth.into()),
+            ("next_core_event", opt_u64_json(self.next_core_event)),
+            ("next_wake", opt_u64_json(self.next_wake)),
+            ("mem_horizon", opt_u64_json(self.mem_horizon)),
+        ])
+    }
+
+    /// Lenient inverse of [`to_json`](Self::to_json): absent numeric
+    /// fields default to zero, absent horizons to `None`, so a manifest
+    /// from an older build still loads.
+    pub fn from_json(j: &Json) -> FailSnapshot {
+        let num = |k: &str| j.get(k).and_then(Json::as_u64).unwrap_or(0);
+        FailSnapshot {
+            what: j.get("what").and_then(Json::as_str).unwrap_or_default().to_string(),
+            cycle: num("cycle"),
+            cores_total: num("cores_total"),
+            cores_blocked: num("cores_blocked"),
+            insts_retired: num("insts_retired"),
+            wake_depth: num("wake_depth"),
+            next_core_event: opt_u64_from(j, "next_core_event"),
+            next_wake: opt_u64_from(j, "next_wake"),
+            mem_horizon: opt_u64_from(j, "mem_horizon"),
+        }
+    }
+}
+
+/// Why a simulation run could not complete.  Returned by
+/// `Engine::run`/`run_multi`; never panicked out of the engine.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SimError {
+    /// No core can ever issue again and no wake is pending: the
+    /// next-event horizon is `u64::MAX`.
+    Deadlock(FailSnapshot),
+    /// The clock is advancing but nothing retires: either the
+    /// forward-progress watchdog fired (`why` names the epoch budget) or
+    /// the run blew through the cycle safety valve.
+    Livelock { snap: FailSnapshot, why: String },
+    /// A host worker thread (shard worker, mem-walk worker, or the shard
+    /// coordinator's own epoch body) panicked; the panic was contained
+    /// at the stop-flag boundary instead of unwinding the process.
+    WorkerPanic { what: String, message: String },
+    /// The configuration or workload failed validation.
+    InvalidConfig(String),
+    /// The opt-in host wall-clock budget (`--job-timeout-s`) expired.
+    /// Inherently host-dependent — the only non-deterministic variant.
+    HostTimeout { what: String, seconds: u64 },
+}
+
+impl SimError {
+    /// Stable machine-readable failure class (the `kind` field of a
+    /// serialized `JobError`).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            SimError::Deadlock(_) => "deadlock",
+            SimError::Livelock { .. } => "livelock",
+            SimError::WorkerPanic { .. } => "worker-panic",
+            SimError::InvalidConfig(_) => "invalid-config",
+            SimError::HostTimeout { .. } => "host-timeout",
+        }
+    }
+
+    /// The diagnostic snapshot, for the variants that carry one.
+    pub fn snapshot(&self) -> Option<&FailSnapshot> {
+        match self {
+            SimError::Deadlock(s) => Some(s),
+            SimError::Livelock { snap, .. } => Some(snap),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::Deadlock(s) => write!(
+                f,
+                "{} deadlocked at cycle {}: no ready warps, no wakes",
+                s.what, s.cycle
+            ),
+            SimError::Livelock { snap, why } => {
+                write!(f, "{} livelocked at cycle {}: {}", snap.what, snap.cycle, why)
+            }
+            SimError::WorkerPanic { what, message } => {
+                write!(f, "{what} panicked: {message}")
+            }
+            // Construction sites pass self-describing messages (the
+            // `ConfigError` Display already leads with "invalid config:"),
+            // so no extra prefix here.
+            SimError::InvalidConfig(m) => write!(f, "{m}"),
+            SimError::HostTimeout { what, seconds } => {
+                write!(f, "{what} exceeded the host wall-clock budget of {seconds}s")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+/// Render a `catch_unwind` payload as text (panic messages are almost
+/// always `String` or `&str`; anything else gets a stable placeholder).
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap() -> FailSnapshot {
+        FailSnapshot {
+            what: "kernel 'k'".into(),
+            cycle: 1234,
+            cores_total: 8,
+            cores_blocked: 3,
+            insts_retired: 77,
+            wake_depth: 0,
+            next_core_event: None,
+            next_wake: None,
+            mem_horizon: Some(2000),
+        }
+    }
+
+    #[test]
+    fn snapshot_roundtrips_through_json() {
+        let s = snap();
+        let j = s.to_json();
+        assert_eq!(FailSnapshot::from_json(&j), s);
+        // Absent horizons serialize as null, not as a sentinel number.
+        let text = j.to_string();
+        assert!(text.contains("\"next_wake\":null"), "{text}");
+        assert!(text.contains("\"mem_horizon\":2000"), "{text}");
+    }
+
+    #[test]
+    fn snapshot_serialization_is_byte_stable() {
+        // parse → reprint must be the identity (the resume path depends
+        // on it): integral values print as i64, null stays null.
+        let text = snap().to_json().to_string();
+        let re = Json::parse(&text).unwrap().to_string();
+        assert_eq!(text, re);
+    }
+
+    #[test]
+    fn display_messages_name_the_failure_site() {
+        let e = SimError::Deadlock(snap());
+        assert_eq!(e.kind(), "deadlock");
+        let msg = e.to_string();
+        assert!(msg.contains("kernel 'k'") && msg.contains("cycle 1234"), "{msg}");
+
+        let e = SimError::Livelock {
+            snap: snap(),
+            why: "no instruction retired for 10 epochs".into(),
+        };
+        assert_eq!(e.kind(), "livelock");
+        assert!(e.to_string().contains("no instruction retired"), "{e}");
+
+        let e = SimError::WorkerPanic {
+            what: "shard worker".into(),
+            message: "boom".into(),
+        };
+        assert_eq!(e.kind(), "worker-panic");
+        assert!(e.to_string().contains("boom"));
+
+        assert_eq!(SimError::InvalidConfig("x".into()).kind(), "invalid-config");
+        let e = SimError::HostTimeout {
+            what: "kernel 'k'".into(),
+            seconds: 5,
+        };
+        assert_eq!(e.kind(), "host-timeout");
+        assert!(e.to_string().contains("5s"));
+    }
+
+    #[test]
+    fn panic_payloads_render_as_text() {
+        let p: Box<dyn std::any::Any + Send> = Box::new("literal".to_string());
+        assert_eq!(panic_message(p.as_ref()), "literal");
+        let p: Box<dyn std::any::Any + Send> = Box::new("static");
+        assert_eq!(panic_message(p.as_ref()), "static");
+        let p: Box<dyn std::any::Any + Send> = Box::new(42u32);
+        assert_eq!(panic_message(p.as_ref()), "non-string panic payload");
+    }
+}

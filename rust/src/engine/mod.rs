@@ -59,8 +59,8 @@
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
-// lint: allow(wall-clock) — host-side run-duration telemetry only; printed to stderr, never in result JSON
-use std::time::Instant;
+// lint: allow(wall-clock) — host-side run-duration telemetry and the opt-in --job-timeout-s watchdog; never in result JSON
+use std::time::{Duration, Instant};
 
 /// Per-run deltas of the shared memory-system counters (see
 /// [`Engine::mem_deltas`]).
@@ -72,7 +72,7 @@ struct MemDeltas {
     dram_writes: u64,
 }
 
-use crate::config::GpuConfig;
+use crate::config::{FaultKind, GpuConfig};
 use crate::core::{CorePartition, IssueBatch, SimtCore, WarpProgram};
 use crate::l1arch::{self, L1Arch};
 use crate::l2::MemSystem;
@@ -82,7 +82,10 @@ use crate::stats::{
     MultiResult, ShardStats, SimResult,
 };
 
+mod error;
 mod shard;
+
+pub use error::{panic_message, FailSnapshot, SimError};
 
 /// One kernel launch: a set of warp programs per core.
 #[derive(Debug, Clone, Default)]
@@ -208,8 +211,36 @@ impl MultiWorkload {
 }
 
 /// Safety valve: a kernel that exceeds this many cycles aborts the run
-/// (deadlock guard for tests; real runs never get close).
+/// with [`SimError::Livelock`] (real runs never get close).
 const MAX_KERNEL_CYCLES: u64 = 500_000_000;
+
+/// Forward-progress watchdog: if this many consecutive loop epochs
+/// advance the clock without retiring a single instruction anywhere, the
+/// run aborts as [`SimError::Livelock`].  The threshold is deliberately
+/// enormous next to any legitimate stall (a full DRAM round trip is a few
+/// hundred cycles, and in reference mode every idle cycle is an epoch),
+/// and `LIVELOCK_EPOCHS * PHANTOM_WAKE_STRIDE` stays below
+/// [`MAX_KERNEL_CYCLES`] so the watchdog — with its richer snapshot —
+/// always fires before the blunt cycle valve on an injected livelock.
+const LIVELOCK_EPOCHS: u64 = 200_000;
+
+/// The opt-in host wall-clock budget is polled once every
+/// `DEADLINE_EPOCH_MASK + 1` loop epochs (power of two for a branchless
+/// mask test): responsive at second-granularity budgets, invisible in
+/// profiles.
+const DEADLINE_EPOCH_MASK: u64 = 0xFFF;
+
+/// Stride of the phantom re-wakes injected by [`FaultKind::Livelock`]:
+/// each due wake is bounced `PHANTOM_WAKE_STRIDE` cycles forward instead
+/// of being delivered, so the clock advances forever while nothing
+/// retires — the exact signature the watchdog exists to catch.
+const PHANTOM_WAKE_STRIDE: u64 = 1024;
+
+/// `u64::MAX` horizons mean "no such event": map them to `None` so the
+/// snapshot serializes them as `null` instead of a lossy f64 sentinel.
+fn horizon_opt(h: u64) -> Option<u64> {
+    (h != u64::MAX).then_some(h)
+}
 
 /// Period of the stale-entry sweep over the L1/L2 in-flight maps.
 ///
@@ -334,12 +365,31 @@ pub struct Engine {
     /// Sharded-loop telemetry (epochs, cross-shard traffic); host data
     /// only, never part of result JSON.
     shard_stats: ShardStats,
+    /// `FaultKind::Deadlock` arming: true from run start until the first
+    /// completion wake has been swallowed.
+    fault_deadlock_armed: bool,
+    /// Host wall-clock deadline of the current run, set from
+    /// `engine.job_timeout_s` at run start (`None` = no budget).
+    // lint: allow(wall-clock) — opt-in --job-timeout-s watchdog; never in result JSON
+    deadline: Option<Instant>,
 }
 
 impl Engine {
+    /// Infallible constructor for direct callers (tests, examples) that
+    /// treat a bad config as a programming error.  Grid execution goes
+    /// through [`Engine::try_new`] so a malformed job becomes a
+    /// [`SimError::InvalidConfig`] entry instead of a crash.
     pub fn new(cfg: &GpuConfig) -> Self {
-        cfg.validate().expect("invalid GPU config");
-        Engine {
+        // lint: allow(sim-panic) — deliberate fail-fast facade over try_new
+        Engine::try_new(cfg).expect("invalid GPU config")
+    }
+
+    /// Fallible constructor: a config that fails validation returns
+    /// [`SimError::InvalidConfig`] instead of panicking.
+    pub fn try_new(cfg: &GpuConfig) -> Result<Self, SimError> {
+        cfg.validate()
+            .map_err(|e| SimError::InvalidConfig(e.to_string()))?;
+        Ok(Engine {
             cfg: cfg.clone(),
             l1: l1arch::build(cfg),
             mem: MemSystem::new(cfg),
@@ -351,6 +401,74 @@ impl Engine {
             total_insts: 0,
             events: EventStats::default(),
             shard_stats: ShardStats::default(),
+            fault_deadlock_armed: false,
+            deadline: None,
+        })
+    }
+
+    /// Arm the configured fault injection and the host wall-clock budget
+    /// for a run that is about to start.  `FaultKind::Panic` fires here —
+    /// before any simulation state is touched — to exercise the
+    /// `catch_unwind` containment in the execution layer.
+    fn begin_run(&mut self) {
+        self.fault_deadlock_armed = self.cfg.engine.fault == FaultKind::Deadlock;
+        if self.cfg.engine.fault == FaultKind::Panic {
+            // lint: allow(sim-panic) — FaultKind::Panic exists to exercise panic containment
+            panic!("injected fault: panic");
+        }
+        self.deadline = (self.cfg.engine.job_timeout_s > 0).then(|| {
+            // lint: allow(wall-clock) — opt-in --job-timeout-s watchdog; never in result JSON
+            Instant::now() + Duration::from_secs(self.cfg.engine.job_timeout_s)
+        });
+    }
+
+    /// True when the opt-in `--job-timeout-s` budget has expired.  Called
+    /// at a coarse epoch cadence (`DEADLINE_EPOCH_MASK`) so the clock
+    /// syscall never shows up in profiles.
+    fn host_budget_expired(&self) -> bool {
+        // lint: allow(wall-clock) — opt-in --job-timeout-s watchdog; never in result JSON
+        self.deadline.is_some_and(|d| Instant::now() >= d)
+    }
+
+    /// Host-timeout error for the current run phase.
+    fn host_timeout(&self, what: String) -> SimError {
+        SimError::HostTimeout {
+            what,
+            seconds: self.cfg.engine.job_timeout_s,
+        }
+    }
+
+    /// Diagnostic snapshot over an explicit set of live cores (the solo
+    /// kernel loop and, filtered to active lanes, the multi loop).  The
+    /// sharded loops build the identical snapshot from their per-shard
+    /// slots (`shard::snapshot`), so the serialized failure is
+    /// byte-identical at any `--shards` setting.
+    fn snapshot<'a>(
+        &self,
+        what: String,
+        now: u64,
+        live_cores: impl Iterator<Item = &'a SimtCore>,
+    ) -> FailSnapshot {
+        let mut cores_total = 0;
+        let mut cores_blocked = 0;
+        let mut next_core = u64::MAX;
+        for core in live_cores {
+            cores_total += 1;
+            if !core.all_done() {
+                cores_blocked += 1;
+            }
+            next_core = next_core.min(core.next_event_hint());
+        }
+        FailSnapshot {
+            what,
+            cycle: now,
+            cores_total,
+            cores_blocked,
+            insts_retired: self.total_insts,
+            wake_depth: self.wakes.len() as u64,
+            next_core_event: horizon_opt(next_core),
+            next_wake: self.wakes.peek().map(|Reverse((t, _, _))| *t),
+            mem_horizon: self.mem.next_event(now),
         }
     }
 
@@ -390,8 +508,13 @@ impl Engine {
     /// [`Engine::run_multi`].  The latency trackers are reset at run
     /// start (no loads can be outstanding between runs), so means and
     /// maxima are per-run too.
-    pub fn run(&mut self, workload: &Workload) -> SimResult {
+    ///
+    /// On `Err` the engine's simulation state is poisoned (outstanding
+    /// loads, undelivered wakes): drop it and build a fresh engine for
+    /// the next run.  The execution layer always does.
+    pub fn run(&mut self, workload: &Workload) -> Result<SimResult, SimError> {
         let host_start = Instant::now(); // lint: allow(wall-clock) — stderr-only host span, excluded from SimResult
+        self.begin_run();
         let start_cycle = self.cycle;
         let start_insts = self.total_insts;
         debug_assert_eq!(self.tracker.outstanding(), 0);
@@ -407,14 +530,14 @@ impl Engine {
 
         let mut kernels = Vec::with_capacity(workload.kernels.len());
         for k in &workload.kernels {
-            kernels.push(self.run_kernel(k));
+            kernels.push(self.run_kernel(k)?);
         }
 
         let l1 = self.l1.stats().delta(&l1_before);
         let md = self.mem_deltas(&l2_before, dram_before, noc_before);
         let contention = *self.contention().delta(&con_before).total();
         let hops = self.hops.delta(&hops_before);
-        SimResult {
+        Ok(SimResult {
             app: workload.name.clone(),
             arch: self.l1.kind().name().to_string(),
             cycles: self.cycle - start_cycle,
@@ -434,7 +557,7 @@ impl Engine {
             hops,
             kernels,
             host_seconds: host_start.elapsed().as_secs_f64(),
-        }
+        })
     }
 
     /// Per-run deltas of the shared memory-system counters against a
@@ -501,11 +624,12 @@ impl Engine {
     /// bit-identical across runs (lanes are ticked in declaration order,
     /// cores in partition order within each lane, and the wake calendar
     /// orders ties by (cycle, core, warp)).
-    pub fn run_multi(&mut self, multi: &MultiWorkload) -> MultiResult {
+    pub fn run_multi(&mut self, multi: &MultiWorkload) -> Result<MultiResult, SimError> {
         let host_start = Instant::now(); // lint: allow(wall-clock) — stderr-only host span, excluded from MultiResult
         if let Err(e) = multi.validate(&self.cfg) {
-            panic!("invalid multi-workload: {e}");
+            return Err(SimError::InvalidConfig(format!("invalid multi-workload: {e}")));
         }
+        self.begin_run();
         debug_assert!(self.wakes.is_empty());
         let start_cycle = self.cycle;
 
@@ -527,7 +651,7 @@ impl Engine {
         let max_cycles = MAX_KERNEL_CYCLES.saturating_mul(total_kernels.max(1));
         let n_shards = self.effective_shards();
         if n_shards > 1 {
-            shard::multi_loop(self, multi, &mut lanes, start_cycle, max_cycles, n_shards);
+            shard::multi_loop(self, multi, &mut lanes, start_cycle, max_cycles, n_shards)?;
         } else {
             // Global core id → lane index (usize::MAX for idle cores).
             let mut owner = vec![usize::MAX; self.cfg.cores];
@@ -539,6 +663,9 @@ impl Engine {
             let mut batch = IssueBatch::default();
             let mut open = Vec::new();
             let mut last_sweep = self.cycle;
+            let mut stuck_epochs: u64 = 0;
+            let mut last_insts = self.total_insts;
+            let mut epoch: u64 = 0;
             loop {
                 let now = self.cycle;
 
@@ -548,6 +675,13 @@ impl Engine {
                         break;
                     }
                     self.wakes.pop();
+                    if self.cfg.engine.fault == FaultKind::Livelock {
+                        // Injected livelock: the load never completes —
+                        // its wake keeps bouncing forward, so the clock
+                        // advances while nothing retires.
+                        self.wakes.push(Reverse((now + PHANTOM_WAKE_STRIDE, core, warp)));
+                        continue;
+                    }
                     let li = owner[core as usize];
                     let local = multi.lanes[li].partition.local(core as usize);
                     lanes[li].cores[local].load_complete(warp, t);
@@ -590,7 +724,7 @@ impl Engine {
                     self.l1.access(&mut txn, &mut self.mem);
                     open.push((txn, *group_n));
                 }
-                self.mem.run_walk();
+                self.mem.run_walk()?;
                 for (mut txn, group_n) in open.drain(..) {
                     self.l1.finish(&mut txn, &mut self.mem);
                     self.hops.record(&txn.hops, &txn.queued);
@@ -602,7 +736,13 @@ impl Engine {
                         if let Some(load_done) =
                             lane.tracker.complete_one(core, warp, inst, txn.done())
                         {
-                            self.wakes.push(Reverse((load_done.max(now + 1), core, warp)));
+                            if self.fault_deadlock_armed {
+                                // Injected deadlock: swallow the first
+                                // completion wake; its warp blocks forever.
+                                self.fault_deadlock_armed = false;
+                            } else {
+                                self.wakes.push(Reverse((load_done.max(now + 1), core, warp)));
+                            }
                         }
                     }
                 }
@@ -640,7 +780,35 @@ impl Engine {
                     self.wakes.peek().map(|Reverse((t, _, _))| *t).unwrap_or(u64::MAX);
                 let horizon = next_ready.min(next_wake);
                 if horizon == u64::MAX {
-                    panic!("co-execution '{}' deadlocked at cycle {now}", multi.name);
+                    let live = lanes.iter().filter(|l| !l.done).flat_map(|l| l.cores.iter());
+                    return Err(SimError::Deadlock(self.snapshot(
+                        format!("co-execution '{}'", multi.name),
+                        now,
+                        live,
+                    )));
+                }
+                // Forward-progress watchdog — identical detection order in
+                // the sharded loop, so snapshots match at any shard count.
+                if self.total_insts == last_insts {
+                    stuck_epochs += 1;
+                    if stuck_epochs >= LIVELOCK_EPOCHS {
+                        let live =
+                            lanes.iter().filter(|l| !l.done).flat_map(|l| l.cores.iter());
+                        let snap = self.snapshot(
+                            format!("co-execution '{}'", multi.name),
+                            now,
+                            live,
+                        );
+                        return Err(SimError::Livelock {
+                            snap,
+                            why: format!(
+                                "no instruction retired for {LIVELOCK_EPOCHS} consecutive epochs"
+                            ),
+                        });
+                    }
+                } else {
+                    last_insts = self.total_insts;
+                    stuck_epochs = 0;
                 }
                 self.advance(now, horizon);
 
@@ -657,7 +825,20 @@ impl Engine {
                     self.mem.sweep_in_flight(last_sweep);
                 }
                 if self.cycle - start_cycle > max_cycles {
-                    panic!("co-execution '{}' exceeded {max_cycles} cycles", multi.name);
+                    let live = lanes.iter().filter(|l| !l.done).flat_map(|l| l.cores.iter());
+                    let snap = self.snapshot(
+                        format!("co-execution '{}'", multi.name),
+                        self.cycle,
+                        live,
+                    );
+                    return Err(SimError::Livelock {
+                        snap,
+                        why: format!("exceeded the {max_cycles}-cycle safety valve"),
+                    });
+                }
+                epoch += 1;
+                if epoch & DEADLINE_EPOCH_MASK == 0 && self.host_budget_expired() {
+                    return Err(self.host_timeout(format!("co-execution '{}'", multi.name)));
                 }
             }
         }
@@ -690,7 +871,7 @@ impl Engine {
             })
             .collect();
 
-        MultiResult {
+        Ok(MultiResult {
             name: multi.name.clone(),
             arch: self.l1.kind().name().to_string(),
             cycles: self.cycle - start_cycle,
@@ -705,7 +886,7 @@ impl Engine {
             hops: self.hops.delta(&hops_before),
             apps,
             host_seconds: host_start.elapsed().as_secs_f64(),
-        }
+        })
     }
 
     /// Replication audit: per-core resident lines (used by integration
@@ -749,13 +930,15 @@ impl Engine {
         self.shard_stats
     }
 
-    fn run_kernel(&mut self, spec: &KernelSpec) -> KernelStats {
-        assert_eq!(
-            spec.programs.len(),
-            self.cfg.cores,
-            "kernel '{}' must provide programs for every core",
-            spec.name
-        );
+    fn run_kernel(&mut self, spec: &KernelSpec) -> Result<KernelStats, SimError> {
+        if spec.programs.len() != self.cfg.cores {
+            return Err(SimError::InvalidConfig(format!(
+                "kernel '{}' provides {} core programs for a {}-core GPU",
+                spec.name,
+                spec.programs.len(),
+                self.cfg.cores
+            )));
+        }
         let start_cycle = self.cycle;
         let start_insts = self.total_insts;
         let start_loads = self.tracker.completed_loads;
@@ -776,11 +959,14 @@ impl Engine {
 
         let n_shards = self.effective_shards();
         if n_shards > 1 {
-            shard::kernel_loop(self, spec, cores, n_shards);
+            shard::kernel_loop(self, spec, cores, n_shards)?;
         } else {
             let mut batch = IssueBatch::default();
             let mut open = Vec::new();
             let mut last_sweep = self.cycle;
+            let mut stuck_epochs: u64 = 0;
+            let mut last_insts = self.total_insts;
+            let mut epoch: u64 = 0;
             loop {
                 let now = self.cycle;
 
@@ -790,6 +976,12 @@ impl Engine {
                         break;
                     }
                     self.wakes.pop();
+                    if self.cfg.engine.fault == FaultKind::Livelock {
+                        // Injected livelock: bounce the wake forward
+                        // forever instead of delivering it.
+                        self.wakes.push(Reverse((now + PHANTOM_WAKE_STRIDE, core, warp)));
+                        continue;
+                    }
                     cores[core as usize].load_complete(warp, t);
                 }
 
@@ -823,7 +1015,7 @@ impl Engine {
                     self.l1.access(&mut txn, &mut self.mem);
                     open.push((txn, *group_n));
                 }
-                self.mem.run_walk();
+                self.mem.run_walk()?;
                 for (mut txn, group_n) in open.drain(..) {
                     self.l1.finish(&mut txn, &mut self.mem);
                     self.hops.record(&txn.hops, &txn.queued);
@@ -834,7 +1026,13 @@ impl Engine {
                         if let Some(load_done) =
                             self.tracker.complete_one(core, warp, inst, txn.done())
                         {
-                            self.wakes.push(Reverse((load_done.max(now + 1), core, warp)));
+                            if self.fault_deadlock_armed {
+                                // Injected deadlock: swallow the first
+                                // completion wake; its warp blocks forever.
+                                self.fault_deadlock_armed = false;
+                            } else {
+                                self.wakes.push(Reverse((load_done.max(now + 1), core, warp)));
+                            }
                         }
                     }
                 }
@@ -857,10 +1055,29 @@ impl Engine {
                     self.wakes.peek().map(|Reverse((t, _, _))| *t).unwrap_or(u64::MAX);
                 let horizon = next_ready.min(next_wake);
                 if horizon == u64::MAX {
-                    panic!(
-                        "kernel '{}' deadlocked at cycle {now}: no ready warps, no wakes",
-                        spec.name
-                    );
+                    return Err(SimError::Deadlock(self.snapshot(
+                        format!("kernel '{}'", spec.name),
+                        now,
+                        cores.iter(),
+                    )));
+                }
+                // Forward-progress watchdog — identical detection order in
+                // the sharded loop, so snapshots match at any shard count.
+                if self.total_insts == last_insts {
+                    stuck_epochs += 1;
+                    if stuck_epochs >= LIVELOCK_EPOCHS {
+                        let snap =
+                            self.snapshot(format!("kernel '{}'", spec.name), now, cores.iter());
+                        return Err(SimError::Livelock {
+                            snap,
+                            why: format!(
+                                "no instruction retired for {LIVELOCK_EPOCHS} consecutive epochs"
+                            ),
+                        });
+                    }
+                } else {
+                    last_insts = self.total_insts;
+                    stuck_epochs = 0;
                 }
                 self.advance(now, horizon);
 
@@ -872,7 +1089,19 @@ impl Engine {
                     self.mem.sweep_in_flight(last_sweep);
                 }
                 if self.cycle - start_cycle > MAX_KERNEL_CYCLES {
-                    panic!("kernel '{}' exceeded {MAX_KERNEL_CYCLES} cycles", spec.name);
+                    let snap = self.snapshot(
+                        format!("kernel '{}'", spec.name),
+                        self.cycle,
+                        cores.iter(),
+                    );
+                    return Err(SimError::Livelock {
+                        snap,
+                        why: format!("exceeded the {MAX_KERNEL_CYCLES}-cycle safety valve"),
+                    });
+                }
+                epoch += 1;
+                if epoch & DEADLINE_EPOCH_MASK == 0 && self.host_budget_expired() {
+                    return Err(self.host_timeout(format!("kernel '{}'", spec.name)));
                 }
             }
         }
@@ -887,7 +1116,7 @@ impl Engine {
         let acc = l1_after.accesses - l1_before.accesses;
         let hits = (l1_after.local_hits + l1_after.remote_hits)
             - (l1_before.local_hits + l1_before.remote_hits);
-        KernelStats {
+        Ok(KernelStats {
             name: spec.name.clone(),
             cycles: self.cycle - start_cycle,
             insts: self.total_insts - start_insts,
@@ -898,13 +1127,16 @@ impl Engine {
                 stage_lat as f64 / stage_loads as f64
             },
             l1_hit_rate: if acc == 0 { 0.0 } else { hits as f64 / acc as f64 },
-        }
+        })
     }
 }
 
 /// Convenience: run `workload` under `arch` on the paper GPU config.
+/// Panics on simulation failure — direct callers (tests, examples) treat
+/// a failing run as a bug; grid execution goes through [`crate::exec`].
 pub fn run_workload(cfg: &GpuConfig, workload: &Workload) -> SimResult {
-    Engine::new(cfg).run(workload)
+    // lint: allow(sim-panic) — deliberate fail-fast facade over Engine::run
+    Engine::new(cfg).run(workload).expect("simulation failed")
 }
 
 #[cfg(test)]
@@ -1016,8 +1248,8 @@ mod tests {
             })],
         };
         let mut eng = Engine::new(&cfg);
-        let r1 = eng.run(&wl);
-        let r2 = eng.run(&wl);
+        let r1 = eng.run(&wl).unwrap();
+        let r2 = eng.run(&wl).unwrap();
         // Count-based metrics are workload properties — identical runs.
         assert_eq!(r1.insts, r2.insts);
         assert_eq!(r1.l1.accesses, r2.l1.accesses);
@@ -1045,8 +1277,8 @@ mod tests {
         // Determinism: a second engine reproduces both runs bit-identically
         // (including the new contention breakdown).
         let mut eng2 = Engine::new(&cfg);
-        let b1 = eng2.run(&wl);
-        let b2 = eng2.run(&wl);
+        let b1 = eng2.run(&wl).unwrap();
+        let b2 = eng2.run(&wl).unwrap();
         assert_eq!(r1.cycles, b1.cycles);
         assert_eq!(r2.cycles, b2.cycles);
         assert_eq!(r1.l1_mean_load_latency, b1.l1_mean_load_latency);
@@ -1072,9 +1304,9 @@ mod tests {
             ],
         };
         let mut e_on = Engine::new(&cfg_on);
-        let r_on = e_on.run(&wl);
+        let r_on = e_on.run(&wl).unwrap();
         let mut e_off = Engine::new(&cfg_off);
-        let r_off = e_off.run(&wl);
+        let r_off = e_off.run(&wl).unwrap();
         assert_eq!(
             r_on.to_json().pretty(),
             r_off.to_json().pretty(),
@@ -1107,9 +1339,9 @@ mod tests {
             ],
         };
         let mut e_on = Engine::new(&cfg_on);
-        let r_on = e_on.run(&wl);
+        let r_on = e_on.run(&wl).unwrap();
         let mut e_off = Engine::new(&cfg_off);
-        let r_off = e_off.run(&wl);
+        let r_off = e_off.run(&wl).unwrap();
         assert_eq!(
             r_on.to_json().pretty(),
             r_off.to_json().pretty(),
@@ -1147,9 +1379,9 @@ mod tests {
             ],
         };
         let mut e_seq = Engine::new(&cfg);
-        let r_seq = e_seq.run(&wl);
+        let r_seq = e_seq.run(&wl).unwrap();
         let mut e_sh = Engine::new(&cfg_sh);
-        let r_sh = e_sh.run(&wl);
+        let r_sh = e_sh.run(&wl).unwrap();
         assert_eq!(
             r_sh.to_json().pretty(),
             r_seq.to_json().pretty(),
@@ -1190,9 +1422,9 @@ mod tests {
                 },
             ],
         };
-        let r_seq = Engine::new(&cfg).run_multi(&multi);
+        let r_seq = Engine::new(&cfg).run_multi(&multi).unwrap();
         let mut e_sh = Engine::new(&cfg_sh);
-        let r_sh = e_sh.run_multi(&multi);
+        let r_sh = e_sh.run_multi(&multi).unwrap();
         assert_eq!(
             r_sh.to_json().pretty(),
             r_seq.to_json().pretty(),
@@ -1219,8 +1451,8 @@ mod tests {
             ],
         };
         let mut e_seq = Engine::new(&cfg);
-        let r_seq = e_seq.run(&wl);
-        let r_w = Engine::new(&cfg_w).run(&wl);
+        let r_seq = e_seq.run(&wl).unwrap();
+        let r_w = Engine::new(&cfg_w).run(&wl).unwrap();
         assert_eq!(
             r_w.to_json().pretty(),
             r_seq.to_json().pretty(),
@@ -1257,9 +1489,9 @@ mod tests {
                 },
             ],
         };
-        let r_seq = Engine::new(&cfg).run_multi(&multi);
+        let r_seq = Engine::new(&cfg).run_multi(&multi).unwrap();
         let mut e_both = Engine::new(&cfg_both);
-        let r_both = e_both.run_multi(&multi);
+        let r_both = e_both.run_multi(&multi).unwrap();
         assert_eq!(
             r_both.to_json().pretty(),
             r_seq.to_json().pretty(),
@@ -1316,14 +1548,16 @@ mod tests {
                 partition: CorePartition { first: 0, count: 4 },
             }],
         };
-        let mr = Engine::new(&cfg).run_multi(&multi);
+        let mr = Engine::new(&cfg).run_multi(&multi).unwrap();
 
         let mut padded = k;
         padded.programs.resize(cfg.cores, Vec::new());
-        let sr = Engine::new(&cfg).run(&Workload {
-            name: "solo".into(),
-            kernels: vec![padded],
-        });
+        let sr = Engine::new(&cfg)
+            .run(&Workload {
+                name: "solo".into(),
+                kernels: vec![padded],
+            })
+            .unwrap();
         assert_eq!(mr.cycles, sr.cycles);
         assert_eq!(mr.insts, sr.insts);
         assert_eq!(mr.l1.accesses, sr.l1.accesses);
@@ -1354,7 +1588,7 @@ mod tests {
                 },
             ],
         };
-        let r = Engine::new(&cfg).run_multi(&multi);
+        let r = Engine::new(&cfg).run_multi(&multi).unwrap();
         assert_eq!(r.apps[0].kernels.len(), 2, "lane a ran both kernels");
         assert_eq!(r.apps[1].kernels.len(), 1);
         assert_eq!(
@@ -1389,8 +1623,8 @@ mod tests {
                 },
             ],
         };
-        let a = Engine::new(&cfg).run_multi(&multi);
-        let b = Engine::new(&cfg).run_multi(&multi);
+        let a = Engine::new(&cfg).run_multi(&multi).unwrap();
+        let b = Engine::new(&cfg).run_multi(&multi).unwrap();
         assert_eq!(a.cycles, b.cycles);
         assert_eq!(a.insts, b.insts);
         assert_eq!(a.l1.local_hits, b.l1.local_hits);
@@ -1461,7 +1695,7 @@ mod tests {
             })],
         };
         let mut eng = Engine::new(&cfg);
-        let r = eng.run(&wl);
+        let r = eng.run(&wl).unwrap();
         // Every access opened exactly one transaction.
         assert_eq!(r.hops.txns, r.l1.accesses);
         assert!(r.hops.mem_trips > 0, "cold run must dispatch misses");
@@ -1474,7 +1708,7 @@ mod tests {
         // ledger (fire-and-forget writebacks never ride a transaction).
         assert!(r.hops.queued.total() <= r.contention.total());
         // Warm second run: per-run hop deltas, no carry-over.
-        let r2 = eng.run(&wl);
+        let r2 = eng.run(&wl).unwrap();
         assert_eq!(r2.hops.txns, r2.l1.accesses);
         assert!(r2.hops.mem_trips < r.hops.mem_trips, "warm caches fetch less");
     }
@@ -1492,5 +1726,89 @@ mod tests {
             "cold loads include L2+DRAM: {}",
             r1.l1_mean_load_latency
         );
+    }
+
+    #[test]
+    fn injected_deadlock_returns_typed_error_with_snapshot() {
+        let mut cfg = GpuConfig::tiny(L1ArchKind::Private);
+        cfg.engine.fault = crate::config::FaultKind::Deadlock;
+        let wl = Workload {
+            name: "t".into(),
+            kernels: vec![simple_kernel(&cfg, |c| vec![c as u64 * 100])],
+        };
+        let err = Engine::new(&cfg).run(&wl).unwrap_err();
+        let SimError::Deadlock(snap) = &err else {
+            panic!("expected a deadlock, got {err}");
+        };
+        assert_eq!(err.kind(), "deadlock");
+        assert_eq!(snap.what, "kernel 'k'");
+        assert_eq!(snap.cores_total, cfg.cores as u64);
+        assert!(snap.cores_blocked >= 1, "the starved warp's core is blocked");
+        assert!(snap.next_wake.is_none(), "a deadlock has no pending wakes");
+
+        // The sharded loop detects the same deadlock with a byte-identical
+        // snapshot (detection order is pinned across loop variants).
+        let mut cfg_sh = cfg.clone();
+        cfg_sh.engine.shards = 2;
+        let err_sh = Engine::new(&cfg_sh).run(&wl).unwrap_err();
+        assert_eq!(err_sh.snapshot(), Some(snap));
+    }
+
+    #[test]
+    fn injected_livelock_trips_the_forward_progress_watchdog() {
+        let mut cfg = GpuConfig::tiny(L1ArchKind::Private);
+        cfg.engine.fault = crate::config::FaultKind::Livelock;
+        let wl = Workload {
+            name: "t".into(),
+            kernels: vec![simple_kernel(&cfg, |c| vec![c as u64 * 100])],
+        };
+        let err = Engine::new(&cfg).run(&wl).unwrap_err();
+        let SimError::Livelock { snap, why } = &err else {
+            panic!("expected a livelock, got {err}");
+        };
+        assert!(why.contains("no instruction retired"), "{why}");
+        assert!(
+            snap.cycle > LIVELOCK_EPOCHS,
+            "the clock kept advancing while nothing retired: {}",
+            snap.cycle
+        );
+        assert!(snap.next_wake.is_some(), "phantom wakes keep the heap alive");
+        assert!(snap.insts_retired > 0, "warps issued their loads first");
+    }
+
+    #[test]
+    fn invalid_configs_and_shapes_are_typed_errors() {
+        let mut bad = GpuConfig::tiny(L1ArchKind::Private);
+        bad.cores = 0;
+        let err = Engine::try_new(&bad).unwrap_err();
+        assert_eq!(err.kind(), "invalid-config");
+
+        let cfg = GpuConfig::tiny(L1ArchKind::Private);
+        let mut wl = Workload {
+            name: "t".into(),
+            kernels: vec![simple_kernel(&cfg, |c| vec![c as u64])],
+        };
+        wl.kernels[0].programs.pop();
+        let err = Engine::new(&cfg).run(&wl).unwrap_err();
+        assert_eq!(err.kind(), "invalid-config");
+        assert!(err.to_string().contains("core programs"), "{err}");
+    }
+
+    #[test]
+    fn fault_injection_leaves_clean_runs_untouched() {
+        // FaultKind::None must be metric-invisible: the failure knobs can
+        // abort a run, never change one that completes.
+        let cfg = GpuConfig::tiny(L1ArchKind::Ata);
+        let wl = Workload {
+            name: "t".into(),
+            kernels: vec![simple_kernel(&cfg, |c| {
+                (0..8).map(|k| (c as u64 * 31 + k) % 64).collect()
+            })],
+        };
+        let mut with_budget = cfg.clone();
+        with_budget.engine.job_timeout_s = 3600;
+        let a = run_workload(&cfg, &wl);
+        let b = run_workload(&with_budget, &wl);
+        assert_eq!(a.to_json().pretty(), b.to_json().pretty());
     }
 }

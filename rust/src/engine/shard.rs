@@ -73,17 +73,20 @@
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Barrier, Mutex, MutexGuard};
+use std::sync::{Barrier, Mutex, MutexGuard, PoisonError};
 // lint: allow(wall-clock) — per-epoch phase telemetry (ShardStats.tick_ns/walk_ns), stderr-only
 use std::time::Instant;
 
-use crate::config::GpuConfig;
+use crate::config::{FaultKind, GpuConfig};
 use crate::core::{IssueBatch, SimtCore};
 use crate::mem::MemTxn;
 
 use super::{
-    launch_lane, Engine, KernelSpec, LaneRun, MultiWorkload, MAX_KERNEL_CYCLES, SWEEP_PERIOD,
+    horizon_opt, launch_lane, panic_message, Engine, FailSnapshot, KernelSpec, LaneRun,
+    MultiWorkload, SimError, DEADLINE_EPOCH_MASK, LIVELOCK_EPOCHS, MAX_KERNEL_CYCLES,
+    PHANTOM_WAKE_STRIDE, SWEEP_PERIOD,
 };
 
 /// Everything one shard owns: a contiguous range of the GPU's cores (on
@@ -108,6 +111,10 @@ struct ShardState {
     /// Per-shard next-event horizon computed in phase 3: min over the
     /// owned cores' issue hints and the local wake calendar.
     horizon: u64,
+    /// `FaultKind::Livelock` is armed for this run: due wakes bounce
+    /// forward instead of being delivered (mirrors the sequential loops'
+    /// injection site, which is also wake delivery).
+    livelock: bool,
 }
 
 impl ShardState {
@@ -120,8 +127,15 @@ impl ShardState {
                 break;
             }
             self.wakes.pop();
+            if self.livelock {
+                // Injected livelock: bounce the wake forward forever
+                // instead of delivering it.
+                self.wakes.push(Reverse((now + PHANTOM_WAKE_STRIDE, core, warp)));
+                continue;
+            }
             self.cores[core as usize - self.first_core]
                 .as_mut()
+                // lint: allow(sim-panic) — ownership invariant (rule 2); a violation is a bug, contained by the worker's catch_unwind
                 .expect("wake delivered to a vacant core slot")
                 .load_complete(warp, t);
         }
@@ -188,6 +202,7 @@ fn build_shards(
                 ingress: Vec::new(),
                 batches: (0..n_cores).map(|_| IssueBatch::default()).collect(),
                 horizon: u64::MAX,
+                livelock: cfg.engine.fault == FaultKind::Livelock,
             }
         })
         .map(Mutex::new)
@@ -199,7 +214,7 @@ fn build_shards(
 fn core_locations(shards: &[Mutex<ShardState>], cores: usize) -> Vec<(usize, usize)> {
     let mut loc = vec![(usize::MAX, usize::MAX); cores];
     for (si, sh) in shards.iter().enumerate() {
-        let sh = sh.lock().unwrap();
+        let sh = lock_clean(sh);
         for local in 0..sh.cores.len() {
             loc[sh.first_core + local] = (si, local);
         }
@@ -207,24 +222,87 @@ fn core_locations(shards: &[Mutex<ShardState>], cores: usize) -> Vec<(usize, usi
     loc
 }
 
+/// Lock a shard, recovering from poison: a panicking phase body is
+/// contained (`catch_unwind`) and reported as [`SimError::WorkerPanic`],
+/// after which the shard state is only read for teardown — the poison
+/// flag carries no information the failure record doesn't.
+fn lock_clean(m: &Mutex<ShardState>) -> MutexGuard<'_, ShardState> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// First-failure latch for panics contained in any phase body, worker or
+/// coordinator.  Only the first recorded failure is reported (a second
+/// panic is almost always a casualty of the first).
+struct WorkerFailure {
+    hit: AtomicBool,
+    message: Mutex<Option<(String, String)>>,
+}
+
+impl WorkerFailure {
+    fn new() -> Self {
+        WorkerFailure {
+            hit: AtomicBool::new(false),
+            message: Mutex::new(None),
+        }
+    }
+
+    fn record(&self, what: &str, payload: &(dyn std::any::Any + Send)) {
+        let mut slot = self.message.lock().unwrap_or_else(PoisonError::into_inner);
+        if slot.is_none() {
+            *slot = Some((what.to_string(), panic_message(payload)));
+        }
+        drop(slot);
+        self.hit.store(true, Ordering::Release);
+    }
+
+    fn take(&self) -> SimError {
+        let slot = self.message.lock().unwrap_or_else(PoisonError::into_inner);
+        let (what, message) = slot
+            .clone()
+            .unwrap_or_else(|| ("shard worker".to_string(), "unrecorded failure".to_string()));
+        SimError::WorkerPanic { what, message }
+    }
+}
+
 /// The worker side of the barrier choreography.  Four waits per epoch:
 /// tick-go (shutdown checked), tick-done, drain-go (shutdown checked),
 /// drain-done.  The coordinator owns shard 0 and participates in every
 /// wait, so the barrier counts `n_shards` threads total.
-fn worker(shard: &Mutex<ShardState>, barrier: &Barrier, stop: &AtomicBool, clock: &AtomicU64) {
+///
+/// Containment: each phase body runs under `catch_unwind`, so a panic in
+/// one shard's tick or drain never unwinds across the barrier — the
+/// worker records the failure, keeps honoring the barrier cadence (work
+/// skipped), and exits through the normal stop-flag path once the
+/// coordinator notices and shuts the epoch down.
+fn worker(
+    shard: &Mutex<ShardState>,
+    barrier: &Barrier,
+    stop: &AtomicBool,
+    clock: &AtomicU64,
+    failed: &WorkerFailure,
+) {
     loop {
         barrier.wait(); // tick-go
         if stop.load(Ordering::Acquire) {
             return;
         }
-        let now = clock.load(Ordering::Acquire);
-        shard.lock().unwrap().tick_epoch(now);
+        if !failed.hit.load(Ordering::Acquire) {
+            let now = clock.load(Ordering::Acquire);
+            if let Err(p) = catch_unwind(AssertUnwindSafe(|| lock_clean(shard).tick_epoch(now))) {
+                failed.record("shard worker (tick)", p.as_ref());
+            }
+        }
         barrier.wait(); // tick-done; the coordinator runs the serial walk
         barrier.wait(); // drain-go
         if stop.load(Ordering::Acquire) {
             return;
         }
-        shard.lock().unwrap().drain_and_horizon();
+        if !failed.hit.load(Ordering::Acquire) {
+            if let Err(p) = catch_unwind(AssertUnwindSafe(|| lock_clean(shard).drain_and_horizon()))
+            {
+                failed.record("shard worker (drain)", p.as_ref());
+            }
+        }
         barrier.wait(); // drain-done
     }
 }
@@ -234,7 +312,49 @@ fn worker(shard: &Mutex<ShardState>, barrier: &Barrier, stop: &AtomicBool, clock
 /// uncontended; they exist to satisfy the borrow checker across the
 /// scoped-thread boundary, not to arbitrate.
 fn lock_all<'a>(shards: &'a [Mutex<ShardState>]) -> Vec<MutexGuard<'a, ShardState>> {
-    shards.iter().map(|m| m.lock().unwrap()).collect()
+    shards.iter().map(lock_clean).collect()
+}
+
+/// Diagnostic snapshot over the per-shard slots — field-for-field the
+/// same picture `Engine::snapshot` takes of the sequential loops' cores,
+/// at the same detection point of the same epoch, so a failing run
+/// serializes identically at any `--shards` setting.
+fn snapshot(
+    eng: &Engine,
+    shards: &[Mutex<ShardState>],
+    what: String,
+    now: u64,
+) -> FailSnapshot {
+    let mut cores_total = 0;
+    let mut cores_blocked = 0;
+    let mut wake_depth = 0;
+    let mut next_core = u64::MAX;
+    let mut next_wake = u64::MAX;
+    for m in shards {
+        let g = lock_clean(m);
+        for core in g.cores.iter().flatten() {
+            cores_total += 1;
+            if !core.all_done() {
+                cores_blocked += 1;
+            }
+            next_core = next_core.min(core.next_event_hint());
+        }
+        wake_depth += g.wakes.len() as u64;
+        if let Some(Reverse((t, _, _))) = g.wakes.peek() {
+            next_wake = next_wake.min(*t);
+        }
+    }
+    FailSnapshot {
+        what,
+        cycle: now,
+        cores_total,
+        cores_blocked,
+        insts_retired: eng.total_insts,
+        wake_depth,
+        next_core_event: horizon_opt(next_core),
+        next_wake: horizon_opt(next_wake),
+        mem_horizon: eng.mem.next_event(now),
+    }
 }
 
 /// Release the workers into shutdown: they re-check `stop` right after
@@ -254,104 +374,165 @@ pub(super) fn kernel_loop(
     spec: &KernelSpec,
     cores: Vec<SimtCore>,
     n_shards: usize,
-) {
+) -> Result<(), SimError> {
     let start_cycle = eng.cycle;
     let shards = build_shards(cores.into_iter().map(Some).collect(), &eng.cfg, n_shards);
     eng.shard_stats.shard_count = n_shards as u64;
     let barrier = Barrier::new(n_shards);
     let stop = AtomicBool::new(false);
     let clock = AtomicU64::new(eng.cycle);
+    let failed = WorkerFailure::new();
     let mut last_sweep = eng.cycle;
     let mut open: Vec<(usize, MemTxn, u32)> = Vec::new();
+    let mut stuck_epochs: u64 = 0;
+    let mut last_insts = eng.total_insts;
+    let mut epoch: u64 = 0;
 
-    std::thread::scope(|s| { // lint: allow(shard-confinement) — the shard module's own worker fan-out
+    let run = std::thread::scope(|s| -> Result<(), SimError> { // lint: allow(shard-confinement) — the shard module's own worker fan-out
         for sh in shards.iter().skip(1) {
-            let (barrier, stop, clock) = (&barrier, &stop, &clock);
-            s.spawn(move || worker(sh, barrier, stop, clock));
+            let (barrier, stop, clock, failed) = (&barrier, &stop, &clock, &failed);
+            s.spawn(move || worker(sh, barrier, stop, clock, failed));
         }
         loop {
             let now = eng.cycle;
             clock.store(now, Ordering::Release);
             let t_tick = Instant::now(); // lint: allow(wall-clock) — stderr-only phase telemetry (ShardStats)
             barrier.wait(); // tick-go
-            shards[0].lock().unwrap().tick_epoch(now);
+            if let Err(p) =
+                catch_unwind(AssertUnwindSafe(|| lock_clean(&shards[0]).tick_epoch(now)))
+            {
+                failed.record("shard coordinator (tick)", p.as_ref());
+            }
             barrier.wait(); // tick-done
             eng.shard_stats.tick_ns += t_tick.elapsed().as_nanos() as u64;
+            if failed.hit.load(Ordering::Acquire) {
+                release_and_stop(&barrier, &stop); // workers park next at drain-go
+                return Err(failed.take());
+            }
 
             // Memory walk as one phased epoch — rule 1: shared state
             // mutates in canonical (ascending global core) order.  The B1
             // front end and B3 finish run here on the coordinator; only
             // the per-slice walk between them fans out (`mem_workers`).
+            // The whole phase is contained: a panic anywhere in the walk
+            // becomes a WorkerPanic through the stop-flag shutdown, never
+            // an unwind across the barrier that would hang the workers.
             let t_walk = Instant::now(); // lint: allow(wall-clock) — stderr-only phase telemetry (ShardStats)
-            let mut guards = lock_all(&shards);
-            eng.mem.begin_epoch();
-            open.clear();
-            let mut prev_group: Option<(u32, u32, u64)> = None;
-            for (si, g) in guards.iter().enumerate() {
-                for batch in g.batches.iter() {
-                    eng.total_insts += batch.insts_issued;
-                    for (req, group_n) in batch.requests.iter() {
-                        if *group_n > 0 {
-                            let key = (req.core, req.warp, req.inst);
-                            if prev_group != Some(key) {
-                                eng.tracker.issue(req.core, req.warp, req.inst, *group_n, now);
-                                eng.stage_tracker
-                                    .issue(req.core, req.warp, req.inst, *group_n, now);
-                                prev_group = Some(key);
+            let walk = catch_unwind(AssertUnwindSafe(|| -> Result<bool, SimError> {
+                let mut guards = lock_all(&shards);
+                eng.mem.begin_epoch();
+                open.clear();
+                let mut prev_group: Option<(u32, u32, u64)> = None;
+                for (si, g) in guards.iter().enumerate() {
+                    for batch in g.batches.iter() {
+                        eng.total_insts += batch.insts_issued;
+                        for (req, group_n) in batch.requests.iter() {
+                            if *group_n > 0 {
+                                let key = (req.core, req.warp, req.inst);
+                                if prev_group != Some(key) {
+                                    eng.tracker.issue(req.core, req.warp, req.inst, *group_n, now);
+                                    eng.stage_tracker
+                                        .issue(req.core, req.warp, req.inst, *group_n, now);
+                                    prev_group = Some(key);
+                                }
+                            }
+                            let mut txn = MemTxn::new(*req, now);
+                            eng.l1.access(&mut txn, &mut eng.mem);
+                            open.push((si, txn, *group_n));
+                        }
+                    }
+                }
+                eng.mem.run_walk()?;
+                for (si, mut txn, group_n) in open.drain(..) {
+                    eng.l1.finish(&mut txn, &mut eng.mem);
+                    eng.hops.record(&txn.hops, &txn.queued);
+                    if txn.hops.l2_dispatch > 0 {
+                        eng.shard_stats.egress_txns += 1;
+                    }
+                    if group_n > 0 {
+                        let (core, warp, inst) = (txn.req.core, txn.req.warp, txn.req.inst);
+                        eng.stage_tracker.complete_one(core, warp, inst, txn.l1_stage_done());
+                        if let Some(load_done) =
+                            eng.tracker.complete_one(core, warp, inst, txn.done())
+                        {
+                            if eng.fault_deadlock_armed {
+                                // Injected deadlock: swallow the first
+                                // completion wake (canonical order makes
+                                // it the same wake the sequential loop
+                                // swallows); its warp blocks forever.
+                                eng.fault_deadlock_armed = false;
+                            } else {
+                                // Rule 2: the wake returns to the issuing
+                                // core's own shard, via its ingress FIFO.
+                                guards[si].ingress.push((load_done.max(now + 1), core, warp));
+                                eng.shard_stats.ingress_wakes += 1;
                             }
                         }
-                        let mut txn = MemTxn::new(*req, now);
-                        eng.l1.access(&mut txn, &mut eng.mem);
-                        open.push((si, txn, *group_n));
                     }
                 }
-            }
-            eng.mem.run_walk();
-            for (si, mut txn, group_n) in open.drain(..) {
-                eng.l1.finish(&mut txn, &mut eng.mem);
-                eng.hops.record(&txn.hops, &txn.queued);
-                if txn.hops.l2_dispatch > 0 {
-                    eng.shard_stats.egress_txns += 1;
-                }
-                if group_n > 0 {
-                    let (core, warp, inst) = (txn.req.core, txn.req.warp, txn.req.inst);
-                    eng.stage_tracker.complete_one(core, warp, inst, txn.l1_stage_done());
-                    if let Some(load_done) = eng.tracker.complete_one(core, warp, inst, txn.done())
-                    {
-                        // Rule 2: the wake returns to the issuing core's
-                        // own shard, through its ingress FIFO.
-                        guards[si].ingress.push((load_done.max(now + 1), core, warp));
-                        eng.shard_stats.ingress_wakes += 1;
-                    }
-                }
-            }
-            eng.mem.end_epoch();
+                eng.mem.end_epoch();
+                Ok(guards.iter().all(|g| g.all_done()))
+            }));
             eng.shard_stats.epochs += 1;
             eng.shard_stats.walk_ns += t_walk.elapsed().as_nanos() as u64;
-            let finished = guards.iter().all(|g| g.all_done());
-            drop(guards);
+            let finished = match walk {
+                Ok(Ok(done)) => done,
+                Ok(Err(e)) => {
+                    release_and_stop(&barrier, &stop); // workers park next at drain-go
+                    return Err(e);
+                }
+                Err(p) => {
+                    failed.record("shard coordinator (memory walk)", p.as_ref());
+                    release_and_stop(&barrier, &stop); // workers park next at drain-go
+                    return Err(failed.take());
+                }
+            };
 
             if finished {
                 release_and_stop(&barrier, &stop); // drain-go doubles as shutdown
-                break;
+                return Ok(());
             }
             barrier.wait(); // drain-go
-            shards[0].lock().unwrap().drain_and_horizon();
+            if let Err(p) =
+                catch_unwind(AssertUnwindSafe(|| lock_clean(&shards[0]).drain_and_horizon()))
+            {
+                failed.record("shard coordinator (drain)", p.as_ref());
+            }
             barrier.wait(); // drain-done
+            if failed.hit.load(Ordering::Acquire) {
+                release_and_stop(&barrier, &stop); // workers park next at tick-go
+                return Err(failed.take());
+            }
 
             // Rule 3: time is reduced, never raced — min over per-shard
             // horizons equals the unsharded global horizon.
             let horizon = shards
                 .iter()
-                .map(|m| m.lock().unwrap().horizon)
+                .map(|m| lock_clean(m).horizon)
                 .min()
                 .unwrap_or(u64::MAX);
             if horizon == u64::MAX {
+                let snap = snapshot(eng, &shards, format!("kernel '{}'", spec.name), now);
                 release_and_stop(&barrier, &stop); // park point is tick-go
-                panic!(
-                    "kernel '{}' deadlocked at cycle {now}: no ready warps, no wakes",
-                    spec.name
-                );
+                return Err(SimError::Deadlock(snap));
+            }
+            // Forward-progress watchdog — identical detection order to the
+            // sequential loop, so snapshots match at any shard count.
+            if eng.total_insts == last_insts {
+                stuck_epochs += 1;
+                if stuck_epochs >= LIVELOCK_EPOCHS {
+                    let snap = snapshot(eng, &shards, format!("kernel '{}'", spec.name), now);
+                    release_and_stop(&barrier, &stop); // park point is tick-go
+                    return Err(SimError::Livelock {
+                        snap,
+                        why: format!(
+                            "no instruction retired for {LIVELOCK_EPOCHS} consecutive epochs"
+                        ),
+                    });
+                }
+            } else {
+                last_insts = eng.total_insts;
+                stuck_epochs = 0;
             }
             eng.advance(now, horizon);
             while eng.cycle - last_sweep >= SWEEP_PERIOD {
@@ -360,15 +541,27 @@ pub(super) fn kernel_loop(
                 eng.mem.sweep_in_flight(last_sweep);
             }
             if eng.cycle - start_cycle > MAX_KERNEL_CYCLES {
-                release_and_stop(&barrier, &stop);
-                panic!("kernel '{}' exceeded {MAX_KERNEL_CYCLES} cycles", spec.name);
+                let snap = snapshot(eng, &shards, format!("kernel '{}'", spec.name), eng.cycle);
+                release_and_stop(&barrier, &stop); // park point is tick-go
+                return Err(SimError::Livelock {
+                    snap,
+                    why: format!("exceeded the {MAX_KERNEL_CYCLES}-cycle safety valve"),
+                });
+            }
+            epoch += 1;
+            if epoch & DEADLINE_EPOCH_MASK == 0 && eng.host_budget_expired() {
+                release_and_stop(&barrier, &stop); // park point is tick-go
+                return Err(eng.host_timeout(format!("kernel '{}'", spec.name)));
             }
         }
     });
-    debug_assert!(shards.iter().all(|m| {
-        let g = m.lock().unwrap();
-        g.wakes.is_empty() && g.ingress.is_empty()
-    }));
+    if run.is_ok() {
+        debug_assert!(shards.iter().all(|m| {
+            let g = lock_clean(m);
+            g.wakes.is_empty() && g.ingress.is_empty()
+        }));
+    }
+    run
 }
 
 /// The sharded replacement for [`Engine::run_multi`]'s cycle loop.  Lane
@@ -384,7 +577,7 @@ pub(super) fn multi_loop(
     start_cycle: u64,
     max_cycles: u64,
     n_shards: usize,
-) {
+) -> Result<(), SimError> {
     // Move every lane's cores into global slots (lane.cores stays empty
     // for the rest of the run, exactly like a finished lane's would).
     let mut slots: Vec<Option<SimtCore>> = (0..eng.cfg.cores).map(|_| None).collect();
@@ -400,24 +593,39 @@ pub(super) fn multi_loop(
     let barrier = Barrier::new(n_shards);
     let stop = AtomicBool::new(false);
     let clock = AtomicU64::new(eng.cycle);
+    let failed = WorkerFailure::new();
     let mut last_sweep = eng.cycle;
     let mut open: Vec<(usize, usize, MemTxn, u32)> = Vec::new();
+    let mut stuck_epochs: u64 = 0;
+    let mut last_insts = eng.total_insts;
+    let mut epoch: u64 = 0;
 
-    std::thread::scope(|s| { // lint: allow(shard-confinement) — the shard module's own worker fan-out
+    let run = std::thread::scope(|s| -> Result<(), SimError> { // lint: allow(shard-confinement) — the shard module's own worker fan-out
         for sh in shards.iter().skip(1) {
-            let (barrier, stop, clock) = (&barrier, &stop, &clock);
-            s.spawn(move || worker(sh, barrier, stop, clock));
+            let (barrier, stop, clock, failed) = (&barrier, &stop, &clock, &failed);
+            s.spawn(move || worker(sh, barrier, stop, clock, failed));
         }
         loop {
             let now = eng.cycle;
             clock.store(now, Ordering::Release);
             let t_tick = Instant::now(); // lint: allow(wall-clock) — stderr-only phase telemetry (ShardStats)
             barrier.wait(); // tick-go
-            shards[0].lock().unwrap().tick_epoch(now);
+            if let Err(p) =
+                catch_unwind(AssertUnwindSafe(|| lock_clean(&shards[0]).tick_epoch(now)))
+            {
+                failed.record("shard coordinator (tick)", p.as_ref());
+            }
             barrier.wait(); // tick-done
             eng.shard_stats.tick_ns += t_tick.elapsed().as_nanos() as u64;
+            if failed.hit.load(Ordering::Acquire) {
+                release_and_stop(&barrier, &stop); // workers park next at drain-go
+                return Err(failed.take());
+            }
 
+            // The whole serial phase (attribution, walk, lane completion)
+            // is contained — see kernel_loop for the shutdown choreography.
             let t_walk = Instant::now(); // lint: allow(wall-clock) — stderr-only phase telemetry (ShardStats)
+            let walk = catch_unwind(AssertUnwindSafe(|| -> Result<bool, SimError> {
             let mut guards = lock_all(&shards);
 
             // Attribute issued instructions per lane (the unsharded loop
@@ -467,7 +675,7 @@ pub(super) fn multi_loop(
                     }
                 }
             }
-            eng.mem.run_walk();
+            eng.mem.run_walk()?;
             for (li, si, mut txn, group_n) in open.drain(..) {
                 eng.l1.finish(&mut txn, &mut eng.mem);
                 eng.hops.record(&txn.hops, &txn.queued);
@@ -480,14 +688,20 @@ pub(super) fn multi_loop(
                     lane.stage_tracker.complete_one(core, warp, inst, txn.l1_stage_done());
                     if let Some(load_done) = lane.tracker.complete_one(core, warp, inst, txn.done())
                     {
-                        guards[si].ingress.push((load_done.max(now + 1), core, warp));
-                        eng.shard_stats.ingress_wakes += 1;
+                        if eng.fault_deadlock_armed {
+                            // Injected deadlock: swallow the first
+                            // completion wake (same wake as the sequential
+                            // loop — canonical order); its warp blocks
+                            // forever.
+                            eng.fault_deadlock_armed = false;
+                        } else {
+                            guards[si].ingress.push((load_done.max(now + 1), core, warp));
+                            eng.shard_stats.ingress_wakes += 1;
+                        }
                     }
                 }
             }
             eng.mem.end_epoch();
-            eng.shard_stats.epochs += 1;
-            eng.shard_stats.walk_ns += t_walk.elapsed().as_nanos() as u64;
 
             // Kernel completion per lane, in declaration order — the
             // coordinator owns relaunch, so new cores appear in their
@@ -499,6 +713,7 @@ pub(super) fn multi_loop(
                         let (si, local) = loc[partition.global(j)];
                         guards[si].cores[local]
                             .as_ref()
+                            // lint: allow(sim-panic) — ownership invariant; a violation is a bug, contained by the coordinator's catch_unwind
                             .expect("active lane core slot vacated")
                             .all_done()
                     })
@@ -526,25 +741,68 @@ pub(super) fn multi_loop(
                 }
             }
 
-            let finished = lanes.iter().all(|l| l.done);
-            drop(guards);
+            Ok(lanes.iter().all(|l| l.done))
+            }));
+            eng.shard_stats.epochs += 1;
+            eng.shard_stats.walk_ns += t_walk.elapsed().as_nanos() as u64;
+            let finished = match walk {
+                Ok(Ok(done)) => done,
+                Ok(Err(e)) => {
+                    release_and_stop(&barrier, &stop); // workers park next at drain-go
+                    return Err(e);
+                }
+                Err(p) => {
+                    failed.record("shard coordinator (memory walk)", p.as_ref());
+                    release_and_stop(&barrier, &stop); // workers park next at drain-go
+                    return Err(failed.take());
+                }
+            };
 
             if finished {
                 release_and_stop(&barrier, &stop); // drain-go doubles as shutdown
-                break;
+                return Ok(());
             }
             barrier.wait(); // drain-go
-            shards[0].lock().unwrap().drain_and_horizon();
+            if let Err(p) =
+                catch_unwind(AssertUnwindSafe(|| lock_clean(&shards[0]).drain_and_horizon()))
+            {
+                failed.record("shard coordinator (drain)", p.as_ref());
+            }
             barrier.wait(); // drain-done
+            if failed.hit.load(Ordering::Acquire) {
+                release_and_stop(&barrier, &stop); // workers park next at tick-go
+                return Err(failed.take());
+            }
 
             let horizon = shards
                 .iter()
-                .map(|m| m.lock().unwrap().horizon)
+                .map(|m| lock_clean(m).horizon)
                 .min()
                 .unwrap_or(u64::MAX);
             if horizon == u64::MAX {
+                let snap =
+                    snapshot(eng, &shards, format!("co-execution '{}'", multi.name), now);
                 release_and_stop(&barrier, &stop); // park point is tick-go
-                panic!("co-execution '{}' deadlocked at cycle {now}", multi.name);
+                return Err(SimError::Deadlock(snap));
+            }
+            // Forward-progress watchdog — identical detection order to the
+            // sequential loop, so snapshots match at any shard count.
+            if eng.total_insts == last_insts {
+                stuck_epochs += 1;
+                if stuck_epochs >= LIVELOCK_EPOCHS {
+                    let snap =
+                        snapshot(eng, &shards, format!("co-execution '{}'", multi.name), now);
+                    release_and_stop(&barrier, &stop); // park point is tick-go
+                    return Err(SimError::Livelock {
+                        snap,
+                        why: format!(
+                            "no instruction retired for {LIVELOCK_EPOCHS} consecutive epochs"
+                        ),
+                    });
+                }
+            } else {
+                last_insts = eng.total_insts;
+                stuck_epochs = 0;
             }
             eng.advance(now, horizon);
             while eng.cycle - last_sweep >= SWEEP_PERIOD {
@@ -553,13 +811,30 @@ pub(super) fn multi_loop(
                 eng.mem.sweep_in_flight(last_sweep);
             }
             if eng.cycle - start_cycle > max_cycles {
-                release_and_stop(&barrier, &stop);
-                panic!("co-execution '{}' exceeded {max_cycles} cycles", multi.name);
+                let snap = snapshot(
+                    eng,
+                    &shards,
+                    format!("co-execution '{}'", multi.name),
+                    eng.cycle,
+                );
+                release_and_stop(&barrier, &stop); // park point is tick-go
+                return Err(SimError::Livelock {
+                    snap,
+                    why: format!("exceeded the {max_cycles}-cycle safety valve"),
+                });
+            }
+            epoch += 1;
+            if epoch & DEADLINE_EPOCH_MASK == 0 && eng.host_budget_expired() {
+                release_and_stop(&barrier, &stop); // park point is tick-go
+                return Err(eng.host_timeout(format!("co-execution '{}'", multi.name)));
             }
         }
     });
-    debug_assert!(shards.iter().all(|m| {
-        let g = m.lock().unwrap();
-        g.wakes.is_empty() && g.ingress.is_empty()
-    }));
+    if run.is_ok() {
+        debug_assert!(shards.iter().all(|m| {
+            let g = lock_clean(m);
+            g.wakes.is_empty() && g.ingress.is_empty()
+        }));
+    }
+    run
 }

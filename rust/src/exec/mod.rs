@@ -37,16 +37,34 @@
 //! Together these make `--threads N` output byte-identical to
 //! `--threads 1` (pinned by `rust/tests/exec_determinism.rs` and the
 //! golden-equivalence fixture).
+//!
+//! # Failure isolation
+//!
+//! A job that cannot complete — a typed [`SimError`] out of the engine,
+//! or a panic anywhere inside the simulation — becomes a
+//! [`JobOutput::Failed`] slot carrying a [`JobError`]; the rest of the
+//! grid always runs to completion.  Failures are *data* and inherit the
+//! determinism contract: [`JobRunner::run_grid`] retries any job that
+//! failed under parallel intra-job execution once serially
+//! (`shards=1`/`mem-workers=1`), so the serialized error (snapshot
+//! included) is always the serial one, byte-identical at any
+//! `--threads`/`--shards`/`--mem-workers`.  A job that *succeeds* on
+//! that serial retry is reported in [`GridOutcome::degraded`] — a
+//! host-level flake indicator, deliberately kept out of the result JSON.
 
 pub mod grid;
 pub mod runner;
 
 pub use grid::{ConfigVariant, ScenarioGrid};
-pub use runner::JobRunner;
+pub use runner::{GridOutcome, JobRunner};
+
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 
 use crate::config::GpuConfig;
-use crate::engine::{Engine, MultiWorkload, Workload};
+use crate::engine::{panic_message, Engine, FailSnapshot, MultiWorkload, SimError, Workload};
 use crate::stats::{MultiResult, SimResult};
+use crate::util::json::Json;
 use crate::util::rng::{Pcg32, SplitMix64};
 
 /// Derive a job's seed from the grid seed and its submission index —
@@ -118,39 +136,200 @@ impl SimJob {
     }
 
     /// Run the simulation on a fresh engine.  Called on a worker thread;
-    /// everything the run touches is owned by the job.
+    /// everything the run touches is owned by the job.  A typed engine
+    /// failure becomes [`JobOutput::Failed`]; a *panic* still unwinds
+    /// (contained one level up by [`run_contained`](Self::run_contained)).
     pub fn run(&self) -> JobOutput {
-        match &self.work {
-            JobWork::Solo(wl) => JobOutput::Solo(Engine::new(&self.cfg).run(wl)),
-            JobWork::Multi(m) => JobOutput::Multi(Engine::new(&self.cfg).run_multi(m)),
+        let res = (|| -> Result<JobOutput, SimError> {
+            let mut eng = Engine::try_new(&self.cfg)?;
+            match &self.work {
+                JobWork::Solo(wl) => Ok(JobOutput::Solo(eng.run(wl)?)),
+                JobWork::Multi(m) => Ok(JobOutput::Multi(eng.run_multi(m)?)),
+            }
+        })();
+        res.unwrap_or_else(|e| JobOutput::Failed(JobError::from_sim(&self.label, &e)))
+    }
+
+    /// [`run`](Self::run) with panic containment: a panic anywhere inside
+    /// the simulation (including one a shard coordinator re-raised) is
+    /// converted into a `worker-panic` [`JobError`] instead of unwinding
+    /// into the pool.  This is the entry point grid execution uses.
+    pub fn run_contained(&self) -> JobOutput {
+        match catch_unwind(AssertUnwindSafe(|| self.run())) {
+            Ok(out) => out,
+            Err(payload) => JobOutput::Failed(JobError {
+                job: self.label.clone(),
+                kind: "worker-panic".to_string(),
+                message: panic_message(payload.as_ref()),
+                snapshot: None,
+            }),
+        }
+    }
+
+    /// Does this job fan out across host threads internally?
+    pub fn is_parallel(&self) -> bool {
+        self.cfg.engine.shards > 1 || self.cfg.engine.mem_workers > 1
+    }
+
+    /// The same job pinned to fully serial intra-job execution
+    /// (`shards=1`, `mem-workers=1`) — the degradation retry target.
+    /// Both knobs are host-parallelism only, so a twin that completes
+    /// produces byte-identical results to what the parallel run would
+    /// have produced.
+    pub fn serial_twin(&self) -> SimJob {
+        let mut twin = self.clone();
+        twin.cfg.engine.shards = 1;
+        twin.cfg.engine.mem_workers = 1;
+        twin
+    }
+}
+
+/// A serialized-ready record of one job's failure.  `kind` is
+/// [`SimError::kind`] (or `"worker-panic"` for a contained panic),
+/// `snapshot` the deterministic diagnostic picture for the variants that
+/// carry one.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobError {
+    /// The failed job's label.
+    pub job: String,
+    /// Stable failure class: `deadlock`, `livelock`, `worker-panic`,
+    /// `invalid-config`, `host-timeout`.
+    pub kind: String,
+    /// Human-readable one-liner (the `SimError` display or panic text).
+    pub message: String,
+    pub snapshot: Option<FailSnapshot>,
+}
+
+impl JobError {
+    pub fn from_sim(label: &str, e: &SimError) -> JobError {
+        JobError {
+            job: label.to_string(),
+            kind: e.kind().to_string(),
+            message: e.to_string(),
+            snapshot: e.snapshot().cloned(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("job", self.job.as_str().into()),
+            ("kind", self.kind.as_str().into()),
+            ("message", self.message.as_str().into()),
+            (
+                "snapshot",
+                match &self.snapshot {
+                    Some(s) => s.to_json(),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> JobError {
+        let s = |k: &str| j.get(k).and_then(Json::as_str).unwrap_or_default().to_string();
+        JobError {
+            job: s("job"),
+            kind: s("kind"),
+            message: s("message"),
+            snapshot: j
+                .get("snapshot")
+                .filter(|s| !matches!(s, Json::Null))
+                .map(FailSnapshot::from_json),
         }
     }
 }
 
-/// A finished job's result, mirroring [`JobWork`].
+/// A finished job's outcome, mirroring [`JobWork`] — plus the
+/// fault-isolation slot: a job that could not complete parks its typed
+/// [`JobError`] here and the grid keeps going.
 #[derive(Debug, Clone)]
 pub enum JobOutput {
     Solo(SimResult),
     Multi(MultiResult),
+    Failed(JobError),
 }
 
 impl JobOutput {
     /// Unwrap a solo result (panics on a co-execution job — grids are
-    /// homogeneous, so a mismatch is a construction bug).
+    /// homogeneous, so a mismatch is a construction bug — and on a failed
+    /// job; surfaces that tolerate failures match on `Failed` first).
     pub fn into_solo(self) -> SimResult {
         match self {
             JobOutput::Solo(r) => r,
             JobOutput::Multi(r) => panic!("expected a solo result, got co-run '{}'", r.name),
+            JobOutput::Failed(e) => panic!("job '{}' failed: {}", e.job, e.message),
         }
     }
 
-    /// Unwrap a co-execution result (panics on a solo job).
+    /// Unwrap a co-execution result (panics on a solo or failed job).
     pub fn into_multi(self) -> MultiResult {
         match self {
             JobOutput::Multi(r) => r,
             JobOutput::Solo(r) => panic!("expected a co-run result, got solo '{}'", r.app),
+            JobOutput::Failed(e) => panic!("job '{}' failed: {}", e.job, e.message),
         }
     }
+
+    /// The failure record, if this job failed.
+    pub fn failure(&self) -> Option<&JobError> {
+        match self {
+            JobOutput::Failed(e) => Some(e),
+            _ => None,
+        }
+    }
+
+    /// Tagged serialization (`{"kind": "solo"|"multi"|"failed", ...}`) —
+    /// one manifest line's `output` value.
+    pub fn to_json(&self) -> Json {
+        match self {
+            JobOutput::Solo(r) => Json::obj(vec![("kind", "solo".into()), ("result", r.to_json())]),
+            JobOutput::Multi(r) => Json::obj(vec![("kind", "multi".into()), ("result", r.to_json())]),
+            JobOutput::Failed(e) => Json::obj(vec![("kind", "failed".into()), ("error", e.to_json())]),
+        }
+    }
+
+    /// Inverse of [`to_json`](Self::to_json); `None` on an unknown tag
+    /// (a manifest from an incompatible build is skipped, not trusted).
+    pub fn from_json(j: &Json) -> Option<JobOutput> {
+        match j.get("kind").and_then(Json::as_str)? {
+            "solo" => Some(JobOutput::Solo(SimResult::from_json(j.get("result")?))),
+            "multi" => Some(JobOutput::Multi(MultiResult::from_json(j.get("result")?))),
+            "failed" => Some(JobOutput::Failed(JobError::from_json(j.get("error")?))),
+            _ => None,
+        }
+    }
+}
+
+/// Completed jobs keyed by label — what `--resume` loads from a manifest.
+/// A `BTreeMap` so any iteration a caller does is ordered.
+pub type ResumeCache = BTreeMap<String, JobOutput>;
+
+/// One completed-job manifest line (JSONL):
+/// `{"job": <label>, "output": {"kind": ..., ...}}`.
+pub fn manifest_line(label: &str, out: &JobOutput) -> String {
+    Json::obj(vec![("job", label.into()), ("output", out.to_json())]).to_string()
+}
+
+/// Parse a JSONL manifest into a [`ResumeCache`].  Unparseable or
+/// unknown-tag lines are skipped (a partial line from an interrupted run
+/// must not poison the resume), and a later line for the same label wins.
+pub fn parse_manifest(text: &str) -> ResumeCache {
+    let mut cache = ResumeCache::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Ok(j) = Json::parse(line) else { continue };
+        let (Some(label), Some(out)) = (
+            j.get("job").and_then(Json::as_str),
+            j.get("output").and_then(JobOutput::from_json),
+        ) else {
+            continue;
+        };
+        cache.insert(label.to_string(), out);
+    }
+    cache
 }
 
 #[cfg(test)]
@@ -193,7 +372,7 @@ mod tests {
         let wl = synth::locality_knob(0.8, 0.25).workload(&cfg);
         let job = SimJob::solo("base/ata/synth", cfg.clone(), job_seed(cfg.seed, 0), wl.clone());
         let r = job.run().into_solo();
-        let direct = Engine::new(&cfg).run(&wl);
+        let direct = Engine::new(&cfg).run(&wl).unwrap();
         assert_eq!(r.cycles, direct.cycles);
         assert_eq!(r.insts, direct.insts);
         assert_eq!(r.l1.local_hits, direct.l1.local_hits);

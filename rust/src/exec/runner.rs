@@ -1,9 +1,12 @@
 //! The worker pool: work-stealing by index, results in submission order.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, PoisonError};
 
-use super::{JobOutput, SimJob};
+use crate::engine::panic_message;
+
+use super::{JobOutput, ResumeCache, SimJob};
 
 /// A bounded worker pool over `std::thread::scope`.
 ///
@@ -39,9 +42,12 @@ impl JobRunner {
         self.threads
     }
 
-    /// Run every job and return the outputs **in submission order**.
+    /// Run every job and return the outputs **in submission order**, each
+    /// fault-isolated: a typed engine failure or a panic inside a job
+    /// becomes that job's [`JobOutput::Failed`] slot while the rest of the
+    /// list completes normally (see [`SimJob::run_contained`]).
     pub fn run(&self, jobs: &[SimJob]) -> Vec<JobOutput> {
-        self.run_map(jobs, |_, job| job.run())
+        self.run_map(jobs, |_, job| job.run_contained())
     }
 
     /// Generic deterministic fan-out: apply `f(index, item)` to every
@@ -51,6 +57,13 @@ impl JobRunner {
     /// self-contained state) — the pool guarantees *ordering* of results,
     /// and only pure jobs extend that to byte-identical *values* across
     /// thread counts.
+    ///
+    /// Each call runs under `catch_unwind`, so one panicking item never
+    /// takes the other workers' completed results with it: the remaining
+    /// items all finish, and the *first submitted* failure is then
+    /// re-raised whole, carrying the original panic text.  (Callers that
+    /// need failures as data wrap them at the item level instead — see
+    /// [`SimJob::run_contained`] — so nothing reaches this re-raise.)
     pub fn run_map<I, T, F>(&self, items: &[I], f: F) -> Vec<T>
     where
         I: Sync,
@@ -58,34 +71,115 @@ impl JobRunner {
         F: Fn(usize, &I) -> T + Sync,
     {
         let n = items.len();
-        if self.threads == 1 || n <= 1 {
+        let call = |i: usize| -> Result<T, String> {
+            catch_unwind(AssertUnwindSafe(|| f(i, &items[i])))
+                .map_err(|payload| panic_message(payload.as_ref()))
+        };
+        let collected: Vec<Result<T, String>> = if self.threads == 1 || n <= 1 {
             // Serial fast path: same code path workers take, minus the
             // pool — results are identical by construction.
-            return items.iter().enumerate().map(|(i, item)| f(i, item)).collect();
-        }
-        let next = AtomicUsize::new(0);
-        let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
-        std::thread::scope(|s| {
-            for _ in 0..self.threads.min(n) {
-                s.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let out = f(i, &items[i]);
-                    *slots[i].lock().unwrap() = Some(out);
-                });
-            }
-        });
-        slots
+            (0..n).map(call).collect()
+        } else {
+            let next = AtomicUsize::new(0);
+            let slots: Vec<Mutex<Option<Result<T, String>>>> =
+                (0..n).map(|_| Mutex::new(None)).collect();
+            std::thread::scope(|s| {
+                for _ in 0..self.threads.min(n) {
+                    s.spawn(|| loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let out = call(i);
+                        *slots[i].lock().unwrap_or_else(PoisonError::into_inner) = Some(out);
+                    });
+                }
+            });
+            // Failure-proof collection: a poisoned slot mutex yields its
+            // value anyway, and a slot a worker never wrote (it cannot
+            // happen with the in-loop containment above, but the shape is
+            // kept honest) reports as a failure instead of a second panic
+            // masking the first.
+            slots
+                .into_iter()
+                .map(|slot| {
+                    slot.into_inner()
+                        .unwrap_or_else(PoisonError::into_inner)
+                        .unwrap_or_else(|| {
+                            Err("worker exited before writing its result slot".to_string())
+                        })
+                })
+                .collect()
+        };
+        collected
             .into_iter()
-            .map(|slot| {
-                slot.into_inner()
-                    .unwrap()
-                    .expect("every submitted job produced a result")
+            .enumerate()
+            .map(|(i, r)| match r {
+                Ok(v) => v,
+                Err(message) => panic!("job {i} panicked: {message}"),
             })
             .collect()
     }
+
+    /// Fault-isolated grid execution with graceful degradation and an
+    /// incremental completed-job manifest:
+    ///
+    /// * every job runs panic-contained ([`SimJob::run_contained`]);
+    /// * a job that fails while using intra-job host parallelism
+    ///   (`shards > 1` or `mem-workers > 1`) is retried **once** on its
+    ///   fully serial twin.  The retry's outcome — success or failure —
+    ///   replaces the parallel one, so the serialized result is always
+    ///   the serial run's and stays byte-identical at any `--shards`/
+    ///   `--mem-workers`.  Jobs that *recover* on the retry are listed in
+    ///   [`GridOutcome::degraded`] (a host-flake indicator; deterministic
+    ///   failures fail the retry too and land in the results as
+    ///   `Failed`, with `degraded` staying empty);
+    /// * `resume` short-circuits jobs already present in a loaded
+    ///   manifest — the cached output is returned verbatim;
+    /// * `observer` is invoked once per *freshly computed* job, on the
+    ///   worker that ran it, in completion order (the manifest writer
+    ///   appends a line per call; resume is label-keyed, so line order
+    ///   is irrelevant).
+    pub fn run_grid(
+        &self,
+        jobs: &[SimJob],
+        resume: Option<&ResumeCache>,
+        observer: Option<&(dyn Fn(&SimJob, &JobOutput) + Sync)>,
+    ) -> GridOutcome {
+        let degraded: Mutex<Vec<String>> = Mutex::new(Vec::new());
+        let outputs = self.run_map(jobs, |_, job| {
+            if let Some(cached) = resume.and_then(|c| c.get(&job.label)) {
+                return cached.clone();
+            }
+            let mut out = job.run_contained();
+            if out.failure().is_some() && job.is_parallel() {
+                let serial = job.serial_twin().run_contained();
+                if serial.failure().is_none() {
+                    degraded
+                        .lock()
+                        .unwrap_or_else(PoisonError::into_inner)
+                        .push(job.label.clone());
+                }
+                out = serial;
+            }
+            if let Some(obs) = observer {
+                obs(job, &out);
+            }
+            out
+        });
+        let mut degraded = degraded.into_inner().unwrap_or_else(PoisonError::into_inner);
+        degraded.sort_unstable();
+        GridOutcome { outputs, degraded }
+    }
+}
+
+/// What [`JobRunner::run_grid`] hands back: the per-job outputs in
+/// submission order, plus the labels of jobs that recovered on the
+/// serial degradation retry (sorted; empty in deterministic runs).
+#[derive(Debug, Clone)]
+pub struct GridOutcome {
+    pub outputs: Vec<JobOutput>,
+    pub degraded: Vec<String>,
 }
 
 impl Default for JobRunner {

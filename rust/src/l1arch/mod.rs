@@ -184,6 +184,7 @@ pub fn org_spec(kind: L1ArchKind) -> &'static OrgSpec {
     REGISTRY
         .iter()
         .find(|s| s.kind == kind)
+        // lint: allow(sim-panic) — the static registry is total over L1ArchKind by construction
         .expect("every L1ArchKind has a registry entry")
 }
 

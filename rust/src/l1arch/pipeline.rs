@@ -446,6 +446,7 @@ impl PipelineCtx {
                 let ready = *self.cores[owner]
                     .in_flight
                     .get(&txn.req.line)
+                    // lint: allow(sim-panic) — canonical order records the owner's fetch before any merge completes; a miss is a bug, contained at the job boundary
                     .expect("merge owner's fetch finishes earlier in canonical order");
                 self.complete_ret(txn, ready.max(t) + 1, t + 1 + self.timing.latency as u64, ret);
             }

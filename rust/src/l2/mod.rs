@@ -38,6 +38,7 @@ pub mod walk;
 use crate::cache::{Eviction, Probe, SectoredCache};
 use crate::config::GpuConfig;
 use crate::dram::Dram;
+use crate::engine::SimError;
 use crate::mem::{decode, LineAddr, MemTxn, SectorMask};
 use crate::noc::XbarReservation;
 use crate::resource::Calendar;
@@ -321,9 +322,14 @@ impl MemSystem {
     /// B2 + the DRAM sub-phase: walk every descriptor at its slice (fanned
     /// out across the worker pool when `mem_workers > 1`), then finalize
     /// miss timing through the DRAM controllers in canonical order.
-    pub fn run_walk(&mut self) {
+    ///
+    /// `Err` means a walk worker died ([`SimError::WorkerPanic`]); its
+    /// slice units are lost with it, so the `MemSystem` is poisoned and
+    /// must be dropped with the failed engine.  The serial path
+    /// (`mem_workers <= 1`) is infallible.
+    pub fn run_walk(&mut self) -> Result<(), SimError> {
         if self.descs.is_empty() {
-            return;
+            return Ok(());
         }
         let l2l = self.l2_latency as u64;
         if self.pool.workers() <= 1 {
@@ -332,9 +338,10 @@ impl MemSystem {
                 walks[d.slice].walk_one(i as u32, d, l2l);
             }
         } else {
-            self.pool.run(&mut self.walks, &mut self.descs, l2l);
+            self.pool.run(&mut self.walks, &mut self.descs, l2l)?;
         }
         self.dram_subphase();
+        Ok(())
     }
 
     /// The canonical DRAM sub-phase: every miss pays controller-queue
@@ -423,7 +430,11 @@ impl MemSystem {
         );
         debug_assert!(self.descs.is_empty());
         let idx = self.begin_fetch(txn, now);
-        self.run_walk();
+        // The direct-call path keeps its non-Result signature: a dead
+        // pool worker surfacing here re-raises as a panic and is
+        // contained by the exec layer's `catch_unwind`, not this stack.
+        // lint: allow(sim-panic) — escalation point for non-Result callers; contained at the job boundary
+        self.run_walk().expect("memwalk worker died during a direct fetch");
         let at_core = self.finish_fetch(idx, txn);
         self.descs.clear();
         at_core
@@ -511,6 +522,23 @@ impl MemSystem {
 
     pub fn dram_stats(&self) -> crate::dram::DramStats {
         self.dram.stats
+    }
+
+    /// Diagnostic horizon over the whole memory system: the earliest
+    /// cycle at-or-after `now` at which any component — either crossbar,
+    /// any slice access port, or any DRAM bus — still has booked work.
+    /// `None` means the memory side is completely idle, which at a
+    /// deadlock *is* the diagnosis (see `engine::FailSnapshot`).
+    pub fn next_event(&self, now: u64) -> Option<u64> {
+        [
+            self.req_net.next_event(now),
+            self.resp_net.next_event(now),
+            self.walks.iter().filter_map(|w| w.port.next_event(now)).min(),
+            self.dram.next_event(now),
+        ]
+        .into_iter()
+        .flatten()
+        .min()
     }
 
     /// In-flight entries across every slice (tests and audits).
@@ -689,7 +717,7 @@ mod tests {
                     let idx = m.begin_fetch(&mut txn, now);
                     open.push((idx, txn));
                 }
-                m.run_walk();
+                m.run_walk().unwrap();
                 for (idx, txn) in open.iter_mut() {
                     dones.push(m.finish_fetch(*idx, txn));
                     dones.push(txn.queued.total());

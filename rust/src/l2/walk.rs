@@ -17,6 +17,8 @@
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 
+use crate::engine::{panic_message, SimError};
+
 use super::{FetchDesc, SliceWalk};
 
 /// One B2 work packet: the worker's slice units (moved in and back out),
@@ -87,6 +89,7 @@ impl WalkPool {
                                 }
                             }
                         })
+                        // lint: allow(sim-panic) — thread spawn at pool construction; an OS refusing threads is unrecoverable
                         .expect("spawn memwalk worker");
                     Lane {
                         tx: job_tx,
@@ -115,8 +118,20 @@ impl WalkPool {
     /// Fan the epoch's descriptors out to the workers and merge the
     /// results back in place.  `walks` is temporarily carved into the
     /// per-worker partitions and is fully restored (same order, same
-    /// length) on return; `descs` entries are updated by global index.
-    pub(super) fn run(&mut self, walks: &mut Vec<SliceWalk>, descs: &mut [FetchDesc], l2_latency: u64) {
+    /// length) on `Ok`; `descs` entries are updated by global index.
+    ///
+    /// A worker that panicked (both its channels close when the thread
+    /// unwinds) surfaces as [`SimError::WorkerPanic`] with the payload
+    /// recovered through the join handle.  On `Err` the slice units moved
+    /// into dead jobs are lost — the owning `MemSystem` is poisoned and
+    /// must be dropped with the failed engine, which the execution layer
+    /// always does.
+    pub(super) fn run(
+        &mut self,
+        walks: &mut Vec<SliceWalk>,
+        descs: &mut [FetchDesc],
+        l2_latency: u64,
+    ) -> Result<(), SimError> {
         debug_assert_eq!(self.lanes.len(), self.workers);
 
         // Partition the descriptors, preserving ascending global index
@@ -140,27 +155,45 @@ impl WalkPool {
         segs.reverse();
 
         for (w, (units, (batch, idxs))) in segs.drain(..).zip(batches.drain(..)).enumerate() {
-            self.lanes[w]
-                .tx
-                .send(Job {
-                    units,
-                    first_slice: self.starts[w],
-                    descs: batch,
-                    idxs,
-                    l2_latency,
-                })
-                .expect("memwalk worker alive");
+            let job = Job {
+                units,
+                first_slice: self.starts[w],
+                descs: batch,
+                idxs,
+                l2_latency,
+            };
+            if self.lanes[w].tx.send(job).is_err() {
+                return Err(self.worker_died(w));
+            }
         }
 
         // Collect in worker order: slice units reassemble contiguously,
         // descriptors scatter back by global index — deterministic
         // regardless of which worker finished first.
-        for lane in &self.lanes {
-            let mut job = lane.rx.recv().expect("memwalk worker alive");
+        for w in 0..self.lanes.len() {
+            let Ok(mut job) = self.lanes[w].rx.recv() else {
+                return Err(self.worker_died(w));
+            };
             walks.append(&mut job.units);
             for (d, i) in job.descs.iter().zip(&job.idxs) {
                 descs[*i as usize] = *d;
             }
+        }
+        Ok(())
+    }
+
+    /// Reap a dead worker into a typed error.  Walk workers do no
+    /// containment of their own: a panic unwinds the thread (closing
+    /// both channels, which is how the coordinator notices), and the
+    /// payload is recovered here through the join handle.
+    fn worker_died(&mut self, w: usize) -> SimError {
+        let message = match self.lanes[w].handle.take().map(JoinHandle::join) {
+            Some(Err(payload)) => panic_message(payload.as_ref()),
+            _ => "memwalk worker exited without a panic payload".to_string(),
+        };
+        SimError::WorkerPanic {
+            what: format!("memwalk worker {w}"),
+            message,
         }
     }
 }

@@ -14,19 +14,25 @@
 //!   list       — list application models and registered organizations
 //!   config     — dump the Table II configuration as JSON
 
+use std::io::Write;
+use std::sync::{Mutex, PoisonError};
+
 use ata_cache::analysis;
 use ata_cache::area;
 use ata_cache::bench_harness::{compare_thread_counts, sim_throughput};
-use ata_cache::config::{GpuConfig, L1ArchKind};
+use ata_cache::config::{FaultKind, GpuConfig, L1ArchKind};
 use ata_cache::coordinator::{landscape, CoSchedSweep, Sweep};
 use ata_cache::core::CorePartition;
 use ata_cache::engine::{Engine, MultiWorkload};
-use ata_cache::exec::{job_seed, ConfigVariant, JobOutput, JobRunner, ScenarioGrid, SimJob};
+use ata_cache::exec::{
+    job_seed, manifest_line, parse_manifest, ConfigVariant, JobError, JobOutput, JobRunner,
+    ResumeCache, ScenarioGrid, SimJob,
+};
 use ata_cache::runtime::LocalityAnalyzer;
 use ata_cache::stats::{MultiResult, ResourceClass, RunTotals, SimResult};
 use ata_cache::trace::signature::{exact_locality, sample_core_traces};
-use ata_cache::trace::{apps, co_workload, LocalityClass};
-use ata_cache::util::cli::Args;
+use ata_cache::trace::{apps, co_workload, AppModel, LocalityClass};
+use ata_cache::util::cli::{Args, CliError};
 use ata_cache::util::json::Json;
 use ata_cache::util::table::{pct_delta, BarChart, Table};
 
@@ -74,8 +80,9 @@ fn print_usage() {
             [--mem-workers N] [--out FILE=BENCH_pr9.json]
   export-trace --app <name> [--scale F] --out FILE
   sweep     [--archs a,b,..] [--apps x,y,..] [--scale F] [--threads N] [--out FILE]
+            [--manifest FILE] [--resume FILE] [--inject kind:label,..]
   cosched   [--archs a,b,..] [--apps x,y,..] [--scale F] [--threads N]
-            [--share-addr] [--out FILE]
+            [--share-addr] [--out FILE] [--manifest FILE] [--resume FILE]
   classify  [--apps x,y,..] [--artifacts DIR]
   landscape [--scale F] [--threads N]
   overhead
@@ -101,22 +108,61 @@ walk: per-L2-slice fetch resolution fans out across N persistent
 worker threads; clamped to the slice count).  Defaults to 1, the
 serial walk — like --shards it is opt-in.  Results are byte-identical
 at any worker count and compose with --shards.  `bench` uses it as
-the worker count of its mem-workers-{1,N} A/B pair."
+the worker count of its mem-workers-{1,N} A/B pair.
+--job-timeout-s N arms an opt-in host wall-clock watchdog per engine
+run; a stuck job aborts with a typed host-timeout failure instead of
+hanging the sweep (0 = off, the default).
+Fault isolation: a failing job never aborts a sweep/cosched grid — it
+lands in the serialized `failures` array (typed, with a diagnostic
+snapshot) and the command exits 3 ('completed with failures'; 1 = hard
+error, 2 = usage error).  --manifest FILE appends one JSONL line per
+completed job; --resume FILE skips jobs already in such a manifest and
+reproduces the fresh run's output byte-for-byte.  --inject
+<deadlock|livelock|panic>:<label-substring> (sweep only) arms fault
+hooks on matching jobs — a CI/test surface, never a real experiment."
     );
+}
+
+/// Every malformed flag value funnels through here: print `error: …`
+/// and exit 2, the same contract as the `Args::from_env` arm in
+/// [`main`] — scripts see one uniform usage-error path instead of a
+/// panic backtrace for some flags and a clean message for others.
+fn flag_error(msg: impl std::fmt::Display) -> ! {
+    eprintln!("error: {msg}");
+    std::process::exit(2)
+}
+
+/// Unwrap a typed getter (`--seed`, `--scale`, `--threads`, …) or route
+/// its [`CliError`] through [`flag_error`].
+fn parsed<T>(r: Result<T, CliError>) -> T {
+    r.unwrap_or_else(|e| flag_error(e))
+}
+
+/// Resolve one `--arch`/`--archs` entry under the flag-error contract.
+fn arch_arg(name: &str) -> L1ArchKind {
+    L1ArchKind::from_name(name)
+        .unwrap_or_else(|| flag_error(format!("unknown arch '{name}' (see `ata-sim list`)")))
+}
+
+/// Resolve one `--apps` entry under the flag-error contract.
+fn app_arg(name: &str) -> AppModel {
+    apps::app(name)
+        .unwrap_or_else(|| flag_error(format!("unknown app '{name}' (see `ata-sim list`)")))
 }
 
 fn parse_cfg(args: &Args, arch: L1ArchKind) -> GpuConfig {
     let mut cfg = if let Some(path) = args.get("config") {
-        GpuConfig::load(path).expect("loading --config file")
+        GpuConfig::load(path).unwrap_or_else(|e| flag_error(format!("--config {path}: {e}")))
     } else {
         GpuConfig::paper(arch)
     };
     cfg.l1_arch = arch;
-    cfg.seed = args.get_u64("seed", cfg.seed).unwrap();
+    cfg.seed = parsed(args.get_u64("seed", cfg.seed));
     residency_override(args, &mut cfg);
     event_driven_override(args, &mut cfg);
     shards_override(args, &mut cfg);
     mem_workers_override(args, &mut cfg);
+    job_timeout_override(args, &mut cfg);
     cfg
 }
 
@@ -129,7 +175,7 @@ fn residency_override(args: &Args, cfg: &mut GpuConfig) {
         cfg.sharing.residency_index = match v {
             "on" => true,
             "off" => false,
-            other => panic!("--residency expects on|off, got '{other}'"),
+            other => flag_error(format!("--residency expects on|off, got '{other}'")),
         };
     }
 }
@@ -143,7 +189,7 @@ fn event_driven_override(args: &Args, cfg: &mut GpuConfig) {
         cfg.engine.event_driven = match v {
             "on" => true,
             "off" => false,
-            other => panic!("--event-driven expects on|off, got '{other}'"),
+            other => flag_error(format!("--event-driven expects on|off, got '{other}'")),
         };
     }
 }
@@ -156,7 +202,7 @@ fn event_driven_override(args: &Args, cfg: &mut GpuConfig) {
 /// it for the base grid but honours it for the shard variant's N.
 fn shards_override(args: &Args, cfg: &mut GpuConfig) {
     if args.get("shards").is_some() {
-        cfg.engine.shards = args.get_shards().unwrap();
+        cfg.engine.shards = parsed(args.get_shards());
     }
 }
 
@@ -168,16 +214,100 @@ fn shards_override(args: &Args, cfg: &mut GpuConfig) {
 /// honours it for the mem-workers variant's N.
 fn mem_workers_override(args: &Args, cfg: &mut GpuConfig) {
     if args.get("mem-workers").is_some() {
-        cfg.engine.mem_workers = args.get_mem_workers().unwrap();
+        cfg.engine.mem_workers = parsed(args.get_mem_workers());
+    }
+}
+
+/// Apply the opt-in `--job-timeout-s N` host watchdog to a config —
+/// fifth knob in the host-strategy family, same call-site contract.
+/// Zero (the default) disables the watchdog; a nonzero budget aborts a
+/// stuck run with `SimError::HostTimeout` instead of hanging the sweep.
+fn job_timeout_override(args: &Args, cfg: &mut GpuConfig) {
+    if args.get("job-timeout-s").is_some() {
+        cfg.engine.job_timeout_s = parsed(args.get_u64("job-timeout-s", 0));
+    }
+}
+
+/// Report a grid's degradations and failures on stderr and map them to
+/// the exit code: 0 when clean, 3 — "completed with failures", distinct
+/// from 1 (hard error) and 2 (usage error) — when any job failed.  The
+/// partial results have already been printed/saved by the time this
+/// runs.
+fn failures_exit(failures: &[JobError], degraded: &[String]) -> i32 {
+    for label in degraded {
+        eprintln!("note: '{label}' recovered on the serial degradation retry (host flake?)");
+    }
+    if failures.is_empty() {
+        return 0;
+    }
+    for f in failures {
+        eprintln!("failed: {} [{}]: {}", f.job, f.kind, f.message);
+    }
+    eprintln!("{} job(s) failed — results above are partial (exit 3)", failures.len());
+    3
+}
+
+/// Load the `--resume FILE` completed-job manifest when present.
+fn resume_cache(args: &Args) -> Option<ResumeCache> {
+    args.get("resume").map(|path| match std::fs::read_to_string(path) {
+        Ok(text) => parse_manifest(&text),
+        Err(e) => flag_error(format!("--resume {path}: {e}")),
+    })
+}
+
+/// Open the `--manifest FILE` completed-job log (append mode) when
+/// present.
+fn manifest_sink(args: &Args) -> Option<Mutex<std::fs::File>> {
+    args.get("manifest").map(|path| {
+        std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .map(Mutex::new)
+            .unwrap_or_else(|e| flag_error(format!("--manifest {path}: {e}")))
+    })
+}
+
+/// The manifest observer: one JSONL line per freshly completed job,
+/// appended under a lock (workers call this concurrently, in completion
+/// order — resume is label-keyed, so line order is irrelevant).
+fn manifest_writer(sink: &Mutex<std::fs::File>) -> impl Fn(&SimJob, &JobOutput) + Sync + '_ {
+    move |job, out| {
+        let mut f = sink.lock().unwrap_or_else(PoisonError::into_inner);
+        let _ = writeln!(f, "{}", manifest_line(&job.label, out));
+    }
+}
+
+/// Arm `--inject <deadlock|livelock|panic>:<label-substring>[,..]` fault
+/// hooks on the matching jobs.  A test/CI surface: it proves the grid
+/// completes *around* failing jobs (the poisoned-grid smoke) — real
+/// experiments never set it.
+fn apply_injections(args: &Args, jobs: &mut [SimJob]) {
+    for spec in args.get_list("inject") {
+        let Some((kind, needle)) = spec.split_once(':') else {
+            flag_error(format!("--inject expects kind:label-substring, got '{spec}'"));
+        };
+        let Some(fault) = FaultKind::from_name(kind) else {
+            flag_error(format!("--inject kind must be deadlock|livelock|panic, got '{kind}'"));
+        };
+        let mut hit = false;
+        for job in jobs.iter_mut().filter(|j| j.label.contains(needle)) {
+            job.cfg.engine.fault = fault;
+            hit = true;
+        }
+        if !hit {
+            flag_error(format!("--inject '{spec}' matches no job label"));
+        }
     }
 }
 
 fn cmd_run(args: &Args) -> i32 {
-    let arch = L1ArchKind::from_name(args.get_or("arch", "ata")).expect("unknown --arch");
-    let scale = args.get_f64("scale", 1.0).unwrap();
+    let arch = arch_arg(args.get_or("arch", "ata"));
+    let scale = parsed(args.get_f64("scale", 1.0));
     let cfg = parse_cfg(args, arch);
     let (app_name, wl) = if let Some(path) = args.get("trace") {
-        let wl = ata_cache::trace::io::load(path).expect("loading --trace file");
+        let wl = ata_cache::trace::io::load(path)
+            .unwrap_or_else(|e| flag_error(format!("--trace {path}: {e}")));
         (wl.name.clone(), wl)
     } else {
         let name = args.get_or("app", "b+tree").to_string();
@@ -194,7 +324,13 @@ fn cmd_run(args: &Args) -> i32 {
         wl.total_requests()
     );
     let mut eng = Engine::new(&cfg);
-    let r = eng.run(&wl);
+    let r = match eng.run(&wl) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: {app_name} on {}: {e}", arch.name());
+            return 1;
+        }
+    };
     println!("{}", r.to_json().pretty());
     // Host-performance telemetry of the residency index, on stderr so
     // stdout stays pipeable result JSON (and the result itself stays
@@ -222,8 +358,8 @@ fn cmd_run(args: &Args) -> i32 {
 /// IPC, slowdown vs. solo execution on the same cores, and an
 /// interference summary over the shared memory system.
 fn cmd_multi(args: &Args) -> i32 {
-    let arch = L1ArchKind::from_name(args.get_or("arch", "ata")).expect("unknown --arch");
-    let scale = args.get_f64("scale", 0.5).unwrap();
+    let arch = arch_arg(args.get_or("arch", "ata"));
+    let scale = parsed(args.get_f64("scale", 0.5));
     let cfg = parse_cfg(args, arch);
     let names = args.get_list("apps");
     if names.len() < 2 {
@@ -273,7 +409,13 @@ fn cmd_multi(args: &Args) -> i32 {
         multi.total_requests(),
         if share { ", shared address space" } else { "" }
     );
-    let co = Engine::new(&cfg).run_multi(&multi);
+    let co = match Engine::new(&cfg).run_multi(&multi) {
+        Ok(co) => co,
+        Err(e) => {
+            eprintln!("error: {} on {}: {e}", multi.name, arch.name());
+            return 1;
+        }
+    };
 
     // Solo baselines: each lane alone on exactly its cores and address
     // space, the rest of the GPU idle.  One job per lane on the
@@ -294,11 +436,16 @@ fn cmd_multi(args: &Args) -> i32 {
             )
         })
         .collect();
-    let solos: Vec<MultiResult> = JobRunner::new(args.get_threads().unwrap())
-        .run(&solo_jobs)
-        .into_iter()
-        .map(JobOutput::into_multi)
-        .collect();
+    let mut solos: Vec<MultiResult> = Vec::with_capacity(solo_jobs.len());
+    for out in JobRunner::new(parsed(args.get_threads())).run(&solo_jobs) {
+        match out {
+            JobOutput::Failed(e) => {
+                eprintln!("error: solo baseline '{}' [{}]: {}", e.job, e.kind, e.message);
+                return 1;
+            }
+            other => solos.push(other.into_multi()),
+        }
+    }
 
     let mut t = Table::new(&format!("co-execution — {} on {}", multi.name, arch.name()))
         .header(&[
@@ -363,15 +510,13 @@ fn cmd_multi(args: &Args) -> i32 {
 /// organization burn its cycles for a given application (the paper's
 /// Fig. 3 / Fig. 11 style contention analysis)?
 fn cmd_contention(args: &Args) -> i32 {
-    let scale = args.get_f64("scale", 0.25).unwrap();
+    let scale = parsed(args.get_f64("scale", 0.25));
     let archs: Vec<L1ArchKind> = {
         let l = args.get_list("archs");
         if l.is_empty() {
             L1ArchKind::ALL.to_vec()
         } else {
-            l.iter()
-                .map(|a| L1ArchKind::from_name(a).expect("unknown arch in --archs"))
-                .collect()
+            l.iter().map(|a| arch_arg(a)).collect()
         }
     };
     let names: Vec<String> = {
@@ -388,14 +533,18 @@ fn cmd_contention(args: &Args) -> i32 {
             eprintln!("unknown app '{name}' (see `ata-sim list`)");
             return 2;
         };
-        let results: Vec<(L1ArchKind, SimResult)> = archs
-            .iter()
-            .map(|&arch| {
-                let cfg = parse_cfg(args, arch);
-                let wl = app.scaled(scale).workload(&cfg);
-                (arch, Engine::new(&cfg).run(&wl))
-            })
-            .collect();
+        let mut results: Vec<(L1ArchKind, SimResult)> = Vec::with_capacity(archs.len());
+        for &arch in &archs {
+            let cfg = parse_cfg(args, arch);
+            let wl = app.scaled(scale).workload(&cfg);
+            match Engine::new(&cfg).run(&wl) {
+                Ok(r) => results.push((arch, r)),
+                Err(e) => {
+                    eprintln!("error: {name} on {}: {e}", arch.name());
+                    return 1;
+                }
+            }
+        }
 
         let mut header: Vec<&str> = vec!["resource"];
         header.extend(archs.iter().map(|a| a.name()));
@@ -453,20 +602,20 @@ fn cmd_contention(args: &Args) -> i32 {
 /// deterministic.  Future PRs compare against this file to catch
 /// host-performance regressions of the simulator itself.
 fn cmd_bench(args: &Args) -> i32 {
-    let scale = args.get_f64("scale", 0.25).unwrap();
+    let scale = parsed(args.get_f64("scale", 0.25));
     let app_name = args.get_or("app", "b+tree").to_string();
     let Some(app) = apps::app(&app_name) else {
         eprintln!("unknown app '{app_name}' (see `ata-sim list`)");
         return 2;
     };
     let out_path = args.get_or("out", "BENCH_pr9.json").to_string();
-    let seed = args.get_u64("seed", GpuConfig::default().seed).unwrap();
-    let threads = args.get_threads().unwrap();
+    let seed = parsed(args.get_u64("seed", GpuConfig::default().seed));
+    let threads = parsed(args.get_threads());
     // The B side of the shards-{1,N} pair; `--shards 1` (or absent)
     // still benches against 2 so the pair is never degenerate.
-    let shards = args.get_shards().unwrap().max(2);
+    let shards = parsed(args.get_shards()).max(2);
     // Same rule for the mem-workers-{1,N} pair.
-    let mem_workers = args.get_mem_workers().unwrap().max(2);
+    let mem_workers = parsed(args.get_mem_workers()).max(2);
     if args.get("residency").is_some() {
         eprintln!("note: bench ignores --residency — its A/B grid always runs both modes");
     }
@@ -548,11 +697,19 @@ fn cmd_bench(args: &Args) -> i32 {
     // makes the speedups measure the ablated feature, not the scheduler;
     // the cosched section below still exercises the parallel runner
     // with --threads.
-    let results: Vec<SimResult> = JobRunner::new(1)
-        .run(&jobs)
-        .into_iter()
-        .map(JobOutput::into_solo)
-        .collect();
+    let mut results: Vec<SimResult> = Vec::with_capacity(jobs.len());
+    for out in JobRunner::new(1).run(&jobs) {
+        match out {
+            JobOutput::Failed(e) => {
+                // The bench grid is a fixed healthy configuration set: a
+                // failure here is a simulator bug, not an experiment
+                // outcome — hard error, no partial baseline file.
+                eprintln!("error: bench job '{}' [{}]: {}", e.job, e.kind, e.message);
+                return 1;
+            }
+            other => results.push(other.into_solo()),
+        }
+    }
     let (on_chunk, rest) = results.split_at(n_orgs);
     let (ref_chunk, rest) = rest.split_at(n_orgs);
     let (scan_chunk, rest) = rest.split_at(n_orgs);
@@ -739,27 +896,22 @@ fn cmd_bench(args: &Args) -> i32 {
 
 /// App-pair × architecture interference sweep (CIAO-style matrix).
 fn cmd_cosched(args: &Args) -> i32 {
-    let scale = args.get_f64("scale", 0.25).unwrap();
+    let scale = parsed(args.get_f64("scale", 0.25));
     let mut sweep = CoSchedSweep::paper(scale);
     residency_override(args, &mut sweep.cfg);
     event_driven_override(args, &mut sweep.cfg);
     shards_override(args, &mut sweep.cfg);
     mem_workers_override(args, &mut sweep.cfg);
+    job_timeout_override(args, &mut sweep.cfg);
     let arch_list = args.get_list("archs");
     if !arch_list.is_empty() {
-        sweep.archs = arch_list
-            .iter()
-            .map(|a| L1ArchKind::from_name(a).expect("unknown arch in --archs"))
-            .collect();
+        sweep.archs = arch_list.iter().map(|a| arch_arg(a)).collect();
     }
     let app_list = args.get_list("apps");
     if !app_list.is_empty() {
-        sweep.apps = app_list
-            .iter()
-            .map(|n| apps::app(n).expect("unknown app in --apps"))
-            .collect();
+        sweep.apps = app_list.iter().map(|n| app_arg(n)).collect();
     }
-    sweep.threads = args.get_threads().unwrap();
+    sweep.threads = parsed(args.get_threads());
     sweep.share_address_space = args.flag("share-addr");
     let n = sweep.apps.len();
     println!(
@@ -770,7 +922,11 @@ fn cmd_cosched(args: &Args) -> i32 {
         sweep.job_count(),
         sweep.threads,
     );
-    let results = sweep.run();
+    let resume = resume_cache(args);
+    let sink = manifest_sink(args);
+    let writer = sink.as_ref().map(manifest_writer);
+    let observer = writer.as_ref().map(|w| w as &(dyn Fn(&SimJob, &JobOutput) + Sync));
+    let results = sweep.run_isolated(resume.as_ref(), observer);
     for &arch in &sweep.archs {
         // Mean slowdown per victim app under this organization.
         let m = results.interference_matrix(arch);
@@ -790,40 +946,41 @@ fn cmd_cosched(args: &Args) -> i32 {
         results.save(path).expect("writing --out");
         println!("wrote {path}");
     }
-    0
+    failures_exit(&results.failures, &results.degraded)
 }
 
 fn sweep_from_args(args: &Args) -> Sweep {
-    let scale = args.get_f64("scale", 0.5).unwrap();
+    let scale = parsed(args.get_f64("scale", 0.5));
     let mut sweep = Sweep::paper(scale);
     residency_override(args, &mut sweep.cfg);
     event_driven_override(args, &mut sweep.cfg);
     shards_override(args, &mut sweep.cfg);
     mem_workers_override(args, &mut sweep.cfg);
+    job_timeout_override(args, &mut sweep.cfg);
     let arch_list = args.get_list("archs");
     if !arch_list.is_empty() {
-        sweep.archs = arch_list
-            .iter()
-            .map(|a| L1ArchKind::from_name(a).expect("unknown arch in --archs"))
-            .collect();
+        sweep.archs = arch_list.iter().map(|a| arch_arg(a)).collect();
         if !sweep.archs.contains(&L1ArchKind::Private) {
             sweep.archs.insert(0, L1ArchKind::Private); // normalization baseline
         }
     }
     let app_list = args.get_list("apps");
     if !app_list.is_empty() {
-        sweep.apps = app_list
-            .iter()
-            .map(|n| apps::app(n).expect("unknown app in --apps"))
-            .collect();
+        sweep.apps = app_list.iter().map(|n| app_arg(n)).collect();
     }
-    sweep.threads = args.get_threads().unwrap();
+    sweep.threads = parsed(args.get_threads());
     sweep
 }
 
 fn cmd_sweep(args: &Args) -> i32 {
     let sweep = sweep_from_args(args);
-    let results = sweep.run();
+    let mut jobs = sweep.grid().jobs();
+    apply_injections(args, &mut jobs);
+    let resume = resume_cache(args);
+    let sink = manifest_sink(args);
+    let writer = sink.as_ref().map(manifest_writer);
+    let observer = writer.as_ref().map(|w| w as &(dyn Fn(&SimJob, &JobOutput) + Sync));
+    let results = sweep.run_jobs(&jobs, resume.as_ref(), observer);
 
     let mut t = Table::new("normalized IPC (private = 1.0)").header(&[
         "app", "remote", "decoupled", "ata", "ata Δ",
@@ -850,12 +1007,12 @@ fn cmd_sweep(args: &Args) -> i32 {
         results.save(path).expect("writing --out");
         println!("wrote {path}");
     }
-    0
+    failures_exit(&results.failures, &results.degraded)
 }
 
 fn cmd_export_trace(args: &Args) -> i32 {
     let name = args.get_or("app", "b+tree").to_string();
-    let scale = args.get_f64("scale", 1.0).unwrap();
+    let scale = parsed(args.get_f64("scale", 1.0));
     let Some(app) = apps::app(&name) else {
         eprintln!("unknown app '{name}'");
         return 2;
@@ -929,7 +1086,7 @@ fn cmd_landscape(args: &Args) -> i32 {
     let results = sweep.run();
     let rows = landscape::build(&results, &sweep.archs);
     println!("{}", landscape::render(&rows));
-    0
+    failures_exit(&results.failures, &results.degraded)
 }
 
 fn cmd_overhead(_args: &Args) -> i32 {

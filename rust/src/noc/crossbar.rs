@@ -192,6 +192,19 @@ impl XbarReservation {
         self.outputs[output].backlog(now)
     }
 
+    /// Diagnostic horizon: the earliest cycle at-or-after `now` at which
+    /// *any* port (input or output) still has booked traffic — `None` when
+    /// the whole crossbar is idle.  This is the failure-snapshot view
+    /// ("is anything still moving through the NoC?"), not a grant bound:
+    /// individual ports may grant earlier.
+    pub fn next_event(&self, now: u64) -> Option<u64> {
+        self.inputs
+            .iter()
+            .chain(self.outputs.iter())
+            .filter_map(|c| c.next_event(now))
+            .min()
+    }
+
     /// Pending work on an input port at `now` — together with
     /// [`output_backlog`](Self::output_backlog) this is the read-only
     /// congestion estimate interference-aware policies use (e.g. the

@@ -116,6 +116,17 @@ impl ContentionBreakdown {
         fields.push(("total", self.total().into()));
         Json::obj(fields)
     }
+
+    /// Inverse of [`to_json`](Self::to_json) (the resume manifest path).
+    /// Lenient: absent classes read as 0; the serialized `total` is
+    /// ignored and re-derived from the per-class counters.
+    pub fn from_json(j: &Json) -> ContentionBreakdown {
+        let mut out = ContentionBreakdown::default();
+        for &c in &ResourceClass::ALL {
+            out.cycles[c as usize] = j.get(c.name()).and_then(Json::as_u64).unwrap_or(0);
+        }
+        out
+    }
 }
 
 /// Per-core contention attribution: one [`ContentionBreakdown`] per
@@ -336,6 +347,28 @@ impl L1Stats {
             ("mshr_merges", self.mshr_merges.into()),
             ("hit_rate", self.hit_rate().into()),
         ])
+    }
+
+    /// Inverse of [`to_json`](Self::to_json) (the resume manifest path).
+    /// Absent counters read as 0; `hit_rate` is re-derived.
+    pub fn from_json(j: &Json) -> L1Stats {
+        let n = |k: &str| j.get(k).and_then(Json::as_u64).unwrap_or(0);
+        L1Stats {
+            accesses: n("accesses"),
+            local_hits: n("local_hits"),
+            remote_hits: n("remote_hits"),
+            sector_misses: n("sector_misses"),
+            misses: n("misses"),
+            writes: n("writes"),
+            rejects: n("rejects"),
+            bank_conflict_cycles: n("bank_conflict_cycles"),
+            sharing_net_cycles: n("sharing_net_cycles"),
+            probes_sent: n("probes_sent"),
+            dirty_remote_fallbacks: n("dirty_remote_fallbacks"),
+            bypasses: n("bypasses"),
+            fills: n("fills"),
+            mshr_merges: n("mshr_merges"),
+        }
     }
 }
 
@@ -638,6 +671,23 @@ impl HopStats {
             ("queued", self.queued.to_json()),
         ])
     }
+
+    /// Inverse of [`to_json`](Self::to_json) (the resume manifest path).
+    /// The means are re-derived from the serialized sums.
+    pub fn from_json(j: &Json) -> HopStats {
+        let n = |k: &str| j.get(k).and_then(Json::as_u64).unwrap_or(0);
+        HopStats {
+            txns: n("txns"),
+            tag_wait_cycles: n("tag_wait_cycles"),
+            l1_stage_cycles: n("l1_stage_cycles"),
+            mem_trips: n("mem_trips"),
+            mem_service_cycles: n("mem_service_cycles"),
+            queued: j
+                .get("queued")
+                .map(ContentionBreakdown::from_json)
+                .unwrap_or_default(),
+        }
+    }
 }
 
 /// Per-kernel performance record (Fig 9's unit of comparison).
@@ -659,6 +709,21 @@ impl KernelStats {
             0.0
         } else {
             self.insts as f64 / self.cycles as f64
+        }
+    }
+
+    /// Inverse of the inline kernel objects in [`SimResult::to_json`] /
+    /// [`AppCoStats::to_json`] (the latter omits `l1_hit_rate`, which
+    /// then reads as 0 — exactly what that surface serialized).
+    pub fn from_json(j: &Json) -> KernelStats {
+        let f = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        KernelStats {
+            name: j.get("name").and_then(Json::as_str).unwrap_or_default().to_string(),
+            cycles: j.get("cycles").and_then(Json::as_u64).unwrap_or(0),
+            insts: j.get("insts").and_then(Json::as_u64).unwrap_or(0),
+            l1_mean_latency: f("l1_mean_latency"),
+            l1_stage_latency: f("l1_stage_latency"),
+            l1_hit_rate: f("l1_hit_rate"),
         }
     }
 }
@@ -747,6 +812,46 @@ impl SimResult {
             ),
         ])
     }
+
+    /// Inverse of [`to_json`](Self::to_json) — what `--resume` uses to
+    /// reconstruct a completed job from its manifest line.  Derived
+    /// fields (`ipc`, per-kernel `ipc`) are re-derived from the restored
+    /// counters, and `host_seconds` — excluded from the JSON by the
+    /// determinism contract — reads as 0.0, so a reconstructed result
+    /// re-serializes byte-identically to the fresh one.
+    pub fn from_json(j: &Json) -> SimResult {
+        let n = |k: &str| j.get(k).and_then(Json::as_u64).unwrap_or(0);
+        let f = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        let s = |k: &str| j.get(k).and_then(Json::as_str).unwrap_or_default().to_string();
+        SimResult {
+            app: s("app"),
+            arch: s("arch"),
+            cycles: n("cycles"),
+            insts: n("insts"),
+            l1: j.get("l1").map(L1Stats::from_json).unwrap_or_default(),
+            loads: n("loads"),
+            l1_mean_load_latency: f("l1_mean_load_latency"),
+            l1_max_load_latency: n("l1_max_load_latency"),
+            l1_stage_mean_latency: f("l1_stage_mean_latency"),
+            l1_stage_max_latency: n("l1_stage_max_latency"),
+            l2_hit_rate: f("l2_hit_rate"),
+            l2_mean_fetch_latency: f("l2_mean_fetch_latency"),
+            noc_flits: n("noc_flits"),
+            dram_reads: n("dram_reads"),
+            dram_writes: n("dram_writes"),
+            contention: j
+                .get("contention")
+                .map(ContentionBreakdown::from_json)
+                .unwrap_or_default(),
+            hops: j.get("hops").map(HopStats::from_json).unwrap_or_default(),
+            kernels: j
+                .get("kernels")
+                .and_then(Json::as_arr)
+                .map(|ks| ks.iter().map(KernelStats::from_json).collect())
+                .unwrap_or_default(),
+            host_seconds: 0.0,
+        }
+    }
 }
 
 /// Per-application slice of a co-execution run (see
@@ -832,6 +937,33 @@ impl AppCoStats {
             ),
         ])
     }
+
+    /// Inverse of [`to_json`](Self::to_json) (the resume manifest path);
+    /// `ipc` is re-derived from `insts`/`finish_cycle`.
+    pub fn from_json(j: &Json) -> AppCoStats {
+        let n = |k: &str| j.get(k).and_then(Json::as_u64).unwrap_or(0);
+        let f = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        AppCoStats {
+            name: j.get("name").and_then(Json::as_str).unwrap_or_default().to_string(),
+            first_core: j.get("first_core").and_then(Json::as_usize).unwrap_or(0),
+            cores: j.get("cores").and_then(Json::as_usize).unwrap_or(0),
+            finish_cycle: n("finish_cycle"),
+            insts: n("insts"),
+            loads: n("loads"),
+            mean_load_latency: f("mean_load_latency"),
+            stage_mean_latency: f("stage_mean_latency"),
+            requests: n("requests"),
+            contention: j
+                .get("contention")
+                .map(ContentionBreakdown::from_json)
+                .unwrap_or_default(),
+            kernels: j
+                .get("kernels")
+                .and_then(Json::as_arr)
+                .map(|ks| ks.iter().map(KernelStats::from_json).collect())
+                .unwrap_or_default(),
+        }
+    }
 }
 
 /// Whole co-execution result bundle: global counters over the shared
@@ -897,6 +1029,38 @@ impl MultiResult {
             ("hops", self.hops.to_json()),
             ("apps", Json::arr(self.apps.iter().map(AppCoStats::to_json).collect())),
         ])
+    }
+
+    /// Inverse of [`to_json`](Self::to_json) — see
+    /// [`SimResult::from_json`] for the roundtrip contract
+    /// (`host_seconds` reads as 0.0, derived fields are re-derived).
+    pub fn from_json(j: &Json) -> MultiResult {
+        let n = |k: &str| j.get(k).and_then(Json::as_u64).unwrap_or(0);
+        let f = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        let s = |k: &str| j.get(k).and_then(Json::as_str).unwrap_or_default().to_string();
+        MultiResult {
+            name: s("name"),
+            arch: s("arch"),
+            cycles: n("cycles"),
+            insts: n("insts"),
+            l1: j.get("l1").map(L1Stats::from_json).unwrap_or_default(),
+            l2_hit_rate: f("l2_hit_rate"),
+            l2_mean_fetch_latency: f("l2_mean_fetch_latency"),
+            noc_flits: n("noc_flits"),
+            dram_reads: n("dram_reads"),
+            dram_writes: n("dram_writes"),
+            contention: j
+                .get("contention")
+                .map(ContentionBreakdown::from_json)
+                .unwrap_or_default(),
+            hops: j.get("hops").map(HopStats::from_json).unwrap_or_default(),
+            apps: j
+                .get("apps")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().map(AppCoStats::from_json).collect())
+                .unwrap_or_default(),
+            host_seconds: 0.0,
+        }
     }
 }
 

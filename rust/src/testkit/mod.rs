@@ -11,7 +11,7 @@
 //! [`stall_heavy_scenario`]) — so integration tests across files exercise
 //! the same pathological shapes instead of each inventing a weaker one.
 
-use crate::config::{GpuConfig, L1ArchKind};
+use crate::config::{FaultKind, GpuConfig, L1ArchKind};
 use crate::core::{WarpInst, WarpProgram};
 use crate::engine::{KernelSpec, Workload};
 use crate::util::rng::Pcg32;
@@ -198,6 +198,56 @@ pub fn slice_skew_scenario(arch: L1ArchKind) -> (GpuConfig, Workload) {
     (cfg, wl)
 }
 
+/// The small all-miss load workload the fault scenarios share: one warp
+/// per core, a handful of cold-miss loads each, every line unique.  Small
+/// enough that the healthy portion drains in a few hundred cycles, so a
+/// failure detector dominates the run instead of the workload.
+fn fault_bait_workload(cfg: &GpuConfig, name: &str) -> Workload {
+    let mut next_line = 0u64;
+    let programs = (0..cfg.cores)
+        .map(|_| {
+            let insts = (0..4)
+                .map(|_| {
+                    let line = next_line;
+                    next_line += 1;
+                    WarpInst::Load(vec![(line, 0b1111)])
+                })
+                .collect();
+            vec![WarpProgram::new(insts)]
+        })
+        .collect();
+    Workload {
+        name: name.into(),
+        kernels: vec![KernelSpec { name: "bait".into(), programs }],
+    }
+}
+
+/// A scenario engineered to end in `SimError::Deadlock`: the config arms
+/// [`FaultKind::Deadlock`] — the engine swallows the first
+/// load-completion wake, so one warp blocks forever while the rest of
+/// the tiny all-miss workload drains — and the blocked-machine check
+/// then fires with a diagnostic snapshot.  Shared by
+/// `failure_determinism.rs` and the unit tests below so every consumer
+/// observes the *same* failure bytes.
+pub fn deadlock_scenario(arch: L1ArchKind) -> (GpuConfig, Workload) {
+    let mut cfg = GpuConfig::tiny(arch);
+    cfg.engine.fault = FaultKind::Deadlock;
+    let wl = fault_bait_workload(&cfg, "deadlock-bait");
+    (cfg, wl)
+}
+
+/// The livelock twin of [`deadlock_scenario`]: [`FaultKind::Livelock`]
+/// bounces every due wake forward instead of delivering it, so the clock
+/// advances forever while nothing retires — until the forward-progress
+/// watchdog aborts the run as `SimError::Livelock` (with the same
+/// snapshot shape the deadlock path reports).
+pub fn livelock_scenario(arch: L1ArchKind) -> (GpuConfig, Workload) {
+    let mut cfg = GpuConfig::tiny(arch);
+    cfg.engine.fault = FaultKind::Livelock;
+    let wl = fault_bait_workload(&cfg, "livelock-bait");
+    (cfg, wl)
+}
+
 /// A reusable random-value generator.
 pub struct Gen<T> {
     f: Box<dyn Fn(&mut Pcg32) -> T>,
@@ -332,7 +382,7 @@ mod tests {
 
         let (cfg, wl) = stall_heavy_scenario(L1ArchKind::Ata);
         let mut eng = Engine::new(&cfg);
-        let r = eng.run(&wl);
+        let r = eng.run(&wl).unwrap();
         let ev = eng.event_stats();
         assert!(r.loads > 0, "miss storm issued no loads");
         assert!(
@@ -353,9 +403,34 @@ mod tests {
         let mut cfg_off = cfg.clone();
         cfg_off.engine.event_driven = false;
         let mut eng_off = Engine::new(&cfg_off);
-        let r_off = eng_off.run(&wl);
+        let r_off = eng_off.run(&wl).unwrap();
         assert_eq!(r.to_json().pretty(), r_off.to_json().pretty());
         assert_eq!(eng_off.event_stats().skipped(), 0);
+    }
+
+    /// The fault scenarios must produce exactly their advertised typed
+    /// errors, with a populated diagnostic snapshot — the contract
+    /// `failure_determinism.rs` and the poisoned-grid smoke build on.
+    #[test]
+    fn fault_scenarios_produce_their_typed_errors() {
+        use crate::engine::{Engine, SimError};
+
+        let (cfg, wl) = deadlock_scenario(L1ArchKind::Ata);
+        match Engine::new(&cfg).run(&wl) {
+            Err(SimError::Deadlock(snap)) => {
+                assert!(snap.cores_blocked > 0, "deadlock with no blocked core: {snap:?}");
+                assert_eq!(snap.cores_total, cfg.cores as u64);
+            }
+            other => panic!("expected Deadlock, got {other:?}"),
+        }
+
+        let (cfg, wl) = livelock_scenario(L1ArchKind::Ata);
+        match Engine::new(&cfg).run(&wl) {
+            Err(SimError::Livelock { snap, .. }) => {
+                assert!(snap.cycle > 0, "livelock tripped before the clock moved: {snap:?}");
+            }
+            other => panic!("expected Livelock, got {other:?}"),
+        }
     }
 
     /// The skew property the memory-walk referee relies on: every load

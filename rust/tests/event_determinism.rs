@@ -109,7 +109,7 @@ fn multi_json_is_byte_identical_event_driven_on_and_off() {
             synth::convergent_hammer().scaled(0.25),
         ];
         let multi = co_workload(&cfg, &models, &[4, 4], false).expect("co-workload");
-        Engine::new(&cfg).run_multi(&multi).to_json().pretty()
+        Engine::new(&cfg).run_multi(&multi).unwrap().to_json().pretty()
     };
     assert_eq!(
         run(true),
@@ -133,7 +133,7 @@ fn sweep_boundary_crossing_run_is_byte_identical() {
     let mut cfg_off = cfg;
     cfg_off.engine.event_driven = false;
     let mut eng_on = Engine::new(&cfg_on);
-    let r_on = eng_on.run(&wl);
+    let r_on = eng_on.run(&wl).unwrap();
     // The scenario must really cross at least one sweep boundary while
     // the event clock jumps — otherwise this referee is vacuous.
     assert!(
@@ -157,7 +157,7 @@ fn sweep_boundary_crossing_run_is_byte_identical() {
         r_on.loads
     );
     let mut eng_off = Engine::new(&cfg_off);
-    let r_off = eng_off.run(&wl);
+    let r_off = eng_off.run(&wl).unwrap();
     assert_eq!(eng_off.event_stats().skipped(), 0);
     assert_eq!(
         r_on.to_json().pretty(),
@@ -212,7 +212,7 @@ fn property_batch_charges_reconcile_with_latency_sums_in_both_modes() {
                 cfg.engine.event_driven = event_driven;
                 let wl = load_only_workload(&cfg, lines);
                 let mut eng = Engine::new(&cfg);
-                let r = eng.run(&wl);
+                let r = eng.run(&wl).unwrap();
                 if r.loads == 0 {
                     return Err(format!("{arch:?}: workload issued no loads"));
                 }

@@ -1,0 +1,184 @@
+//! Differential referee for the fault-isolation layer: a poisoned grid
+//! (one deadlocking job, one panicking job) must complete around its
+//! failures, report them as typed data with stable diagnostic
+//! snapshots, and serialize byte-identically at any `--threads` and
+//! `--shards` — the determinism contract extended to failures.  Resume
+//! from a completed-job manifest must reproduce the fresh run's bytes.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Mutex;
+
+use ata_cache::config::{FaultKind, GpuConfig, L1ArchKind};
+use ata_cache::coordinator::{Sweep, SweepResults};
+use ata_cache::engine::{panic_message, Engine, SimError};
+use ata_cache::exec::{job_seed, manifest_line, parse_manifest, JobOutput, JobRunner, SimJob};
+use ata_cache::testkit::{deadlock_scenario, livelock_scenario};
+use ata_cache::trace::synth;
+
+fn tiny_sweep(threads: usize, shards: usize) -> Sweep {
+    let mut cfg = GpuConfig::tiny(L1ArchKind::Private);
+    cfg.engine.shards = shards;
+    Sweep {
+        cfg,
+        archs: vec![L1ArchKind::Private, L1ArchKind::Ata],
+        apps: vec![synth::locality_knob(0.8, 0.25), synth::pure_streaming().scaled(0.25)],
+        scale: 1.0,
+        threads,
+    }
+}
+
+/// Materialize the sweep's jobs and poison two of them: the second job
+/// deadlocks (a typed engine failure with a snapshot), the third
+/// panics before simulating anything (exercising `catch_unwind`
+/// containment).  Mirrors the CLI's `--inject` surface.
+fn poisoned_run(threads: usize, shards: usize) -> SweepResults {
+    let sweep = tiny_sweep(threads, shards);
+    let mut jobs = sweep.grid().jobs();
+    assert_eq!(jobs.len(), 4);
+    jobs[1].cfg.engine.fault = FaultKind::Deadlock;
+    jobs[2].cfg.engine.fault = FaultKind::Panic;
+    sweep.run_jobs(&jobs, None, None)
+}
+
+#[test]
+fn poisoned_grid_completes_with_typed_failures() {
+    let r = poisoned_run(4, 1);
+    // The two healthy jobs completed normally...
+    assert_eq!(r.results.len(), 2);
+    assert!(r.get(L1ArchKind::Private, "synth[s=0.80]").is_some());
+    assert!(r.get(L1ArchKind::Ata, "synth[stream]").is_some());
+    // ...and the two poisoned ones landed as typed data, in submission
+    // order, instead of taking the sweep down.
+    assert_eq!(r.failures.len(), 2, "{:?}", r.failures);
+    let dead = &r.failures[0];
+    assert_eq!(dead.job, "base/private/synth[stream]");
+    assert_eq!(dead.kind, "deadlock");
+    let snap = dead.snapshot.as_ref().expect("deadlock carries a snapshot");
+    assert!(snap.cores_blocked > 0, "{snap:?}");
+    assert_eq!(snap.cores_total, 8);
+    let panicked = &r.failures[1];
+    assert_eq!(panicked.job, "base/ata/synth[s=0.80]");
+    assert_eq!(panicked.kind, "worker-panic");
+    assert!(panicked.message.contains("injected fault: panic"), "{}", panicked.message);
+    assert!(panicked.snapshot.is_none(), "a panic has no simulated state to snapshot");
+    // Deterministic failures fail the serial retry too — `degraded`
+    // (jobs that *recovered* on retry) must stay empty.
+    assert!(r.degraded.is_empty(), "{:?}", r.degraded);
+}
+
+#[test]
+fn failure_bytes_are_identical_across_threads_and_shards() {
+    let baseline = poisoned_run(1, 1).to_json().pretty();
+    for (threads, shards) in [(4, 1), (1, 2), (4, 2)] {
+        let other = poisoned_run(threads, shards).to_json().pretty();
+        assert_eq!(
+            baseline, other,
+            "poisoned grid drifted at threads={threads} shards={shards}"
+        );
+    }
+}
+
+#[test]
+fn panicking_job_preserves_every_other_result() {
+    // A panic-armed job among healthy ones, straight on the runner (the
+    // layer under the sweep): the others' outputs are untouched.
+    let cfg = GpuConfig::tiny(L1ArchKind::Ata);
+    let wl = synth::locality_knob(0.8, 0.25).workload(&cfg);
+    let mut poisoned_cfg = cfg.clone();
+    poisoned_cfg.engine.fault = FaultKind::Panic;
+    let jobs = vec![
+        SimJob::solo("a", cfg.clone(), job_seed(cfg.seed, 0), wl.clone()),
+        SimJob::solo("boom", poisoned_cfg, job_seed(cfg.seed, 1), wl.clone()),
+        SimJob::solo("c", cfg.clone(), job_seed(cfg.seed, 2), wl.clone()),
+    ];
+    let outs = JobRunner::new(2).run(&jobs);
+    assert_eq!(outs.len(), 3);
+    let direct = Engine::new(&cfg).run(&wl).unwrap();
+    for i in [0usize, 2] {
+        let r = outs[i].clone().into_solo();
+        assert_eq!(r.cycles, direct.cycles, "job {i} disturbed by its neighbor's panic");
+        assert_eq!(r.insts, direct.insts);
+    }
+    let failed = outs[1].failure().expect("the poisoned job failed");
+    assert_eq!(failed.kind, "worker-panic");
+}
+
+#[test]
+fn run_map_reraises_the_first_failure_with_its_original_text() {
+    // The generic fan-out has no failure-as-data shape, so it re-raises —
+    // but only after every item ran, and with the original panic text
+    // (the lossy slot-unwrap chain this replaced masked it).
+    let runner = JobRunner::new(2);
+    let items: Vec<u32> = (0..8).collect();
+    let completed = Mutex::new(0u32);
+    let err = catch_unwind(AssertUnwindSafe(|| {
+        runner.run_map(&items, |_, &x| {
+            if x == 3 {
+                panic!("injected map failure on {x}");
+            }
+            *completed.lock().unwrap() += 1;
+            x
+        })
+    }))
+    .expect_err("a panicking item must re-raise");
+    assert!(panic_message(err.as_ref()).contains("injected map failure on 3"));
+    assert_eq!(*completed.lock().unwrap(), 7, "the other items all completed first");
+}
+
+#[test]
+fn resume_from_manifest_reproduces_the_fresh_run_byte_for_byte() {
+    let sweep = tiny_sweep(2, 1);
+    let mut jobs = sweep.grid().jobs();
+    jobs[1].cfg.engine.fault = FaultKind::Deadlock;
+    jobs[2].cfg.engine.fault = FaultKind::Panic;
+
+    // Fresh run, writing the manifest through the observer (in
+    // completion order — resume is label-keyed, so order is free).
+    let lines: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    let writer = |job: &SimJob, out: &JobOutput| {
+        lines.lock().unwrap().push(manifest_line(&job.label, out));
+    };
+    let fresh = sweep.run_jobs(&jobs, None, Some(&writer));
+    let manifest = lines.into_inner().unwrap().join("\n");
+    let cache = parse_manifest(&manifest);
+    assert_eq!(cache.len(), 4, "every job (failures included) lands in the manifest");
+
+    // Resumed run: every job short-circuits on the cache — the observer
+    // must never fire — and the serialized output is byte-identical.
+    let recompute_guard = |job: &SimJob, _out: &JobOutput| {
+        panic!("job '{}' was recomputed despite a complete resume cache", job.label)
+    };
+    let resumed = sweep.run_jobs(&jobs, Some(&cache), Some(&recompute_guard));
+    assert_eq!(fresh.to_json().pretty(), resumed.to_json().pretty());
+}
+
+#[test]
+fn livelock_snapshot_is_identical_across_shard_counts() {
+    let (cfg, wl) = livelock_scenario(L1ArchKind::Ata);
+    let seq = Engine::new(&cfg).run(&wl).expect_err("livelock must abort");
+    let mut cfg2 = cfg.clone();
+    cfg2.engine.shards = 2;
+    let sharded = Engine::new(&cfg2).run(&wl).expect_err("livelock must abort sharded too");
+    match (&seq, &sharded) {
+        (SimError::Livelock { snap: a, why: wa }, SimError::Livelock { snap: b, why: wb }) => {
+            assert_eq!(a, b, "sharded snapshot drifted from sequential");
+            assert_eq!(wa, wb);
+        }
+        other => panic!("expected two livelocks, got {other:?}"),
+    }
+}
+
+#[test]
+fn deadlock_snapshot_is_identical_across_shard_counts() {
+    let (cfg, wl) = deadlock_scenario(L1ArchKind::Ata);
+    let seq = Engine::new(&cfg).run(&wl).expect_err("deadlock must abort");
+    let mut cfg2 = cfg.clone();
+    cfg2.engine.shards = 2;
+    let sharded = Engine::new(&cfg2).run(&wl).expect_err("deadlock must abort sharded too");
+    match (&seq, &sharded) {
+        (SimError::Deadlock(a), SimError::Deadlock(b)) => {
+            assert_eq!(a, b, "sharded snapshot drifted from sequential");
+        }
+        other => panic!("expected two deadlocks, got {other:?}"),
+    }
+}

@@ -56,7 +56,7 @@ fn workloads() -> Vec<ata_cache::trace::AppModel> {
 fn run_metrics(arch: L1ArchKind, app: &ata_cache::trace::AppModel) -> Json {
     let cfg = GpuConfig::tiny(arch);
     let wl = app.workload(&cfg);
-    let r = Engine::new(&cfg).run(&wl);
+    let r = Engine::new(&cfg).run(&wl).unwrap();
     let mut contention: Vec<(&str, Json)> = ResourceClass::ALL
         .iter()
         .map(|&c| (c.name(), r.contention.get(c).into()))
@@ -181,7 +181,7 @@ fn l1_hit_miss_classes_partition_accesses() {
     for arch in L1ArchKind::PAPER {
         let cfg = GpuConfig::tiny(arch);
         let wl = synth::locality_knob(0.8, 0.4).workload(&cfg);
-        let r = Engine::new(&cfg).run(&wl);
+        let r = Engine::new(&cfg).run(&wl).unwrap();
         let classes = r.l1.local_hits
             + r.l1.remote_hits
             + r.l1.sector_misses

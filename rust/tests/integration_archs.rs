@@ -127,17 +127,17 @@ fn replication_audit_private_vs_ata_vs_decoupled() {
 
     let cfg = GpuConfig::paper(L1ArchKind::Private);
     let mut eng = Engine::new(&cfg);
-    eng.run(&mk().workload(&cfg));
+    eng.run(&mk().workload(&cfg)).unwrap();
     let priv_holders = (0..30).filter(|&c| eng.resident_lines(c).contains(&hot_line)).count();
 
     let cfg = GpuConfig::paper(L1ArchKind::DecoupledSharing);
     let mut eng = Engine::new(&cfg);
-    eng.run(&mk().workload(&cfg));
+    eng.run(&mk().workload(&cfg)).unwrap();
     let dec_holders = (0..30).filter(|&c| eng.resident_lines(c).contains(&hot_line)).count();
 
     let cfg = GpuConfig::paper(L1ArchKind::Ata);
     let mut eng = Engine::new(&cfg);
-    eng.run(&mk().workload(&cfg));
+    eng.run(&mk().workload(&cfg)).unwrap();
     let ata_holders = (0..30).filter(|&c| eng.resident_lines(c).contains(&hot_line)).count();
 
     assert!(priv_holders >= 25, "private replicates: {priv_holders}/30");

@@ -74,7 +74,7 @@ fn property_breakdown_reconciles_with_latency_sums() {
             let cfg = GpuConfig::tiny(arch);
             let wl = load_only_workload(&cfg, lines);
             let mut eng = Engine::new(&cfg);
-            let r = eng.run(&wl);
+            let r = eng.run(&wl).unwrap();
             let con = eng.contention();
             // Per-core attribution partitions the aggregate exactly.
             let core_sum: u64 = con.per_core().iter().map(|b| b.total()).sum();
@@ -115,7 +115,7 @@ fn breakdown_is_nonzero_for_all_archs_under_convergent_load() {
     for arch in L1ArchKind::ALL {
         let cfg = GpuConfig::tiny(arch);
         let wl = load_only_workload(&cfg, &lines);
-        let r = Engine::new(&cfg).run(&wl);
+        let r = Engine::new(&cfg).run(&wl).unwrap();
         assert!(
             r.contention.total() > 0,
             "{arch:?} must report stall cycles under convergent load: {:?}",
@@ -148,10 +148,10 @@ fn ata_has_strictly_fewer_remote_path_stalls_than_remote_sharing() {
         name: "high-locality".into(),
         kernels: vec![shared_load_kernel(cfg_a.cores, 4, &lines, 4, 2)],
     };
-    let ata = Engine::new(&cfg_a).run(&wl);
+    let ata = Engine::new(&cfg_a).run(&wl).unwrap();
 
     let cfg_r = mk_cfg(L1ArchKind::RemoteSharing);
-    let rem = Engine::new(&cfg_r).run(&wl);
+    let rem = Engine::new(&cfg_r).run(&wl).unwrap();
 
     assert_eq!(ata.l1.probes_sent, 0, "ATA never probes");
     assert!(rem.l1.probes_sent > 0, "remote-sharing probes on every miss");

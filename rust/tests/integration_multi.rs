@@ -19,7 +19,7 @@ fn tiny_pair(arch: L1ArchKind) -> (GpuConfig, ata_cache::engine::MultiWorkload) 
 fn all_four_archs_co_execute_to_completion() {
     for arch in L1ArchKind::ALL {
         let (cfg, multi) = tiny_pair(arch);
-        let r = Engine::new(&cfg).run_multi(&multi);
+        let r = Engine::new(&cfg).run_multi(&multi).unwrap();
         assert_eq!(r.arch, arch.name(), "arch recorded");
         assert_eq!(r.apps.len(), 2);
         for app in &r.apps {
@@ -34,7 +34,7 @@ fn all_four_archs_co_execute_to_completion() {
 fn per_app_attribution_sums_to_global_totals() {
     for arch in [L1ArchKind::Private, L1ArchKind::Ata] {
         let (cfg, multi) = tiny_pair(arch);
-        let r = Engine::new(&cfg).run_multi(&multi);
+        let r = Engine::new(&cfg).run_multi(&multi).unwrap();
         assert_eq!(
             r.insts,
             r.apps.iter().map(|a| a.insts).sum::<u64>(),
@@ -108,7 +108,7 @@ fn cross_app_sharing_becomes_remote_hits_on_ata_but_not_private() {
     cfg.validate().unwrap();
     let app = synth::locality_knob(0.9, 0.5);
     let multi = co_workload(&cfg, &[app.clone(), app.clone()], &[1, 1], true).unwrap();
-    let ata = Engine::new(&cfg).run_multi(&multi);
+    let ata = Engine::new(&cfg).run_multi(&multi).unwrap();
     assert!(
         ata.l1.remote_hits + ata.l1.mshr_merges > 0,
         "cross-app sharing must be exploited: {:?}",
@@ -117,7 +117,7 @@ fn cross_app_sharing_becomes_remote_hits_on_ata_but_not_private() {
 
     let mut cfg_p = cfg.clone();
     cfg_p.l1_arch = L1ArchKind::Private;
-    let private = Engine::new(&cfg_p).run_multi(&multi);
+    let private = Engine::new(&cfg_p).run_multi(&multi).unwrap();
     assert_eq!(private.l1.remote_hits, 0, "private caches cannot share");
     assert!(
         ata.l1.misses <= private.l1.misses,
@@ -128,7 +128,7 @@ fn cross_app_sharing_becomes_remote_hits_on_ata_but_not_private() {
 
     // With disjoint address spaces the same pairing shares nothing.
     let isolated = co_workload(&cfg, &[app.clone(), app], &[1, 1], false).unwrap();
-    let iso = Engine::new(&cfg).run_multi(&isolated);
+    let iso = Engine::new(&cfg).run_multi(&isolated).unwrap();
     assert_eq!(iso.l1.remote_hits, 0, "isolated apps must not share lines");
 }
 

@@ -89,7 +89,7 @@ fn artifact_replication_matches_simulator_cache_audit() {
     // The simulator's tag-array audit must agree: hammer's hot line is
     // replicated in (almost) every private cache.
     let mut eng = Engine::new(&cfg);
-    eng.run(&hammer.scaled(0.5).workload(&cfg));
+    eng.run(&hammer.scaled(0.5).workload(&cfg)).unwrap();
     let holders = (0..cfg.cores)
         .filter(|&c| eng.resident_lines(c).contains(&0u64))
         .count();

@@ -211,6 +211,44 @@ fn justified_suppression_silences_shard_confinement() {
     assert!(lint_one("rust/src/engine/mod.rs", src).is_clean());
 }
 
+// -- sim-panic --------------------------------------------------------------
+
+#[test]
+fn panic_unwrap_expect_in_simulation_core_flagged() {
+    let src = "fn tick(q: &mut Q) {\n    let head = q.pop().unwrap();\n    let lat = q.latency.expect(\"latency set\");\n    if lat == 0 { panic!(\"zero-latency event\"); }\n    serve(head, lat);\n}\n";
+    for path in [
+        "rust/src/engine/mod.rs",
+        "rust/src/l2/mod.rs",
+        "rust/src/l1arch/decode.rs",
+        "rust/src/dram/mod.rs",
+    ] {
+        let r = lint_one(path, src);
+        assert_eq!(slugs(&r), vec!["sim-panic", "sim-panic", "sim-panic"], "{path}");
+    }
+}
+
+#[test]
+fn sim_panic_scope_test_regions_and_infallible_combinators_pass() {
+    let src = "fn tick(q: &mut Q) { q.pop().unwrap(); }\n";
+    // Outside the simulation core: the exec layer owns catch_unwind
+    // containment and the CLI owns usage errors — not this rule's scope.
+    assert!(lint_one("rust/src/exec/runner.rs", src).is_clean());
+    assert!(lint_one("rust/src/main.rs", src).is_clean());
+    assert!(lint_one("rust/tests/failure_determinism.rs", src).is_clean());
+    // Test regions inside core files may unwrap freely.
+    let test_src = "#[cfg(test)]\nmod tests {\n    fn t(q: &mut Q) { q.pop().unwrap(); panic!(\"boom\"); }\n}\n";
+    assert!(lint_one("rust/src/engine/mod.rs", test_src).is_clean());
+    // Non-unwinding combinators and `panic` prose never trip it.
+    let benign = "fn tick(q: &mut Q) -> u64 {\n    let m = panic_message(q.err());\n    q.pop().unwrap_or(0) + q.lat.unwrap_or_else(|| m.len() as u64)\n}\n";
+    assert!(lint_one("rust/src/l2/mod.rs", benign).is_clean());
+}
+
+#[test]
+fn justified_suppression_silences_sim_panic() {
+    let src = "fn drain(s: &mut S) {\n    // lint: allow(sim-panic) — slot guaranteed occupied: scheduled one epoch earlier\n    let ev = s.slots.take().unwrap();\n    serve(ev);\n}\n";
+    assert!(lint_one("rust/src/engine/mod.rs", src).is_clean());
+}
+
 // -- suppression-justification ----------------------------------------------
 
 #[test]

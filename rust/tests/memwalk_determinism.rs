@@ -90,7 +90,7 @@ fn multi_json_is_byte_identical_at_any_worker_count() {
             synth::convergent_hammer().scaled(0.25),
         ];
         let multi = co_workload(&cfg, &models, &[4, 4], false).expect("co-workload");
-        Engine::new(&cfg).run_multi(&multi).to_json().pretty()
+        Engine::new(&cfg).run_multi(&multi).unwrap().to_json().pretty()
     };
     let baseline = run(1);
     assert_eq!(
@@ -114,7 +114,7 @@ fn multi_json_is_byte_identical_at_any_worker_count() {
 fn slice_skewed_traffic_is_byte_identical() {
     let (cfg, wl) = slice_skew_scenario(L1ArchKind::Ata);
 
-    let r_serial = Engine::new(&cfg).run(&wl);
+    let r_serial = Engine::new(&cfg).run(&wl).unwrap();
     // The scenario must really stress the walk, or the byte-identity
     // below proves nothing.
     assert!(r_serial.dram_reads > 0, "no cold miss reached DRAM");
@@ -123,7 +123,7 @@ fn slice_skewed_traffic_is_byte_identical() {
     for workers in [2usize, 4] {
         let mut cfg_w = cfg.clone();
         cfg_w.engine.mem_workers = workers;
-        let r_w = Engine::new(&cfg_w).run(&wl);
+        let r_w = Engine::new(&cfg_w).run(&wl).unwrap();
         assert_eq!(
             r_w.to_json().pretty(),
             r_serial.to_json().pretty(),
@@ -136,7 +136,7 @@ fn slice_skewed_traffic_is_byte_identical() {
     let mut cfg_both = cfg.clone();
     cfg_both.engine.mem_workers = 4;
     cfg_both.engine.shards = 2;
-    let r_both = Engine::new(&cfg_both).run(&wl);
+    let r_both = Engine::new(&cfg_both).run(&wl).unwrap();
     assert_eq!(
         r_both.to_json().pretty(),
         r_serial.to_json().pretty(),

@@ -185,7 +185,7 @@ fn multi_json_is_byte_identical_with_index_on_and_off() {
             synth::convergent_hammer().scaled(0.25),
         ];
         let multi = co_workload(&cfg, &models, &[4, 4], false).expect("co-workload");
-        Engine::new(&cfg).run_multi(&multi).to_json().pretty()
+        Engine::new(&cfg).run_multi(&multi).unwrap().to_json().pretty()
     };
     assert_eq!(
         run(true),

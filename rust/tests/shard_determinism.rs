@@ -100,7 +100,7 @@ fn multi_json_is_byte_identical_at_any_shard_count() {
             synth::convergent_hammer().scaled(0.25),
         ];
         let multi = co_workload(&cfg, &models, &[4, 4], false).expect("co-workload");
-        Engine::new(&cfg).run_multi(&multi).to_json().pretty()
+        Engine::new(&cfg).run_multi(&multi).unwrap().to_json().pretty()
     };
     let baseline = run(1);
     assert_eq!(
@@ -129,7 +129,7 @@ fn cross_shard_traffic_is_byte_identical_and_counted() {
     let mut cfg_seq = cfg.clone();
     cfg_seq.engine.shards = 1;
     let mut eng_seq = Engine::new(&cfg_seq);
-    let r_seq = eng_seq.run(&wl);
+    let r_seq = eng_seq.run(&wl).unwrap();
     assert_eq!(
         eng_seq.shard_stats(),
         ShardStats::default(),
@@ -143,7 +143,7 @@ fn cross_shard_traffic_is_byte_identical_and_counted() {
     let mut cfg_sh = cfg;
     cfg_sh.engine.shards = 2;
     let mut eng_sh = Engine::new(&cfg_sh);
-    let r_sh = eng_sh.run(&wl);
+    let r_sh = eng_sh.run(&wl).unwrap();
     assert_eq!(
         r_sh.to_json().pretty(),
         r_seq.to_json().pretty(),
